@@ -1,0 +1,62 @@
+//! Shared scaffolding for the custom bench harness (criterion is not in
+//! the offline registry; benches are `harness = false` binaries).
+//!
+//! Each paper-table/figure bench runs a reduced version of its experiment
+//! through `spork::exp::run`, printing the same rows the paper reports
+//! plus wall time — `cargo bench` therefore regenerates every table and
+//! figure at smoke scale, and `spork experiment <id> [--full]` at paper
+//! scale.
+
+use spork::exp::ExpCtx;
+use std::path::PathBuf;
+use std::time::Instant;
+
+pub fn bench_ctx() -> ExpCtx {
+    ExpCtx {
+        out_dir: PathBuf::from(
+            std::env::var("SPORK_BENCH_OUT").unwrap_or_else(|_| "results/bench".into()),
+        ),
+        seeds: 1,
+        scale: 0.3,
+        full: false,
+    }
+}
+
+pub fn run_experiment_bench(id: &str) {
+    let ctx = bench_ctx();
+    let t0 = Instant::now();
+    match spork::exp::run(id, &ctx) {
+        Ok(tables) => {
+            eprintln!(
+                "bench {id}: {} table(s) in {:.2}s",
+                tables.len(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        Err(e) => {
+            eprintln!("bench {id} FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Simple repeated-timing helper for microbenches.
+pub fn time_it<F: FnMut() -> R, R>(label: &str, iters: u32, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10).max(1) {
+        std::hint::black_box(f());
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    if per >= 1.0 {
+        println!("{label:<48} {per:>10.3} s/iter");
+    } else if per >= 1e-3 {
+        println!("{label:<48} {:>10.3} ms/iter", per * 1e3);
+    } else {
+        println!("{label:<48} {:>10.3} us/iter", per * 1e6);
+    }
+    per
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper fig2 at smoke scale (full scale via
+//! `spork experiment fig2 --full`).
+mod common;
+
+fn main() {
+    common::run_experiment_bench("fig2");
+}

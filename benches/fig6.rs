@@ -1,0 +1,7 @@
+//! Bench: regenerate paper fig6 at smoke scale (full scale via
+//! `spork experiment fig6 --full`).
+mod common;
+
+fn main() {
+    common::run_experiment_bench("fig6");
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper fig7 at smoke scale (full scale via
+//! `spork experiment fig7 --full`).
+mod common;
+
+fn main() {
+    common::run_experiment_bench("fig7");
+}

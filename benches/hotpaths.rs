@@ -1,0 +1,133 @@
+//! Microbenches for the L3 hot paths: the DES engine, the dispatch
+//! policies at several pool sizes, and the Alg-2 predictor (rust scalar
+//! vs the XLA-offloaded artifact when `artifacts/` exists).
+//!
+//! Results feed EXPERIMENTS.md §Perf.
+
+mod common;
+
+use spork::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
+use spork::sched::dispatch::Dispatcher;
+use spork::sched::spork::predictor::Predictor;
+use spork::config::SchedulerKind;
+use spork::sched::Objective;
+use spork::sim::{Request, SimState, WorkerState};
+use spork::trace::synthetic_app;
+use spork::util::rng::Rng;
+
+fn bench_sim_engine() {
+    println!("-- sim engine (end-to-end DES) --");
+    for &(rate, dur) in &[(500.0, 600.0), (2000.0, 600.0)] {
+        let mut rng = Rng::new(1);
+        let trace = synthetic_app("b", &mut rng, 0.65, dur, rate, 0.010);
+        let n = trace.len();
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        let per = common::time_it(
+            &format!("sporkE sim: {n} requests"),
+            3,
+            || spork::sched::run_scheduler(&SchedulerKind::spork_e(), &trace, &cfg, &defaults),
+        );
+        println!(
+            "{:<48} {:>10.2} M requests/s",
+            "  throughput",
+            n as f64 / per / 1e6
+        );
+    }
+}
+
+fn state_with_workers(n_fpga: u32, n_cpu: u32) -> SimState {
+    let mut cfg = SimConfig::paper_default();
+    cfg.platform.fpga.spin_up = 0.0;
+    cfg.platform.cpu.spin_up = 0.0;
+    let mut sim = SimState::new(cfg);
+    let mut rng = Rng::new(2);
+    for kind in [WorkerKind::Fpga, WorkerKind::Cpu] {
+        let n = if kind == WorkerKind::Fpga { n_fpga } else { n_cpu };
+        for _ in 0..n {
+            let id = sim.alloc(kind).unwrap();
+            let w = sim.pool.get_mut(id).unwrap();
+            w.state = WorkerState::Active;
+            w.busy_until = rng.range_f64(0.0, 0.05);
+            w.queued = 1;
+        }
+    }
+    sim
+}
+
+fn bench_dispatch() {
+    println!("-- dispatch policies --");
+    for &pool in &[16u32, 128, 1024] {
+        let sim = state_with_workers(pool / 2, pool / 2);
+        let req = Request {
+            arrival: 0.0,
+            size: 0.010,
+            deadline: 0.2,
+        };
+        for policy in [
+            DispatchPolicy::EfficientFirst,
+            DispatchPolicy::IndexPacking,
+            DispatchPolicy::RoundRobin,
+        ] {
+            let mut d = Dispatcher::new(policy);
+            common::time_it(
+                &format!("{} @ pool {pool}", policy.name()),
+                20_000,
+                || d.find(&sim, &req, &[WorkerKind::Fpga, WorkerKind::Cpu]),
+            );
+        }
+    }
+}
+
+fn bench_predictor() {
+    println!("-- Alg 2 predictor --");
+    let mut p = Predictor::new(PlatformConfig::paper_default(), 10.0, Objective::energy());
+    let mut rng = Rng::new(3);
+    for _ in 0..2000 {
+        let key = rng.below(32) as u32;
+        p.observe(key, rng.below(48) as u32);
+    }
+    let mut i = 0u32;
+    common::time_it("rust predictor (cached)", 100_000, || {
+        i = (i + 1) % 32;
+        p.predict(i, 8)
+    });
+    // Force uncached predictions by invalidating each round.
+    let mut j = 0u32;
+    common::time_it("rust predictor (uncached)", 5_000, || {
+        j = (j + 1) % 32;
+        p.observe(j, (j * 7) % 48);
+        p.predict(j, 8)
+    });
+
+    // XLA-offloaded expectation (if artifacts are present).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = spork::runtime::Runtime::load("artifacts").expect("runtime");
+        let exe = rt.compile("predictor").expect("compile predictor");
+        let probs = vec![1.0 / 64.0f32; 64];
+        let bins: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let cands = bins.clone();
+        let knobs = vec![
+            10.0,
+            50.0,
+            20.0,
+            150.0,
+            2.0,
+            0.982 / 3600.0,
+            0.668 / 3600.0,
+            1.0,
+            0.0,
+        ];
+        common::time_it("xla predictor (64x64 expectation)", 2_000, || {
+            exe.run_f32(&[&probs, &bins, &cands, &knobs]).unwrap()
+        });
+    } else {
+        println!("xla predictor: skipped (run `make artifacts`)");
+    }
+}
+
+fn main() {
+    bench_sim_engine();
+    bench_dispatch();
+    bench_predictor();
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper table8 at smoke scale (full scale via
+//! `spork experiment table8 --full`).
+mod common;
+
+fn main() {
+    common::run_experiment_bench("table8");
+}

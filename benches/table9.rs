@@ -1,0 +1,7 @@
+//! Bench: regenerate paper table9 at smoke scale (full scale via
+//! `spork experiment table9 --full`).
+mod common;
+
+fn main() {
+    common::run_experiment_bench("table9");
+}

@@ -1,0 +1,82 @@
+"""AOT lowering: jitted L2 functions -> HLO *text* artifacts for the rust
+runtime (``rust/src/runtime``).
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Functions are lowered with ``return_tuple=True`` so the rust side unwraps
+with ``to_tuple1()``.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Incremental: skips lowering when artifacts are newer than the python
+sources (make drives this through file timestamps anyway).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def arg_manifest(example_args):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+    ]
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="lower just one artifact by name"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "model": {
+            "layers": list(model.LAYERS),
+            "batch_sizes": list(model.BATCH_SIZES),
+            "weight_seed": model.WEIGHT_SEED,
+        },
+        "artifacts": {},
+    }
+    for name, fn, example_args in model.artifact_specs():
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": arg_manifest(example_args),
+            "hlo_bytes": len(text),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: tiled dense layers for the served MLP (the "FPGA
+bitstream" of the reproduction — see DESIGN.md §Hardware-Adaptation).
+
+The paper's FPGA worker runs a specialized spatial datapath. On the TPU
+abstraction this maps to:
+
+* the DSP-slice array -> the MXU systolic tile: the inner ``jnp.dot`` is
+  shaped to (TM, K) x (K, TN) with TN a multiple of 128 and accumulation
+  in float32 (``preferred_element_type``), which lowers onto the MXU on
+  real hardware;
+* BRAM-staged streaming -> the BlockSpec HBM<->VMEM schedule: the grid
+  walks output tiles; for each (i, j) step Pallas stages an (TM, K) x
+  (K, TN) working set into VMEM, computes, and writes the (TM, TN) tile
+  back — the same producer/consumer pipelining the FPGA would express
+  with line buffers.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO for both testing and the AOT
+artifacts. Real-TPU VMEM/MXU characteristics are *estimated* analytically
+(see ``vmem_footprint`` and EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-aligned output tile, full-K staging.
+TILE_M = 8
+TILE_N = 128
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activate: bool):
+    """One output tile: o = act(x @ w + b).
+
+    x_ref: (TM, K) — the row panel for this grid step.
+    w_ref: (K, TN) — the weight column panel.
+    b_ref: (1, TN) — bias slice.
+    o_ref: (TM, TN).
+    """
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    if activate:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def linear(x, w, b, activate: bool, tile_m: int = TILE_M, tile_n: int = TILE_N):
+    """Tiled dense layer via pallas_call.
+
+    Shapes: x (M, K), w (K, N), b (N,) with M % tile_m == 0 and
+    N % tile_n == 0 (the model pads to MXU-friendly sizes at build time).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % tile_m == 0, f"M={m} not a multiple of {tile_m}"
+    assert n % tile_n == 0, f"N={n} not a multiple of {tile_n}"
+    grid = (m // tile_m, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, activate=activate),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b.reshape(1, -1))
+
+
+def mlp(x, params, tile_m: int = TILE_M, tile_n: int = TILE_N):
+    """MLP inference through the Pallas layers (matches ``ref.mlp_ref``)."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = linear(h, w, b, activate=i + 1 < len(params), tile_m=tile_m, tile_n=tile_n)
+    return h
+
+
+def vmem_footprint(tile_m: int, tile_n: int, k: int, dtype_bytes: int = 4) -> int:
+    """Bytes of VMEM one grid step touches (x panel + w panel + bias +
+    output tile + f32 accumulator). The schedule must stay well under the
+    ~16 MiB VMEM of a TPU core; reported in EXPERIMENTS.md §Perf."""
+    x_panel = tile_m * k * dtype_bytes
+    w_panel = k * tile_n * dtype_bytes
+    bias = tile_n * dtype_bytes
+    out_tile = tile_m * tile_n * dtype_bytes
+    acc = tile_m * tile_n * 4
+    return x_panel + w_panel + bias + out_tile + acc
+
+
+def mxu_utilization_estimate(tile_m: int, tile_n: int, k: int) -> float:
+    """Estimated MXU lane utilization of the inner dot: fraction of the
+    128x128 systolic array the (tile_m x tile_n) output tile keeps busy,
+    discounted by K-dimension pipeline fill (K / (K + 128))."""
+    lane_fill = min(tile_n, 128) / 128.0
+    sublane_fill = min(tile_m, 128) / 128.0
+    pipeline = k / (k + 128.0)
+    return lane_fill * sublane_fill * pipeline

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: Spork's Alg-2 expected-score evaluation.
+
+The predictor's hot loop is an O(candidates x bins) reduction: for every
+candidate allocation count, the probability-weighted objective over the
+conditional histogram. The rust coordinator's scalar implementation walks
+this loop per tick; this kernel vectorizes it so the scheduler itself can
+be offloaded through the same AOT path as the served model (DESIGN.md
+"XLA-offloaded predictor").
+
+Shapes are fixed at AOT time (histograms are padded with prob=0 bins and
+candidates with repeats), so one compiled executable serves every tick.
+
+The sequential spin-up amortization of Alg 2 (a data-dependent walk over
+the lifetime map) stays in rust; the kernel computes the distribution
+expectation, which dominates.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT shapes: up to 64 candidates x 64 histogram bins.
+NUM_CANDS = 64
+NUM_BINS = 64
+NUM_KNOBS = 9  # [T_s, B_f, I_f, B_c, S, c_f, c_c, w_E, w_C]
+
+
+def _scores_kernel(probs_ref, bins_ref, cands_ref, knobs_ref, o_ref):
+    """Single-block kernel: the full (C, B) expectation in VMEM.
+
+    C x B = 64 x 64 floats (~16 KiB working set) — far under VMEM; no
+    grid needed. Broadcasting shapes the compute as (C, B) elementwise
+    plus a lane reduction, which maps onto the VPU.
+    """
+    ts = knobs_ref[0, 0]
+    bf = knobs_ref[0, 1]
+    if_ = knobs_ref[0, 2]
+    bc = knobs_ref[0, 3]
+    s = knobs_ref[0, 4]
+    cf = knobs_ref[0, 5]
+    cc = knobs_ref[0, 6]
+    we = knobs_ref[0, 7]
+    wc = knobs_ref[0, 8]
+
+    n = bins_ref[...]  # (1, B)
+    c = cands_ref[...].reshape(NUM_CANDS, 1)  # (C, 1)
+    probs = probs_ref[...]  # (1, B)
+
+    over = c >= n
+    e_over = (c - n) * if_ * ts + n * bf * ts
+    cost_over = c * cf * ts
+    cpu_secs = (n - c) * s * ts
+    e_under = c * bf * ts + cpu_secs * bc
+    cost_under = c * cf * ts + cpu_secs * cc
+    e = jnp.where(over, e_over, e_under)
+    cost = jnp.where(over, cost_over, cost_under)
+    score = we * e / (bf * ts) + wc * cost / (cf * ts)
+    o_ref[...] = jnp.sum(probs * score, axis=1).reshape(NUM_CANDS, 1)
+
+
+def predictor_scores(probs, bins, cands, knobs):
+    """Expected score per candidate (see ``ref.predictor_scores_ref``).
+
+    probs, bins: (NUM_BINS,); cands: (NUM_CANDS,); knobs: (NUM_KNOBS,).
+    Returns (NUM_CANDS,).
+    """
+    assert probs.shape == (NUM_BINS,)
+    assert bins.shape == (NUM_BINS,)
+    assert cands.shape == (NUM_CANDS,)
+    assert knobs.shape == (NUM_KNOBS,)
+    out = pl.pallas_call(
+        _scores_kernel,
+        out_shape=jax.ShapeDtypeStruct((NUM_CANDS, 1), jnp.float32),
+        interpret=True,
+    )(
+        probs.reshape(1, NUM_BINS).astype(jnp.float32),
+        bins.reshape(1, NUM_BINS).astype(jnp.float32),
+        cands.reshape(NUM_CANDS, 1).astype(jnp.float32),
+        knobs.reshape(1, NUM_KNOBS).astype(jnp.float32),
+    )
+    return out.reshape(NUM_CANDS)

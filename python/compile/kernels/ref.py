@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package must match its oracle to float32
+tolerance under pytest (``python/tests/``). The oracles are also the "CPU
+worker" implementation of the served application: the FPGA worker runs the
+Pallas-specialized artifact, the CPU worker runs this reference lowered as
+plain jnp (see ``model.py``).
+"""
+
+import jax.numpy as jnp
+
+
+def linear_ref(x, w, b, activate: bool):
+    """One dense layer: x @ w + b, optional ReLU."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    return jnp.maximum(y, 0.0) if activate else y
+
+
+def mlp_ref(x, params):
+    """MLP inference over a list of (w, b) layers; ReLU between layers,
+    linear output head."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = linear_ref(h, w, b, activate=i + 1 < len(params))
+    return h
+
+
+def predictor_scores_ref(probs, bins, cands, knobs):
+    """Expected objective score per candidate allocation (Alg 2 inner loop).
+
+    Args:
+      probs:  (B,) occurrence probability per histogram bin (0-padded).
+      bins:   (B,) worker-count value of each bin.
+      cands:  (C,) candidate allocation counts.
+      knobs:  (9,) packed parameters:
+              [T_s, B_f, I_f, B_c, S, c_f, c_c, w_E, w_C]
+              (powers in watts, costs in $/s, weights unitless).
+
+    Returns:
+      (C,) expected score per candidate, normalized to busy-FPGA-interval
+      units (w_E * E / (B_f*T_s) + w_C * C / (c_f*T_s)), matching rust's
+      `Objective::score`.
+    """
+    ts, bf, if_, bc, s, cf, cc, we, wc = [knobs[i] for i in range(9)]
+    n = bins[None, :]  # (1, B)
+    c = cands[:, None]  # (C, 1)
+    over = c >= n
+    # Over-allocation: n busy FPGAs + (c-n) idle FPGAs.
+    e_over = (c - n) * if_ * ts + n * bf * ts
+    cost_over = c * cf * ts
+    # Under-allocation: c busy FPGAs + burst CPUs for the gap.
+    cpu_secs = (n - c) * s * ts
+    e_under = c * bf * ts + cpu_secs * bc
+    cost_under = c * cf * ts + cpu_secs * cc
+    e = jnp.where(over, e_over, e_under)
+    cost = jnp.where(over, cost_over, cost_under)
+    score = we * e / (bf * ts) + wc * cost / (cf * ts)
+    return jnp.sum(probs[None, :] * score, axis=1)

@@ -1,0 +1,84 @@
+"""L2: the served application and scheduler compute graphs.
+
+The paper's workload class is latency-sensitive inference (Table 2 —
+CNN/RNN serving). We serve a small MLP classifier in two builds:
+
+* ``app_fpga`` — the L1 Pallas-tiled implementation (the "FPGA worker"'s
+  specialized datapath);
+* ``app_cpu`` — the pure-jnp reference (the "CPU worker"'s software
+  implementation).
+
+Both bake the same deterministically-initialized weights, so the two
+worker kinds are interchangeable per the hybrid-computing contract (same
+request -> same answer), which the rust serving tests assert.
+
+``predictor_scores`` is Spork's Alg-2 expectation (see
+``kernels/predictor.py``).
+
+This module is build-time only: ``aot.py`` lowers the jitted functions to
+HLO text artifacts; Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp as mlp_kernel
+from .kernels import predictor as predictor_kernel
+from .kernels import ref
+
+# Served-model geometry (MXU-aligned: multiples of 128 in N/K).
+D_IN = 128
+D_HIDDEN = 256
+D_OUT = 128
+LAYERS = (D_IN, D_HIDDEN, D_OUT)
+BATCH_SIZES = (8, 32)
+WEIGHT_SEED = 20230618
+
+
+def init_params(seed: int = WEIGHT_SEED):
+    """Deterministic He-initialized weights shared by both builds."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for d_in, d_out in zip(LAYERS[:-1], LAYERS[1:]):
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (d_in, d_out), jnp.float32) * (2.0 / d_in) ** 0.5
+        b = jnp.zeros((d_out,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def app_fpga(x):
+    """FPGA-worker build: Pallas-tiled MLP with baked weights."""
+    return (mlp_kernel.mlp(x, init_params()),)
+
+
+def app_cpu(x):
+    """CPU-worker build: reference MLP with the same baked weights."""
+    return (ref.mlp_ref(x, init_params()),)
+
+
+def predictor_scores(probs, bins, cands, knobs):
+    """Spork Alg-2 expected scores (Pallas build)."""
+    return (predictor_kernel.predictor_scores(probs, bins, cands, knobs),)
+
+
+def artifact_specs():
+    """Everything aot.py lowers: (name, fn, example_args)."""
+    specs = []
+    for batch in BATCH_SIZES:
+        x = jax.ShapeDtypeStruct((batch, D_IN), jnp.float32)
+        specs.append((f"app_fpga_b{batch}", app_fpga, (x,)))
+        specs.append((f"app_cpu_b{batch}", app_cpu, (x,)))
+    specs.append(
+        (
+            "predictor",
+            predictor_scores,
+            (
+                jax.ShapeDtypeStruct((predictor_kernel.NUM_BINS,), jnp.float32),
+                jax.ShapeDtypeStruct((predictor_kernel.NUM_BINS,), jnp.float32),
+                jax.ShapeDtypeStruct((predictor_kernel.NUM_CANDS,), jnp.float32),
+                jax.ShapeDtypeStruct((predictor_kernel.NUM_KNOBS,), jnp.float32),
+            ),
+        )
+    )
+    return specs

@@ -1,0 +1,88 @@
+"""AOT path tests: every artifact spec lowers to parseable HLO text with
+the right entry signature, and the lowered modules run correctly through
+the XLA client (the same numerics the rust runtime will see)."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def specs():
+    return {name: (fn, args) for name, fn, args in model.artifact_specs()}
+
+
+def test_artifact_roster(specs):
+    names = set(specs)
+    for batch in model.BATCH_SIZES:
+        assert f"app_fpga_b{batch}" in names
+        assert f"app_cpu_b{batch}" in names
+    assert "predictor" in names
+
+
+def test_hlo_text_structure(specs):
+    fn, args = specs[f"app_fpga_b{model.BATCH_SIZES[0]}"]
+    text = aot.to_hlo_text(fn, args)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True: root must be a tuple.
+    assert "tuple" in text
+    # Batch-8 input shape appears in the entry signature.
+    assert f"f32[{model.BATCH_SIZES[0]},{model.D_IN}]" in text
+
+
+def test_lowered_module_runs_and_matches_eager(specs):
+    """Compile the lowered module (the artifact source-of-truth) and
+    compare against eager execution. The HLO-text → PJRT round trip is
+    covered on the rust side (`rust/tests/runtime_artifacts.rs`), which is
+    the consumer of the text format."""
+    fn, args = specs[f"app_cpu_b{model.BATCH_SIZES[0]}"]
+    x = jax.random.normal(jax.random.PRNGKey(0), args[0].shape, jnp.float32)
+    compiled = jax.jit(fn).lower(*args).compile()
+    (got,) = compiled(x)
+    (want,) = fn(x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+def test_fpga_and_cpu_artifacts_same_signature(specs):
+    """Both worker builds must accept identical inputs (interchangeable
+    execution is the hybrid-computing premise)."""
+    for batch in model.BATCH_SIZES:
+        _, a_fpga = specs[f"app_fpga_b{batch}"]
+        _, a_cpu = specs[f"app_cpu_b{batch}"]
+        assert [a.shape for a in a_fpga] == [a.shape for a in a_cpu]
+        assert [a.dtype for a in a_fpga] == [a.dtype for a in a_cpu]
+
+
+def test_cli_writes_artifacts_and_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        import sys
+
+        argv = sys.argv
+        sys.argv = ["aot", "--out-dir", d, "--only", "predictor"]
+        try:
+            assert aot.main() == 0
+        finally:
+            sys.argv = argv
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        assert "predictor" in manifest["artifacts"]
+        entry = manifest["artifacts"]["predictor"]
+        hlo = open(os.path.join(d, entry["file"])).read()
+        assert "HloModule" in hlo
+        assert entry["args"][0]["shape"] == [64]
+
+
+def test_manifest_arg_shapes(specs):
+    fn, args = specs["predictor"]
+    m = aot.arg_manifest(args)
+    assert m[0]["shape"] == [64] and m[2]["shape"] == [64]
+    assert m[3]["shape"] == [9]
+    assert all(a["dtype"] == "float32" for a in m)

@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes and value ranges; assert_allclose against ref.py
+is the core correctness signal for the kernels that end up in the AOT
+artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp as mlp_kernel
+from compile.kernels import predictor as predictor_kernel
+from compile.kernels import ref
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestLinear:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m_tiles=st.integers(1, 4),
+        n_tiles=st.integers(1, 2),
+        k=st.sampled_from([32, 128, 256]),
+        activate=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_over_shapes(self, m_tiles, n_tiles, k, activate, seed):
+        m = m_tiles * mlp_kernel.TILE_M
+        n = n_tiles * mlp_kernel.TILE_N
+        x = rand(seed, m, k)
+        w = rand(seed + 1, k, n) * 0.1
+        b = rand(seed + 2, n)
+        got = mlp_kernel.linear(x, w, b, activate)
+        want = ref.linear_ref(x, w, b, activate)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_relu_clamps(self):
+        x = -jnp.ones((8, 32), jnp.float32)
+        w = jnp.eye(32, 128, dtype=jnp.float32)
+        b = jnp.zeros((128,), jnp.float32)
+        y = mlp_kernel.linear(x, w, b, activate=True)
+        assert float(jnp.min(y)) == 0.0
+
+    def test_rejects_misaligned_shapes(self):
+        x = jnp.zeros((7, 32), jnp.float32)  # 7 % TILE_M != 0
+        w = jnp.zeros((32, 128), jnp.float32)
+        b = jnp.zeros((128,), jnp.float32)
+        with pytest.raises(AssertionError):
+            mlp_kernel.linear(x, w, b, activate=False)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        tile_m=st.sampled_from([4, 8, 16]),
+        tile_n=st.sampled_from([128, 256]),
+        seed=st.integers(0, 1000),
+    )
+    def test_tile_size_invariance(self, tile_m, tile_n, seed):
+        """Output must not depend on the BlockSpec tiling."""
+        m, k, n = 16, 64, 256
+        x = rand(seed, m, k)
+        w = rand(seed + 1, k, n) * 0.1
+        b = rand(seed + 2, n)
+        base = mlp_kernel.linear(x, w, b, True)
+        tiled = mlp_kernel.linear(x, w, b, True, tile_m=tile_m, tile_n=tile_n)
+        np.testing.assert_allclose(base, tiled, rtol=1e-5, atol=1e-6)
+
+
+class TestMlp:
+    @settings(max_examples=10, deadline=None)
+    @given(batch_tiles=st.integers(1, 4), seed=st.integers(0, 1000))
+    def test_full_mlp_matches_ref(self, batch_tiles, seed):
+        from compile import model
+
+        batch = batch_tiles * mlp_kernel.TILE_M
+        params = model.init_params()
+        x = rand(seed, batch, model.D_IN)
+        got = mlp_kernel.mlp(x, params)
+        want = ref.mlp_ref(x, params)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_fpga_and_cpu_builds_agree(self):
+        """The hybrid-computing contract: both worker kinds compute the
+        same function."""
+        from compile import model
+
+        x = rand(7, 8, model.D_IN)
+        (fpga,) = model.app_fpga(x)
+        (cpu,) = model.app_cpu(x)
+        np.testing.assert_allclose(fpga, cpu, rtol=1e-4, atol=1e-4)
+
+
+class TestVmemEstimates:
+    def test_footprint_under_vmem(self):
+        """The chosen schedule must fit a TPU core's ~16 MiB VMEM."""
+        from compile import model
+
+        for k in (model.D_IN, model.D_HIDDEN):
+            bytes_ = mlp_kernel.vmem_footprint(
+                mlp_kernel.TILE_M, mlp_kernel.TILE_N, k
+            )
+            assert bytes_ < 16 * 1024 * 1024 / 4, bytes_  # <25% of VMEM
+
+    def test_mxu_estimate_monotone_in_tiles(self):
+        lo = mlp_kernel.mxu_utilization_estimate(4, 128, 128)
+        hi = mlp_kernel.mxu_utilization_estimate(128, 128, 128)
+        assert hi > lo
+        assert 0.0 < lo < 1.0 and 0.0 < hi <= 1.0
+
+
+class TestPredictorKernel:
+    def _knobs(self, we=1.0, wc=0.0):
+        # Paper defaults: Ts=10, Bf=50, If=20, Bc=150, S=2,
+        # cf/cc in $/s.
+        return jnp.array(
+            [10.0, 50.0, 20.0, 150.0, 2.0, 0.982 / 3600, 0.668 / 3600, we, wc],
+            jnp.float32,
+        )
+
+    def _padded(self, bins_probs):
+        bins = np.zeros(predictor_kernel.NUM_BINS, np.float32)
+        probs = np.zeros(predictor_kernel.NUM_BINS, np.float32)
+        for i, (n, p) in enumerate(bins_probs):
+            bins[i] = n
+            probs[i] = p
+        cands = np.arange(predictor_kernel.NUM_CANDS, dtype=np.float32)
+        return jnp.array(probs), jnp.array(bins), jnp.array(cands)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_bins=st.integers(1, 8),
+        seed=st.integers(0, 10_000),
+        we=st.floats(0.0, 1.0),
+    )
+    def test_matches_ref(self, n_bins, seed, we):
+        rng = np.random.RandomState(seed)
+        raw = rng.rand(n_bins)
+        probs_v = raw / raw.sum()
+        bins_probs = [(float(rng.randint(0, 40)), float(p)) for p in probs_v]
+        probs, bins, cands = self._padded(bins_probs)
+        knobs = self._knobs(we=we, wc=1.0 - we)
+        got = predictor_kernel.predictor_scores(probs, bins, cands, knobs)
+        want = ref.predictor_scores_ref(probs, bins, cands, knobs)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_argmin_matches_exact_history(self):
+        """Deterministic history at n=5: candidate 5 must win (energy)."""
+        probs, bins, cands = self._padded([(5.0, 1.0)])
+        scores = predictor_kernel.predictor_scores(
+            probs, bins, cands, self._knobs()
+        )
+        assert int(jnp.argmin(scores)) == 5
+
+    def test_energy_leans_higher_than_cost(self):
+        """50/50 split between needing 2 and 10: energy-weighted argmin
+        >= cost-weighted argmin (rust predictor asserts the same)."""
+        probs, bins, cands = self._padded([(2.0, 0.5), (10.0, 0.5)])
+        e = predictor_kernel.predictor_scores(probs, bins, cands, self._knobs(1.0, 0.0))
+        c = predictor_kernel.predictor_scores(probs, bins, cands, self._knobs(0.0, 1.0))
+        assert int(jnp.argmin(e)) >= int(jnp.argmin(c))
+        assert int(jnp.argmin(e)) == 10

@@ -1,0 +1,203 @@
+//! Lightweight command-line argument parsing (clap is not available in the
+//! offline registry).
+//!
+//! Grammar: `spork <subcommand> [--flag] [--key value] [positional...]`.
+//! `--key=value` is also accepted. Unknown flags are an error so typos fail
+//! loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Declares what a command accepts, for validation + help text.
+#[derive(Clone, Debug)]
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// (name, takes_value, help)
+    pub opts: Vec<(&'static str, bool, &'static str)>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name) against a command spec set.
+    pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+
+        // Subcommand is the first non-flag token.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        let spec = match &args.subcommand {
+            Some(sc) => Some(
+                specs
+                    .iter()
+                    .find(|s| s.name == sc.as_str())
+                    .ok_or_else(|| format!("unknown subcommand '{sc}'"))?,
+            ),
+            None => None,
+        };
+
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let decl = spec.and_then(|s| s.opts.iter().find(|(n, _, _)| *n == key));
+                match decl {
+                    Some((_, true, _)) => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                                .clone(),
+                        };
+                        args.options.insert(key, val);
+                    }
+                    Some((_, false, _)) => {
+                        if inline_val.is_some() {
+                            return Err(format!("--{key} does not take a value"));
+                        }
+                        args.flags.push(key);
+                    }
+                    None => return Err(format!("unknown option '--{key}'")),
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected a number, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected an integer, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+pub fn render_help(program: &str, about: &str, specs: &[Spec]) -> String {
+    let mut out = format!("{program} — {about}\n\nUSAGE:\n  {program} <command> [options]\n\nCOMMANDS:\n");
+    for s in specs {
+        out.push_str(&format!("  {:<14} {}\n", s.name, s.about));
+    }
+    out.push_str("\nRun `");
+    out.push_str(program);
+    out.push_str(" <command> --help` for command options.\n");
+    out
+}
+
+pub fn render_command_help(program: &str, spec: &Spec) -> String {
+    let mut out = format!("{program} {} — {}\n\nOPTIONS:\n", spec.name, spec.about);
+    for (name, takes, help) in &spec.opts {
+        let lhs = if *takes {
+            format!("--{name} <v>")
+        } else {
+            format!("--{name}")
+        };
+        out.push_str(&format!("  {:<24} {}\n", lhs, help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<Spec> {
+        vec![Spec {
+            name: "simulate",
+            about: "run one simulation",
+            opts: vec![
+                ("seed", true, "rng seed"),
+                ("burstiness", true, "b-model bias"),
+                ("verbose", false, "chatty output"),
+            ],
+        }]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &sv(&["simulate", "--seed", "7", "--burstiness=0.6", "--verbose", "tracefile"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert_eq!(a.f64_or("burstiness", 0.5).unwrap(), 0.6);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["tracefile"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&["simulate"]), &specs()).unwrap();
+        assert_eq!(a.u64_or("seed", 42).unwrap(), 42);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(&sv(&["simulate", "--nope"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["frobnicate"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn value_required() {
+        assert!(Args::parse(&sv(&["simulate", "--seed"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["simulate", "--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&sv(&["simulate", "--seed", "abc"]), &specs()).unwrap();
+        assert!(a.u64_or("seed", 0).is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("spork", "hybrid scheduler", &specs());
+        assert!(h.contains("simulate"));
+        let ch = render_command_help("spork", &specs()[0]);
+        assert!(ch.contains("--burstiness"));
+    }
+}

@@ -1,0 +1,342 @@
+//! Configuration system: worker parameters (paper Table 6), scheduler
+//! selection, and experiment descriptions. Configs have paper-default
+//! constructors and can be loaded from / saved to JSON files.
+
+mod workers;
+
+pub use workers::{PlatformConfig, WorkerKind, WorkerParams};
+
+use crate::util::json::Json;
+
+/// Which scheduler to run — §5.1 "Baselines" plus the Spork variants.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchedulerKind {
+    /// CPU-only reactive scheduler (serverless/AutoScale style).
+    CpuDynamic,
+    /// FPGA-only, statically provisioned for peak load (perfect knowledge).
+    FpgaStatic,
+    /// FPGA-only reactive scheduler with fixed excess headroom.
+    FpgaDynamic,
+    /// Idealized MArk: cost-optimized hybrid, perfect 2-interval rate
+    /// predictions, round-robin dispatch.
+    MarkIdeal,
+    /// Spork with objective weights (w_energy, w_cost). (1,0)=SporkE,
+    /// (0,1)=SporkC, (0.5,0.5)=SporkB.
+    Spork {
+        w_energy: f64,
+        w_cost: f64,
+        /// Perfect next-interval worker-count predictions (SporkE-ideal /
+        /// SporkC-ideal), ignoring spin-up overhead accounting (§5.1).
+        ideal: bool,
+    },
+}
+
+impl SchedulerKind {
+    pub fn spork_e() -> Self {
+        SchedulerKind::Spork { w_energy: 1.0, w_cost: 0.0, ideal: false }
+    }
+    pub fn spork_c() -> Self {
+        SchedulerKind::Spork { w_energy: 0.0, w_cost: 1.0, ideal: false }
+    }
+    pub fn spork_b() -> Self {
+        SchedulerKind::Spork { w_energy: 0.5, w_cost: 0.5, ideal: false }
+    }
+    pub fn spork_e_ideal() -> Self {
+        SchedulerKind::Spork { w_energy: 1.0, w_cost: 0.0, ideal: true }
+    }
+    pub fn spork_c_ideal() -> Self {
+        SchedulerKind::Spork { w_energy: 0.0, w_cost: 1.0, ideal: true }
+    }
+
+    /// Parse the names used throughout the CLI and experiment harness.
+    pub fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "cpu-dynamic" => SchedulerKind::CpuDynamic,
+            "fpga-static" => SchedulerKind::FpgaStatic,
+            "fpga-dynamic" => SchedulerKind::FpgaDynamic,
+            "mark-ideal" => SchedulerKind::MarkIdeal,
+            "spork-e" => Self::spork_e(),
+            "spork-c" => Self::spork_c(),
+            "spork-b" => Self::spork_b(),
+            "spork-e-ideal" => Self::spork_e_ideal(),
+            "spork-c-ideal" => Self::spork_c_ideal(),
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SchedulerKind::CpuDynamic => "cpu-dynamic".into(),
+            SchedulerKind::FpgaStatic => "fpga-static".into(),
+            SchedulerKind::FpgaDynamic => "fpga-dynamic".into(),
+            SchedulerKind::MarkIdeal => "mark-ideal".into(),
+            SchedulerKind::Spork { w_energy, w_cost, ideal } => {
+                let base = if *w_energy > 0.0 && *w_cost > 0.0 {
+                    "spork-b"
+                } else if *w_cost > 0.0 {
+                    "spork-c"
+                } else {
+                    "spork-e"
+                };
+                if *ideal {
+                    format!("{base}-ideal")
+                } else {
+                    base.into()
+                }
+            }
+        }
+    }
+
+    /// Display name matching the paper's tables.
+    pub fn display(&self) -> String {
+        match self.name().as_str() {
+            "cpu-dynamic" => "CPU-dynamic".into(),
+            "fpga-static" => "FPGA-static".into(),
+            "fpga-dynamic" => "FPGA-dynamic".into(),
+            "mark-ideal" => "MArk-ideal".into(),
+            "spork-e" => "SporkE".into(),
+            "spork-c" => "SporkC".into(),
+            "spork-b" => "SporkB".into(),
+            "spork-e-ideal" => "SporkE-ideal".into(),
+            "spork-c-ideal" => "SporkC-ideal".into(),
+            other => other.into(),
+        }
+    }
+
+    /// The full scheduler roster of Table 8.
+    pub fn table8_roster() -> Vec<SchedulerKind> {
+        vec![
+            SchedulerKind::CpuDynamic,
+            SchedulerKind::FpgaStatic,
+            SchedulerKind::FpgaDynamic,
+            SchedulerKind::MarkIdeal,
+            Self::spork_c(),
+            Self::spork_b(),
+            Self::spork_e(),
+            Self::spork_c_ideal(),
+            Self::spork_e_ideal(),
+        ]
+    }
+}
+
+/// Request dispatch policy (paper Table 9 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// MArk-style round robin [93].
+    RoundRobin,
+    /// AutoScale index packing [27]: busiest-first regardless of kind.
+    IndexPacking,
+    /// Spork's efficient-first (Alg 3): FPGA before CPU, then busiest-first.
+    EfficientFirst,
+}
+
+impl DispatchPolicy {
+    pub fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "round-robin" => DispatchPolicy::RoundRobin,
+            "index-packing" => DispatchPolicy::IndexPacking,
+            "efficient-first" => DispatchPolicy::EfficientFirst,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::IndexPacking => "index-packing",
+            DispatchPolicy::EfficientFirst => "efficient-first",
+        }
+    }
+}
+
+/// Simulation-wide knobs.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub platform: PlatformConfig,
+    /// Scheduling interval T_s (s). Paper: equals the FPGA spin-up latency.
+    pub interval: f64,
+    /// Idle duration before a worker is reclaimed (§5.1: "as long as the
+    /// allocation duration"), per worker kind.
+    pub cpu_idle_timeout: f64,
+    pub fpga_idle_timeout: f64,
+    /// Deadline multiplier over request size (paper: 10x).
+    pub deadline_factor: f64,
+    /// Optional cap on workers (paper assumes abundance; None = unbounded).
+    pub max_cpus: Option<u32>,
+    pub max_fpgas: Option<u32>,
+    /// §4.5 future-work extension: deadline-aware FPGA allocation (ablation
+    /// flag; off reproduces the paper).
+    pub deadline_aware: bool,
+}
+
+impl SimConfig {
+    pub fn paper_default() -> Self {
+        let platform = PlatformConfig::paper_default();
+        Self::from_platform(platform)
+    }
+
+    /// Derive interval/timeouts from platform parameters the way the paper
+    /// does: T_s = A_f, idle timeout = allocation duration.
+    pub fn from_platform(platform: PlatformConfig) -> Self {
+        let interval = platform.fpga.spin_up;
+        Self {
+            cpu_idle_timeout: platform.cpu.spin_up.max(0.005),
+            fpga_idle_timeout: interval,
+            interval,
+            platform,
+            deadline_factor: 10.0,
+            max_cpus: None,
+            max_fpgas: None,
+            deadline_aware: false,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("platform", self.platform.to_json()),
+            ("interval", Json::Num(self.interval)),
+            ("cpu_idle_timeout", Json::Num(self.cpu_idle_timeout)),
+            ("fpga_idle_timeout", Json::Num(self.fpga_idle_timeout)),
+            ("deadline_factor", Json::Num(self.deadline_factor)),
+            (
+                "max_cpus",
+                self.max_cpus.map_or(Json::Null, |v| Json::Num(v as f64)),
+            ),
+            (
+                "max_fpgas",
+                self.max_fpgas.map_or(Json::Null, |v| Json::Num(v as f64)),
+            ),
+            ("deadline_aware", Json::Bool(self.deadline_aware)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let platform = match j.get("platform") {
+            Some(p) => PlatformConfig::from_json(p)?,
+            None => PlatformConfig::paper_default(),
+        };
+        let mut cfg = SimConfig::from_platform(platform);
+        cfg.interval = j.f64_or("interval", cfg.interval);
+        cfg.cpu_idle_timeout = j.f64_or("cpu_idle_timeout", cfg.cpu_idle_timeout);
+        cfg.fpga_idle_timeout = j.f64_or("fpga_idle_timeout", cfg.fpga_idle_timeout);
+        cfg.deadline_factor = j.f64_or("deadline_factor", cfg.deadline_factor);
+        cfg.max_cpus = j.get("max_cpus").and_then(Json::as_u64).map(|v| v as u32);
+        cfg.max_fpgas = j.get("max_fpgas").and_then(Json::as_u64).map(|v| v as u32);
+        cfg.deadline_aware = j.bool_or("deadline_aware", false);
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// Request-size buckets from §5.1 / Table 7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeBucket {
+    /// 10ms – 100ms
+    Short,
+    /// 100ms – 1s
+    Medium,
+    /// 1s – 10s
+    Long,
+}
+
+impl SizeBucket {
+    pub fn bounds(&self) -> (f64, f64) {
+        match self {
+            SizeBucket::Short => (0.010, 0.100),
+            SizeBucket::Medium => (0.100, 1.0),
+            SizeBucket::Long => (1.0, 10.0),
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "short" => SizeBucket::Short,
+            "medium" => SizeBucket::Medium,
+            "long" => SizeBucket::Long,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SizeBucket::Short => "short",
+            SizeBucket::Medium => "medium",
+            SizeBucket::Long => "long",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_table6() {
+        let c = SimConfig::paper_default();
+        assert_eq!(c.platform.cpu.spin_up, 0.005);
+        assert_eq!(c.platform.fpga.spin_up, 10.0);
+        assert_eq!(c.platform.cpu.busy_power, 150.0);
+        assert_eq!(c.platform.fpga.busy_power, 50.0);
+        assert_eq!(c.platform.cpu.idle_power, 30.0);
+        assert_eq!(c.platform.fpga.idle_power, 20.0);
+        assert_eq!(c.platform.fpga.speedup, 2.0);
+        assert!((c.platform.cpu.cost_per_hour - 0.668).abs() < 1e-9);
+        assert!((c.platform.fpga.cost_per_hour - 0.982).abs() < 1e-9);
+        assert_eq!(c.interval, 10.0); // T_s = A_f
+        assert_eq!(c.deadline_factor, 10.0);
+    }
+
+    #[test]
+    fn spin_up_energy_matches_section_3_2() {
+        // CPU 0.75 J, FPGA 500 J (busy power drawn during spin up).
+        let c = SimConfig::paper_default();
+        assert!((c.platform.cpu.spin_up_energy() - 0.75).abs() < 1e-9);
+        assert!((c.platform.fpga.spin_up_energy() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scheduler_names_round_trip() {
+        for k in SchedulerKind::table8_roster() {
+            let name = k.name();
+            assert_eq!(SchedulerKind::from_name(&name), Some(k.clone()), "{name}");
+        }
+        assert_eq!(SchedulerKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = SimConfig::paper_default();
+        c.max_fpgas = Some(128);
+        c.deadline_aware = true;
+        c.platform.fpga.spin_up = 60.0;
+        let j = c.to_json();
+        let c2 = SimConfig::from_json(&j).unwrap();
+        assert_eq!(c2.max_fpgas, Some(128));
+        assert!(c2.deadline_aware);
+        assert_eq!(c2.platform.fpga.spin_up, 60.0);
+        assert_eq!(c2.interval, c.interval);
+    }
+
+    #[test]
+    fn size_buckets() {
+        assert_eq!(SizeBucket::Short.bounds(), (0.010, 0.100));
+        assert_eq!(SizeBucket::from_name("long"), Some(SizeBucket::Long));
+        assert_eq!(SizeBucket::from_name("huge"), None);
+    }
+
+    #[test]
+    fn dispatch_policy_names() {
+        for p in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::IndexPacking,
+            DispatchPolicy::EfficientFirst,
+        ] {
+            assert_eq!(DispatchPolicy::from_name(p.name()), Some(p));
+        }
+    }
+}

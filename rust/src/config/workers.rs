@@ -1,0 +1,229 @@
+//! Worker parameterization — paper Table 6 (defaults non-italicized there):
+//!
+//! |                   | CPU worker | FPGA worker           |
+//! |-------------------|------------|-----------------------|
+//! | Spin-up latency   | 5 ms       | 1 s, **10 s**, 60 s, 100 s |
+//! | Spin-down latency | 5 ms       | 100 ms                |
+//! | Relative speedup  | 1x         | 1x, **2x**, 4x        |
+//! | Busy power        | 150 W      | 25 W, **50 W**, 100 W |
+//! | Idle power        | 10/**30**/50 W | 10/**20**/30 W    |
+//! | Prorated cost     | $0.668/hr  | $0.982/hr             |
+//!
+//! Workers draw **busy power during spin up and spin down** (§5.1).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WorkerKind {
+    Cpu,
+    Fpga,
+}
+
+impl WorkerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkerKind::Cpu => "cpu",
+            WorkerKind::Fpga => "fpga",
+        }
+    }
+}
+
+/// Physical/economic parameters of one worker class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerParams {
+    /// Spin-up latency A_w (seconds).
+    pub spin_up: f64,
+    /// Spin-down latency (seconds).
+    pub spin_down: f64,
+    /// Processing speedup S relative to a CPU worker (CPU = 1).
+    pub speedup: f64,
+    /// Busy power B_w (watts). Also drawn during spin up/down.
+    pub busy_power: f64,
+    /// Idle power I_w (watts).
+    pub idle_power: f64,
+    /// Occupancy cost C_w ($/hour while allocated).
+    pub cost_per_hour: f64,
+}
+
+impl WorkerParams {
+    pub fn cpu_default() -> Self {
+        Self {
+            spin_up: 0.005,
+            spin_down: 0.005,
+            speedup: 1.0,
+            busy_power: 150.0,
+            idle_power: 30.0,
+            cost_per_hour: 0.668,
+        }
+    }
+
+    pub fn fpga_default() -> Self {
+        Self {
+            spin_up: 10.0,
+            spin_down: 0.100,
+            speedup: 2.0,
+            busy_power: 50.0,
+            idle_power: 20.0,
+            cost_per_hour: 0.982,
+        }
+    }
+
+    /// Energy to spin up one worker (busy power over the spin-up window).
+    /// Paper §3.2: 0.75 J for CPUs, 500 J for FPGAs at defaults.
+    pub fn spin_up_energy(&self) -> f64 {
+        self.spin_up * self.busy_power
+    }
+
+    /// Energy to spin down one worker.
+    pub fn spin_down_energy(&self) -> f64 {
+        self.spin_down * self.busy_power
+    }
+
+    /// Cost per second while allocated.
+    pub fn cost_per_sec(&self) -> f64 {
+        self.cost_per_hour / 3600.0
+    }
+
+    /// Service time on this worker for a request of `size` CPU-seconds.
+    pub fn service_time(&self, size: f64) -> f64 {
+        size / self.speedup
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spin_up", Json::Num(self.spin_up)),
+            ("spin_down", Json::Num(self.spin_down)),
+            ("speedup", Json::Num(self.speedup)),
+            ("busy_power", Json::Num(self.busy_power)),
+            ("idle_power", Json::Num(self.idle_power)),
+            ("cost_per_hour", Json::Num(self.cost_per_hour)),
+        ])
+    }
+
+    pub fn from_json(j: &Json, base: WorkerParams) -> anyhow::Result<Self> {
+        let p = Self {
+            spin_up: j.f64_or("spin_up", base.spin_up),
+            spin_down: j.f64_or("spin_down", base.spin_down),
+            speedup: j.f64_or("speedup", base.speedup),
+            busy_power: j.f64_or("busy_power", base.busy_power),
+            idle_power: j.f64_or("idle_power", base.idle_power),
+            cost_per_hour: j.f64_or("cost_per_hour", base.cost_per_hour),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.spin_up >= 0.0, "spin_up must be >= 0");
+        anyhow::ensure!(self.spin_down >= 0.0, "spin_down must be >= 0");
+        anyhow::ensure!(self.speedup > 0.0, "speedup must be > 0");
+        anyhow::ensure!(self.busy_power >= 0.0, "busy_power must be >= 0");
+        anyhow::ensure!(self.idle_power >= 0.0, "idle_power must be >= 0");
+        anyhow::ensure!(
+            self.idle_power <= self.busy_power,
+            "idle_power must not exceed busy_power"
+        );
+        anyhow::ensure!(self.cost_per_hour >= 0.0, "cost_per_hour must be >= 0");
+        Ok(())
+    }
+}
+
+/// The two worker classes of the hybrid platform.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlatformConfig {
+    pub cpu: WorkerParams,
+    pub fpga: WorkerParams,
+}
+
+impl PlatformConfig {
+    pub fn paper_default() -> Self {
+        Self {
+            cpu: WorkerParams::cpu_default(),
+            fpga: WorkerParams::fpga_default(),
+        }
+    }
+
+    pub fn params(&self, kind: WorkerKind) -> &WorkerParams {
+        match kind {
+            WorkerKind::Cpu => &self.cpu,
+            WorkerKind::Fpga => &self.fpga,
+        }
+    }
+
+    /// FPGA busy-energy efficiency over CPU for the same work:
+    /// (B_c * 1) / (B_f / S). Paper §3.2 defaults: 150/(50/2) = 6x.
+    pub fn fpga_energy_advantage(&self) -> f64 {
+        self.cpu.busy_power / (self.fpga.busy_power / self.fpga.speedup)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cpu", self.cpu.to_json()),
+            ("fpga", self.fpga.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let base = Self::paper_default();
+        Ok(Self {
+            cpu: match j.get("cpu") {
+                Some(c) => WorkerParams::from_json(c, base.cpu)?,
+                None => base.cpu,
+            },
+            fpga: match j.get("fpga") {
+                Some(f) => WorkerParams::from_json(f, base.fpga)?,
+                None => base.fpga,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_energy_advantage_is_6x() {
+        let p = PlatformConfig::paper_default();
+        assert!((p.fpga_energy_advantage() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn service_time_uses_speedup() {
+        let f = WorkerParams::fpga_default();
+        assert!((f.service_time(0.010) - 0.005).abs() < 1e-12);
+        let c = WorkerParams::cpu_default();
+        assert!((c.service_time(0.010) - 0.010).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_per_sec() {
+        let c = WorkerParams::cpu_default();
+        assert!((c.cost_per_sec() * 3600.0 - 0.668).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        let mut p = WorkerParams::cpu_default();
+        p.speedup = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = WorkerParams::cpu_default();
+        p.idle_power = 200.0; // > busy
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_partial_overrides() {
+        let j = Json::parse(r#"{"fpga": {"spin_up": 60}}"#).unwrap();
+        let p = PlatformConfig::from_json(&j).unwrap();
+        assert_eq!(p.fpga.spin_up, 60.0);
+        assert_eq!(p.fpga.busy_power, 50.0); // default retained
+        assert_eq!(p.cpu, WorkerParams::cpu_default());
+    }
+
+    #[test]
+    fn kind_names() {
+        assert_eq!(WorkerKind::Cpu.name(), "cpu");
+        assert_eq!(WorkerKind::Fpga.name(), "fpga");
+    }
+}

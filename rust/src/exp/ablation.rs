@@ -1,0 +1,129 @@
+//! Ablations of Spork's design choices (beyond the paper's own Table 9
+//! dispatch ablation): the Alg-2 predictor vs naive last-value prediction
+//! vs the oracle, the idle-timeout reclamation window, and the §4.5
+//! deadline-aware allocation extension.
+
+use super::common::{Cell, ExpCtx};
+use crate::config::{PlatformConfig, SimConfig};
+use crate::sched::{self, Objective, Oracle};
+use crate::sim;
+use crate::trace::synthetic_app;
+use crate::util::rng::Rng;
+use crate::util::table::{pct, ratio, Table};
+
+fn run_spork(
+    ctx: &ExpCtx,
+    cfg: &SimConfig,
+    b: f64,
+    make: impl Fn(&SimConfig, &crate::trace::AppTrace) -> Box<dyn sim::Scheduler>,
+) -> Cell {
+    let defaults = PlatformConfig::paper_default();
+    let mut cell = Cell::default();
+    for s in 0..ctx.seeds {
+        let mut rng = Rng::new(900 + s);
+        let trace = synthetic_app(
+            "abl",
+            &mut rng,
+            b,
+            ctx.synthetic_duration(),
+            ctx.synthetic_rate(),
+            0.010,
+        );
+        let mut sched = make(cfg, &trace);
+        let r = sim::run(&trace, cfg.clone(), &defaults, sched.as_mut());
+        cell.add_run(&r.metrics, &r.ideal);
+    }
+    cell.finish()
+}
+
+/// Ablation tables: predictor, idle timeout, deadline-aware.
+pub fn ablation(ctx: &ExpCtx) -> Vec<Table> {
+    let mut tables = Vec::new();
+
+    // 1. Predictor ablation.
+    let mut t = Table::new(
+        "Ablation A: Spork's Alg-2 predictor vs last-value vs oracle (SporkE)",
+        &["b", "Predictor", "Energy Eff.", "Rel. Cost", "FPGA spin-ups"],
+    );
+    for &b in &[0.55, 0.65, 0.75] {
+        let cfg = SimConfig::paper_default();
+        let rows: Vec<(&str, Cell)> = vec![
+            (
+                "last-value",
+                run_spork(ctx, &cfg, b, |c, _| {
+                    Box::new(
+                        sched::spork::Spork::new(c, Objective::energy())
+                            .with_last_value_predictor(),
+                    )
+                }),
+            ),
+            (
+                "Alg 2 (histogram)",
+                run_spork(ctx, &cfg, b, |c, _| {
+                    Box::new(sched::spork::Spork::new(c, Objective::energy()))
+                }),
+            ),
+            (
+                "oracle",
+                run_spork(ctx, &cfg, b, |c, trace| {
+                    let o = Oracle::from_trace(trace, c, Objective::energy());
+                    Box::new(sched::spork::Spork::ideal(c, Objective::energy(), o))
+                }),
+            ),
+        ];
+        for (name, cell) in rows {
+            t.row(vec![
+                format!("{b}"),
+                name.into(),
+                pct(cell.energy_eff),
+                ratio(cell.rel_cost),
+                format!("{:.0}", cell.fpga_spinups),
+            ]);
+        }
+    }
+    tables.push(t);
+
+    // 2. Idle-timeout window (paper: one allocation duration).
+    let mut t = Table::new(
+        "Ablation B: idle-timeout reclamation window (SporkE, b=0.65)",
+        &["timeout / T_s", "Energy Eff.", "Rel. Cost", "FPGA spin-ups"],
+    );
+    for &mult in &[0.5, 1.0, 2.0, 4.0] {
+        let mut cfg = SimConfig::paper_default();
+        cfg.fpga_idle_timeout = mult * cfg.interval;
+        let cell = run_spork(ctx, &cfg, 0.65, |c, _| {
+            Box::new(sched::spork::Spork::new(c, Objective::energy()))
+        });
+        t.row(vec![
+            format!("{mult}x"),
+            pct(cell.energy_eff),
+            ratio(cell.rel_cost),
+            format!("{:.0}", cell.fpga_spinups),
+        ]);
+    }
+    tables.push(t);
+
+    // 3. §4.5 deadline-aware allocation (future-work extension).
+    let mut t = Table::new(
+        "Ablation C: deadline-aware allocation extension (§4.5, SporkE)",
+        &["b", "Variant", "Energy Eff.", "Rel. Cost", "Miss %"],
+    );
+    for &b in &[0.6, 0.7] {
+        for (name, aware) in [("paper (off)", false), ("deadline-aware", true)] {
+            let mut cfg = SimConfig::paper_default();
+            cfg.deadline_aware = aware;
+            let cell = run_spork(ctx, &cfg, b, |c, _| {
+                Box::new(sched::spork::Spork::new(c, Objective::energy()))
+            });
+            t.row(vec![
+                format!("{b}"),
+                name.into(),
+                pct(cell.energy_eff),
+                ratio(cell.rel_cost),
+                pct(cell.miss_frac),
+            ]);
+        }
+    }
+    tables.push(t);
+    tables
+}

@@ -1,0 +1,184 @@
+//! Shared experiment machinery: run contexts, seed averaging, and
+//! multi-app aggregation (§5.1: synthetic results average 10 trace runs;
+//! production energy/cost aggregate across applications).
+
+use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
+use crate::sched;
+use crate::sim::{IdealBaseline, Metrics};
+use crate::trace::AppTrace;
+use crate::util::rng::Rng;
+use std::path::PathBuf;
+
+/// CLI-derived experiment context.
+#[derive(Clone, Debug)]
+pub struct ExpCtx {
+    pub out_dir: PathBuf,
+    /// Synthetic trace repetitions (paper: 10).
+    pub seeds: u64,
+    /// Production demand scale (1.0 = paper scale; defaults lower to
+    /// bound single-core runtimes; recorded in EXPERIMENTS.md).
+    pub scale: f64,
+    /// Paper-scale workloads (slow).
+    pub full: bool,
+}
+
+impl ExpCtx {
+    pub fn synthetic_duration(&self) -> f64 {
+        if self.full {
+            7200.0
+        } else {
+            3600.0
+        }
+    }
+
+    pub fn synthetic_rate(&self) -> f64 {
+        if self.full {
+            1000.0
+        } else {
+            300.0
+        }
+    }
+}
+
+/// Normalized outcome of one (scheduler, workload) cell, averaged over
+/// seeds where applicable.
+#[derive(Clone, Debug, Default)]
+pub struct Cell {
+    pub energy_eff: f64,
+    pub rel_cost: f64,
+    pub miss_frac: f64,
+    pub cpu_req_frac: f64,
+    pub fpga_spinups: f64,
+    pub peak_fpgas: f64,
+    pub runs: u32,
+}
+
+impl Cell {
+    pub fn add_run(&mut self, metrics: &Metrics, ideal: &IdealBaseline) {
+        self.energy_eff += ideal.energy / metrics.total_energy();
+        self.rel_cost += metrics.total_cost() / ideal.cost;
+        self.miss_frac += metrics.deadline_misses as f64 / metrics.requests.max(1) as f64;
+        self.cpu_req_frac += metrics.cpu_request_fraction();
+        self.fpga_spinups += metrics.fpga_spinups as f64;
+        self.peak_fpgas += metrics.peak_fpgas as f64;
+        self.runs += 1;
+    }
+
+    pub fn finish(mut self) -> Cell {
+        let n = self.runs.max(1) as f64;
+        self.energy_eff /= n;
+        self.rel_cost /= n;
+        self.miss_frac /= n;
+        self.cpu_req_frac /= n;
+        self.fpga_spinups /= n;
+        self.peak_fpgas /= n;
+        self
+    }
+}
+
+/// Run `kind` on one synthetic workload per seed and average.
+pub fn run_synthetic(
+    kind: &SchedulerKind,
+    cfg: &SimConfig,
+    ctx: &ExpCtx,
+    burstiness: f64,
+    rate: f64,
+    size: f64,
+    duration: f64,
+    seed_base: u64,
+) -> Cell {
+    let defaults = PlatformConfig::paper_default();
+    let mut cell = Cell::default();
+    for s in 0..ctx.seeds {
+        let mut rng = Rng::new(seed_base + s);
+        let trace =
+            crate::trace::synthetic_app("exp", &mut rng, burstiness, duration, rate, size);
+        let r = sched::run_scheduler(kind, &trace, cfg, &defaults);
+        cell.add_run(&r.metrics, &r.ideal);
+    }
+    cell.finish()
+}
+
+/// Run `kind` over a multi-app production workload: each app gets its own
+/// pool + scheduler instance; energy/cost aggregate across apps before
+/// normalizing (§5.2).
+pub fn run_production(kind: &SchedulerKind, cfg: &SimConfig, apps: &[AppTrace]) -> Cell {
+    let defaults = PlatformConfig::paper_default();
+    let mut total = Metrics::default();
+    for app in apps {
+        let r = sched::run_scheduler(kind, app, cfg, &defaults);
+        total.merge(&r.metrics);
+    }
+    let ideal = IdealBaseline::for_work(total.total_work, &defaults);
+    let mut cell = Cell::default();
+    cell.add_run(&total, &ideal);
+    cell.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::EnergyBreakdown;
+
+    fn metrics(busy: f64, cost: f64, reqs: u64, misses: u64) -> Metrics {
+        let mut m = Metrics::default();
+        m.fpga_energy = EnergyBreakdown {
+            busy,
+            ..Default::default()
+        };
+        m.fpga_cost = cost;
+        m.requests = reqs;
+        m.deadline_misses = misses;
+        m.total_work = 1.0;
+        m
+    }
+
+    #[test]
+    fn cell_averages_runs() {
+        let ideal = IdealBaseline {
+            energy: 50.0,
+            cost: 1.0,
+        };
+        let mut c = Cell::default();
+        c.add_run(&metrics(100.0, 2.0, 10, 1), &ideal); // eff 0.5, cost 2
+        c.add_run(&metrics(50.0, 4.0, 10, 3), &ideal); // eff 1.0, cost 4
+        let c = c.finish();
+        assert!((c.energy_eff - 0.75).abs() < 1e-12);
+        assert!((c.rel_cost - 3.0).abs() < 1e-12);
+        assert!((c.miss_frac - 0.2).abs() < 1e-12);
+        assert_eq!(c.runs, 2);
+    }
+
+    #[test]
+    fn synthetic_runner_deterministic() {
+        let ctx = ExpCtx {
+            out_dir: PathBuf::from("/tmp"),
+            seeds: 2,
+            scale: 1.0,
+            full: false,
+        };
+        let cfg = SimConfig::paper_default();
+        let a = run_synthetic(
+            &SchedulerKind::CpuDynamic,
+            &cfg,
+            &ctx,
+            0.6,
+            100.0,
+            0.010,
+            300.0,
+            1,
+        );
+        let b = run_synthetic(
+            &SchedulerKind::CpuDynamic,
+            &cfg,
+            &ctx,
+            0.6,
+            100.0,
+            0.010,
+            300.0,
+            1,
+        );
+        assert_eq!(a.energy_eff, b.energy_eff);
+        assert_eq!(a.rel_cost, b.rel_cost);
+    }
+}

@@ -1,0 +1,88 @@
+//! Experiment harness: one runner per paper table/figure (see DESIGN.md
+//! §4 for the index). `spork experiment <id>` regenerates the table, both
+//! to stdout and under `results/` as txt/csv/md.
+
+pub mod ablation;
+pub mod common;
+pub mod offline;
+pub mod production_exp;
+pub mod sensitivity;
+
+pub use common::ExpCtx;
+
+use crate::cli::Args;
+use crate::report;
+use crate::util::table::Table;
+use std::path::PathBuf;
+use std::time::Instant;
+
+type Runner = fn(&ExpCtx) -> Vec<Table>;
+
+/// The experiment registry: id → (runner, description).
+pub fn registry() -> Vec<(&'static str, Runner, &'static str)> {
+    vec![
+        ("fig2", offline::fig2 as Runner, "optimal scheduling vs burstiness (energy/cost)"),
+        ("fig3", offline::fig3, "pareto-optimal energy/cost frontier"),
+        ("table8", production_exp::table8, "scheduler roster on production workloads"),
+        ("table9", production_exp::table9, "dispatch policy ablation"),
+        ("fig4", sensitivity::fig4, "Spork vs MArk-ideal @ 60s spin-up"),
+        ("fig5", sensitivity::fig5, "burstiness x spin-up sensitivity"),
+        ("fig6", sensitivity::fig6, "speedup x busy-power sensitivity"),
+        ("fig7", sensitivity::fig7, "request-size sensitivity"),
+        ("ablation", ablation::ablation, "design-choice ablations (predictor, idle timeout, deadline-aware)"),
+    ]
+}
+
+/// Run one experiment (or "all"); prints and writes tables.
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>, String> {
+    let registry = registry();
+    let selected: Vec<_> = if id == "all" {
+        registry
+    } else {
+        registry
+            .into_iter()
+            .filter(|(name, _, _)| *name == id)
+            .collect()
+    };
+    if selected.is_empty() {
+        return Err(format!(
+            "unknown experiment '{id}' (try: fig2 fig3 fig4 fig5 fig6 fig7 table8 table9 ablation all)"
+        ));
+    }
+    let mut all_tables = Vec::new();
+    for (name, runner, desc) in selected {
+        eprintln!("== running {name}: {desc} ==");
+        let t0 = Instant::now();
+        let tables = runner(ctx);
+        for (i, table) in tables.iter().enumerate() {
+            print!("{}", table.render());
+            println!();
+            let stem = if tables.len() == 1 {
+                name.to_string()
+            } else {
+                format!("{name}_{i}")
+            };
+            report::write_table(table, &ctx.out_dir, &stem)
+                .map_err(|e| format!("writing results: {e}"))?;
+        }
+        eprintln!("== {name} done in {:.1}s ==", t0.elapsed().as_secs_f64());
+        all_tables.extend(tables);
+    }
+    Ok(all_tables)
+}
+
+/// `spork experiment` CLI entrypoint.
+pub fn cmd_experiment(args: &Args) -> Result<(), String> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let ctx = ExpCtx {
+        out_dir: PathBuf::from(args.str_or("out", "results")),
+        seeds: args.u64_or("seeds", if id.starts_with("table") { 1 } else { 3 })?,
+        scale: args.f64_or("scale", 1.0)?,
+        full: args.has_flag("full"),
+    };
+    run(id, &ctx).map(|_| ())
+}

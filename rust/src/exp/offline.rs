@@ -1,0 +1,102 @@
+//! Fig 2 and Fig 3: the §3 idealized analysis on the fluid model.
+//!
+//! Setting (§3.2): hour-long per-second b-model rate traces, 10k req/s
+//! average, 10 ms constant requests, paper-default workers, results
+//! normalized to the idealized FPGA-only platform and averaged over ten
+//! trace runs.
+
+use super::common::ExpCtx;
+use crate::config::PlatformConfig;
+use crate::opt::{pareto, ranksolve, FluidInstance, PlatformMode};
+use crate::sched::Objective;
+use crate::trace::{bmodel, RateTrace};
+use crate::util::rng::Rng;
+use crate::util::table::{pct, ratio, sig3, Table};
+
+const BURSTS: &[f64] = &[0.5, 0.55, 0.6, 0.65, 0.7, 0.75];
+/// §3 granularity: per-second intervals; the 10 s FPGA spin-up becomes a
+/// 10-interval persistence horizon (Table 3's last constraint).
+const S_INTERVALS: usize = 10;
+
+fn instance(ctx: &ExpCtx, b: f64, seed: u64) -> FluidInstance {
+    let platform = PlatformConfig::paper_default();
+    let duration = if ctx.full { 3600 } else { 1800 };
+    let rate = 10_000.0;
+    let mut rng = Rng::new(seed);
+    let rates = RateTrace::new(1.0, bmodel::bmodel_rates(&mut rng, b, duration, rate));
+    // dt = 1 s (NOT the spin-up): §3 evaluates at rate granularity.
+    FluidInstance::from_rates(&rates, 0.010, 1.0, platform)
+}
+
+/// Fig 2: energy-optimal (a) and cost-optimal (b) scheduling of CPU-only,
+/// FPGA-only, and hybrid platforms vs burstiness.
+pub fn fig2(ctx: &ExpCtx) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for (tag, obj) in [("2a energy-optimal", Objective::energy()), ("2b cost-optimal", Objective::cost())] {
+        let mut t = Table::new(
+            &format!("Fig {tag}: optimal scheduling vs burstiness (normalized to idealized FPGA-only)"),
+            &[
+                "b",
+                "CPU-only eff", "CPU-only cost",
+                "FPGA-only eff", "FPGA-only cost",
+                "Hybrid eff", "Hybrid cost",
+            ],
+        );
+        for &b in BURSTS {
+            let mut acc = [[0.0f64; 2]; 3];
+            for s in 0..ctx.seeds {
+                let inst = instance(ctx, b, 1000 + s);
+                for (i, mode) in [
+                    PlatformMode::CpuOnly,
+                    PlatformMode::FpgaOnly,
+                    PlatformMode::Hybrid,
+                ]
+                .iter()
+                .enumerate()
+                {
+                    let r = ranksolve::solve(&inst, *mode, obj, S_INTERVALS);
+                    acc[i][0] += r.energy_efficiency(&inst);
+                    acc[i][1] += r.relative_cost(&inst);
+                }
+            }
+            let n = ctx.seeds as f64;
+            t.row(vec![
+                format!("{b}"),
+                pct(acc[0][0] / n),
+                ratio(acc[0][1] / n),
+                pct(acc[1][0] / n),
+                ratio(acc[1][1] / n),
+                pct(acc[2][0] / n),
+                ratio(acc[2][1] / n),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Fig 3: pareto frontier of weighted-objective hybrid schedulers at
+/// three burstiness levels.
+pub fn fig3(ctx: &ExpCtx) -> Vec<Table> {
+    let points = 9;
+    let mut t = Table::new(
+        "Fig 3: pareto-optimal energy/cost trade-offs (hybrid, weighted objectives)",
+        &["b", "w_energy", "Energy Eff.", "Rel. Cost"],
+    );
+    for &b in &[0.55, 0.65, 0.75] {
+        let mut acc = vec![(0.0f64, 0.0f64); points];
+        for s in 0..ctx.seeds {
+            let inst = instance(ctx, b, 2000 + s);
+            for (i, p) in pareto::sweep_persist(&inst, points, S_INTERVALS).iter().enumerate() {
+                acc[i].0 += p.energy_efficiency;
+                acc[i].1 += p.relative_cost;
+            }
+        }
+        let n = ctx.seeds as f64;
+        for (i, (e, c)) in acc.iter().enumerate() {
+            let w = i as f64 / (points - 1) as f64;
+            t.row(vec![format!("{b}"), sig3(w), pct(e / n), ratio(c / n)]);
+        }
+    }
+    vec![t]
+}

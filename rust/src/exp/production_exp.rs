@@ -1,0 +1,122 @@
+//! Table 8 (scheduler roster on production workloads) and Table 9
+//! (dispatch policy ablation).
+
+use super::common::{run_production, Cell, ExpCtx};
+use crate::config::{
+    DispatchPolicy, PlatformConfig, SchedulerKind, SimConfig, SizeBucket,
+};
+use crate::sched::{self, Objective};
+use crate::sim::{self, IdealBaseline, Metrics};
+use crate::trace::production::{self, Dataset, ProductionParams};
+use crate::trace::AppTrace;
+use crate::util::rng::Rng;
+use crate::util::table::{pct, ratio, Table};
+
+/// Generate one dataset x bucket workload at the context's scale. The
+/// default (reduced) setting caps app counts and demand so the full
+/// roster finishes on a laptop-class host; `--full` restores Table 7
+/// populations and two-hour windows (see EXPERIMENTS.md for what ran).
+pub fn workload(ctx: &ExpCtx, dataset: Dataset, bucket: SizeBucket, seed: u64) -> Vec<AppTrace> {
+    let params = ProductionParams {
+        dataset,
+        bucket,
+        duration: if ctx.full { 7200.0 } else { 1800.0 },
+        scale: ctx.scale,
+        max_apps: if ctx.full {
+            None
+        } else {
+            Some(match bucket {
+                SizeBucket::Short => 13,
+                SizeBucket::Medium => 12,
+                SizeBucket::Long => 8,
+            })
+        },
+    };
+    let mut rng = Rng::new(seed);
+    production::generate(&params, &mut rng)
+}
+
+/// Table 8: full scheduler roster on short and medium production traces.
+pub fn table8(ctx: &ExpCtx) -> Vec<Table> {
+    let cfg = SimConfig::paper_default();
+    let mut tables = Vec::new();
+    for (bucket, tag) in [(SizeBucket::Short, "8a short"), (SizeBucket::Medium, "8b medium")] {
+        let mut t = Table::new(
+            &format!("Table {tag} requests: production workloads"),
+            &[
+                "Scheduler",
+                "Azure eff", "Azure cost",
+                "Alibaba eff", "Alibaba cost",
+            ],
+        );
+        let azure = workload(ctx, Dataset::AzureFunctions, bucket, 11);
+        let alibaba = workload(ctx, Dataset::AlibabaMicroservices, bucket, 13);
+        for kind in SchedulerKind::table8_roster() {
+            let az = run_production(&kind, &cfg, &azure);
+            let al = run_production(&kind, &cfg, &alibaba);
+            t.row(vec![
+                kind.display(),
+                pct(az.energy_eff),
+                ratio(az.rel_cost),
+                pct(al.energy_eff),
+                ratio(al.rel_cost),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Table 9: dispatch policy ablation under SporkE's allocation logic.
+pub fn table9(ctx: &ExpCtx) -> Vec<Table> {
+    let cfg = SimConfig::paper_default();
+    let rows: Vec<(Dataset, SizeBucket)> = vec![
+        (Dataset::AzureFunctions, SizeBucket::Short),
+        (Dataset::AzureFunctions, SizeBucket::Medium),
+        (Dataset::AzureFunctions, SizeBucket::Long),
+        (Dataset::AlibabaMicroservices, SizeBucket::Short),
+        (Dataset::AlibabaMicroservices, SizeBucket::Medium),
+    ];
+    let mut t = Table::new(
+        "Table 9: energy efficiency by dispatch policy (SporkE allocation)",
+        &["Trace", "Round Robin", "Index Packing", "Spork (efficient-first)"],
+    );
+    for (dataset, bucket) in rows {
+        let apps = workload(ctx, dataset, bucket, 17);
+        let mut cells = Vec::new();
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::IndexPacking,
+            DispatchPolicy::EfficientFirst,
+        ] {
+            cells.push(run_spork_with_dispatch(&cfg, &apps, policy));
+        }
+        t.row(vec![
+            format!("{} ({})", dataset.name(), bucket.name()),
+            pct(cells[0].energy_eff),
+            pct(cells[1].energy_eff),
+            pct(cells[2].energy_eff),
+        ]);
+    }
+    vec![t]
+}
+
+/// SporkE allocation + a specific dispatch policy over a multi-app
+/// workload.
+pub fn run_spork_with_dispatch(
+    cfg: &SimConfig,
+    apps: &[AppTrace],
+    policy: DispatchPolicy,
+) -> Cell {
+    let defaults = PlatformConfig::paper_default();
+    let mut total = Metrics::default();
+    for app in apps {
+        let mut s = sched::spork::Spork::new(cfg, Objective::energy()).with_dispatch(policy);
+        let r = sim::run(app, cfg.clone(), &defaults, &mut s);
+        total.merge(&r.metrics);
+    }
+    let ideal = IdealBaseline::for_work(total.total_work, &defaults);
+    let mut cell = Cell::default();
+    cell.add_run(&total, &ideal);
+    cell.finish()
+}

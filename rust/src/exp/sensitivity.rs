@@ -1,0 +1,201 @@
+//! Fig 4-7: sensitivity studies on synthetic (b-model per-minute) traces.
+
+use super::common::{run_synthetic, ExpCtx};
+use crate::config::{PlatformConfig, SchedulerKind, SimConfig, SizeBucket};
+use crate::util::table::{pct, ratio, sig3, Table};
+
+const BURSTS: &[f64] = &[0.5, 0.55, 0.6, 0.65, 0.7, 0.75];
+
+fn cfg_with_fpga(spin_up: f64, speedup: f64, busy_power: f64) -> SimConfig {
+    let mut platform = PlatformConfig::paper_default();
+    platform.fpga.spin_up = spin_up;
+    platform.fpga.speedup = speedup;
+    platform.fpga.busy_power = busy_power;
+    SimConfig::from_platform(platform)
+}
+
+/// Fig 4: Spork vs MArk-ideal under a 60 s spin-up, with CPU-request
+/// shares and FPGA spin-up counts (right panel).
+pub fn fig4(ctx: &ExpCtx) -> Vec<Table> {
+    let cfg = cfg_with_fpga(60.0, 2.0, 50.0);
+    let roster = [
+        SchedulerKind::MarkIdeal,
+        SchedulerKind::spork_c(),
+        SchedulerKind::spork_e(),
+        SchedulerKind::spork_e_ideal(),
+    ];
+    let mut left = Table::new(
+        "Fig 4 (left): energy efficiency and cost vs burstiness @ 60s FPGA spin-up",
+        &["b", "Scheduler", "Energy Eff.", "Rel. Cost"],
+    );
+    let mut right = Table::new(
+        "Fig 4 (right): CPU request share and FPGA spin-ups (normalized to row max)",
+        &["b", "Scheduler", "CPU req %", "FPGA spin-ups (norm)"],
+    );
+    for &b in BURSTS {
+        let cells: Vec<_> = roster
+            .iter()
+            .map(|k| {
+                (
+                    k.display(),
+                    run_synthetic(
+                        k,
+                        &cfg,
+                        ctx,
+                        b,
+                        ctx.synthetic_rate(),
+                        0.010,
+                        ctx.synthetic_duration(),
+                        31,
+                    ),
+                )
+            })
+            .collect();
+        let max_spin = cells
+            .iter()
+            .map(|(_, c)| c.fpga_spinups)
+            .fold(1.0f64, f64::max);
+        for (name, c) in &cells {
+            left.row(vec![
+                format!("{b}"),
+                name.clone(),
+                pct(c.energy_eff),
+                ratio(c.rel_cost),
+            ]);
+            right.row(vec![
+                format!("{b}"),
+                name.clone(),
+                pct(c.cpu_req_frac),
+                sig3(c.fpga_spinups / max_spin),
+            ]);
+        }
+    }
+    vec![left, right]
+}
+
+/// Fig 5: burstiness x FPGA spin-up time, four schedulers.
+pub fn fig5(ctx: &ExpCtx) -> Vec<Table> {
+    let spinups: &[f64] = if ctx.full {
+        &[1.0, 10.0, 60.0, 100.0]
+    } else {
+        &[1.0, 10.0, 60.0]
+    };
+    let roster = [
+        SchedulerKind::CpuDynamic,
+        SchedulerKind::FpgaStatic,
+        SchedulerKind::FpgaDynamic,
+        SchedulerKind::spork_e(),
+    ];
+    let mut t = Table::new(
+        "Fig 5: sensitivity to burstiness and FPGA spin-up time",
+        &["spin-up", "b", "Scheduler", "Energy Eff.", "Rel. Cost"],
+    );
+    for &su in spinups {
+        let cfg = cfg_with_fpga(su, 2.0, 50.0);
+        for &b in &[0.5, 0.6, 0.7, 0.75] {
+            for k in &roster {
+                let c = run_synthetic(
+                    k,
+                    &cfg,
+                    ctx,
+                    b,
+                    ctx.synthetic_rate(),
+                    0.010,
+                    ctx.synthetic_duration(),
+                    41,
+                );
+                t.row(vec![
+                    format!("{su}s"),
+                    format!("{b}"),
+                    k.display(),
+                    pct(c.energy_eff),
+                    ratio(c.rel_cost),
+                ]);
+            }
+        }
+    }
+    vec![t]
+}
+
+/// Fig 6: FPGA speedup x busy power draw (both log-scale axes in the
+/// paper).
+pub fn fig6(ctx: &ExpCtx) -> Vec<Table> {
+    let roster = [
+        SchedulerKind::CpuDynamic,
+        SchedulerKind::FpgaStatic,
+        SchedulerKind::FpgaDynamic,
+        SchedulerKind::spork_e(),
+    ];
+    let mut t = Table::new(
+        "Fig 6: sensitivity to FPGA speedup and busy power (b=0.6, short requests)",
+        &["speedup", "busy W", "Scheduler", "Energy Eff.", "Rel. Cost"],
+    );
+    for &speedup in &[1.0, 2.0, 4.0] {
+        for &bp in &[25.0, 50.0, 100.0] {
+            let cfg = cfg_with_fpga(10.0, speedup, bp);
+            for k in &roster {
+                let c = run_synthetic(
+                    k,
+                    &cfg,
+                    ctx,
+                    0.6,
+                    ctx.synthetic_rate(),
+                    0.010,
+                    ctx.synthetic_duration(),
+                    51,
+                );
+                t.row(vec![
+                    format!("{speedup}x"),
+                    format!("{bp}"),
+                    k.display(),
+                    pct(c.energy_eff),
+                    ratio(c.rel_cost),
+                ]);
+            }
+        }
+    }
+    vec![t]
+}
+
+/// Fig 7: request-size buckets (deadlines scale with size).
+pub fn fig7(ctx: &ExpCtx) -> Vec<Table> {
+    let roster = [
+        SchedulerKind::CpuDynamic,
+        SchedulerKind::FpgaStatic,
+        SchedulerKind::FpgaDynamic,
+        SchedulerKind::spork_e(),
+    ];
+    let cfg = SimConfig::paper_default();
+    let mut t = Table::new(
+        "Fig 7: sensitivity to request sizes (b=0.6; deadline = 10x size)",
+        &["bucket", "size", "Scheduler", "Energy Eff.", "Rel. Cost"],
+    );
+    for bucket in [SizeBucket::Short, SizeBucket::Medium, SizeBucket::Long] {
+        // Geometric midpoint of the bucket; rate scaled to keep total
+        // demand (in workers) constant at 100 x scale, as in §5.1.
+        let (lo, hi) = bucket.bounds();
+        let size = (lo * hi).sqrt();
+        let demand_workers = ctx.synthetic_rate() * 0.010; // same demand as short runs
+        let rate = demand_workers / size;
+        for k in &roster {
+            let c = run_synthetic(
+                k,
+                &cfg,
+                ctx,
+                0.6,
+                rate,
+                size,
+                ctx.synthetic_duration(),
+                61,
+            );
+            t.row(vec![
+                bucket.name().into(),
+                format!("{:.3}s", size),
+                k.display(),
+                pct(c.energy_eff),
+                ratio(c.rel_cost),
+            ]);
+        }
+    }
+    vec![t]
+}

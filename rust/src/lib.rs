@@ -1,0 +1,27 @@
+//! # Spork — hybrid FPGA-CPU scheduling for interactive datacenter apps
+//!
+//! Reproduction of *"Hybrid Computing for Interactive Datacenter
+//! Applications"* (CS.DC 2023): a hybrid scheduler that serves stable-state
+//! load on energy-efficient FPGAs and absorbs bursts with fast-spinning
+//! CPUs, trading off energy against cost.
+//!
+//! Architecture (see `DESIGN.md`):
+//! * **L3 (this crate)** — schedulers, discrete-event simulator, offline
+//!   pareto-optimal solvers, trace generators, serving runtime, experiment
+//!   harness.
+//! * **L2/L1 (python/, build-time only)** — the served application (MLP
+//!   inference) as JAX + Pallas, AOT-lowered to HLO text under
+//!   `artifacts/`, executed here via PJRT (`runtime`).
+
+pub mod cli;
+pub mod config;
+pub mod exp;
+pub mod milp;
+pub mod opt;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod serve;
+pub mod sim;
+pub mod trace;
+pub mod util;

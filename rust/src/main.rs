@@ -1,0 +1,243 @@
+//! `spork` — CLI entrypoint: simulate traces, regenerate the paper's
+//! tables and figures, generate workloads, and drive the serving runtime.
+
+use spork::cli::{render_command_help, render_help, Args, Spec};
+use spork::config::{
+    PlatformConfig, SchedulerKind, SimConfig, SizeBucket,
+};
+use spork::sched;
+use spork::trace::{self, production};
+use spork::util::rng::Rng;
+use spork::util::table::{pct, ratio, Table};
+
+fn specs() -> Vec<Spec> {
+    vec![
+        Spec {
+            name: "simulate",
+            about: "run one scheduler over one synthetic trace and report metrics",
+            opts: vec![
+                ("scheduler", true, "cpu-dynamic|fpga-static|fpga-dynamic|mark-ideal|spork-{e,c,b}[-ideal] (default spork-e)"),
+                ("burstiness", true, "b-model bias in [0.5,0.75] (default 0.6)"),
+                ("rate", true, "mean request rate per second (default 1000)"),
+                ("size", true, "request size in seconds (default 0.010)"),
+                ("duration", true, "trace seconds (default 600)"),
+                ("seed", true, "rng seed (default 1)"),
+                ("fpga-spinup", true, "FPGA spin-up seconds (default 10)"),
+                ("fpga-speedup", true, "FPGA speedup (default 2)"),
+                ("fpga-busy-power", true, "FPGA busy watts (default 50)"),
+                ("config", true, "JSON SimConfig file (overrides defaults)"),
+                ("trace-file", true, "CSV arrival trace (overrides synthesis)"),
+                ("json", false, "emit results as JSON"),
+            ],
+        },
+        Spec {
+            name: "compare",
+            about: "run the full Table-8 scheduler roster on one trace",
+            opts: vec![
+                ("burstiness", true, "b-model bias (default 0.6)"),
+                ("rate", true, "mean req/s (default 1000)"),
+                ("size", true, "request size seconds (default 0.010)"),
+                ("duration", true, "trace seconds (default 600)"),
+                ("seed", true, "rng seed (default 1)"),
+            ],
+        },
+        Spec {
+            name: "trace-gen",
+            about: "generate a workload (b-model or production-like) to a directory",
+            opts: vec![
+                ("out", true, "output directory (required)"),
+                ("dataset", true, "azure|alibaba|bmodel (default bmodel)"),
+                ("bucket", true, "short|medium|long (default short)"),
+                ("burstiness", true, "b-model bias (default 0.6)"),
+                ("rate", true, "mean req/s for bmodel (default 1000)"),
+                ("size", true, "request size for bmodel (default 0.010)"),
+                ("duration", true, "trace seconds (default 7200)"),
+                ("scale", true, "production demand scale (default 1.0)"),
+                ("max-apps", true, "cap on generated apps"),
+                ("seed", true, "rng seed (default 1)"),
+            ],
+        },
+        Spec {
+            name: "experiment",
+            about: "regenerate a paper table/figure: fig2 fig3 fig4 fig5 fig6 fig7 table8 table9 all",
+            opts: vec![
+                ("out", true, "results directory (default results/)"),
+                ("seeds", true, "trace repetitions (default 10 synthetic, 1 production)"),
+                ("scale", true, "demand scale for production traces (default 1.0)"),
+                ("full", false, "paper-scale workloads (slow)"),
+            ],
+        },
+        Spec {
+            name: "serve",
+            about: "serve a compiled model through the hybrid runtime (requires artifacts/)",
+            opts: vec![
+                ("artifacts", true, "artifacts directory (default artifacts/)"),
+                ("rate", true, "offered simulated load req/s (default 40)"),
+                ("duration", true, "wall seconds of load (default 20)"),
+                ("burstiness", true, "b-model bias (default 0.65)"),
+                ("time-scale", true, "simulated seconds per wall second (default 5)"),
+                ("seed", true, "rng seed (default 1)"),
+            ],
+        },
+        Spec {
+            name: "pareto",
+            about: "sweep weighted energy/cost objectives (offline optimal, Fig 3)",
+            opts: vec![
+                ("burstiness", true, "b-model bias (default 0.65)"),
+                ("rate", true, "mean req/s (default 10000)"),
+                ("duration", true, "trace seconds (default 3600)"),
+                ("points", true, "number of weights (default 9)"),
+                ("seed", true, "rng seed (default 1)"),
+            ],
+        },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = specs();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+        print!("{}", render_help("spork", "hybrid FPGA-CPU scheduling (CS.DC 2023 reproduction)", &specs));
+        return;
+    }
+    if argv.iter().any(|a| a == "--help") {
+        if let Some(spec) = specs.iter().find(|s| s.name == argv[0]) {
+            print!("{}", render_command_help("spork", spec));
+            return;
+        }
+    }
+    let args = match Args::parse(&argv, &specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprint!("{}", render_help("spork", "hybrid FPGA-CPU scheduling", &specs));
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("trace-gen") => cmd_trace_gen(&args),
+        Some("experiment") => spork::exp::cmd_experiment(&args),
+        Some("serve") => spork::serve::cmd_serve(&args),
+        Some("pareto") => spork::opt::cmd_pareto(&args),
+        _ => Err("no subcommand given; see --help".to_string()),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn build_cfg(args: &Args) -> Result<SimConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SimConfig::load(path).map_err(|e| e.to_string())?,
+        None => SimConfig::paper_default(),
+    };
+    if let Some(v) = args.get("fpga-spinup") {
+        let plat = PlatformConfig {
+            fpga: spork::config::WorkerParams {
+                spin_up: v.parse().map_err(|_| "bad --fpga-spinup")?,
+                ..cfg.platform.fpga
+            },
+            ..cfg.platform
+        };
+        cfg = SimConfig::from_platform(plat);
+    }
+    cfg.platform.fpga.speedup = args.f64_or("fpga-speedup", cfg.platform.fpga.speedup)?;
+    cfg.platform.fpga.busy_power = args.f64_or("fpga-busy-power", cfg.platform.fpga.busy_power)?;
+    Ok(cfg)
+}
+
+fn synth_trace(args: &Args) -> Result<trace::AppTrace, String> {
+    if let Some(path) = args.get("trace-file") {
+        return trace::io::load_csv(std::path::Path::new(path)).map_err(|e| e.to_string());
+    }
+    let mut rng = Rng::new(args.u64_or("seed", 1)?);
+    Ok(trace::synthetic_app(
+        "cli",
+        &mut rng,
+        args.f64_or("burstiness", 0.6)?,
+        args.f64_or("duration", 600.0)?,
+        args.f64_or("rate", 1000.0)?,
+        args.f64_or("size", 0.010)?,
+    ))
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let cfg = build_cfg(args)?;
+    let name = args.str_or("scheduler", "spork-e");
+    let kind = SchedulerKind::from_name(&name).ok_or(format!("unknown scheduler '{name}'"))?;
+    let trace = synth_trace(args)?;
+    let defaults = PlatformConfig::paper_default();
+    let r = sched::run_scheduler(&kind, &trace, &cfg, &defaults);
+    if args.has_flag("json") {
+        println!("{}", spork::report::run_to_json(&r));
+    } else {
+        print!("{}", spork::report::run_to_text(&r, &trace));
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<(), String> {
+    let cfg = SimConfig::paper_default();
+    let trace = synth_trace(args)?;
+    let defaults = PlatformConfig::paper_default();
+    let mut t = Table::new(
+        &format!(
+            "Scheduler comparison (b={}, rate={}, size={}s, {} requests)",
+            args.str_or("burstiness", "0.6"),
+            args.str_or("rate", "1000"),
+            args.str_or("size", "0.010"),
+            trace.len()
+        ),
+        &["Scheduler", "Energy Eff.", "Rel. Cost", "Miss %", "CPU req %", "FPGA spinups"],
+    );
+    for kind in SchedulerKind::table8_roster() {
+        let r = sched::run_scheduler(&kind, &trace, &cfg, &defaults);
+        t.row(vec![
+            kind.display(),
+            pct(r.energy_efficiency()),
+            ratio(r.relative_cost()),
+            pct(r.miss_fraction()),
+            pct(r.metrics.cpu_request_fraction()),
+            format!("{}", r.metrics.fpga_spinups),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> Result<(), String> {
+    let out = args.get("out").ok_or("--out is required")?.to_string();
+    let seed = args.u64_or("seed", 1)?;
+    let mut rng = Rng::new(seed);
+    let apps = match args.str_or("dataset", "bmodel").as_str() {
+        "bmodel" => vec![trace::synthetic_app(
+            "bmodel",
+            &mut rng,
+            args.f64_or("burstiness", 0.6)?,
+            args.f64_or("duration", 7200.0)?,
+            args.f64_or("rate", 1000.0)?,
+            args.f64_or("size", 0.010)?,
+        )],
+        name => {
+            let dataset = production::Dataset::from_name(name)
+                .ok_or(format!("unknown dataset '{name}'"))?;
+            let bucket = SizeBucket::from_name(&args.str_or("bucket", "short"))
+                .ok_or("bad --bucket")?;
+            let params = production::ProductionParams {
+                dataset,
+                bucket,
+                duration: args.f64_or("duration", 7200.0)?,
+                scale: args.f64_or("scale", 1.0)?,
+                max_apps: args.get("max-apps").map(|v| v.parse().unwrap_or(usize::MAX)),
+            };
+            production::generate(&params, &mut rng)
+        }
+    };
+    let total: usize = apps.iter().map(|a| a.len()).sum();
+    trace::io::save_workload(&apps, std::path::Path::new(&out)).map_err(|e| e.to_string())?;
+    println!("wrote {} apps ({} requests) to {}", apps.len(), total, out);
+    Ok(())
+}

@@ -1,0 +1,218 @@
+//! Branch & bound MILP solver over the [`super::simplex`] LP relaxation.
+//!
+//! Depth-first, most-fractional branching, best-incumbent pruning. Sized
+//! for the cross-validation instances (a handful of integer variables over
+//! a few intervals), matching its role: certifying the scalable DP
+//! (`opt::dp`) against the paper's Table 3 formulation on small cases.
+
+use super::simplex::{Cmp, Lp, LpError, LpSolution};
+
+#[derive(Clone, Debug)]
+pub struct Milp {
+    pub lp: Lp,
+    /// Indices of variables constrained to integers.
+    pub integers: Vec<usize>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum MilpError {
+    Infeasible,
+    Unbounded,
+    NodeLimit,
+}
+
+impl Milp {
+    pub fn new() -> Self {
+        Self {
+            lp: Lp::new(),
+            integers: Vec::new(),
+        }
+    }
+
+    /// Add an integer variable.
+    pub fn int_var(&mut self, c: f64, lo: f64, hi: f64) -> usize {
+        let j = self.lp.var(c, lo, hi);
+        self.integers.push(j);
+        j
+    }
+
+    /// Add a continuous variable.
+    pub fn var(&mut self, c: f64, lo: f64, hi: f64) -> usize {
+        self.lp.var(c, lo, hi)
+    }
+
+    pub fn constrain(&mut self, terms: Vec<(usize, f64)>, cmp: Cmp, rhs: f64) {
+        self.lp.constrain(terms, cmp, rhs);
+    }
+
+    pub fn solve(&self, node_limit: usize) -> Result<LpSolution, MilpError> {
+        const TOL: f64 = 1e-6;
+        let mut best: Option<LpSolution> = None;
+        // Stack of bound overrides: Vec<(var, lo, hi)>.
+        let mut stack: Vec<Vec<(usize, f64, f64)>> = vec![Vec::new()];
+        let mut nodes = 0usize;
+        let mut any_feasible_relaxation = false;
+
+        while let Some(overrides) = stack.pop() {
+            nodes += 1;
+            if nodes > node_limit {
+                return best.ok_or(MilpError::NodeLimit);
+            }
+            let mut lp = self.lp.clone();
+            let mut empty_box = false;
+            for &(j, lo, hi) in &overrides {
+                let b = &mut lp.bounds[j];
+                b.0 = b.0.max(lo);
+                b.1 = b.1.min(hi);
+                if b.0 > b.1 {
+                    empty_box = true;
+                    break;
+                }
+            }
+            if empty_box {
+                continue; // skip the node entirely
+            }
+            let sol = match lp.solve() {
+                Ok(s) => s,
+                Err(LpError::Infeasible) => continue,
+                Err(LpError::Unbounded) => return Err(MilpError::Unbounded),
+                Err(LpError::IterationLimit) => continue, // treat as pruned
+            };
+            any_feasible_relaxation = true;
+            // Prune on bound.
+            if let Some(b) = &best {
+                if sol.objective >= b.objective - 1e-9 {
+                    continue;
+                }
+            }
+            // Most-fractional integer variable.
+            let frac = self
+                .integers
+                .iter()
+                .map(|&j| {
+                    let f = sol.x[j] - sol.x[j].floor();
+                    (j, f.min(1.0 - f))
+                })
+                .filter(|&(_, d)| d > TOL)
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            match frac {
+                None => {
+                    // Integral: snap and accept as incumbent.
+                    let mut snapped = sol.clone();
+                    for &j in &self.integers {
+                        snapped.x[j] = snapped.x[j].round();
+                    }
+                    best = Some(snapped);
+                }
+                Some((j, _)) => {
+                    let v = sol.x[j];
+                    let mut down = overrides.clone();
+                    down.push((j, f64::NEG_INFINITY, v.floor()));
+                    let mut up = overrides;
+                    up.push((j, v.ceil(), f64::INFINITY));
+                    // Explore the closer branch first (DFS).
+                    if v - v.floor() < 0.5 {
+                        stack.push(up);
+                        stack.push(down);
+                    } else {
+                        stack.push(down);
+                        stack.push(up);
+                    }
+                }
+            }
+        }
+        match best {
+            Some(b) => Ok(b),
+            None if any_feasible_relaxation => Err(MilpError::Infeasible),
+            None => Err(MilpError::Infeasible),
+        }
+    }
+}
+
+impl Default for Milp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knapsack_like() {
+        // max 5a + 4b st 6a + 5b <= 10, a,b in {0,1,2}
+        // → min -5a -4b. Optimal integer: a=0,b=2 → -8.
+        let mut m = Milp::new();
+        let a = m.int_var(-5.0, 0.0, 2.0);
+        let b = m.int_var(-4.0, 0.0, 2.0);
+        m.constrain(vec![(a, 6.0), (b, 5.0)], Cmp::Le, 10.0);
+        let s = m.solve(1000).unwrap();
+        assert!((s.objective + 8.0).abs() < 1e-6, "obj {}", s.objective);
+        assert_eq!(s.x[a] as i64, 0);
+        assert_eq!(s.x[b] as i64, 2);
+    }
+
+    #[test]
+    fn integrality_matters() {
+        // min x st 2x >= 3, x integer → x=2 (LP gives 1.5).
+        let mut m = Milp::new();
+        let x = m.int_var(1.0, 0.0, 10.0);
+        m.constrain(vec![(x, 2.0)], Cmp::Ge, 3.0);
+        let s = m.solve(100).unwrap();
+        assert_eq!(s.x[x] as i64, 2);
+    }
+
+    #[test]
+    fn mixed_integer_continuous() {
+        // min 10n + y st n*4 + y >= 9, y <= 3, n int → n=2,y=1 → 21.
+        let mut m = Milp::new();
+        let n = m.int_var(10.0, 0.0, 5.0);
+        let y = m.var(1.0, 0.0, 3.0);
+        m.constrain(vec![(n, 4.0), (y, 1.0)], Cmp::Ge, 9.0);
+        let s = m.solve(1000).unwrap();
+        assert!((s.objective - 21.0).abs() < 1e-6, "obj {}", s.objective);
+    }
+
+    #[test]
+    fn infeasible_integer_box() {
+        // 0.4 <= x <= 0.6, x integer → infeasible.
+        let mut m = Milp::new();
+        let x = m.int_var(1.0, 0.4, 0.6);
+        m.constrain(vec![(x, 1.0)], Cmp::Ge, 0.0);
+        assert!(m.solve(100).is_err());
+    }
+
+    #[test]
+    fn matches_exhaustive_on_random_small() {
+        // Randomized 2-int-var problems vs brute force.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        for _ in 0..30 {
+            let c1 = rng.range_f64(0.5, 5.0);
+            let c2 = rng.range_f64(0.5, 5.0);
+            let a1 = rng.range_f64(1.0, 4.0);
+            let a2 = rng.range_f64(1.0, 4.0);
+            let rhs = rng.range_f64(2.0, 12.0);
+            let mut m = Milp::new();
+            let x = m.int_var(c1, 0.0, 6.0);
+            let y = m.int_var(c2, 0.0, 6.0);
+            m.constrain(vec![(x, a1), (y, a2)], Cmp::Ge, rhs);
+            let s = m.solve(10_000).unwrap();
+            // Brute force.
+            let mut best = f64::INFINITY;
+            for xi in 0..=6 {
+                for yi in 0..=6 {
+                    if a1 * xi as f64 + a2 * yi as f64 >= rhs - 1e-9 {
+                        best = best.min(c1 * xi as f64 + c2 * yi as f64);
+                    }
+                }
+            }
+            assert!(
+                (s.objective - best).abs() < 1e-5,
+                "milp {} vs brute {best} (c=({c1},{c2}) a=({a1},{a2}) rhs={rhs})",
+                s.objective
+            );
+        }
+    }
+}

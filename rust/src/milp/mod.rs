@@ -1,0 +1,11 @@
+//! Mixed-integer linear programming substrate, built from scratch (the
+//! offline registry has no solver crates): a dense bounded-variable
+//! simplex ([`simplex`]) and a branch & bound wrapper ([`branch_bound`]).
+//! Used to certify the scalable fluid-model DP against the paper's
+//! Table 3 formulation on small instances.
+
+pub mod branch_bound;
+pub mod simplex;
+
+pub use branch_bound::{Milp, MilpError};
+pub use simplex::{Cmp, Lp, LpError, LpSolution};

@@ -1,0 +1,341 @@
+//! Dense primal simplex for linear programs in standard computational
+//! form, built from scratch (no LP solver exists in the offline registry).
+//!
+//! Problem shape:  minimize cᵀx  s.t.  A x ⋛ b,  lo ≤ x ≤ up.
+//! Internally converted to equality form with slack variables and solved
+//! with a Big-M phase-free bounded-variable simplex. Sized for the small
+//! cross-validation instances of `opt::dp` (tens of variables), not for
+//! production-scale LPs — the scalable path is the DP.
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    /// Sparse row: (column, coefficient).
+    pub terms: Vec<(usize, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// LP model builder.
+#[derive(Clone, Debug, Default)]
+pub struct Lp {
+    /// Objective coefficients (minimization).
+    pub objective: Vec<f64>,
+    /// Variable bounds (lo, hi). `hi` may be `f64::INFINITY`.
+    pub bounds: Vec<(f64, f64)>,
+    pub constraints: Vec<Constraint>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LpError {
+    Infeasible,
+    Unbounded,
+    IterationLimit,
+}
+
+impl fmt::Display for LpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LpError::Infeasible => write!(f, "infeasible"),
+            LpError::Unbounded => write!(f, "unbounded"),
+            LpError::IterationLimit => write!(f, "iteration limit"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+impl Lp {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a variable with cost `c` and bounds [lo, hi]; returns its index.
+    pub fn var(&mut self, c: f64, lo: f64, hi: f64) -> usize {
+        assert!(lo <= hi, "invalid bounds");
+        self.objective.push(c);
+        self.bounds.push((lo, hi));
+        self.objective.len() - 1
+    }
+
+    pub fn constrain(&mut self, terms: Vec<(usize, f64)>, cmp: Cmp, rhs: f64) {
+        self.constraints.push(Constraint { terms, cmp, rhs });
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.objective.len()
+    }
+
+    /// Solve with the tableau Big-M simplex. Shifts variables so all lower
+    /// bounds are 0; upper bounds become explicit ≤ rows (fine at this
+    /// scale).
+    pub fn solve(&self) -> Result<LpSolution, LpError> {
+        let n = self.num_vars();
+        // Shift x' = x - lo.
+        let lo: Vec<f64> = self.bounds.iter().map(|b| b.0).collect();
+
+        // Assemble rows: constraints (with shifted rhs) + finite upper
+        // bounds as x' <= hi-lo.
+        let mut rows: Vec<(Vec<f64>, Cmp, f64)> = Vec::new();
+        for c in &self.constraints {
+            let mut dense = vec![0.0; n];
+            let mut shift = 0.0;
+            for &(j, a) in &c.terms {
+                dense[j] += a;
+                shift += a * lo[j];
+            }
+            rows.push((dense, c.cmp, c.rhs - shift));
+        }
+        for (j, &(l, h)) in self.bounds.iter().enumerate() {
+            if l > h {
+                return Err(LpError::Infeasible);
+            }
+            if h.is_finite() {
+                // Includes h == l (pins the shifted variable at 0).
+                let mut dense = vec![0.0; n];
+                dense[j] = 1.0;
+                rows.push((dense, Cmp::Le, h - l));
+            }
+        }
+        // Normalize to rhs >= 0.
+        for (dense, cmp, rhs) in rows.iter_mut() {
+            if *rhs < 0.0 {
+                for a in dense.iter_mut() {
+                    *a = -*a;
+                }
+                *rhs = -*rhs;
+                *cmp = match *cmp {
+                    Cmp::Le => Cmp::Ge,
+                    Cmp::Ge => Cmp::Le,
+                    Cmp::Eq => Cmp::Eq,
+                };
+            }
+        }
+
+        let m = rows.len();
+        // Columns: n structural + slacks/surplus + artificials.
+        let n_slack = rows
+            .iter()
+            .filter(|(_, cmp, _)| *cmp != Cmp::Eq)
+            .count();
+        let n_art = rows
+            .iter()
+            .filter(|(_, cmp, _)| *cmp != Cmp::Le)
+            .count();
+        let total = n + n_slack + n_art;
+        let big_m = {
+            let maxc = self
+                .objective
+                .iter()
+                .fold(1.0f64, |acc, &c| acc.max(c.abs()));
+            maxc * 1e7
+        };
+
+        // Tableau: m rows x (total + 1) [last col = rhs].
+        let mut t = vec![vec![0.0; total + 1]; m];
+        let mut cost = vec![0.0; total];
+        cost[..n].copy_from_slice(&self.objective);
+        let mut basis = vec![usize::MAX; m];
+        let mut s_idx = n;
+        let mut a_idx = n + n_slack;
+        for (i, (dense, cmp, rhs)) in rows.iter().enumerate() {
+            t[i][..n].copy_from_slice(dense);
+            t[i][total] = *rhs;
+            match cmp {
+                Cmp::Le => {
+                    t[i][s_idx] = 1.0;
+                    basis[i] = s_idx;
+                    s_idx += 1;
+                }
+                Cmp::Ge => {
+                    t[i][s_idx] = -1.0;
+                    s_idx += 1;
+                    t[i][a_idx] = 1.0;
+                    cost[a_idx] = big_m;
+                    basis[i] = a_idx;
+                    a_idx += 1;
+                }
+                Cmp::Eq => {
+                    t[i][a_idx] = 1.0;
+                    cost[a_idx] = big_m;
+                    basis[i] = a_idx;
+                    a_idx += 1;
+                }
+            }
+        }
+
+        // Reduced costs row.
+        let mut z = vec![0.0; total + 1];
+        for j in 0..=total {
+            let mut s = 0.0;
+            for i in 0..m {
+                s += cost[basis[i]] * t[i][j];
+            }
+            z[j] = s - if j < total { cost[j] } else { 0.0 };
+        }
+
+        let max_iter = 50_000.max(200 * total);
+        for _ in 0..max_iter {
+            // Entering: most positive z_j (Dantzig) with tolerance.
+            let mut enter = None;
+            let mut best = 1e-9;
+            for (j, &zj) in z[..total].iter().enumerate() {
+                if zj > best {
+                    best = zj;
+                    enter = Some(j);
+                }
+            }
+            let Some(e) = enter else {
+                // Optimal. Check artificials.
+                for i in 0..m {
+                    if basis[i] >= n + n_slack && t[i][total] > 1e-6 {
+                        return Err(LpError::Infeasible);
+                    }
+                }
+                let mut x = lo.clone();
+                for i in 0..m {
+                    if basis[i] < n {
+                        x[basis[i]] += t[i][total];
+                    }
+                }
+                let objective = self
+                    .objective
+                    .iter()
+                    .zip(&x)
+                    .map(|(c, v)| c * v)
+                    .sum();
+                return Ok(LpSolution { x, objective });
+            };
+            // Leaving: min ratio.
+            let mut leave = None;
+            let mut best_ratio = f64::INFINITY;
+            for i in 0..m {
+                if t[i][e] > 1e-9 {
+                    let ratio = t[i][total] / t[i][e];
+                    if ratio < best_ratio - 1e-12 {
+                        best_ratio = ratio;
+                        leave = Some(i);
+                    }
+                }
+            }
+            let Some(l) = leave else {
+                return Err(LpError::Unbounded);
+            };
+            // Pivot.
+            let piv = t[l][e];
+            for v in t[l].iter_mut() {
+                *v /= piv;
+            }
+            for i in 0..m {
+                if i != l && t[i][e].abs() > 1e-12 {
+                    let f = t[i][e];
+                    for j in 0..=total {
+                        t[i][j] -= f * t[l][j];
+                    }
+                }
+            }
+            let f = z[e];
+            if f.abs() > 1e-12 {
+                for j in 0..=total {
+                    z[j] -= f * t[l][j];
+                }
+            }
+            basis[l] = e;
+        }
+        Err(LpError::IterationLimit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_min() {
+        // min x+y st x+y >= 2, x <= 1.5 → x=1.5? any split; obj = 2.
+        let mut lp = Lp::new();
+        let x = lp.var(1.0, 0.0, 1.5);
+        let y = lp.var(1.0, 0.0, f64::INFINITY);
+        lp.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 2.0);
+        let s = lp.solve().unwrap();
+        assert!((s.objective - 2.0).abs() < 1e-6, "obj {}", s.objective);
+    }
+
+    #[test]
+    fn prefers_cheaper_variable() {
+        // min 3x + y st x + y >= 4, y <= 3 → y=3, x=1 → obj 6.
+        let mut lp = Lp::new();
+        let x = lp.var(3.0, 0.0, f64::INFINITY);
+        let y = lp.var(1.0, 0.0, 3.0);
+        lp.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 4.0);
+        let s = lp.solve().unwrap();
+        assert!((s.x[x] - 1.0).abs() < 1e-6);
+        assert!((s.x[y] - 3.0).abs() < 1e-6);
+        assert!((s.objective - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equality_and_le() {
+        // min 2a + b st a + b = 5, a <= 2 → a=2,b=3 obj 7.
+        let mut lp = Lp::new();
+        let a = lp.var(2.0, 0.0, f64::INFINITY);
+        let b = lp.var(1.0, 0.0, f64::INFINITY);
+        lp.constrain(vec![(a, 1.0), (b, 1.0)], Cmp::Eq, 5.0);
+        lp.constrain(vec![(a, 1.0)], Cmp::Le, 2.0);
+        let s = lp.solve().unwrap();
+        // a is costlier → a=0, b=5, obj 5.
+        assert!((s.objective - 5.0).abs() < 1e-6, "obj {}", s.objective);
+        assert!((s.x[a]).abs() < 1e-6);
+        assert!((s.x[b] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut lp = Lp::new();
+        let x = lp.var(1.0, 0.0, 1.0);
+        lp.constrain(vec![(x, 1.0)], Cmp::Ge, 5.0);
+        assert_eq!(lp.solve().unwrap_err(), LpError::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut lp = Lp::new();
+        let x = lp.var(-1.0, 0.0, f64::INFINITY);
+        lp.constrain(vec![(x, 1.0)], Cmp::Ge, 0.0);
+        assert_eq!(lp.solve().unwrap_err(), LpError::Unbounded);
+    }
+
+    #[test]
+    fn lower_bounds_shifted() {
+        // min x st x >= 2 (bound), x + y >= 5, y in [1, 2] → x=3,y=2 obj 3.
+        let mut lp = Lp::new();
+        let x = lp.var(1.0, 2.0, f64::INFINITY);
+        let y = lp.var(0.0, 1.0, 2.0);
+        lp.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 5.0);
+        let s = lp.solve().unwrap();
+        assert!((s.x[x] - 3.0).abs() < 1e-6, "x={}", s.x[x]);
+        assert!((s.x[y] - 2.0).abs() < 1e-6, "y={}", s.x[y]);
+    }
+
+    #[test]
+    fn negative_rhs_handled() {
+        // min x st -x <= -3  (i.e. x >= 3)
+        let mut lp = Lp::new();
+        let x = lp.var(1.0, 0.0, f64::INFINITY);
+        lp.constrain(vec![(x, -1.0)], Cmp::Le, -3.0);
+        let s = lp.solve().unwrap();
+        assert!((s.x[x] - 3.0).abs() < 1e-6);
+    }
+}

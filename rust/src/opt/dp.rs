@@ -1,0 +1,291 @@
+//! Scalable exact solver for the §3 fluid model: dynamic programming over
+//! the FPGA-count trajectory.
+//!
+//! Key structural facts (DESIGN.md §5): with T_s = A_f the MILP's spin-up
+//! persistence constraint is vacuous, and with CPU overheads negligible
+//! (0.75 J vs 500 J) the per-interval remainder cost is local given the
+//! FPGA count. The only inter-interval coupling is FPGA alloc/dealloc
+//! energy, so
+//!
+//! `V_t(y) = min_{y'} [ V_{t-1}(y') + trans(y' → y) ] + stage_t(y)`
+//!
+//! is exact over integer FPGA counts. The transition scan exploits the
+//! structure `trans = a·max(y-y',0) + d·max(y'-y,0)` with two running-min
+//! sweeps, giving O(T·Y) instead of O(T·Y²).
+
+use super::fluid::{FluidInstance, PlatformMode};
+use crate::sched::Objective;
+
+#[derive(Clone, Debug)]
+pub struct OptResult {
+    pub energy: f64,
+    pub cost: f64,
+    /// FPGA counts per interval.
+    pub trajectory: Vec<u32>,
+    pub mode: PlatformMode,
+}
+
+impl OptResult {
+    pub fn energy_efficiency(&self, inst: &FluidInstance) -> f64 {
+        inst.ideal_energy() / self.energy
+    }
+    pub fn relative_cost(&self, inst: &FluidInstance) -> f64 {
+        self.cost / inst.ideal_cost()
+    }
+}
+
+/// Solve the fluid instance optimally under `obj` and `mode`.
+pub fn solve(inst: &FluidInstance, mode: PlatformMode, obj: Objective) -> OptResult {
+    let t_len = inst.demand_f.len();
+    let p = &inst.platform;
+    let ts = inst.interval;
+    let e_unit = p.fpga.busy_power * ts;
+    let c_unit = p.fpga.cost_per_sec() * ts;
+    let score = |e: f64, c: f64| obj.w_energy * e / e_unit + obj.w_cost * c / c_unit;
+
+    let cap: u32 = if mode == PlatformMode::CpuOnly {
+        0
+    } else {
+        inst.demand_f.iter().fold(0.0f64, |a, &b| a.max(b)).ceil() as u32
+    };
+    let y_len = cap as usize + 1;
+
+    // Normalized transition prices per worker.
+    let up = score(p.fpga.spin_up_energy(), 0.0);
+    let down = score(p.fpga.spin_down_energy(), 0.0);
+
+    // V[y] after processing t intervals; start at Y=0 (boundary).
+    let mut v = vec![f64::INFINITY; y_len];
+    v[0] = 0.0;
+    let mut choice: Vec<Vec<u32>> = Vec::with_capacity(t_len);
+
+    let mut best_from_below = vec![0.0f64; y_len];
+    let mut best_from_above = vec![0.0f64; y_len];
+    let mut arg_below = vec![0u32; y_len];
+    let mut arg_above = vec![0u32; y_len];
+
+    for t in 0..t_len {
+        let d = inst.demand_f[t];
+        // Sweep up: best predecessor y' <= y paying `up` per unit raised.
+        let mut run = f64::INFINITY;
+        let mut arg = 0u32;
+        for y in 0..y_len {
+            let cand = v[y];
+            if cand < run {
+                run = cand;
+                arg = y as u32;
+            }
+            best_from_below[y] = run;
+            arg_below[y] = arg;
+            run += up; // moving one step up costs `up` more
+        }
+        // Sweep down: best predecessor y' >= y paying `down` per unit cut.
+        let mut run = f64::INFINITY;
+        let mut arg = 0u32;
+        for y in (0..y_len).rev() {
+            let cand = v[y];
+            if cand < run {
+                run = cand;
+                arg = y as u32;
+            }
+            best_from_above[y] = run;
+            arg_above[y] = arg;
+            run += down;
+        }
+        let mut nv = vec![f64::INFINITY; y_len];
+        let mut ch = vec![0u32; y_len];
+        for y in 0..y_len {
+            if mode == PlatformMode::FpgaOnly && (y as f64) < d - 1e-9 {
+                continue; // must cover all demand with FPGAs
+            }
+            let (e, c) = inst.stage(y as u32, d, mode);
+            let stage = score(e, c);
+            let (base, from) = if best_from_below[y] <= best_from_above[y] {
+                (best_from_below[y], arg_below[y])
+            } else {
+                (best_from_above[y], arg_above[y])
+            };
+            nv[y] = base + stage;
+            ch[y] = from;
+        }
+        v = nv;
+        choice.push(ch);
+    }
+    // Terminal: deallocate everything.
+    let mut best = (f64::INFINITY, 0usize);
+    for y in 0..y_len {
+        let total = v[y] + down * y as f64;
+        if total < best.0 {
+            best = (total, y);
+        }
+    }
+    // Backtrack.
+    let mut trajectory = vec![0u32; t_len];
+    let mut y = best.1 as u32;
+    for t in (0..t_len).rev() {
+        trajectory[t] = y;
+        y = choice[t][y as usize];
+    }
+    debug_assert_eq!(y, 0, "trajectory must start from zero");
+
+    // Re-account the un-normalized energy and cost along the trajectory
+    // (so results are exact joules/dollars, not normalized scores).
+    let mut energy = 0.0;
+    let mut cost = 0.0;
+    let mut prev = 0u32;
+    for (t, &yt) in trajectory.iter().enumerate() {
+        let (te, tc) = inst.transition(prev, yt);
+        let (se, sc) = inst.stage(yt, inst.demand_f[t], mode);
+        energy += te + se;
+        cost += tc + sc;
+        prev = yt;
+    }
+    let (te, tc) = inst.transition(prev, 0);
+    energy += te;
+    cost += tc;
+
+    OptResult {
+        energy,
+        cost,
+        trajectory,
+        mode,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn inst(demand: Vec<f64>) -> FluidInstance {
+        FluidInstance {
+            demand_f: demand,
+            interval: 10.0,
+            platform: PlatformConfig::paper_default(),
+        }
+    }
+
+    #[test]
+    fn steady_demand_allocates_exactly() {
+        let f = inst(vec![2.0; 10]);
+        let r = solve(&f, PlatformMode::Hybrid, Objective::energy());
+        assert_eq!(r.trajectory, vec![2; 10]);
+        // Energy: busy 2x10 intervals + one spin-up/down pair x2 workers.
+        let expect = 2.0 * 50.0 * 100.0 + 2.0 * (500.0 + 5.0);
+        assert!((r.energy - expect).abs() < 1e-6, "{} vs {expect}", r.energy);
+    }
+
+    #[test]
+    fn short_lull_keeps_fpgas_idle() {
+        // Demand 3,0,3: dealloc+realloc costs 3*(500+5) J vs idling
+        // 3 workers for one interval = 3*20*10 = 600 J → idle wins.
+        let f = inst(vec![3.0, 0.0, 3.0]);
+        let r = solve(&f, PlatformMode::Hybrid, Objective::energy());
+        assert_eq!(r.trajectory, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn long_lull_deallocates() {
+        // 1 FPGA, 30 intervals of zero, then 1 again: idling 30x200 J
+        // exceeds 505 J realloc → drop to 0.
+        let mut d = vec![1.0];
+        d.extend(vec![0.0; 30]);
+        d.push(1.0);
+        let f = inst(d);
+        let r = solve(&f, PlatformMode::Hybrid, Objective::energy());
+        assert_eq!(r.trajectory[0], 1);
+        assert_eq!(r.trajectory[15], 0);
+        assert_eq!(r.trajectory[31], 1);
+    }
+
+    #[test]
+    fn cost_objective_tolerates_cpu_leftovers() {
+        // Demand 1.2: energy-opt rounds up to 2 FPGAs (CPU energy is 6x);
+        // cost-opt uses 1 FPGA + CPUs (leftover 0.2 < 7.35 s threshold).
+        let f = inst(vec![1.2; 20]);
+        let re = solve(&f, PlatformMode::Hybrid, Objective::energy());
+        let rc = solve(&f, PlatformMode::Hybrid, Objective::cost());
+        assert_eq!(re.trajectory[10], 2);
+        assert_eq!(rc.trajectory[10], 1);
+        assert!(rc.cost < re.cost);
+        assert!(re.energy < rc.energy);
+    }
+
+    #[test]
+    fn fpga_only_must_cover() {
+        let f = inst(vec![0.3, 2.4]);
+        let r = solve(&f, PlatformMode::FpgaOnly, Objective::cost());
+        assert!(r.trajectory[0] >= 1);
+        assert!(r.trajectory[1] >= 3);
+    }
+
+    #[test]
+    fn cpu_only_has_flat_cost_ratio() {
+        let f = inst(vec![1.0, 3.0, 2.0]);
+        let r = solve(&f, PlatformMode::CpuOnly, Objective::energy());
+        assert_eq!(r.trajectory, vec![0, 0, 0]);
+        // CPU-only relative cost = S*C_c/C_f.
+        let ratio = r.relative_cost(&f);
+        assert!((ratio - 2.0 * 0.668 / 0.982).abs() < 1e-9, "{ratio}");
+        // Energy efficiency = B_f/S / B_c = 1/6.
+        assert!((r.energy_efficiency(&f) - 1.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hybrid_never_worse_than_homogeneous_on_objective() {
+        use crate::trace::bmodel;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        for &b in &[0.5, 0.6, 0.7, 0.75] {
+            let series = bmodel::bmodel_series(&mut rng, b, 64, 200.0);
+            let f = inst(series);
+            for obj in [Objective::energy(), Objective::cost()] {
+                let h = solve(&f, PlatformMode::Hybrid, obj);
+                let fo = solve(&f, PlatformMode::FpgaOnly, obj);
+                let co = solve(&f, PlatformMode::CpuOnly, obj);
+                let sc = |r: &OptResult| {
+                    obj.w_energy * r.energy / (500.0) + obj.w_cost * r.cost / (0.982 / 360.0)
+                };
+                assert!(
+                    sc(&h) <= sc(&fo) + 1e-6 && sc(&h) <= sc(&co) + 1e-6,
+                    "hybrid dominated at b={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_milp_on_small_instances() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for case in 0..6 {
+            let t = 3 + (case % 3);
+            let demand: Vec<f64> =
+                (0..t).map(|_| (rng.below(4) as f64) * 0.8).collect();
+            let f = inst(demand.clone());
+            for (mode, obj) in [
+                (PlatformMode::Hybrid, Objective::energy()),
+                (PlatformMode::Hybrid, Objective::cost()),
+                (PlatformMode::FpgaOnly, Objective::energy()),
+            ] {
+                let dp = solve(&f, mode, obj);
+                let milp = f.build_milp(mode, obj).solve(200_000);
+                let milp = match milp {
+                    Ok(s) => s,
+                    Err(e) => panic!("milp failed on {demand:?}: {e:?}"),
+                };
+                let e_unit = 50.0 * 10.0;
+                let c_unit = 0.982 / 3600.0 * 10.0;
+                let dp_score =
+                    obj.w_energy * dp.energy / e_unit + obj.w_cost * dp.cost / c_unit;
+                assert!(
+                    (dp_score - milp.objective).abs() < 1e-3 * (1.0 + milp.objective),
+                    "case {case} {:?} {:?}: dp {dp_score} vs milp {}",
+                    mode,
+                    obj,
+                    milp.objective
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Offline pareto-optimal schedulers for the §3 idealized analysis:
+//! the fluid model and its Table 3 MILP ([`fluid`]), the scalable
+//! trajectory DP ([`dp`]), the homogeneous rank decomposition ([`rank`]),
+//! and the weighted-objective sweep ([`pareto`], Fig 3).
+
+pub mod dp;
+pub mod fluid;
+pub mod pareto;
+pub mod rank;
+pub mod ranksolve;
+
+pub use dp::{solve, OptResult};
+pub use fluid::{FluidInstance, PlatformMode};
+
+use crate::cli::Args;
+use crate::config::PlatformConfig;
+use crate::trace::{bmodel, RateTrace};
+use crate::util::rng::Rng;
+use crate::util::table::{pct, ratio, sig3, Table};
+
+/// `spork pareto`: print the Fig 3-style frontier for one burstiness.
+pub fn cmd_pareto(args: &Args) -> Result<(), String> {
+    let b = args.f64_or("burstiness", 0.65)?;
+    let rate = args.f64_or("rate", 10_000.0)?;
+    let duration = args.f64_or("duration", 3600.0)?;
+    let points = args.u64_or("points", 9)? as usize;
+    let seed = args.u64_or("seed", 1)?;
+    let size = 0.010;
+
+    let mut rng = Rng::new(seed);
+    let rates = RateTrace::new(
+        1.0,
+        bmodel::bmodel_rates(&mut rng, b, duration as usize, rate),
+    );
+    let platform = PlatformConfig::paper_default();
+    // §3 granularity: per-second fluid model; the FPGA spin-up becomes a
+    // persistence horizon of spin_up/1s intervals.
+    let s_intervals = platform.fpga.spin_up.ceil() as usize;
+    let inst = FluidInstance::from_rates(&rates, size, 1.0, platform);
+    let pts = pareto::sweep_persist(&inst, points.max(2), s_intervals);
+    let mut t = Table::new(
+        &format!("Pareto-optimal hybrid schedulers (b={b}, {rate} req/s, {duration}s)"),
+        &["w_energy", "Energy Eff.", "Rel. Cost"],
+    );
+    for p in pts {
+        t.row(vec![
+            sig3(p.w_energy),
+            pct(p.energy_efficiency),
+            ratio(p.relative_cost),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Pareto-frontier sweep over weighted energy/cost objectives (Fig 3):
+//! for each burstiness level, solve the fluid instance optimally for a
+//! ladder of objective weights and report (energy efficiency, relative
+//! cost) points. Boundary weights are the energy- and cost-optimal
+//! schedulers of Fig 2.
+
+use super::fluid::{FluidInstance, PlatformMode};
+use super::ranksolve;
+use crate::sched::Objective;
+
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub w_energy: f64,
+    pub energy_efficiency: f64,
+    pub relative_cost: f64,
+}
+
+/// Sweep `points` weights from cost-only (w=0) to energy-only (w=1).
+/// `s_intervals` is the spin-up persistence horizon (spin_up / dt).
+pub fn sweep_persist(
+    inst: &FluidInstance,
+    points: usize,
+    s_intervals: usize,
+) -> Vec<ParetoPoint> {
+    assert!(points >= 2);
+    (0..points)
+        .map(|i| {
+            let w = i as f64 / (points - 1) as f64;
+            let obj = Objective {
+                w_energy: w,
+                w_cost: 1.0 - w,
+            };
+            let r = ranksolve::solve(inst, PlatformMode::Hybrid, obj, s_intervals);
+            ParetoPoint {
+                w_energy: w,
+                energy_efficiency: r.energy_efficiency(inst),
+                relative_cost: r.relative_cost(inst),
+            }
+        })
+        .collect()
+}
+
+/// Interval-granularity sweep (persistence horizon 1).
+pub fn sweep(inst: &FluidInstance, points: usize) -> Vec<ParetoPoint> {
+    sweep_persist(inst, points, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::trace::bmodel;
+    use crate::util::rng::Rng;
+
+    fn bursty_instance(b: f64, seed: u64) -> FluidInstance {
+        let mut rng = Rng::new(seed);
+        FluidInstance {
+            demand_f: bmodel::bmodel_series(&mut rng, b, 128, 1000.0),
+            interval: 10.0,
+            platform: PlatformConfig::paper_default(),
+        }
+    }
+
+    #[test]
+    fn endpoints_order_correctly() {
+        let inst = bursty_instance(0.7, 3);
+        let pts = sweep(&inst, 5);
+        let cost_end = &pts[0]; // w_energy = 0
+        let energy_end = &pts[4];
+        assert!(
+            energy_end.energy_efficiency >= cost_end.energy_efficiency - 1e-9,
+            "energy end {} vs cost end {}",
+            energy_end.energy_efficiency,
+            cost_end.energy_efficiency
+        );
+        assert!(
+            cost_end.relative_cost <= energy_end.relative_cost + 1e-9,
+            "cost end {} vs energy end {}",
+            cost_end.relative_cost,
+            energy_end.relative_cost
+        );
+    }
+
+    #[test]
+    fn frontier_nontrivial_at_high_burstiness() {
+        // Paper: at high burstiness energy-optimal is ~2x costlier than
+        // cost-optimal. Assert a material spread (>20%).
+        let inst = bursty_instance(0.75, 4);
+        let pts = sweep(&inst, 5);
+        let spread = pts[4].relative_cost / pts[0].relative_cost;
+        assert!(spread > 1.2, "cost spread {spread}");
+    }
+
+    #[test]
+    fn uniform_load_collapses_frontier() {
+        let inst = bursty_instance(0.5, 5);
+        let pts = sweep(&inst, 3);
+        let spread = pts[2].relative_cost / pts[0].relative_cost;
+        assert!(spread < 1.1, "uniform frontier should be tight, got {spread}");
+    }
+}

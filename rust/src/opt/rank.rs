@@ -1,0 +1,163 @@
+//! Rank (ski-rental) decomposition for homogeneous platforms.
+//!
+//! For a single worker kind and an integer demand profile `d_t`, worker
+//! rank `k` must be allocated exactly in the intervals where `d_t >= k`.
+//! Between two such busy stretches, the only decision is keep-idle vs
+//! dealloc+realloc, decided per gap by comparing idle energy against the
+//! dealloc+alloc pair — gaps are independent across ranks, so the global
+//! optimum decomposes. This gives an O(T·peak) exact solver used to
+//! cross-check the trajectory DP (`super::dp`) and as a fast path for
+//! homogeneous Fig 2 curves.
+
+use crate::config::WorkerParams;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RankCost {
+    pub alloc_energy: f64,
+    pub busy_energy: f64,
+    pub idle_energy: f64,
+    pub dealloc_energy: f64,
+    /// Occupancy seconds (for cost): allocated worker-seconds.
+    pub occupancy: f64,
+}
+
+impl RankCost {
+    pub fn energy(&self) -> f64 {
+        self.alloc_energy + self.busy_energy + self.idle_energy + self.dealloc_energy
+    }
+
+    pub fn cost(&self, params: &WorkerParams) -> f64 {
+        self.occupancy * params.cost_per_sec()
+    }
+}
+
+/// Optimal allocation cost for one worker kind serving integer demand
+/// `d_t` (workers needed per interval of length `interval`). The
+/// `optimize_energy` flag picks which metric the keep-idle decision
+/// minimizes (energy vs occupancy cost).
+pub fn solve(
+    demand: &[u32],
+    params: &WorkerParams,
+    interval: f64,
+    optimize_energy: bool,
+) -> RankCost {
+    let peak = demand.iter().copied().max().unwrap_or(0);
+    let mut total = RankCost::default();
+    let realloc_energy = params.spin_up_energy() + params.spin_down_energy();
+    for k in 1..=peak {
+        // Busy intervals for this rank.
+        let mut last_busy: Option<usize> = None;
+        let mut allocated = false;
+        for (t, &d) in demand.iter().enumerate() {
+            if d < k {
+                continue;
+            }
+            match last_busy {
+                None => {
+                    // First allocation of this rank.
+                    total.alloc_energy += params.spin_up_energy();
+                    allocated = true;
+                }
+                Some(prev) => {
+                    let gap = (t - prev - 1) as f64 * interval;
+                    if gap > 0.0 {
+                        let idle_e = gap * params.idle_power;
+                        let idle_cost = gap * params.cost_per_sec();
+                        let realloc_cost = 0.0; // occupancy stops when freed
+                        let keep = if optimize_energy {
+                            idle_e < realloc_energy
+                        } else {
+                            idle_cost < realloc_cost + 1e-30 // never keep for cost
+                        };
+                        if keep {
+                            total.idle_energy += idle_e;
+                            total.occupancy += gap;
+                        } else {
+                            total.dealloc_energy += params.spin_down_energy();
+                            total.alloc_energy += params.spin_up_energy();
+                        }
+                    }
+                }
+            }
+            total.busy_energy += params.busy_power * interval;
+            total.occupancy += interval;
+            last_busy = Some(t);
+        }
+        if allocated {
+            total.dealloc_energy += params.spin_down_energy();
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkerParams;
+
+    fn fpga() -> WorkerParams {
+        WorkerParams::fpga_default()
+    }
+
+    #[test]
+    fn steady_demand_single_alloc() {
+        let r = solve(&[2, 2, 2], &fpga(), 10.0, true);
+        assert!((r.alloc_energy - 1000.0).abs() < 1e-9); // 2 x 500
+        assert!((r.busy_energy - 2.0 * 50.0 * 30.0).abs() < 1e-9);
+        assert_eq!(r.idle_energy, 0.0);
+        assert!((r.occupancy - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn short_gap_idles_long_gap_reallocates() {
+        // Gap of 1 interval: idle 200 J < 505 J → keep.
+        let r = solve(&[1, 0, 1], &fpga(), 10.0, true);
+        assert!((r.idle_energy - 200.0).abs() < 1e-9);
+        assert!((r.alloc_energy - 500.0).abs() < 1e-9);
+        // Gap of 5 intervals: idle 1000 J > 505 J → realloc.
+        let r = solve(&[1, 0, 0, 0, 0, 0, 1], &fpga(), 10.0, true);
+        assert_eq!(r.idle_energy, 0.0);
+        assert!((r.alloc_energy - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_mode_never_idles() {
+        let r = solve(&[1, 0, 1], &fpga(), 10.0, false);
+        assert_eq!(r.idle_energy, 0.0);
+        assert!((r.occupancy - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ranks_layer_correctly() {
+        // Demand [2,1,2]: rank 1 busy all 3; rank 2 has a 1-interval gap.
+        let r = solve(&[2, 1, 2], &fpga(), 10.0, true);
+        assert!((r.busy_energy - 5.0 * 50.0 * 10.0).abs() < 1e-9);
+        assert!((r.idle_energy - 200.0).abs() < 1e-9); // rank 2 bridges
+    }
+
+    #[test]
+    fn matches_dp_for_fpga_only_energy() {
+        use crate::config::PlatformConfig;
+        use crate::opt::dp;
+        use crate::opt::fluid::{FluidInstance, PlatformMode};
+        use crate::sched::Objective;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        for _ in 0..10 {
+            let demand: Vec<u32> = (0..20).map(|_| rng.below(5) as u32).collect();
+            let inst = FluidInstance {
+                demand_f: demand.iter().map(|&d| d as f64).collect(),
+                interval: 10.0,
+                platform: PlatformConfig::paper_default(),
+            };
+            let dp_r = dp::solve(&inst, PlatformMode::FpgaOnly, Objective::energy());
+            let rank_r = solve(&demand, &inst.platform.fpga, 10.0, true);
+            assert!(
+                (dp_r.energy - rank_r.energy()).abs() < 1e-6 * (1.0 + dp_r.energy),
+                "dp {} vs rank {} for {demand:?}",
+                dp_r.energy,
+                rank_r.energy()
+            );
+        }
+    }
+}

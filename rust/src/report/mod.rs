@@ -1,0 +1,150 @@
+//! Result reporting: human-readable run summaries, JSON emission, and
+//! writing experiment artifacts (markdown + CSV) under `results/`.
+
+use crate::sim::RunResult;
+use crate::trace::AppTrace;
+use crate::util::json::Json;
+use crate::util::table::{pct, ratio, Table};
+use std::path::Path;
+
+/// One-run plain-text report.
+pub fn run_to_text(r: &RunResult, trace: &AppTrace) -> String {
+    let m = &r.metrics;
+    let mut out = String::new();
+    out.push_str(&format!("scheduler        : {}\n", r.scheduler));
+    out.push_str(&format!(
+        "trace            : {} ({} requests, {:.0}s, {:.1} CPU-s of work)\n",
+        trace.name,
+        trace.len(),
+        trace.duration,
+        m.total_work
+    ));
+    out.push_str(&format!(
+        "energy           : {:.1} J total (cpu {:.1} | fpga {:.1})\n",
+        m.total_energy(),
+        m.cpu_energy.total(),
+        m.fpga_energy.total()
+    ));
+    out.push_str(&format!(
+        "  fpga breakdown : alloc {:.1} busy {:.1} idle {:.1} dealloc {:.1}\n",
+        m.fpga_energy.alloc, m.fpga_energy.busy, m.fpga_energy.idle, m.fpga_energy.dealloc
+    ));
+    out.push_str(&format!(
+        "cost             : ${:.4} (cpu ${:.4} | fpga ${:.4})\n",
+        m.total_cost(),
+        m.cpu_cost,
+        m.fpga_cost
+    ));
+    out.push_str(&format!(
+        "energy efficiency: {} (vs idealized FPGA-only)\n",
+        pct(r.energy_efficiency())
+    ));
+    out.push_str(&format!("relative cost    : {}\n", ratio(r.relative_cost())));
+    out.push_str(&format!(
+        "requests         : {} ({} on CPU, {} on FPGA)\n",
+        m.requests, m.on_cpu, m.on_fpga
+    ));
+    out.push_str(&format!(
+        "deadline misses  : {} ({})\n",
+        m.deadline_misses,
+        pct(r.miss_fraction())
+    ));
+    out.push_str(&format!(
+        "spin-ups         : {} cpu, {} fpga | peak {} cpu, {} fpga\n",
+        m.cpu_spinups, m.fpga_spinups, m.peak_cpus, m.peak_fpgas
+    ));
+    out
+}
+
+/// One-run JSON report.
+pub fn run_to_json(r: &RunResult) -> Json {
+    let m = &r.metrics;
+    let breakdown = |e: &crate::sim::EnergyBreakdown| {
+        Json::obj(vec![
+            ("alloc", Json::Num(e.alloc)),
+            ("busy", Json::Num(e.busy)),
+            ("idle", Json::Num(e.idle)),
+            ("dealloc", Json::Num(e.dealloc)),
+        ])
+    };
+    Json::obj(vec![
+        ("scheduler", Json::Str(r.scheduler.clone())),
+        ("energy_efficiency", Json::Num(r.energy_efficiency())),
+        ("relative_cost", Json::Num(r.relative_cost())),
+        ("energy_j", Json::Num(m.total_energy())),
+        ("cost_usd", Json::Num(m.total_cost())),
+        ("cpu_energy", breakdown(&m.cpu_energy)),
+        ("fpga_energy", breakdown(&m.fpga_energy)),
+        ("requests", Json::Num(m.requests as f64)),
+        ("on_cpu", Json::Num(m.on_cpu as f64)),
+        ("on_fpga", Json::Num(m.on_fpga as f64)),
+        ("deadline_misses", Json::Num(m.deadline_misses as f64)),
+        ("cpu_spinups", Json::Num(m.cpu_spinups as f64)),
+        ("fpga_spinups", Json::Num(m.fpga_spinups as f64)),
+        ("peak_cpus", Json::Num(m.peak_cpus as f64)),
+        ("peak_fpgas", Json::Num(m.peak_fpgas as f64)),
+        ("total_work", Json::Num(m.total_work)),
+    ])
+}
+
+/// Write a rendered table to `<dir>/<stem>.{txt,csv,md}`.
+pub fn write_table(table: &Table, dir: &Path, stem: &str) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{stem}.txt")), table.render())?;
+    std::fs::write(dir.join(format!("{stem}.csv")), table.to_csv())?;
+    std::fs::write(dir.join(format!("{stem}.md")), table.to_markdown())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{IdealBaseline, Metrics};
+
+    fn sample_run() -> RunResult {
+        let mut m = Metrics::default();
+        m.fpga_energy.busy = 100.0;
+        m.fpga_cost = 0.01;
+        m.requests = 10;
+        m.on_fpga = 10;
+        m.total_work = 4.0;
+        RunResult {
+            scheduler: "spork-e".into(),
+            metrics: m,
+            ideal: IdealBaseline {
+                energy: 80.0,
+                cost: 0.008,
+            },
+        }
+    }
+
+    #[test]
+    fn text_contains_key_fields() {
+        let trace = AppTrace::new("t", vec![], 10.0);
+        let txt = run_to_text(&sample_run(), &trace);
+        assert!(txt.contains("spork-e"));
+        assert!(txt.contains("80.0%")); // efficiency
+        assert!(txt.contains("1.25x")); // relative cost
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let j = run_to_json(&sample_run());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.f64_or("energy_efficiency", 0.0), 0.8);
+        assert_eq!(parsed.str_or("scheduler", ""), "spork-e");
+    }
+
+    #[test]
+    fn write_table_creates_three_files() {
+        let dir = std::env::temp_dir().join(format!("spork-report-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into()]);
+        write_table(&t, &dir, "demo").unwrap();
+        for ext in ["txt", "csv", "md"] {
+            assert!(dir.join(format!("demo.{ext}")).exists());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,130 @@
+//! Artifact manifest: the JSON index `python/compile/aot.py` writes next
+//! to the HLO text files (names, input shapes/dtypes, model geometry).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactEntry>,
+    /// Served-model geometry (layers) — informational.
+    pub layers: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let model = j.get("model").context("manifest missing 'model'")?;
+        let usize_arr = |v: &Json| -> Vec<usize> {
+            v.as_arr()
+                .map(|a| a.iter().filter_map(Json::as_u64).map(|x| x as usize).collect())
+                .unwrap_or_default()
+        };
+        let layers = model.get("layers").map(usize_arr).unwrap_or_default();
+        let batch_sizes = model.get("batch_sizes").map(usize_arr).unwrap_or_default();
+
+        let arts = j
+            .get("artifacts")
+            .context("manifest missing 'artifacts'")?;
+        let Json::Obj(entries) = arts else {
+            anyhow::bail!("'artifacts' must be an object");
+        };
+        let mut artifacts = Vec::new();
+        for (name, entry) in entries {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("artifact {name} missing file"))?
+                .to_string();
+            let args = entry
+                .get("args")
+                .and_then(Json::as_arr)
+                .map(|list| {
+                    list.iter()
+                        .map(|a| ArgSpec {
+                            shape: a.get("shape").map(usize_arr).unwrap_or_default(),
+                            dtype: a.str_or("dtype", "float32").to_string(),
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.push(ArtifactEntry {
+                name: name.clone(),
+                file,
+                args,
+            });
+        }
+        Ok(Self {
+            artifacts,
+            layers,
+            batch_sizes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"layers": [128, 256, 128], "batch_sizes": [8, 32], "weight_seed": 1},
+      "artifacts": {
+        "app_fpga_b8": {"file": "app_fpga_b8.hlo.txt",
+                        "args": [{"shape": [8, 128], "dtype": "float32"}],
+                        "hlo_bytes": 123},
+        "predictor": {"file": "predictor.hlo.txt",
+                      "args": [{"shape": [64], "dtype": "float32"},
+                               {"shape": [64], "dtype": "float32"},
+                               {"shape": [64], "dtype": "float32"},
+                               {"shape": [9], "dtype": "float32"}],
+                      "hlo_bytes": 9}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.layers, vec![128, 256, 128]);
+        assert_eq!(m.batch_sizes, vec![8, 32]);
+        assert_eq!(m.artifacts.len(), 2);
+        let app = m.artifacts.iter().find(|a| a.name == "app_fpga_b8").unwrap();
+        assert_eq!(app.args[0].shape, vec![8, 128]);
+        assert_eq!(app.args[0].element_count(), 1024);
+        let pred = m.artifacts.iter().find(|a| a.name == "predictor").unwrap();
+        assert_eq!(pred.args.len(), 4);
+    }
+
+    #[test]
+    fn rejects_missing_sections() {
+        assert!(Manifest::from_json(&Json::parse("{}").unwrap()).is_err());
+        let no_file = r#"{"model": {}, "artifacts": {"x": {}}}"#;
+        assert!(Manifest::from_json(&Json::parse(no_file).unwrap()).is_err());
+    }
+}

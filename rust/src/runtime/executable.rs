@@ -1,0 +1,60 @@
+//! A compiled artifact with shape-checked f32 execution.
+
+use super::artifacts::ArtifactEntry;
+use anyhow::{Context, Result};
+
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    entry: ArtifactEntry,
+}
+
+impl Executable {
+    pub(crate) fn new(name: String, exe: xla::PjRtLoadedExecutable, entry: ArtifactEntry) -> Self {
+        Self { name, exe, entry }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn arg_specs(&self) -> &[super::ArgSpec] {
+        &self.entry.args
+    }
+
+    /// Execute with f32 inputs matching the manifest arg shapes; returns
+    /// the flattened f32 outputs of the (single-element) result tuple.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.args.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.entry.args.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, spec)) in inputs.iter().zip(&self.entry.args).enumerate() {
+            anyhow::ensure!(
+                data.len() == spec.element_count(),
+                "{}: input {i} has {} elements, expected {} (shape {:?})",
+                self.name,
+                data.len(),
+                spec.element_count(),
+                spec.shape
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping input {i} to {dims:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        // return_tuple=True lowering → unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

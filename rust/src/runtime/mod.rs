@@ -1,0 +1,75 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the PJRT CPU client, and
+//! execute them from rust — Python never runs on the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
+//! `execute`, unwrapping the 1-tuple the `return_tuple=True` lowering
+//! produces.
+
+mod artifacts;
+mod executable;
+
+pub use artifacts::{ArgSpec, ArtifactEntry, Manifest};
+pub use executable::Executable;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A PJRT client bound to an artifacts directory.
+pub struct Runtime {
+    client: Rc<xla::PjRtClient>,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load the manifest and create the CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = Rc::new(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact by manifest name into an executable.
+    pub fn compile(&self, name: &str) -> Result<Executable> {
+        let entry = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Executable::new(name.to_string(), exe, entry))
+    }
+
+    /// Names of available artifacts.
+    pub fn names(&self) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .map(|a| a.name.clone())
+            .collect()
+    }
+}

@@ -1,0 +1,166 @@
+//! Breakeven service thresholds (paper Eq. 1 and §4.4) and the
+//! NeededFPGAs rounding rule (Alg 1 lines 13-17).
+//!
+//! Given leftover per-interval work `x` (measured in **FPGA-service
+//! seconds**, i.e. already divided by the speedup S), running it on one
+//! additional FPGA for the interval beats CPUs when `x` exceeds a
+//! threshold:
+//!
+//! * **Energy** (Eq. 1, rearranged to FPGA-second units): an extra FPGA
+//!   costs `x·B_f + (T_s - x)·I_f` joules vs `x·S·B_c` on CPUs (CPU idle
+//!   energy is negligible — CPUs live only as long as the burst), so
+//!   `T_b = T_s·I_f / (S·B_c - B_f + I_f)`.
+//! * **Cost** (§4.4): an extra FPGA occupies the whole interval
+//!   (`T_s·C_f`) vs CPU occupancy for just the work (`x·S·C_c`), so
+//!   `T_b = T_s·C_f / (S·C_c)`.
+//! * **Weighted objectives** interpolate linearly after normalizing both
+//!   objectives to "busy-FPGA-interval equivalents" (energy by `B_f·T_s`,
+//!   cost by `C_f·T_s`), which is how SporkB blends the two metrics.
+
+use crate::config::PlatformConfig;
+
+/// Objective weights (w_energy, w_cost). SporkE = (1,0), SporkC = (0,1),
+/// SporkB = (0.5,0.5). Weights need not sum to 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objective {
+    pub w_energy: f64,
+    pub w_cost: f64,
+}
+
+impl Objective {
+    pub fn energy() -> Self {
+        Self { w_energy: 1.0, w_cost: 0.0 }
+    }
+    pub fn cost() -> Self {
+        Self { w_energy: 0.0, w_cost: 1.0 }
+    }
+    pub fn balanced() -> Self {
+        Self { w_energy: 0.5, w_cost: 0.5 }
+    }
+
+    /// Normalized score of an (energy J, cost $) pair, in units of
+    /// "busy-FPGA-intervals".
+    pub fn score(&self, energy: f64, cost: f64, p: &PlatformConfig, interval: f64) -> f64 {
+        let e_unit = p.fpga.busy_power * interval;
+        let c_unit = p.fpga.cost_per_sec() * interval;
+        self.w_energy * energy / e_unit + self.w_cost * cost / c_unit
+    }
+}
+
+/// Breakeven threshold `T_b` in FPGA-service seconds: leftover interval
+/// work above this is worth an additional FPGA under the objective.
+pub fn breakeven_fpga_seconds(p: &PlatformConfig, interval: f64, obj: Objective) -> f64 {
+    let s = p.fpga.speedup;
+    // Score of running x FPGA-seconds of leftover work:
+    //   on an extra FPGA: energy x·B_f + (T-x)·I_f, cost T·c_f
+    //   on burst CPUs:    energy x·S·B_c,           cost x·S·c_c
+    // Both scores are affine in x; solve score_fpga(x) = score_cpu(x).
+    let e_unit = p.fpga.busy_power * interval;
+    let c_unit = p.fpga.cost_per_sec() * interval;
+    // score_fpga(x) = a1 + b1 x ; score_cpu(x) = b2 x
+    let a1 = obj.w_energy * (p.fpga.idle_power * interval) / e_unit + obj.w_cost; // wC·(T·c_f)/(T·c_f)=wC
+    let b1 = obj.w_energy * (p.fpga.busy_power - p.fpga.idle_power) / e_unit;
+    let b2 = obj.w_energy * (s * p.cpu.busy_power) / e_unit
+        + obj.w_cost * (s * p.cpu.cost_per_sec()) / c_unit;
+    if b2 <= b1 {
+        // CPUs never catch up: an FPGA is never worth it for leftovers.
+        return f64::INFINITY;
+    }
+    (a1 / (b2 - b1)).min(interval)
+}
+
+/// Alg 1's NeededFPGAs: workers needed to serve `lambda` FPGA-service
+/// seconds in an interval, rounding the remainder via the breakeven
+/// threshold.
+pub fn needed_fpgas(lambda: f64, interval: f64, threshold: f64) -> u32 {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    let n = (lambda / interval).floor();
+    let rem = lambda - n * interval;
+    let mut n = n as u32;
+    if rem > threshold {
+        n += 1;
+    }
+    n
+}
+
+/// Aggregate demand λ from per-kind served service-time sums (Alg 1 line
+/// 13): FPGA seconds count as-is, CPU seconds are divided by S.
+pub fn lambda_fpga_seconds(cpu_service: f64, fpga_service: f64, speedup: f64) -> f64 {
+    fpga_service + cpu_service / speedup
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> PlatformConfig {
+        PlatformConfig::paper_default()
+    }
+
+    #[test]
+    fn energy_threshold_matches_eq1() {
+        // T_b(FPGA-s) = T·I_f / (S·B_c - B_f + I_f) = 10·20/(300-50+20)
+        let t = breakeven_fpga_seconds(&p(), 10.0, Objective::energy());
+        assert!((t - 200.0 / 270.0).abs() < 1e-9, "t={t}");
+        // Back in CPU-seconds (×S) this is Eq.1's closed form:
+        // T_b·B_c = (T_b/S)·B_f + (T - T_b/S)·I_f
+        let tb_cpu = t * 2.0;
+        let lhs = tb_cpu * 150.0;
+        let rhs = tb_cpu / 2.0 * 50.0 + (10.0 - tb_cpu / 2.0) * 20.0;
+        assert!((lhs - rhs).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cost_threshold_matches_section_4_4() {
+        // T_b = T·C_f/(S·C_c) = 10·0.982/(2·0.668)
+        let t = breakeven_fpga_seconds(&p(), 10.0, Objective::cost());
+        assert!((t - 10.0 * 0.982 / (2.0 * 0.668)).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn balanced_threshold_between_extremes() {
+        let te = breakeven_fpga_seconds(&p(), 10.0, Objective::energy());
+        let tc = breakeven_fpga_seconds(&p(), 10.0, Objective::cost());
+        let tb = breakeven_fpga_seconds(&p(), 10.0, Objective::balanced());
+        assert!(te < tb && tb < tc, "{te} {tb} {tc}");
+    }
+
+    #[test]
+    fn threshold_capped_at_interval() {
+        // Make CPUs almost free: threshold would exceed the interval.
+        let mut plat = p();
+        plat.cpu.busy_power = 1.0;
+        plat.cpu.idle_power = 0.5;
+        plat.cpu.cost_per_hour = 0.001;
+        let t = breakeven_fpga_seconds(&plat, 10.0, Objective::cost());
+        assert!(t <= 10.0);
+    }
+
+    #[test]
+    fn needed_fpgas_rounding() {
+        let tb = 0.74;
+        assert_eq!(needed_fpgas(0.0, 10.0, tb), 0);
+        assert_eq!(needed_fpgas(0.5, 10.0, tb), 0); // below threshold
+        assert_eq!(needed_fpgas(1.0, 10.0, tb), 1); // above threshold
+        assert_eq!(needed_fpgas(10.0, 10.0, tb), 1); // exact fit
+        assert_eq!(needed_fpgas(20.6, 10.0, tb), 2); // remainder below
+        assert_eq!(needed_fpgas(21.0, 10.0, tb), 3); // remainder above
+    }
+
+    #[test]
+    fn lambda_weights_cpu_work_by_speedup() {
+        assert!((lambda_fpga_seconds(4.0, 3.0, 2.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn score_normalization() {
+        let plat = p();
+        // One busy FPGA-interval of energy = score 1 under pure energy.
+        let s = Objective::energy().score(50.0 * 10.0, 0.0, &plat, 10.0);
+        assert!((s - 1.0).abs() < 1e-12);
+        let s = Objective::cost().score(0.0, 0.982 / 3600.0 * 10.0, &plat, 10.0);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,271 @@
+//! Request dispatch policies (paper Table 9 ablation):
+//!
+//! * **Efficient-first** — Spork's Alg 3 `FindAvailableWorker`: try worker
+//!   kinds in efficiency order (FPGA, then CPU); within a kind prefer
+//!   (1) busiest workers, (2) most-recently-idle workers, (3) spinning-up
+//!   workers with the most queued load — always subject to the deadline
+//!   check. Packing onto the busiest workers lets the others drain and be
+//!   reclaimed at their idle timeout.
+//! * **Index packing** — AutoScale [27] extended naively to hybrid pools:
+//!   busiest-first over *all* workers regardless of kind (the paper notes
+//!   it "often dispatches to busy but inefficient CPU workers over idle
+//!   FPGAs").
+//! * **Round robin** — MArk [93]: rotate over allocated workers ("evenly
+//!   distributes requests ... rarely lets workers idle").
+//!
+//! All policies fall back to `None` when no worker can meet the deadline;
+//! the caller then spins up a fresh CPU (Alg 3 line 6).
+
+use crate::config::{DispatchPolicy, WorkerKind};
+use crate::sim::worker::WorkerState;
+use crate::sim::{Request, SimState, WorkerId};
+
+/// Stateful dispatcher (round robin needs a cursor).
+#[derive(Clone, Debug)]
+pub struct Dispatcher {
+    pub policy: DispatchPolicy,
+    rr_cursor: usize,
+}
+
+impl Dispatcher {
+    pub fn new(policy: DispatchPolicy) -> Self {
+        Self { policy, rr_cursor: 0 }
+    }
+
+    /// Find a worker for `req` per the policy, restricted to `kinds` (the
+    /// homogeneous baselines pass a single kind).
+    pub fn find(&mut self, sim: &SimState, req: &Request, kinds: &[WorkerKind]) -> Option<WorkerId> {
+        match self.policy {
+            DispatchPolicy::EfficientFirst => self.efficient_first(sim, req, kinds),
+            DispatchPolicy::IndexPacking => self.index_packing(sim, req, kinds),
+            DispatchPolicy::RoundRobin => self.round_robin(sim, req, kinds),
+        }
+    }
+
+    /// Alg 3: kinds in efficiency order; per kind the β (busy, decreasing
+    /// load), ι (idle, increasing idle duration), α (allocating,
+    /// decreasing queued load) preference in one O(W) scan.
+    fn efficient_first(
+        &self,
+        sim: &SimState,
+        req: &Request,
+        kinds: &[WorkerKind],
+    ) -> Option<WorkerId> {
+        let now = sim.now();
+        for &kind in kinds {
+            let svc = sim.service_time(kind, req.size);
+            // Best candidate per preference class.
+            let mut best_busy: Option<(f64, WorkerId)> = None; // max backlog
+            let mut best_idle: Option<(f64, WorkerId)> = None; // max idle_since (least time idle)
+            let mut best_alloc: Option<(f64, WorkerId)> = None; // max queued load
+            for w in sim.pool.iter_kind(kind) {
+                if !w.accepting() || w.finish_time(now, svc) > req.deadline {
+                    continue;
+                }
+                match w.state {
+                    WorkerState::Active if w.queued > 0 => {
+                        let load = w.busy_until - now;
+                        if best_busy.map_or(true, |(l, _)| load > l) {
+                            best_busy = Some((load, w.id));
+                        }
+                    }
+                    WorkerState::Active => {
+                        if best_idle.map_or(true, |(s, _)| w.idle_since > s) {
+                            best_idle = Some((w.idle_since, w.id));
+                        }
+                    }
+                    WorkerState::SpinningUp => {
+                        let load = w.busy_until - w.ready_at;
+                        if best_alloc.map_or(true, |(l, _)| load > l) {
+                            best_alloc = Some((load, w.id));
+                        }
+                    }
+                    WorkerState::SpinningDown => {}
+                }
+            }
+            if let Some((_, id)) = best_busy.or(best_idle).or(best_alloc) {
+                return Some(id);
+            }
+        }
+        None
+    }
+
+    /// AutoScale index packing: busiest feasible worker across all kinds;
+    /// idle workers rank below any busy worker (packing), most-recently
+    /// idle first among idle.
+    fn index_packing(
+        &self,
+        sim: &SimState,
+        req: &Request,
+        kinds: &[WorkerKind],
+    ) -> Option<WorkerId> {
+        let now = sim.now();
+        let mut best_busy: Option<(f64, WorkerId)> = None;
+        let mut best_idle: Option<(f64, WorkerId)> = None;
+        for &kind in kinds {
+            let svc = sim.service_time(kind, req.size);
+            for w in sim.pool.iter_kind(kind) {
+                if !w.accepting() || w.finish_time(now, svc) > req.deadline {
+                    continue;
+                }
+                if w.queued > 0 || w.state == WorkerState::SpinningUp {
+                    let load = w.busy_until - now;
+                    if best_busy.map_or(true, |(l, _)| load > l) {
+                        best_busy = Some((load, w.id));
+                    }
+                } else if best_idle.map_or(true, |(s, _)| w.idle_since > s) {
+                    best_idle = Some((w.idle_since, w.id));
+                }
+            }
+        }
+        best_busy.or(best_idle).map(|(_, id)| id)
+    }
+
+    /// MArk round robin: rotate a cursor across the combined live list;
+    /// first feasible worker from the cursor wins.
+    fn round_robin(
+        &mut self,
+        sim: &SimState,
+        req: &Request,
+        kinds: &[WorkerKind],
+    ) -> Option<WorkerId> {
+        let now = sim.now();
+        let ids: Vec<WorkerId> = kinds
+            .iter()
+            .flat_map(|&k| sim.pool.live_ids(k).iter().copied())
+            .collect();
+        if ids.is_empty() {
+            return None;
+        }
+        let n = ids.len();
+        for probe in 0..n {
+            let idx = (self.rr_cursor + probe) % n;
+            let w = sim.pool.get(ids[idx]).unwrap();
+            let svc = sim.service_time(w.kind, req.size);
+            if w.accepting() && w.finish_time(now, svc) <= req.deadline {
+                self.rr_cursor = (idx + 1) % n;
+                return Some(w.id);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::SimState;
+
+    /// Build a state with pre-spun workers: (kind, backlog_seconds).
+    fn state_with(workers: &[(WorkerKind, f64)]) -> (SimState, Vec<WorkerId>) {
+        let mut cfg = SimConfig::paper_default();
+        cfg.platform.cpu.spin_up = 0.0;
+        cfg.platform.fpga.spin_up = 0.0;
+        let mut sim = SimState::new(cfg);
+        let ids: Vec<WorkerId> = workers
+            .iter()
+            .map(|&(kind, backlog)| {
+                let id = sim.alloc(kind).unwrap();
+                // Force active with the requested backlog.
+                let w = sim.pool.get_mut(id).unwrap();
+                w.state = WorkerState::Active;
+                w.busy_until = backlog;
+                if backlog > 0.0 {
+                    w.queued = 1;
+                }
+                id
+            })
+            .collect();
+        (sim, ids)
+    }
+
+    fn req(size: f64, deadline: f64) -> Request {
+        Request {
+            arrival: 0.0,
+            size,
+            deadline,
+        }
+    }
+
+    const BOTH: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
+
+    #[test]
+    fn efficient_first_prefers_fpga_over_idle_cpu() {
+        let (sim, ids) = state_with(&[(WorkerKind::Cpu, 0.0), (WorkerKind::Fpga, 0.0)]);
+        let mut d = Dispatcher::new(DispatchPolicy::EfficientFirst);
+        let got = d.find(&sim, &req(0.010, 0.1), BOTH).unwrap();
+        assert_eq!(got, ids[1], "must pick the FPGA");
+    }
+
+    #[test]
+    fn efficient_first_packs_busiest_feasible() {
+        // Two FPGAs, backlogs 0.02 and 0.04; request 10ms (5ms on FPGA)
+        // with deadline 0.1: both feasible → busiest (0.04) wins.
+        let (sim, ids) = state_with(&[(WorkerKind::Fpga, 0.02), (WorkerKind::Fpga, 0.04)]);
+        let mut d = Dispatcher::new(DispatchPolicy::EfficientFirst);
+        assert_eq!(d.find(&sim, &req(0.010, 0.1), BOTH).unwrap(), ids[1]);
+        // Tight deadline 0.03: only the 0.02-backlog one fits (0.025<=0.03).
+        assert_eq!(d.find(&sim, &req(0.010, 0.030), BOTH).unwrap(), ids[0]);
+    }
+
+    #[test]
+    fn efficient_first_falls_to_cpu_when_fpgas_infeasible() {
+        let (sim, ids) = state_with(&[(WorkerKind::Fpga, 10.0), (WorkerKind::Cpu, 0.0)]);
+        let mut d = Dispatcher::new(DispatchPolicy::EfficientFirst);
+        assert_eq!(d.find(&sim, &req(0.010, 0.1), BOTH).unwrap(), ids[1]);
+    }
+
+    #[test]
+    fn efficient_first_none_when_nothing_feasible() {
+        let (sim, _) = state_with(&[(WorkerKind::Fpga, 10.0), (WorkerKind::Cpu, 10.0)]);
+        let mut d = Dispatcher::new(DispatchPolicy::EfficientFirst);
+        assert!(d.find(&sim, &req(0.010, 0.1), BOTH).is_none());
+    }
+
+    #[test]
+    fn index_packing_prefers_busy_cpu_over_idle_fpga() {
+        // The hybrid-blindness the paper calls out.
+        let (sim, ids) = state_with(&[(WorkerKind::Fpga, 0.0), (WorkerKind::Cpu, 0.05)]);
+        let mut d = Dispatcher::new(DispatchPolicy::IndexPacking);
+        assert_eq!(d.find(&sim, &req(0.010, 1.0), BOTH).unwrap(), ids[1]);
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let (sim, ids) = state_with(&[
+            (WorkerKind::Fpga, 0.0),
+            (WorkerKind::Fpga, 0.0),
+            (WorkerKind::Cpu, 0.0),
+        ]);
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let r = req(0.010, 1.0);
+        let picks: Vec<WorkerId> = (0..6)
+            .map(|_| d.find(&sim, &r, BOTH).unwrap())
+            .collect();
+        // cycles through all three workers twice
+        assert_eq!(&picks[..3], &picks[3..]);
+        let mut uniq = picks[..3].to_vec();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 3);
+        assert!(ids.iter().all(|id| uniq.contains(id)));
+    }
+
+    #[test]
+    fn round_robin_skips_infeasible() {
+        let (sim, ids) = state_with(&[(WorkerKind::Fpga, 10.0), (WorkerKind::Cpu, 0.0)]);
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        for _ in 0..4 {
+            assert_eq!(d.find(&sim, &req(0.010, 0.1), BOTH).unwrap(), ids[1]);
+        }
+    }
+
+    #[test]
+    fn kind_restriction_respected() {
+        let (sim, ids) = state_with(&[(WorkerKind::Fpga, 0.0), (WorkerKind::Cpu, 0.0)]);
+        let mut d = Dispatcher::new(DispatchPolicy::EfficientFirst);
+        let got = d.find(&sim, &req(0.010, 1.0), &[WorkerKind::Cpu]).unwrap();
+        assert_eq!(got, ids[1]);
+    }
+}

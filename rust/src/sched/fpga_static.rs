@@ -1,0 +1,160 @@
+//! FPGA-static baseline (§5.1): the best-case statically provisioned
+//! FPGA-only platform — perfect workload knowledge, pre-allocates enough
+//! FPGAs for the peak per-interval load, one-time spin-up cost, the fleet
+//! pinned for the whole trace (static platforms do not autoscale [65,73]).
+//!
+//! The peak per-interval demand gives ρ ≈ 1 during the peak interval,
+//! which transiently violates tight (10x-service) deadlines; the paper's
+//! best case "meets request deadlines", so [`fit`] searches for the least
+//! fleet ≥ peak that does.
+
+use super::dispatch::Dispatcher;
+use super::oracle::Oracle;
+use crate::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
+use crate::sim::{self, Request, RunResult, Scheduler, SimState, WorkerId};
+use crate::trace::AppTrace;
+
+pub struct FpgaStatic {
+    fleet: u32,
+    dispatcher: Dispatcher,
+}
+
+impl FpgaStatic {
+    pub fn new(oracle: &Oracle) -> Self {
+        Self::with_fleet(oracle.peak().max(1))
+    }
+
+    /// Explicit fleet size (used by [`fit`]).
+    pub fn with_fleet(fleet: u32) -> Self {
+        Self {
+            fleet: fleet.max(1),
+            dispatcher: Dispatcher::new(DispatchPolicy::EfficientFirst),
+        }
+    }
+}
+
+/// Best-case static provisioning: least fleet ≥ oracle peak whose run
+/// meets deadlines (`miss_tolerance` fraction). Step size scales with
+/// √peak (square-root staffing). Returns the run and the fleet size.
+pub fn fit(
+    trace: &AppTrace,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32) {
+    let oracle = Oracle::from_trace(trace, cfg, super::breakeven::Objective::energy());
+    let peak = oracle.peak().max(1);
+    let step = ((peak as f64).sqrt().ceil() as u32).max(1);
+    let mut best: Option<(RunResult, u32)> = None;
+    for j in 0..=8u32 {
+        let fleet = peak + j * step;
+        let mut sched = FpgaStatic::with_fleet(fleet);
+        let r = sim::run(trace, cfg.clone(), defaults, &mut sched);
+        let miss = r.miss_fraction();
+        best = Some((r, fleet));
+        if miss <= miss_tolerance {
+            break;
+        }
+    }
+    best.unwrap()
+}
+
+impl Scheduler for FpgaStatic {
+    fn name(&self) -> String {
+        "fpga-static".into()
+    }
+
+    fn interval(&self) -> f64 {
+        f64::INFINITY // static: no periodic decisions
+    }
+
+    fn on_start(&mut self, sim: &mut SimState) {
+        // Statically provisioned before the workload window (the paper's
+        // static platform pays a "minor one-time spin-up cost" but is
+        // ready when traffic starts).
+        sim.alloc_prewarmed(WorkerKind::Fpga, self.fleet);
+    }
+
+    fn keep_alive(&self, _worker: WorkerId, sim: &SimState) -> bool {
+        // Statically provisioned: the fleet is pinned until the trace
+        // ends, then drains through the normal idle timeout.
+        sim.trace_live()
+    }
+
+    fn on_request(&mut self, req: Request, sim: &mut SimState) {
+        const KINDS: &[WorkerKind] = &[WorkerKind::Fpga];
+        match self.dispatcher.find(sim, &req, KINDS) {
+            Some(w) => {
+                sim.dispatch(req, w);
+            }
+            None => {
+                // FPGA-only: no CPU escape hatch. Best-effort onto the
+                // earliest-finishing FPGA (a deadline miss if truly full).
+                let best: Option<WorkerId> = sim
+                    .pool
+                    .iter_kind(WorkerKind::Fpga)
+                    .filter(|w| w.accepting())
+                    .min_by(|a, b| a.busy_until.partial_cmp(&b.busy_until).unwrap())
+                    .map(|w| w.id);
+                match best {
+                    Some(w) => {
+                        sim.dispatch(req, w);
+                    }
+                    None => {
+                        // Entire fleet reclaimed by idle timeout (deep lull
+                        // longer than the timeout): re-provision.
+                        let w = sim
+                            .alloc(WorkerKind::Fpga)
+                            .expect("FPGA cap must allow static provisioning");
+                        sim.dispatch(req, w);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PlatformConfig, SimConfig};
+    use crate::sched::breakeven::Objective;
+    use crate::sim;
+    use crate::trace::synthetic_app;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn provisions_peak_and_serves_fpga_only() {
+        let mut rng = Rng::new(3);
+        let trace = synthetic_app("f", &mut rng, 0.6, 300.0, 200.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let oracle = Oracle::from_trace(&trace, &cfg, Objective::energy());
+        let (r, fleet) = fit(&trace, &cfg, &PlatformConfig::paper_default(), 0.005);
+        assert_eq!(r.metrics.on_cpu, 0);
+        assert!(fleet >= oracle.peak());
+        assert!(r.metrics.peak_fpgas >= oracle.peak());
+        assert!(r.miss_fraction() < 0.05, "misses {}", r.miss_fraction());
+    }
+
+    #[test]
+    fn uniform_load_is_energy_efficient_but_costly() {
+        let mut rng = Rng::new(4);
+        let trace = synthetic_app("f", &mut rng, 0.5, 600.0, 400.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let oracle = Oracle::from_trace(&trace, &cfg, Objective::energy());
+        let r = sim::run(
+            &trace,
+            cfg,
+            &PlatformConfig::paper_default(),
+            &mut FpgaStatic::new(&oracle),
+        );
+        // At b=0.5 (uniform), static FPGA is near-ideal on energy.
+        assert!(
+            r.energy_efficiency() > 0.5,
+            "efficiency {}",
+            r.energy_efficiency()
+        );
+        // But pays for the full fleet the whole time.
+        assert!(r.relative_cost() > 1.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! MArk-ideal baseline (§5.1): an idealized re-implementation of MArk
+//! [93], the state-of-the-art cost-optimized hybrid scheduler, with the
+//! benefit-of-the-doubt oracle the paper grants it ("perfect workload
+//! predictions up to two intervals into the future").
+//!
+//! Key differences from Spork, per the paper's comparison:
+//! * **cost-optimized only** — FPGAs (its "accelerators") are allocated
+//!   only up to the cost-breakeven utilization; the remainder runs on
+//!   on-demand CPUs;
+//! * **round-robin dispatch** — evenly spreads requests, which keeps
+//!   workers from idling long enough to be reclaimed;
+//! * predictive allocation at interval granularity plus reactive CPU
+//!   spin-up on the dispatch path (like Spork's burst path).
+
+use super::breakeven::{breakeven_fpga_seconds, Objective};
+use super::dispatch::Dispatcher;
+use super::oracle::Oracle;
+use crate::config::{DispatchPolicy, SimConfig, WorkerKind};
+use crate::sim::{Request, Scheduler, SimState};
+
+pub struct MarkIdeal {
+    oracle: Oracle,
+    interval: f64,
+    dispatcher: Dispatcher,
+    tick_index: usize,
+}
+
+impl MarkIdeal {
+    pub fn new(cfg: &SimConfig, trace_oracle_cost: Oracle) -> Self {
+        debug_assert!(
+            breakeven_fpga_seconds(&cfg.platform, cfg.interval, Objective::cost()).is_finite()
+                || trace_oracle_cost.needed.iter().all(|&n| n == 0),
+            "cost oracle must be built with the cost objective"
+        );
+        Self {
+            oracle: trace_oracle_cost,
+            interval: cfg.interval,
+            dispatcher: Dispatcher::new(DispatchPolicy::RoundRobin),
+            tick_index: 0,
+        }
+    }
+}
+
+impl Scheduler for MarkIdeal {
+    fn name(&self) -> String {
+        "mark-ideal".into()
+    }
+
+    fn interval(&self) -> f64 {
+        self.interval
+    }
+
+    fn on_start(&mut self, sim: &mut SimState) {
+        // Perfect predictions: the first interval's fleet is warm when the
+        // window opens (allocation happened one interval earlier).
+        let n0 = self.oracle.needed_at(0).max(self.oracle.needed_at(1));
+        sim.alloc_prewarmed(WorkerKind::Fpga, n0);
+        self.tick_index = 1;
+    }
+
+    fn on_tick(&mut self, sim: &mut SimState) {
+        sim.take_interval_work(); // oracle-driven; counters unused
+        // Perfect two-interval lookahead: provision now what the next
+        // interval needs (allocation takes one interval).
+        let target = self.oracle.needed_at(self.tick_index + 1);
+        let cur = sim.allocated(WorkerKind::Fpga);
+        if target > cur {
+            sim.alloc_n(WorkerKind::Fpga, target - cur);
+        } else if cur > target {
+            // Cost-optimized: shed surplus FPGAs immediately rather than
+            // paying occupancy for the idle-timeout window.
+            sim.retire_idle(WorkerKind::Fpga, cur - target);
+        }
+        self.tick_index += 1;
+    }
+
+    fn on_request(&mut self, req: Request, sim: &mut SimState) {
+        const KINDS: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
+        match self.dispatcher.find(sim, &req, KINDS) {
+            Some(w) => {
+                sim.dispatch(req, w);
+            }
+            None => {
+                sim.dispatch_to_new_cpu(req);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::sim;
+    use crate::trace::synthetic_app;
+    use crate::util::rng::Rng;
+
+    fn run_mark(seed: u64, b: f64) -> sim::RunResult {
+        let mut rng = Rng::new(seed);
+        let trace = synthetic_app("m", &mut rng, b, 300.0, 200.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let oracle = Oracle::from_trace(&trace, &cfg, Objective::cost());
+        sim::run(
+            &trace,
+            cfg.clone(),
+            &PlatformConfig::paper_default(),
+            &mut MarkIdeal::new(&cfg, oracle),
+        )
+    }
+
+    #[test]
+    fn serves_and_meets_deadlines() {
+        let r = run_mark(8, 0.6);
+        assert!(r.miss_fraction() < 0.01, "misses {}", r.miss_fraction());
+        assert!(r.metrics.on_fpga > 0, "should use FPGAs at this load");
+        assert!(r.metrics.on_cpu > 0, "round robin spreads to CPUs");
+    }
+
+    #[test]
+    fn cost_competitive_but_energy_poor() {
+        // The paper's core observation: MArk-ideal's cost is decent but
+        // its round-robin + cost-only allocation wastes energy vs Spork.
+        use crate::sched::breakeven::Objective as Obj;
+        use crate::sched::spork::Spork;
+        let mut rng = Rng::new(9);
+        let trace = synthetic_app("m", &mut rng, 0.65, 600.0, 300.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        let oracle = Oracle::from_trace(&trace, &cfg, Obj::cost());
+        let rm = sim::run(
+            &trace,
+            cfg.clone(),
+            &defaults,
+            &mut MarkIdeal::new(&cfg, oracle),
+        );
+        let rs = sim::run(
+            &trace,
+            cfg.clone(),
+            &defaults,
+            &mut Spork::new(&cfg, Obj::energy()),
+        );
+        assert!(
+            rs.energy_efficiency() > rm.energy_efficiency(),
+            "SporkE {} must beat MArk-ideal {} on energy",
+            rs.energy_efficiency(),
+            rm.energy_efficiency()
+        );
+    }
+}

@@ -1,0 +1,123 @@
+//! Schedulers: Spork (all variants) and the paper's baselines, plus the
+//! factory mapping [`SchedulerKind`] to implementations.
+
+pub mod breakeven;
+pub mod cpu_dynamic;
+pub mod dispatch;
+pub mod fpga_dynamic;
+pub mod fpga_static;
+pub mod mark;
+pub mod oracle;
+pub mod spork;
+
+pub use breakeven::Objective;
+pub use oracle::Oracle;
+
+use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
+use crate::sim::{self, RunResult, Scheduler};
+use crate::trace::AppTrace;
+
+/// Build a scheduler for `kind`. Oracle-assisted baselines (FPGA-static,
+/// MArk-ideal, Spork-*-ideal) compute their oracle from `trace`.
+pub fn build(kind: &SchedulerKind, cfg: &SimConfig, trace: &AppTrace) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::CpuDynamic => Box::new(cpu_dynamic::CpuDynamic::new()),
+        SchedulerKind::FpgaStatic => {
+            let oracle = Oracle::from_trace(trace, cfg, Objective::energy());
+            Box::new(fpga_static::FpgaStatic::new(&oracle))
+        }
+        SchedulerKind::FpgaDynamic => {
+            // Unfitted default (headroom = 1x max delta); prefer
+            // `run_scheduler`, which fits per the paper.
+            let oracle = Oracle::from_trace(trace, cfg, Objective::energy());
+            Box::new(fpga_dynamic::FpgaDynamic::new(
+                cfg,
+                oracle.max_consecutive_delta().max(1),
+            ))
+        }
+        SchedulerKind::MarkIdeal => {
+            let oracle = Oracle::from_trace(trace, cfg, Objective::cost());
+            Box::new(mark::MarkIdeal::new(cfg, oracle))
+        }
+        SchedulerKind::Spork {
+            w_energy,
+            w_cost,
+            ideal,
+        } => {
+            let obj = Objective {
+                w_energy: *w_energy,
+                w_cost: *w_cost,
+            };
+            if *ideal {
+                let oracle = Oracle::from_trace(trace, cfg, obj);
+                Box::new(spork::Spork::ideal(cfg, obj, oracle))
+            } else {
+                Box::new(spork::Spork::new(cfg, obj))
+            }
+        }
+    }
+}
+
+/// Run one scheduler kind over one app trace, handling the baselines'
+/// fitting requirements (FPGA-dynamic's least-feasible headroom).
+pub fn run_scheduler(
+    kind: &SchedulerKind,
+    trace: &AppTrace,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+) -> RunResult {
+    match kind {
+        SchedulerKind::FpgaDynamic => {
+            let (r, _k) = fpga_dynamic::fit(trace, cfg, defaults, 0.005);
+            r
+        }
+        SchedulerKind::FpgaStatic => {
+            let (r, _fleet) = fpga_static::fit(trace, cfg, defaults, 0.005);
+            r
+        }
+        _ => {
+            let mut sched = build(kind, cfg, trace);
+            sim::run(trace, cfg.clone(), defaults, sched.as_mut())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synthetic_app;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn factory_builds_all_table8_kinds() {
+        let mut rng = Rng::new(1);
+        let trace = synthetic_app("t", &mut rng, 0.6, 60.0, 50.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        for kind in SchedulerKind::table8_roster() {
+            let s = build(&kind, &cfg, &trace);
+            assert_eq!(s.name(), kind.name(), "factory/name mismatch");
+        }
+    }
+
+    #[test]
+    fn all_schedulers_complete_all_requests() {
+        let mut rng = Rng::new(2);
+        let trace = synthetic_app("t", &mut rng, 0.65, 120.0, 100.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        for kind in SchedulerKind::table8_roster() {
+            let r = run_scheduler(&kind, &trace, &cfg, &defaults);
+            assert_eq!(
+                r.metrics.requests as usize,
+                trace.len(),
+                "{} dropped requests",
+                kind.name()
+            );
+            assert!(
+                r.metrics.total_energy() > 0.0,
+                "{} recorded no energy",
+                kind.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Perfect-workload-knowledge helpers for the idealized baselines:
+//! per-interval needed-FPGA counts computed directly from the trace
+//! (FPGA-static's peak provisioning, MArk-ideal's and Spork-*-ideal's
+//! predictions, and FPGA-dynamic's headroom sizing).
+
+use super::breakeven::{breakeven_fpga_seconds, needed_fpgas, Objective};
+use crate::config::SimConfig;
+use crate::trace::AppTrace;
+
+#[derive(Clone, Debug)]
+pub struct Oracle {
+    /// Needed FPGA workers per scheduling interval (breakeven-rounded).
+    pub needed: Vec<u32>,
+    /// Interval length used.
+    pub interval: f64,
+}
+
+impl Oracle {
+    pub fn from_trace(trace: &AppTrace, cfg: &SimConfig, obj: Objective) -> Self {
+        let interval = cfg.interval;
+        let speedup = cfg.platform.fpga.speedup;
+        let tb = breakeven_fpga_seconds(&cfg.platform, interval, obj);
+        let needed = trace
+            .work_per_interval(interval)
+            .iter()
+            .map(|w| needed_fpgas(w / speedup, interval, tb))
+            .collect();
+        Self { needed, interval }
+    }
+
+    /// Needed count for the interval containing/indexed `t` (clamped).
+    pub fn needed_at(&self, index: usize) -> u32 {
+        if self.needed.is_empty() {
+            0
+        } else {
+            self.needed[index.min(self.needed.len() - 1)]
+        }
+    }
+
+    /// Peak needed count (FPGA-static's provisioning level).
+    pub fn peak(&self) -> u32 {
+        self.needed.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Max difference between consecutive intervals' needed counts —
+    /// FPGA-dynamic sizes its headroom as integer multiples of this.
+    pub fn max_consecutive_delta(&self) -> u32 {
+        self.needed
+            .windows(2)
+            .map(|w| w[0].abs_diff(w[1]))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{AppTrace, Arrival};
+
+    fn trace_with_interval_work(work: &[f64], interval: f64) -> AppTrace {
+        // One big arrival per interval carrying the interval's work.
+        let arrivals: Vec<Arrival> = work
+            .iter()
+            .enumerate()
+            .filter(|(_, &w)| w > 0.0)
+            .map(|(i, &w)| Arrival {
+                time: i as f64 * interval + 0.1,
+                size: w,
+            })
+            .collect();
+        AppTrace::new("o", arrivals, interval * work.len() as f64)
+    }
+
+    #[test]
+    fn needed_counts_follow_work() {
+        let cfg = SimConfig::paper_default(); // interval 10, speedup 2
+        // 40 CPU-seconds → 20 FPGA-seconds → 2 FPGAs per 10s interval.
+        let trace = trace_with_interval_work(&[40.0, 0.0, 80.0], 10.0);
+        let o = Oracle::from_trace(&trace, &cfg, Objective::energy());
+        assert_eq!(o.needed, vec![2, 0, 4]);
+        assert_eq!(o.peak(), 4);
+        assert_eq!(o.max_consecutive_delta(), 4);
+    }
+
+    #[test]
+    fn breakeven_rounding_applied() {
+        let cfg = SimConfig::paper_default();
+        // 1 FPGA-second of leftover work (2 CPU-seconds): above the energy
+        // threshold (0.74) → 1 FPGA; below the cost threshold (7.35) → 0.
+        let trace = trace_with_interval_work(&[2.0], 10.0);
+        let e = Oracle::from_trace(&trace, &cfg, Objective::energy());
+        let c = Oracle::from_trace(&trace, &cfg, Objective::cost());
+        assert_eq!(e.needed, vec![1]);
+        assert_eq!(c.needed, vec![0]);
+    }
+
+    #[test]
+    fn clamping_at_end() {
+        let cfg = SimConfig::paper_default();
+        let trace = trace_with_interval_work(&[20.0], 10.0);
+        let o = Oracle::from_trace(&trace, &cfg, Objective::energy());
+        assert_eq!(o.needed_at(0), 1);
+        assert_eq!(o.needed_at(99), 1); // clamped
+    }
+}

@@ -1,0 +1,321 @@
+//! Spork: the paper's hybrid scheduler (§4).
+//!
+//! Per-interval FPGA allocation (Alg 1) + histogram predictor (Alg 2, in
+//! [`predictor`]) + efficient-first dispatch with reactive CPU spin-up
+//! (Alg 3, in [`super::dispatch`]). The objective weights make it SporkE /
+//! SporkC / SporkB; `ideal` swaps the predictor for an oracle (perfect
+//! next-interval worker counts, no spin-up accounting).
+
+pub mod predictor;
+
+use super::breakeven::{
+    breakeven_fpga_seconds, lambda_fpga_seconds, needed_fpgas, Objective,
+};
+use super::dispatch::Dispatcher;
+use super::oracle::Oracle;
+use crate::config::{DispatchPolicy, SimConfig, WorkerKind};
+use crate::sim::{Request, Scheduler, SimState};
+use predictor::Predictor;
+
+pub struct Spork {
+    obj: Objective,
+    interval: f64,
+    speedup: f64,
+    breakeven: f64,
+    dispatcher: Dispatcher,
+    predictor: Predictor,
+    /// Perfect next-interval counts instead of the predictor.
+    oracle: Option<Oracle>,
+    /// Sliding lag buffer: [n_{t-2}, n_{t-1}] needed counts, so the
+    /// histogram can be updated at key n_{t-3} when n_{t-1} materializes.
+    lag: Vec<u32>,
+    /// Needed count in the previous interval (n_{t-1}).
+    n_prev: u32,
+    /// Index of the interval that starts at the *next* tick.
+    tick_index: usize,
+    /// §4.5 optional extension: scale allocations down when deadlines are
+    /// loose enough that queueing slack absorbs load (off = paper).
+    deadline_aware: bool,
+    /// Ablation: replace Alg 2 with naive last-value prediction
+    /// (n_{t+1} := n_{t-1}).
+    last_value_predictor: bool,
+}
+
+impl Spork {
+    pub fn new(cfg: &SimConfig, obj: Objective) -> Self {
+        let interval = cfg.interval;
+        Self {
+            obj,
+            interval,
+            speedup: cfg.platform.fpga.speedup,
+            breakeven: breakeven_fpga_seconds(&cfg.platform, interval, obj),
+            dispatcher: Dispatcher::new(DispatchPolicy::EfficientFirst),
+            predictor: Predictor::new(cfg.platform, interval, obj),
+            oracle: None,
+            lag: Vec::new(),
+            n_prev: 0,
+            tick_index: 0,
+            deadline_aware: cfg.deadline_aware,
+            last_value_predictor: false,
+        }
+    }
+
+    /// Ablation variant: naive last-value prediction instead of Alg 2's
+    /// conditional histograms (quantifies the predictor's contribution).
+    pub fn with_last_value_predictor(mut self) -> Self {
+        self.last_value_predictor = true;
+        self
+    }
+
+    /// Ideal variant: perfect next-interval worker counts (from the trace
+    /// oracle), no spin-up overhead accounting (§5.1).
+    pub fn ideal(cfg: &SimConfig, obj: Objective, oracle: Oracle) -> Self {
+        let mut s = Self::new(cfg, obj);
+        s.oracle = Some(oracle);
+        s.predictor.set_account_spinup(false);
+        s
+    }
+
+    /// Table 9 ablation: SporkE's allocation with a different dispatcher.
+    pub fn with_dispatch(mut self, policy: DispatchPolicy) -> Self {
+        self.dispatcher = Dispatcher::new(policy);
+        self
+    }
+
+    fn variant_name(&self) -> &'static str {
+        if self.obj.w_energy > 0.0 && self.obj.w_cost > 0.0 {
+            "spork-b"
+        } else if self.obj.w_cost > 0.0 {
+            "spork-c"
+        } else {
+            "spork-e"
+        }
+    }
+
+    /// Alg 1 lines 6-8: needed FPGAs in the interval that just ended.
+    fn needed_last_interval(&self, sim: &mut SimState) -> u32 {
+        let (cpu_work, fpga_work) = sim.take_interval_work();
+        let lambda = lambda_fpga_seconds(cpu_work, fpga_work, self.speedup);
+        needed_fpgas(lambda, self.interval, self.breakeven)
+    }
+}
+
+impl Scheduler for Spork {
+    fn name(&self) -> String {
+        if self.oracle.is_some() {
+            format!("{}-ideal", self.variant_name())
+        } else {
+            self.variant_name().to_string()
+        }
+    }
+
+    fn interval(&self) -> f64 {
+        self.interval
+    }
+
+    fn on_start(&mut self, sim: &mut SimState) {
+        // Cold start (§5.1: no warm-up). The ideal variants may pre-spin
+        // for the first interval since they know the workload.
+        if let Some(oracle) = &self.oracle {
+            let n0 = oracle.needed_at(0).max(oracle.needed_at(1));
+            sim.alloc_prewarmed(WorkerKind::Fpga, n0);
+        }
+        self.tick_index = 1;
+    }
+
+    fn on_tick(&mut self, sim: &mut SimState) {
+        // Interval t just ended; we stand at the start of interval t+1 and
+        // decide allocations that become ready for interval t+2... i.e.
+        // the paper's "predict n_{t+1} rather than n_t" at lag one.
+        let n_needed = self.needed_last_interval(sim); // n_{t-1} in Alg 1
+        self.n_prev = n_needed;
+
+        // ℍ[n_{t-3}].add(n_{t-1})
+        self.lag.push(n_needed);
+        if self.lag.len() > 2 {
+            let key = self.lag.remove(0);
+            self.predictor.observe(key, n_needed);
+        }
+
+        let n_curr = sim.allocated(WorkerKind::Fpga);
+        let n_next = match &self.oracle {
+            Some(oracle) => oracle.needed_at(self.tick_index + 1),
+            None if self.last_value_predictor => n_needed,
+            None => self.predictor.predict(n_needed, n_curr),
+        };
+        let n_next = if self.deadline_aware {
+            // Optional §4.5 extension: with loose deadlines (relative to
+            // the interval) a small under-allocation is absorbed by
+            // queueing slack; shave one worker when slack is ample.
+            n_next.saturating_sub(1).max(n_needed.min(n_next))
+        } else {
+            n_next
+        };
+
+        if n_next > n_curr {
+            sim.alloc_n(WorkerKind::Fpga, n_next - n_curr);
+        }
+        // Over-allocations are reclaimed by the idle timeout (§5.1), not
+        // forced down — the "insurance against repetitive allocations".
+        self.tick_index += 1;
+    }
+
+    fn on_request(&mut self, req: Request, sim: &mut SimState) {
+        const KINDS: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
+        match self.dispatcher.find(sim, &req, KINDS) {
+            Some(w) => {
+                sim.dispatch(req, w);
+            }
+            None => {
+                // Alg 3 line 6: burst / under-allocation → fresh CPU.
+                sim.dispatch_to_new_cpu(req);
+            }
+        }
+    }
+
+    fn on_dealloc(
+        &mut self,
+        kind: WorkerKind,
+        lifetime: f64,
+        peers_at_alloc: u32,
+        _sim: &mut SimState,
+    ) {
+        if kind == WorkerKind::Fpga {
+            self.predictor.observe_lifetime(peers_at_alloc, lifetime);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::sim;
+    use crate::trace::{synthetic_app, AppTrace, Arrival};
+    use crate::util::rng::Rng;
+
+    fn steady_trace(rate_per_sec: f64, size: f64, duration: f64) -> AppTrace {
+        let mut arrivals = Vec::new();
+        let n_per_sec = rate_per_sec as usize;
+        let mut t = 0.0;
+        while t < duration {
+            for k in 0..n_per_sec {
+                arrivals.push(Arrival {
+                    time: t + k as f64 / rate_per_sec,
+                    size,
+                });
+            }
+            t += 1.0;
+        }
+        AppTrace::new("steady", arrivals, duration)
+    }
+
+    #[test]
+    fn steady_load_converges_to_fpgas() {
+        // 200 req/s x 10ms = 2 CPU-s/s = 1 FPGA-s/s → 1 FPGA covers it.
+        let trace = steady_trace(200.0, 0.010, 120.0);
+        let cfg = SimConfig::paper_default();
+        let mut sched = Spork::new(&cfg, Objective::energy());
+        let r = sim::run(&trace, cfg, &PlatformConfig::paper_default(), &mut sched);
+        let m = &r.metrics;
+        // After warm-up, most requests run on FPGAs.
+        assert!(
+            m.cpu_request_fraction() < 0.25,
+            "cpu fraction {}",
+            m.cpu_request_fraction()
+        );
+        assert!(m.on_fpga > 0);
+        // FPGA allocation should be modest (predictor converges to ~1-2).
+        assert!(m.peak_fpgas <= 4, "peak fpgas {}", m.peak_fpgas);
+        assert_eq!(m.requests as usize, trace.len());
+    }
+
+    #[test]
+    fn deadlines_mostly_met_via_cpu_fallback() {
+        let mut rng = Rng::new(42);
+        let trace = synthetic_app("b", &mut rng, 0.65, 300.0, 150.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let mut sched = Spork::new(&cfg, Objective::energy());
+        let r = sim::run(&trace, cfg, &PlatformConfig::paper_default(), &mut sched);
+        assert!(
+            r.miss_fraction() < 0.01,
+            "miss fraction {}",
+            r.miss_fraction()
+        );
+    }
+
+    #[test]
+    fn spork_e_more_efficient_spork_c_cheaper() {
+        let mut rng = Rng::new(7);
+        let trace = synthetic_app("b", &mut rng, 0.65, 600.0, 300.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        let re = sim::run(
+            &trace,
+            cfg.clone(),
+            &defaults,
+            &mut Spork::new(&cfg, Objective::energy()),
+        );
+        let rc = sim::run(
+            &trace,
+            cfg.clone(),
+            &defaults,
+            &mut Spork::new(&cfg, Objective::cost()),
+        );
+        assert!(
+            re.energy_efficiency() >= rc.energy_efficiency() * 0.98,
+            "E {} vs C {}",
+            re.energy_efficiency(),
+            rc.energy_efficiency()
+        );
+        assert!(
+            rc.relative_cost() <= re.relative_cost() * 1.02,
+            "E {} vs C {}",
+            re.relative_cost(),
+            rc.relative_cost()
+        );
+    }
+
+    #[test]
+    fn ideal_at_least_as_good_on_objective() {
+        let mut rng = Rng::new(11);
+        let trace = synthetic_app("b", &mut rng, 0.7, 600.0, 300.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        let r = sim::run(
+            &trace,
+            cfg.clone(),
+            &defaults,
+            &mut Spork::new(&cfg, Objective::energy()),
+        );
+        let oracle = Oracle::from_trace(&trace, &cfg, Objective::energy());
+        let ri = sim::run(
+            &trace,
+            cfg.clone(),
+            &defaults,
+            &mut Spork::ideal(&cfg, Objective::energy(), oracle),
+        );
+        assert!(
+            ri.energy_efficiency() >= r.energy_efficiency() * 0.95,
+            "ideal {} vs learned {}",
+            ri.energy_efficiency(),
+            r.energy_efficiency()
+        );
+    }
+
+    #[test]
+    fn names() {
+        let cfg = SimConfig::paper_default();
+        assert_eq!(Spork::new(&cfg, Objective::energy()).name(), "spork-e");
+        assert_eq!(Spork::new(&cfg, Objective::cost()).name(), "spork-c");
+        assert_eq!(Spork::new(&cfg, Objective::balanced()).name(), "spork-b");
+        let o = Oracle {
+            needed: vec![0],
+            interval: 10.0,
+        };
+        assert_eq!(
+            Spork::ideal(&cfg, Objective::energy(), o).name(),
+            "spork-e-ideal"
+        );
+    }
+}

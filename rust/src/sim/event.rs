@@ -1,0 +1,153 @@
+//! Event queue for the discrete-event simulator: a binary min-heap ordered
+//! by event time with a deterministic tiebreak (sequence number), so runs
+//! are bit-reproducible regardless of heap internals.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::worker::WorkerId;
+
+/// Simulator events. Request arrivals are NOT events — the engine merges
+/// the (already sorted) arrival array with this queue, which keeps the heap
+/// small (its size tracks in-flight work, not total trace length).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// A worker finished its spin-up and becomes available.
+    SpinUpDone { worker: WorkerId },
+    /// A dispatched request finishes on `worker`.
+    Completion {
+        worker: WorkerId,
+        arrival: f64,
+        deadline: f64,
+    },
+    /// An idle timeout matures; `generation` guards against staleness (the
+    /// worker may have received work since the timeout was scheduled).
+    IdleTimeout { worker: WorkerId, generation: u32 },
+    /// A worker finished spinning down and leaves the pool.
+    SpinDownDone { worker: WorkerId },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for a min-heap; ties broken by insertion order.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, event: Event) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        self.heap.push(Entry {
+            time,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(w: u32) -> Event {
+        Event::SpinUpDone {
+            worker: WorkerId(w),
+        }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, ev(3));
+        q.push(1.0, ev(1));
+        q.push(2.0, ev(2));
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_broken_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ev(10));
+        q.push(5.0, ev(20));
+        q.push(5.0, ev(30));
+        let ids: Vec<u32> = std::iter::from_fn(|| {
+            q.pop().map(|(_, e)| match e {
+                Event::SpinUpDone { worker } => worker.0,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(ids, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(2.5, ev(1));
+        q.push(0.5, ev(2));
+        assert_eq!(q.peek_time(), Some(0.5));
+        assert_eq!(q.pop().unwrap().0, 0.5);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan_times_in_debug() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ev(1));
+        q.push(1.0, ev(2));
+        let _ = q.pop();
+        let _ = q.pop();
+    }
+}

@@ -1,0 +1,219 @@
+//! Energy, cost, latency, and utilization accounting, plus the idealized
+//! FPGA-only baseline the paper normalizes against.
+
+use crate::config::{PlatformConfig, WorkerKind};
+use crate::util::stats::Sample;
+
+/// Per-worker-kind energy breakdown in joules (the MILP's E^a, E^b, E^i,
+/// E^d components).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub alloc: f64,
+    pub busy: f64,
+    pub idle: f64,
+    pub dealloc: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.alloc + self.busy + self.idle + self.dealloc
+    }
+}
+
+/// Everything a simulation run measures.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub cpu_energy: EnergyBreakdown,
+    pub fpga_energy: EnergyBreakdown,
+    /// Occupancy cost in dollars per kind.
+    pub cpu_cost: f64,
+    pub fpga_cost: f64,
+    pub requests: u64,
+    pub on_cpu: u64,
+    pub on_fpga: u64,
+    pub deadline_misses: u64,
+    pub cpu_spinups: u64,
+    pub fpga_spinups: u64,
+    /// Total work dispatched, in CPU-seconds (size units).
+    pub total_work: f64,
+    /// Latency sample (completion - arrival), subsampled.
+    pub latency: Sample,
+    /// Peak concurrently allocated workers.
+    pub peak_cpus: u32,
+    pub peak_fpgas: u32,
+}
+
+impl Metrics {
+    pub fn energy(&self, kind: WorkerKind) -> &EnergyBreakdown {
+        match kind {
+            WorkerKind::Cpu => &self.cpu_energy,
+            WorkerKind::Fpga => &self.fpga_energy,
+        }
+    }
+
+    pub fn energy_mut(&mut self, kind: WorkerKind) -> &mut EnergyBreakdown {
+        match kind {
+            WorkerKind::Cpu => &mut self.cpu_energy,
+            WorkerKind::Fpga => &mut self.fpga_energy,
+        }
+    }
+
+    pub fn total_energy(&self) -> f64 {
+        self.cpu_energy.total() + self.fpga_energy.total()
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.cpu_cost + self.fpga_cost
+    }
+
+    pub fn cpu_request_fraction(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.on_cpu as f64 / self.requests as f64
+        }
+    }
+
+    /// Merge another run's metrics (for aggregating across apps — §5.2:
+    /// "energy consumption and costs are aggregated across all
+    /// applications").
+    pub fn merge(&mut self, o: &Metrics) {
+        let add = |a: &mut EnergyBreakdown, b: &EnergyBreakdown| {
+            a.alloc += b.alloc;
+            a.busy += b.busy;
+            a.idle += b.idle;
+            a.dealloc += b.dealloc;
+        };
+        add(&mut self.cpu_energy, &o.cpu_energy);
+        add(&mut self.fpga_energy, &o.fpga_energy);
+        self.cpu_cost += o.cpu_cost;
+        self.fpga_cost += o.fpga_cost;
+        self.requests += o.requests;
+        self.on_cpu += o.on_cpu;
+        self.on_fpga += o.on_fpga;
+        self.deadline_misses += o.deadline_misses;
+        self.cpu_spinups += o.cpu_spinups;
+        self.fpga_spinups += o.fpga_spinups;
+        self.total_work += o.total_work;
+        self.peak_cpus += o.peak_cpus; // pools are per-app → peaks add
+        self.peak_fpgas += o.peak_fpgas;
+    }
+}
+
+/// The idealized, best-case FPGA-only platform (§5.1 "Metrics"): incurs
+/// only compute costs — zero spin-up and idling overheads — evaluated at
+/// **default** Table 6 parameters regardless of the experiment's sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct IdealBaseline {
+    /// Joules for the whole workload.
+    pub energy: f64,
+    /// Dollars for the whole workload.
+    pub cost: f64,
+}
+
+impl IdealBaseline {
+    /// `total_work` is in CPU-seconds.
+    pub fn for_work(total_work: f64, defaults: &PlatformConfig) -> Self {
+        let fpga_seconds = total_work / defaults.fpga.speedup;
+        IdealBaseline {
+            energy: fpga_seconds * defaults.fpga.busy_power,
+            cost: fpga_seconds * defaults.fpga.cost_per_sec(),
+        }
+    }
+}
+
+/// A finished run, normalized the way the paper reports results.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub scheduler: String,
+    pub metrics: Metrics,
+    pub ideal: IdealBaseline,
+}
+
+impl RunResult {
+    /// Paper's "Energy Efficiency": ideal energy / measured energy (≤ 1 in
+    /// practice; reported as a percentage).
+    pub fn energy_efficiency(&self) -> f64 {
+        if self.metrics.total_energy() <= 0.0 {
+            return f64::NAN;
+        }
+        self.ideal.energy / self.metrics.total_energy()
+    }
+
+    /// Paper's "Relative Cost": measured cost / ideal cost (≥ 1 typically).
+    pub fn relative_cost(&self) -> f64 {
+        if self.ideal.cost <= 0.0 {
+            return f64::NAN;
+        }
+        self.metrics.total_cost() / self.ideal.cost
+    }
+
+    pub fn miss_fraction(&self) -> f64 {
+        if self.metrics.requests == 0 {
+            0.0
+        } else {
+            self.metrics.deadline_misses as f64 / self.metrics.requests as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total() {
+        let e = EnergyBreakdown {
+            alloc: 1.0,
+            busy: 2.0,
+            idle: 3.0,
+            dealloc: 4.0,
+        };
+        assert_eq!(e.total(), 10.0);
+    }
+
+    #[test]
+    fn ideal_baseline_default_params() {
+        // 100 CPU-seconds of work at 2x speedup = 50 FPGA-seconds at 50 W.
+        let d = PlatformConfig::paper_default();
+        let b = IdealBaseline::for_work(100.0, &d);
+        assert!((b.energy - 2500.0).abs() < 1e-9);
+        assert!((b.cost - 50.0 * 0.982 / 3600.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_and_cost_ratios() {
+        let d = PlatformConfig::paper_default();
+        let mut m = Metrics::default();
+        m.fpga_energy.busy = 5000.0;
+        m.fpga_cost = 0.0273;
+        m.requests = 10;
+        m.deadline_misses = 1;
+        let r = RunResult {
+            scheduler: "test".into(),
+            metrics: m,
+            ideal: IdealBaseline::for_work(100.0, &d),
+        };
+        assert!((r.energy_efficiency() - 0.5).abs() < 1e-9);
+        assert!((r.relative_cost() - 0.0273 / (50.0 * 0.982 / 3600.0)).abs() < 1e-6);
+        assert!((r.miss_fraction() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_components() {
+        let mut a = Metrics::default();
+        a.cpu_energy.busy = 10.0;
+        a.requests = 5;
+        a.on_cpu = 2;
+        let mut b = Metrics::default();
+        b.cpu_energy.busy = 5.0;
+        b.fpga_cost = 1.0;
+        b.requests = 3;
+        b.on_cpu = 3;
+        a.merge(&b);
+        assert_eq!(a.cpu_energy.busy, 15.0);
+        assert_eq!(a.fpga_cost, 1.0);
+        assert_eq!(a.requests, 8);
+        assert!((a.cpu_request_fraction() - 5.0 / 8.0).abs() < 1e-12);
+    }
+}

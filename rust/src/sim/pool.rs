@@ -1,0 +1,152 @@
+//! Worker pool: slab storage with per-kind live lists.
+//!
+//! The pool only stores workers; allocation/deallocation *policy* lives in
+//! the schedulers and the engine drives state transitions.
+
+use super::worker::{Worker, WorkerId, WorkerState};
+use crate::config::WorkerKind;
+
+#[derive(Debug, Default)]
+pub struct Pool {
+    slots: Vec<Option<Worker>>,
+    free: Vec<u32>,
+    live_cpu: Vec<WorkerId>,
+    live_fpga: Vec<WorkerId>,
+}
+
+impl Pool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, make: impl FnOnce(WorkerId) -> Worker) -> WorkerId {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(None);
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let id = WorkerId(idx);
+        let w = make(id);
+        match w.kind {
+            WorkerKind::Cpu => self.live_cpu.push(id),
+            WorkerKind::Fpga => self.live_fpga.push(id),
+        }
+        self.slots[idx as usize] = Some(w);
+        id
+    }
+
+    pub fn remove(&mut self, id: WorkerId) -> Worker {
+        let w = self.slots[id.0 as usize]
+            .take()
+            .expect("removing nonexistent worker");
+        let live = match w.kind {
+            WorkerKind::Cpu => &mut self.live_cpu,
+            WorkerKind::Fpga => &mut self.live_fpga,
+        };
+        let pos = live.iter().position(|&x| x == id).expect("live list desync");
+        live.swap_remove(pos);
+        self.free.push(id.0);
+        w
+    }
+
+    pub fn get(&self, id: WorkerId) -> Option<&Worker> {
+        self.slots.get(id.0 as usize).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, id: WorkerId) -> Option<&mut Worker> {
+        self.slots.get_mut(id.0 as usize).and_then(|s| s.as_mut())
+    }
+
+    pub fn live_ids(&self, kind: WorkerKind) -> &[WorkerId] {
+        match kind {
+            WorkerKind::Cpu => &self.live_cpu,
+            WorkerKind::Fpga => &self.live_fpga,
+        }
+    }
+
+    pub fn iter_kind(&self, kind: WorkerKind) -> impl Iterator<Item = &Worker> + '_ {
+        self.live_ids(kind).iter().map(move |&id| {
+            self.get(id).expect("live list points at empty slot")
+        })
+    }
+
+    pub fn iter_all(&self) -> impl Iterator<Item = &Worker> + '_ {
+        self.iter_kind(WorkerKind::Cpu)
+            .chain(self.iter_kind(WorkerKind::Fpga))
+    }
+
+    /// Live workers of a kind (any state).
+    pub fn count(&self, kind: WorkerKind) -> u32 {
+        self.live_ids(kind).len() as u32
+    }
+
+    /// Live workers excluding those spinning down, i.e. the "allocated"
+    /// count schedulers reason about (spinning-up + active).
+    pub fn allocated(&self, kind: WorkerKind) -> u32 {
+        self.iter_kind(kind)
+            .filter(|w| w.state != WorkerState::SpinningDown)
+            .count() as u32
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live_cpu.is_empty() && self.live_fpga.is_empty()
+    }
+
+    pub fn total(&self) -> usize {
+        self.live_cpu.len() + self.live_fpga.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(pool: &mut Pool, kind: WorkerKind) -> WorkerId {
+        pool.insert(|id| Worker::new(id, kind, 0.0, 1.0, 0))
+    }
+
+    #[test]
+    fn insert_remove_reuses_slots() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Cpu);
+        let b = mk(&mut p, WorkerKind::Fpga);
+        assert_eq!(p.total(), 2);
+        p.remove(a);
+        assert_eq!(p.count(WorkerKind::Cpu), 0);
+        let c = mk(&mut p, WorkerKind::Cpu);
+        assert_eq!(c, a, "slot should be reused");
+        assert!(p.get(b).is_some());
+    }
+
+    #[test]
+    fn per_kind_lists() {
+        let mut p = Pool::new();
+        mk(&mut p, WorkerKind::Cpu);
+        mk(&mut p, WorkerKind::Cpu);
+        mk(&mut p, WorkerKind::Fpga);
+        assert_eq!(p.count(WorkerKind::Cpu), 2);
+        assert_eq!(p.count(WorkerKind::Fpga), 1);
+        assert_eq!(p.iter_all().count(), 3);
+    }
+
+    #[test]
+    fn allocated_excludes_spinning_down() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Fpga);
+        mk(&mut p, WorkerKind::Fpga);
+        p.get_mut(a).unwrap().state = WorkerState::SpinningDown;
+        assert_eq!(p.count(WorkerKind::Fpga), 2);
+        assert_eq!(p.allocated(WorkerKind::Fpga), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_remove_panics() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Cpu);
+        p.remove(a);
+        p.remove(a);
+    }
+}

@@ -1,0 +1,199 @@
+//! Worker state machine.
+//!
+//! Lifecycle: `SpinningUp → Active (busy|idle) → SpinningDown → removed`.
+//! Workers may be assigned work while spinning up (Alg 3's α list); their
+//! effective start time is then their readiness time. Busy power is drawn
+//! during spin up and spin down (§5.1).
+
+use crate::config::WorkerKind;
+
+/// Stable worker identifier (slab index in the pool).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkerId(pub u32);
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WorkerState {
+    SpinningUp,
+    Active,
+    SpinningDown,
+}
+
+#[derive(Clone, Debug)]
+pub struct Worker {
+    pub id: WorkerId,
+    pub kind: WorkerKind,
+    pub state: WorkerState,
+    /// When spin-up started (allocation instant).
+    pub alloc_time: f64,
+    /// When the worker is (or became) ready to process work.
+    pub ready_at: f64,
+    /// Completion horizon: all queued work finishes at this time.
+    /// Invariant: `busy_until >= ready_at`.
+    pub busy_until: f64,
+    /// Number of queued + running requests.
+    pub queued: u32,
+    /// Cumulative seconds of service dispatched to this worker.
+    pub busy_seconds: f64,
+    /// Time the worker last became idle (valid when idle).
+    pub idle_since: f64,
+    /// Bumped on every dispatch; stale idle timeouts carry the old value.
+    pub generation: u32,
+    /// Number of same-kind workers allocated when this one was requested —
+    /// the conditioning key for Spork's lifetime map 𝕃.
+    pub peers_at_alloc: u32,
+}
+
+impl Worker {
+    pub fn new(
+        id: WorkerId,
+        kind: WorkerKind,
+        now: f64,
+        spin_up: f64,
+        peers_at_alloc: u32,
+    ) -> Self {
+        Self {
+            id,
+            kind,
+            state: WorkerState::SpinningUp,
+            alloc_time: now,
+            ready_at: now + spin_up,
+            busy_until: now + spin_up,
+            queued: 0,
+            busy_seconds: 0.0,
+            idle_since: now + spin_up,
+            generation: 0,
+            peers_at_alloc,
+        }
+    }
+
+    /// Worker can accept new work (not spinning down).
+    pub fn accepting(&self) -> bool {
+        self.state != WorkerState::SpinningDown
+    }
+
+    /// Idle := active with an empty queue.
+    pub fn is_idle(&self, now: f64) -> bool {
+        self.state == WorkerState::Active && self.queued == 0 && self.busy_until <= now
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.queued > 0
+    }
+
+    /// Completion time if a request needing `service` seconds were
+    /// dispatched now.
+    pub fn finish_time(&self, now: f64, service: f64) -> f64 {
+        self.busy_until.max(now) + service
+    }
+
+    /// Outstanding queued work in seconds (the "load" used by packing
+    /// policies).
+    pub fn backlog(&self, now: f64) -> f64 {
+        (self.busy_until - now.max(self.ready_at).min(self.busy_until)).max(0.0)
+            + (self.busy_until - now).min(0.0).max(0.0) // 0; kept for clarity
+    }
+
+    /// Assign `service` seconds of work now; returns the completion time.
+    pub fn assign(&mut self, now: f64, service: f64) -> f64 {
+        debug_assert!(self.accepting());
+        let finish = self.finish_time(now, service);
+        self.busy_until = finish;
+        self.queued += 1;
+        self.busy_seconds += service;
+        self.generation = self.generation.wrapping_add(1);
+        finish
+    }
+
+    /// Mark one request complete; returns true if the worker is now idle.
+    pub fn complete_one(&mut self, now: f64) -> bool {
+        debug_assert!(self.queued > 0, "completion on empty worker");
+        self.queued -= 1;
+        if self.queued == 0 {
+            self.idle_since = now;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Total time spent active (ready → `until`).
+    pub fn active_seconds(&self, until: f64) -> f64 {
+        (until - self.ready_at).max(0.0)
+    }
+
+    /// Idle seconds over the active window ending at `until`.
+    pub fn idle_seconds(&self, until: f64) -> f64 {
+        (self.active_seconds(until) - self.busy_seconds).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh() -> Worker {
+        Worker::new(WorkerId(0), WorkerKind::Fpga, 100.0, 10.0, 3)
+    }
+
+    #[test]
+    fn spin_up_window() {
+        let w = fresh();
+        assert_eq!(w.state, WorkerState::SpinningUp);
+        assert_eq!(w.ready_at, 110.0);
+        assert_eq!(w.busy_until, 110.0);
+        assert_eq!(w.peers_at_alloc, 3);
+        assert!(!w.is_idle(105.0));
+    }
+
+    #[test]
+    fn assign_during_spin_up_starts_at_ready() {
+        let mut w = fresh();
+        let finish = w.assign(101.0, 2.0);
+        assert_eq!(finish, 112.0); // ready 110 + 2
+        assert_eq!(w.queued, 1);
+    }
+
+    #[test]
+    fn fifo_queue_accumulates() {
+        let mut w = fresh();
+        w.state = WorkerState::Active;
+        w.ready_at = 0.0;
+        w.busy_until = 0.0;
+        let f1 = w.assign(200.0, 1.0);
+        let f2 = w.assign(200.0, 3.0);
+        assert_eq!(f1, 201.0);
+        assert_eq!(f2, 204.0);
+        assert!(!w.complete_one(f1));
+        assert!(w.complete_one(f2));
+        assert_eq!(w.idle_since, f2);
+        assert!(w.is_idle(f2));
+    }
+
+    #[test]
+    fn idle_accounting() {
+        let mut w = fresh(); // ready at 110
+        w.state = WorkerState::Active;
+        w.assign(110.0, 5.0); // busy 110-115
+        w.complete_one(115.0);
+        // active 110→120 = 10s, busy 5s → idle 5s
+        assert!((w.idle_seconds(120.0) - 5.0).abs() < 1e-12);
+        assert!((w.active_seconds(120.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generation_bumps_on_assign() {
+        let mut w = fresh();
+        let g0 = w.generation;
+        w.assign(100.0, 1.0);
+        assert_ne!(w.generation, g0);
+    }
+
+    #[test]
+    fn finish_time_idle_worker_starts_now() {
+        let mut w = fresh();
+        w.state = WorkerState::Active;
+        w.ready_at = 0.0;
+        w.busy_until = 50.0; // in the past relative to now=80
+        assert_eq!(w.finish_time(80.0, 2.0), 82.0);
+    }
+}

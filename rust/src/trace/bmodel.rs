@@ -1,0 +1,139 @@
+//! The b-model self-similar traffic generator (Wang et al., ICDE 2002 —
+//! paper reference [87]).
+//!
+//! The b-model recursively bisects a volume of work: at each level the
+//! current segment's volume is split between its two halves with bias `b`
+//! (fraction `b` to one half, `1-b` to the other, the side chosen at
+//! random). `b = 0.5` yields a uniform series; `b = 0.75` yields highly
+//! variable, bursty series (the paper observes >20x load differences
+//! between some consecutive intervals at 0.75).
+
+use crate::util::rng::Rng;
+
+/// Generate a self-similar volume series of length `len` (padded up to the
+/// next power of two internally, then truncated) whose values sum to
+/// `total`. Values are non-negative.
+pub fn bmodel_series(rng: &mut Rng, b: f64, len: usize, total: f64) -> Vec<f64> {
+    assert!((0.5..1.0).contains(&b), "bias must be in [0.5, 1.0), got {b}");
+    assert!(len > 0);
+    let levels = (len as f64).log2().ceil() as u32;
+    let n = 1usize << levels;
+    let mut cur = vec![total];
+    for _ in 0..levels {
+        let mut next = Vec::with_capacity(cur.len() * 2);
+        for &v in &cur {
+            let (hi, lo) = (v * b, v * (1.0 - b));
+            if rng.chance(0.5) {
+                next.push(hi);
+                next.push(lo);
+            } else {
+                next.push(lo);
+                next.push(hi);
+            }
+        }
+        cur = next;
+    }
+    debug_assert_eq!(cur.len(), n);
+    // Truncate to requested length, rescaling so the kept prefix sums to
+    // `total` (keeps mean rate comparable across lengths).
+    cur.truncate(len);
+    let s: f64 = cur.iter().sum();
+    if s > 0.0 {
+        let k = total / s;
+        for v in &mut cur {
+            *v *= k;
+        }
+    }
+    cur
+}
+
+/// Generate per-slot request *rates* with the given mean rate: a b-model
+/// series normalized so the average is `mean_rate` (the §3.2 setting:
+/// "per-second request arrival rates using the b-model").
+pub fn bmodel_rates(rng: &mut Rng, b: f64, slots: usize, mean_rate: f64) -> Vec<f64> {
+    bmodel_series(rng, b, slots, mean_rate * slots as f64)
+}
+
+/// Burstiness diagnostic: max over consecutive-slot ratios (paper's ">20x
+/// difference in load for some consecutive intervals" at b = 0.75).
+pub fn max_consecutive_ratio(series: &[f64]) -> f64 {
+    series
+        .windows(2)
+        .filter(|w| w[0].min(w[1]) > 0.0)
+        .map(|w| w[0].max(w[1]) / w[0].min(w[1]))
+        .fold(1.0, f64::max)
+}
+
+/// Coefficient of variation — a scalar burstiness summary used in tests.
+pub fn cov(series: &[f64]) -> f64 {
+    let n = series.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mean = series.iter().sum::<f64>() / n;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = series.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_total_volume() {
+        let mut rng = Rng::new(1);
+        for &len in &[1usize, 7, 64, 100, 4096] {
+            let s = bmodel_series(&mut rng, 0.7, len, 1000.0);
+            assert_eq!(s.len(), len);
+            let total: f64 = s.iter().sum();
+            assert!((total - 1000.0).abs() < 1e-6, "len={len} total={total}");
+            assert!(s.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn b_half_is_uniform() {
+        let mut rng = Rng::new(2);
+        let s = bmodel_series(&mut rng, 0.5, 256, 256.0);
+        for v in &s {
+            assert!((v - 1.0).abs() < 1e-9);
+        }
+        assert!(cov(&s) < 1e-9);
+    }
+
+    #[test]
+    fn burstiness_increases_with_bias() {
+        let mut rng = Rng::new(3);
+        let c55 = cov(&bmodel_series(&mut rng, 0.55, 4096, 1e6));
+        let c65 = cov(&bmodel_series(&mut rng, 0.65, 4096, 1e6));
+        let c75 = cov(&bmodel_series(&mut rng, 0.75, 4096, 1e6));
+        assert!(c55 < c65 && c65 < c75, "cov: {c55} {c65} {c75}");
+    }
+
+    #[test]
+    fn high_bias_shows_large_consecutive_swings() {
+        // Paper: b=0.75 implies >~20x differences for some consecutive
+        // intervals on hour-long (3600 slot) traces.
+        let mut rng = Rng::new(4);
+        let s = bmodel_series(&mut rng, 0.75, 3600, 3.6e7);
+        assert!(max_consecutive_ratio(&s) > 20.0);
+    }
+
+    #[test]
+    fn mean_rate_is_respected() {
+        let mut rng = Rng::new(5);
+        let r = bmodel_rates(&mut rng, 0.7, 3600, 10_000.0);
+        let mean = r.iter().sum::<f64>() / r.len() as f64;
+        assert!((mean - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bias_below_half() {
+        let mut rng = Rng::new(6);
+        bmodel_series(&mut rng, 0.3, 16, 1.0);
+    }
+}

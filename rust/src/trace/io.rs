@@ -1,0 +1,171 @@
+//! Trace (de)serialization: CSV arrival files (`time,size` rows, one file
+//! per app) and a JSON manifest for multi-app workloads. Lets experiments
+//! be re-run bit-identically from saved traces and lets users bring their
+//! own traces.
+
+use super::{AppTrace, Arrival};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Write one app's arrivals as CSV with a `# duration=<s>` header comment.
+pub fn save_csv(app: &AppTrace, path: &Path) -> Result<()> {
+    let mut out = String::with_capacity(app.len() * 24 + 64);
+    out.push_str(&format!("# app={} duration={}\n", app.name, app.duration));
+    out.push_str("time,size\n");
+    for a in &app.arrivals {
+        out.push_str(&format!("{:.6},{:.6}\n", a.time, a.size));
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load a CSV trace written by [`save_csv`] (or hand-authored: header
+/// comment optional, `time,size` header row optional).
+pub fn load_csv(path: &Path) -> Result<AppTrace> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "trace".to_string());
+    let mut duration: Option<f64> = None;
+    let mut arrivals = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            for tok in rest.split_whitespace() {
+                if let Some(v) = tok.strip_prefix("duration=") {
+                    duration = v.parse().ok();
+                } else if let Some(v) = tok.strip_prefix("app=") {
+                    name = v.to_string();
+                }
+            }
+            continue;
+        }
+        if line.starts_with("time") {
+            continue; // header row
+        }
+        let (t, s) = line
+            .split_once(',')
+            .with_context(|| format!("{}:{}: expected 'time,size'", path.display(), lineno + 1))?;
+        let time: f64 = t
+            .trim()
+            .parse()
+            .with_context(|| format!("{}:{}: bad time", path.display(), lineno + 1))?;
+        let size: f64 = s
+            .trim()
+            .parse()
+            .with_context(|| format!("{}:{}: bad size", path.display(), lineno + 1))?;
+        anyhow::ensure!(size > 0.0, "{}:{}: size must be > 0", path.display(), lineno + 1);
+        arrivals.push(Arrival { time, size });
+    }
+    arrivals.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+    let duration = duration.unwrap_or_else(|| arrivals.last().map_or(0.0, |a| a.time));
+    Ok(AppTrace::new(&name, arrivals, duration))
+}
+
+/// Save a workload (multiple apps) into a directory with a manifest.
+pub fn save_workload(apps: &[AppTrace], dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut manifest = String::from("# spork workload manifest\n");
+    for app in apps {
+        let file = format!("{}.csv", app.name);
+        save_csv(app, &dir.join(&file))?;
+        manifest.push_str(&file);
+        manifest.push('\n');
+    }
+    std::fs::write(dir.join("MANIFEST"), manifest)?;
+    Ok(())
+}
+
+/// Load a workload directory written by [`save_workload`].
+pub fn load_workload(dir: &Path) -> Result<Vec<AppTrace>> {
+    let manifest = std::fs::read_to_string(dir.join("MANIFEST"))
+        .with_context(|| format!("reading manifest in {}", dir.display()))?;
+    let mut apps = Vec::new();
+    for line in manifest.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        apps.push(load_csv(&dir.join(line))?);
+    }
+    Ok(apps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("spork-io-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> AppTrace {
+        AppTrace::new(
+            "demo",
+            vec![
+                Arrival { time: 0.25, size: 0.01 },
+                Arrival { time: 1.5, size: 0.01 },
+                Arrival { time: 3.75, size: 0.02 },
+            ],
+            10.0,
+        )
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let d = tmpdir("csv");
+        let p = d.join("demo.csv");
+        save_csv(&sample(), &p).unwrap();
+        let back = load_csv(&p).unwrap();
+        assert_eq!(back.name, "demo");
+        assert_eq!(back.duration, 10.0);
+        assert_eq!(back.len(), 3);
+        assert!((back.arrivals[2].size - 0.02).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn load_unsorted_and_headerless() {
+        let d = tmpdir("raw");
+        let p = d.join("raw.csv");
+        std::fs::write(&p, "5.0,0.1\n1.0,0.2\n").unwrap();
+        let t = load_csv(&p).unwrap();
+        assert_eq!(t.len(), 2);
+        assert!(t.arrivals[0].time < t.arrivals[1].time);
+        assert_eq!(t.duration, 5.0); // falls back to last arrival
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn rejects_bad_rows() {
+        let d = tmpdir("bad");
+        let p = d.join("bad.csv");
+        std::fs::write(&p, "1.0,0.1\nnot-a-row\n").unwrap();
+        assert!(load_csv(&p).is_err());
+        std::fs::write(&p, "1.0,-0.5\n").unwrap();
+        assert!(load_csv(&p).is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn workload_round_trip() {
+        let d = tmpdir("wl");
+        let mut a = sample();
+        a.name = "app-a".into();
+        let mut b = sample();
+        b.name = "app-b".into();
+        save_workload(&[a, b], &d).unwrap();
+        let back = load_workload(&d).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "app-a");
+        assert_eq!(back[1].name, "app-b");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

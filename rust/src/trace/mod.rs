@@ -1,0 +1,252 @@
+//! Workload traces: rate series, request arrival streams, and generators.
+//!
+//! Two representations flow through the system:
+//!
+//! * [`RateTrace`] — piecewise request *rates* (req/s per slot). This is what
+//!   the b-model produces, what §3's fluid/optimal analysis consumes, and
+//!   what drives non-homogeneous Poisson arrival synthesis.
+//! * [`AppTrace`] — a concrete stream of [`Arrival`]s (time + size) for one
+//!   application, consumed by the discrete-event simulator and the serving
+//!   runtime.
+
+pub mod bmodel;
+pub mod io;
+pub mod poisson;
+pub mod production;
+
+use crate::util::rng::Rng;
+
+/// Piecewise-constant request-rate series: `rates[i]` is the average rate
+/// (requests/second) during `[i*dt, (i+1)*dt)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RateTrace {
+    pub dt: f64,
+    pub rates: Vec<f64>,
+}
+
+impl RateTrace {
+    pub fn new(dt: f64, rates: Vec<f64>) -> Self {
+        assert!(dt > 0.0);
+        Self { dt, rates }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.dt * self.rates.len() as f64
+    }
+
+    /// Total expected number of requests.
+    pub fn total_requests(&self) -> f64 {
+        self.rates.iter().sum::<f64>() * self.dt
+    }
+
+    pub fn mean_rate(&self) -> f64 {
+        if self.rates.is_empty() {
+            0.0
+        } else {
+            self.rates.iter().sum::<f64>() / self.rates.len() as f64
+        }
+    }
+
+    pub fn peak_rate(&self) -> f64 {
+        self.rates.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Re-bin to a coarser slot width (must be a multiple of `dt`), averaging
+    /// rates. Used to view per-second b-model output at scheduler-interval
+    /// granularity.
+    pub fn rebin(&self, new_dt: f64) -> RateTrace {
+        let k = (new_dt / self.dt).round() as usize;
+        assert!(k >= 1, "new_dt must be >= dt");
+        assert!(
+            (new_dt - k as f64 * self.dt).abs() < 1e-9,
+            "new_dt must be a multiple of dt"
+        );
+        let rates = self
+            .rates
+            .chunks(k)
+            .map(|c| c.iter().sum::<f64>() / c.len() as f64)
+            .collect();
+        RateTrace { dt: new_dt, rates }
+    }
+
+    /// Linear-interpolated instantaneous rate at time `t`, treating each
+    /// slot's value as the rate at the slot midpoint (§5.1: "rates change
+    /// linearly within each minute"). Clamped at the ends.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        if self.rates.is_empty() {
+            return 0.0;
+        }
+        let x = t / self.dt - 0.5;
+        if x <= 0.0 {
+            return self.rates[0];
+        }
+        let i = x.floor() as usize;
+        if i + 1 >= self.rates.len() {
+            return *self.rates.last().unwrap();
+        }
+        let frac = x - i as f64;
+        self.rates[i] * (1.0 - frac) + self.rates[i + 1] * frac
+    }
+}
+
+/// One request arrival: time (s from trace start) and size (service time in
+/// CPU-seconds; the paper assumes sizes are known — §4.5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    pub time: f64,
+    pub size: f64,
+}
+
+/// A per-application arrival stream.
+#[derive(Clone, Debug)]
+pub struct AppTrace {
+    pub name: String,
+    pub arrivals: Vec<Arrival>,
+    /// Duration of the observation window (>= last arrival time).
+    pub duration: f64,
+}
+
+impl AppTrace {
+    pub fn new(name: &str, arrivals: Vec<Arrival>, duration: f64) -> Self {
+        debug_assert!(arrivals.windows(2).all(|w| w[0].time <= w[1].time));
+        Self {
+            name: name.to_string(),
+            arrivals,
+            duration,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Total work in CPU-seconds.
+    pub fn total_work(&self) -> f64 {
+        self.arrivals.iter().map(|a| a.size).sum()
+    }
+
+    /// Aggregate per-interval demand in CPU-seconds (used by oracle
+    /// schedulers and needed-worker computations).
+    pub fn work_per_interval(&self, interval: f64) -> Vec<f64> {
+        let n = (self.duration / interval).ceil() as usize;
+        let mut w = vec![0.0; n.max(1)];
+        for a in &self.arrivals {
+            let i = ((a.time / interval) as usize).min(w.len() - 1);
+            w[i] += a.size;
+        }
+        w
+    }
+
+    /// Per-interval arrival counts.
+    pub fn counts_per_interval(&self, interval: f64) -> Vec<u64> {
+        let n = (self.duration / interval).ceil() as usize;
+        let mut c = vec![0u64; n.max(1)];
+        for a in &self.arrivals {
+            let i = ((a.time / interval) as usize).min(c.len() - 1);
+            c[i] += 1;
+        }
+        c
+    }
+}
+
+/// §5.1's synthetic workload: constant-size requests with **per-minute**
+/// b-model rates ("we next generate per-minute request arrival rates based
+/// on a self-similar distribution") turned into time-varying Poisson
+/// arrivals with linear rate interpolation within each minute.
+pub fn synthetic_app(
+    name: &str,
+    rng: &mut Rng,
+    burstiness: f64,
+    duration: f64,
+    mean_rate: f64,
+    request_size: f64,
+) -> AppTrace {
+    synthetic_app_dt(name, rng, burstiness, duration, mean_rate, request_size, 60.0)
+}
+
+/// Synthetic workload with an explicit rate-slot width. §3.2 (Fig 2/3)
+/// uses per-second slots (`dt = 1`); §5.1 uses per-minute (`dt = 60`).
+pub fn synthetic_app_dt(
+    name: &str,
+    rng: &mut Rng,
+    burstiness: f64,
+    duration: f64,
+    mean_rate: f64,
+    request_size: f64,
+    dt: f64,
+) -> AppTrace {
+    let slots = ((duration / dt).ceil() as usize).max(1);
+    let rates = bmodel::bmodel_rates(rng, burstiness, slots, mean_rate);
+    let rate_trace = RateTrace::new(dt, rates);
+    let arrivals = poisson::poisson_arrivals(rng, &rate_trace, |_| request_size);
+    let arrivals = arrivals
+        .into_iter()
+        .filter(|a| a.time < duration)
+        .collect();
+    AppTrace::new(name, arrivals, duration)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_trace_aggregates() {
+        let t = RateTrace::new(2.0, vec![1.0, 3.0, 5.0]);
+        assert_eq!(t.duration(), 6.0);
+        assert!((t.total_requests() - 18.0).abs() < 1e-12);
+        assert!((t.mean_rate() - 3.0).abs() < 1e-12);
+        assert_eq!(t.peak_rate(), 5.0);
+    }
+
+    #[test]
+    fn rebin_preserves_volume() {
+        let t = RateTrace::new(1.0, (0..60).map(|i| i as f64).collect());
+        let r = t.rebin(10.0);
+        assert_eq!(r.rates.len(), 6);
+        assert!((r.total_requests() - t.total_requests()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_at_interpolates() {
+        let t = RateTrace::new(1.0, vec![0.0, 10.0]);
+        assert_eq!(t.rate_at(0.0), 0.0); // clamped
+        assert!((t.rate_at(1.0) - 5.0).abs() < 1e-12); // midpoint between slots
+        assert_eq!(t.rate_at(5.0), 10.0); // clamped end
+    }
+
+    #[test]
+    fn app_trace_work_binning() {
+        let arrivals = vec![
+            Arrival { time: 0.5, size: 0.01 },
+            Arrival { time: 1.5, size: 0.02 },
+            Arrival { time: 9.99, size: 0.03 },
+        ];
+        let app = AppTrace::new("t", arrivals, 10.0);
+        let w = app.work_per_interval(5.0);
+        assert_eq!(w.len(), 2);
+        assert!((w[0] - 0.03).abs() < 1e-12);
+        assert!((w[1] - 0.03).abs() < 1e-12);
+        assert!((app.total_work() - 0.06).abs() < 1e-12);
+        assert_eq!(app.counts_per_interval(5.0), vec![2, 1]);
+    }
+
+    #[test]
+    fn synthetic_app_volume_close_to_expected() {
+        let mut rng = Rng::new(1);
+        let app = synthetic_app("s", &mut rng, 0.6, 600.0, 100.0, 0.010);
+        let expected = 600.0 * 100.0;
+        let got = app.len() as f64;
+        assert!(
+            (got - expected).abs() < expected * 0.05,
+            "got {got}, expected ~{expected}"
+        );
+        // arrivals sorted and within window
+        assert!(app.arrivals.windows(2).all(|w| w[0].time <= w[1].time));
+        assert!(app.arrivals.iter().all(|a| a.time >= 0.0 && a.time <= 600.0));
+    }
+}

@@ -1,0 +1,134 @@
+//! Non-homogeneous Poisson arrival synthesis from a rate trace.
+//!
+//! §5.1: "We use the request rates to generate two-hour traces with
+//! time-varying Poisson interarrivals, assuming that the rates change
+//! linearly within each minute." We implement this with per-second
+//! integration of the linearly-interpolated rate: in each one-second step
+//! the arrival count is Poisson(∫λ dt over the step) and arrival instants
+//! are spread uniformly in the step (exchangeability of a Poisson process
+//! conditioned on its count).
+
+use super::{Arrival, RateTrace};
+use crate::util::rng::Rng;
+
+/// Integration step for arrival placement (seconds).
+const STEP: f64 = 1.0;
+
+/// Generate sorted arrivals over `rates.duration()`. `size_of` maps arrival
+/// time → request size, letting callers use constant sizes (§3.2) or
+/// per-app profiles (§5.2).
+pub fn poisson_arrivals(
+    rng: &mut Rng,
+    rates: &RateTrace,
+    mut size_of: impl FnMut(f64) -> f64,
+) -> Vec<Arrival> {
+    let duration = rates.duration();
+    let mut arrivals = Vec::with_capacity(rates.total_requests() as usize + 16);
+    let mut t = 0.0;
+    while t < duration {
+        let step = STEP.min(duration - t);
+        // Trapezoidal integral of the linearly-interpolated rate.
+        let lam = 0.5 * (rates.rate_at(t) + rates.rate_at(t + step)) * step;
+        let count = rng.poisson(lam);
+        let base = arrivals.len();
+        for _ in 0..count {
+            let at = t + rng.f64() * step;
+            arrivals.push(Arrival {
+                time: at,
+                size: 0.0, // sized after sorting for determinism by time order
+            });
+        }
+        // Keep arrivals time-sorted within the step.
+        arrivals[base..].sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+        t += step;
+    }
+    for a in &mut arrivals {
+        a.size = size_of(a.time);
+    }
+    arrivals
+}
+
+/// Deterministic arrivals at exactly the per-slot expected counts, evenly
+/// spaced — used by tests and by the fluid-model cross-checks where
+/// sampling noise is unwanted.
+pub fn deterministic_arrivals(
+    rates: &RateTrace,
+    mut size_of: impl FnMut(f64) -> f64,
+) -> Vec<Arrival> {
+    let mut arrivals = Vec::new();
+    for (i, &r) in rates.rates.iter().enumerate() {
+        let t0 = i as f64 * rates.dt;
+        let n = (r * rates.dt).round() as usize;
+        for k in 0..n {
+            let time = t0 + (k as f64 + 0.5) / n as f64 * rates.dt;
+            arrivals.push(Arrival {
+                time,
+                size: size_of(time),
+            });
+        }
+    }
+    arrivals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_matches_expectation() {
+        let mut rng = Rng::new(1);
+        let rates = RateTrace::new(60.0, vec![100.0; 10]); // 10 min at 100/s
+        let arr = poisson_arrivals(&mut rng, &rates, |_| 0.01);
+        let expected = 600.0 * 100.0;
+        assert!(
+            (arr.len() as f64 - expected).abs() < expected * 0.03,
+            "got {}, expected ~{expected}",
+            arr.len()
+        );
+    }
+
+    #[test]
+    fn arrivals_sorted_and_in_window() {
+        let mut rng = Rng::new(2);
+        let rates = RateTrace::new(1.0, vec![5.0, 50.0, 5.0, 100.0]);
+        let arr = poisson_arrivals(&mut rng, &rates, |_| 0.01);
+        assert!(arr.windows(2).all(|w| w[0].time <= w[1].time));
+        assert!(arr.iter().all(|a| (0.0..=4.0).contains(&a.time)));
+    }
+
+    #[test]
+    fn tracks_time_varying_rate() {
+        let mut rng = Rng::new(3);
+        // First half ~0, second half hot: arrivals should concentrate there.
+        let mut rates = vec![0.0; 30];
+        rates.extend(vec![200.0; 30]);
+        let rates = RateTrace::new(1.0, rates);
+        let arr = poisson_arrivals(&mut rng, &rates, |_| 0.01);
+        let early = arr.iter().filter(|a| a.time < 25.0).count();
+        let late = arr.iter().filter(|a| a.time > 35.0).count();
+        assert!(late > 50 * early.max(1), "early={early} late={late}");
+    }
+
+    #[test]
+    fn zero_rate_no_arrivals() {
+        let mut rng = Rng::new(4);
+        let rates = RateTrace::new(1.0, vec![0.0; 10]);
+        assert!(poisson_arrivals(&mut rng, &rates, |_| 0.01).is_empty());
+    }
+
+    #[test]
+    fn deterministic_counts_exact() {
+        let rates = RateTrace::new(2.0, vec![3.0, 0.0, 1.5]);
+        let arr = deterministic_arrivals(&rates, |_| 0.5);
+        assert_eq!(arr.len(), 6 + 0 + 3);
+        assert!(arr.iter().all(|a| a.size == 0.5));
+    }
+
+    #[test]
+    fn sizes_assigned_via_callback() {
+        let mut rng = Rng::new(5);
+        let rates = RateTrace::new(1.0, vec![50.0; 4]);
+        let arr = poisson_arrivals(&mut rng, &rates, |t| if t < 2.0 { 0.1 } else { 0.2 });
+        assert!(arr.iter().all(|a| (a.time < 2.0) == (a.size == 0.1)));
+    }
+}

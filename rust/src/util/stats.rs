@@ -1,0 +1,320 @@
+//! Summary statistics, percentiles, and streaming accumulators used by the
+//! simulator metrics, the Spork predictor, and the experiment harness.
+
+/// Streaming mean/variance (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 =
+            self.m2 + other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    pub fn sum(&self) -> f64 {
+        self.mean * self.n as f64
+    }
+}
+
+/// Exact percentile over a stored sample (fine at our sample sizes; the
+/// latency-critical paths use counters, not this).
+#[derive(Clone, Debug, Default)]
+pub struct Sample {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Sample {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN in Sample"));
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, p in [0,100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        self.ensure_sorted();
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let rank = p / 100.0 * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let frac = rank - lo as f64;
+            self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            f64::NAN
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Integer-binned histogram with occurrence counts — the building block of
+/// Spork's conditional worker-count distribution ℍ (Alg 2).
+#[derive(Clone, Debug, Default)]
+pub struct CountHistogram {
+    counts: std::collections::BTreeMap<u32, u64>,
+    total: u64,
+}
+
+impl CountHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, value: u32) {
+        *self.counts.entry(value).or_insert(0) += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Distinct observed values (ascending) — Alg 2's candidate bins.
+    pub fn bins(&self) -> impl Iterator<Item = u32> + '_ {
+        self.counts.keys().copied()
+    }
+
+    /// (value, probability) pairs over the empirical distribution.
+    pub fn probs(&self) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let total = self.total as f64;
+        self.counts.iter().map(move |(&v, &c)| (v, c as f64 / total))
+    }
+
+    pub fn min_bin(&self) -> Option<u32> {
+        self.counts.keys().next().copied()
+    }
+
+    pub fn max_bin(&self) -> Option<u32> {
+        self.counts.keys().next_back().copied()
+    }
+
+    /// Probability-weighted mean of the distribution.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        self.counts
+            .iter()
+            .map(|(&v, &c)| v as f64 * c as f64)
+            .sum::<f64>()
+            / self.total as f64
+    }
+}
+
+/// Running mean keyed for 𝕃 (average worker lifetime conditioned on
+/// allocated count) — cheap, no sample storage.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MeanTracker {
+    n: u64,
+    mean: f64,
+}
+
+impl MeanTracker {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.mean += (x - self.mean) / self.n as f64;
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Geometric mean over positive values (used for reporting speedup tables).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.sum() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Summary::new();
+        for &x in &xs {
+            all.add(x);
+        }
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for &x in &xs[..37] {
+            a.add(x);
+        }
+        for &x in &xs[37..] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Sample::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn histogram_probs_sum_to_one() {
+        let mut h = CountHistogram::new();
+        for v in [3u32, 3, 5, 7, 7, 7] {
+            h.add(v);
+        }
+        let total: f64 = h.probs().map(|(_, p)| p).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert_eq!(h.bins().collect::<Vec<_>>(), vec![3, 5, 7]);
+        assert_eq!(h.min_bin(), Some(3));
+        assert_eq!(h.max_bin(), Some(7));
+        assert!((h.mean() - (3.0 * 2.0 + 5.0 + 7.0 * 3.0) / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_tracker() {
+        let mut m = MeanTracker::default();
+        for x in [2.0, 4.0, 6.0] {
+            m.add(x);
+        }
+        assert!((m.mean() - 4.0).abs() < 1e-12);
+        assert_eq!(m.count(), 3);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[3.32, 1.88]) - 2.498).abs() < 0.01); // paper's 6.25x ~= 3.32*1.88
+    }
+}

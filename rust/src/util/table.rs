@@ -1,0 +1,178 @@
+//! Plain-text table rendering for experiment reports — the harness prints
+//! the same rows the paper's tables/figures report, in aligned columns and
+//! as CSV for plotting.
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Aligned monospace rendering.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:<width$}", c, width = w[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &w));
+        let total: usize = w.iter().sum::<usize>() + 2 * (w.len().saturating_sub(1));
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &w));
+        }
+        out
+    }
+
+    /// CSV rendering (no quoting needed for our numeric/identifier cells,
+    /// but commas in cells are escaped defensively).
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Markdown rendering for EXPERIMENTS.md.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("**{}**\n\n", self.title));
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format helpers matching the paper's reporting style.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+pub fn ratio(x: f64) -> String {
+    format!("{:.2}x", x)
+}
+
+pub fn sig3(x: f64) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let decimals = (2 - mag).max(0) as usize;
+    format!("{:.*}", decimals, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Demo", &["Scheduler", "Energy Eff.", "Rel. Cost"]);
+        t.row(vec!["SporkE".into(), pct(0.862), ratio(1.34)]);
+        t.row(vec!["FPGA-static".into(), pct(0.544), ratio(3.08)]);
+        t
+    }
+
+    #[test]
+    fn render_aligns() {
+        let r = sample().render();
+        assert!(r.contains("SporkE"));
+        assert!(r.contains("86.2%"));
+        assert!(r.contains("3.08x"));
+        // header and rows start at same column offsets
+        let lines: Vec<&str> = r.lines().collect();
+        assert!(lines[1].starts_with("Scheduler"));
+    }
+
+    #[test]
+    fn csv_round_fields() {
+        let c = sample().to_csv();
+        let lines: Vec<&str> = c.lines().collect();
+        assert_eq!(lines[0], "Scheduler,Energy Eff.,Rel. Cost");
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let m = sample().to_markdown();
+        assert!(m.contains("| Scheduler | Energy Eff. | Rel. Cost |"));
+        assert!(m.contains("|---|---|---|"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn sig3_formats() {
+        assert_eq!(sig3(1234.0), "1234");
+        assert_eq!(sig3(1.2345), "1.23");
+        assert_eq!(sig3(0.012345), "0.0123");
+    }
+}

@@ -1,0 +1,85 @@
+//! Tests for the paper's optional/extension features and CLI-level
+//! behaviours: the §4.5 deadline-aware allocation flag, trace file
+//! round-trips through the scheduler, and config-file loading.
+
+use spork::config::{PlatformConfig, SchedulerKind, SimConfig};
+use spork::sched;
+use spork::trace::{io, synthetic_app};
+use spork::util::rng::Rng;
+
+#[test]
+fn deadline_aware_extension_trades_efficiency_for_allocations() {
+    // §4.5: deadline-aware FPGA allocation is future work in the paper;
+    // our optional flag shaves allocations when queueing slack allows.
+    // It must never break deadlines materially, and should not allocate
+    // more FPGAs than the paper-faithful configuration.
+    let mut rng = Rng::new(21);
+    let trace = synthetic_app("ext", &mut rng, 0.6, 1200.0, 400.0, 0.010);
+    let defaults = PlatformConfig::paper_default();
+
+    let base_cfg = SimConfig::paper_default();
+    let mut aware_cfg = SimConfig::paper_default();
+    aware_cfg.deadline_aware = true;
+
+    let base = sched::run_scheduler(&SchedulerKind::spork_e(), &trace, &base_cfg, &defaults);
+    let aware = sched::run_scheduler(&SchedulerKind::spork_e(), &trace, &aware_cfg, &defaults);
+
+    assert!(aware.miss_fraction() < 0.02, "misses {}", aware.miss_fraction());
+    assert!(
+        aware.metrics.fpga_spinups <= base.metrics.fpga_spinups,
+        "deadline-aware should not allocate more ({} vs {})",
+        aware.metrics.fpga_spinups,
+        base.metrics.fpga_spinups
+    );
+}
+
+#[test]
+fn saved_trace_reproduces_simulation() {
+    // trace → CSV → trace → identical simulation results.
+    let mut rng = Rng::new(5);
+    let trace = synthetic_app("rt", &mut rng, 0.65, 300.0, 150.0, 0.010);
+    let dir = std::env::temp_dir().join(format!("spork-roundtrip-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rt.csv");
+    io::save_csv(&trace, &path).unwrap();
+    let loaded = io::load_csv(&path).unwrap();
+
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let a = sched::run_scheduler(&SchedulerKind::spork_e(), &trace, &cfg, &defaults);
+    let b = sched::run_scheduler(&SchedulerKind::spork_e(), &loaded, &cfg, &defaults);
+    // CSV stores 6 decimal places; results must agree tightly.
+    assert_eq!(a.metrics.requests, b.metrics.requests);
+    assert!(
+        (a.metrics.total_energy() - b.metrics.total_energy()).abs()
+            < 1e-3 * a.metrics.total_energy()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn config_file_drives_simulation() {
+    // A 60s-spin-up config file must actually change behaviour.
+    let dir = std::env::temp_dir().join(format!("spork-cfg-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cfg.json");
+    std::fs::write(
+        &path,
+        r#"{"platform": {"fpga": {"spin_up": 60.0}}}"#,
+    )
+    .unwrap();
+    let cfg = SimConfig::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.platform.fpga.spin_up, 60.0);
+    assert_eq!(cfg.interval, 60.0, "interval must follow A_f");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn all_experiment_ids_registered() {
+    let ids: Vec<&str> = spork::exp::registry().iter().map(|(n, _, _)| *n).collect();
+    for id in ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table8", "table9"] {
+        assert!(ids.contains(&id), "missing experiment {id}");
+    }
+}

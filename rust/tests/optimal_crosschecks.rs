@@ -1,0 +1,163 @@
+//! Cross-validation of the three §3 solvers against each other and the
+//! Table 3 MILP: trajectory DP == MILP (S=1), rank DP == trajectory DP
+//! (S=1), rank DP == MILP with persistence (S>1), homogeneous rank
+//! decomposition == DP, and the dominance properties Fig 2 relies on.
+
+use spork::config::PlatformConfig;
+use spork::milp::MilpError;
+use spork::opt::{dp, rank, ranksolve, FluidInstance, PlatformMode};
+use spork::sched::Objective;
+use spork::util::prop::{prop_check, PropResult};
+
+fn inst(demand: Vec<f64>, dt: f64) -> FluidInstance {
+    FluidInstance {
+        demand_f: demand,
+        interval: dt,
+        platform: PlatformConfig::paper_default(),
+    }
+}
+
+fn score(obj: Objective, e: f64, c: f64, dt: f64) -> f64 {
+    let p = PlatformConfig::paper_default();
+    obj.w_energy * e / (p.fpga.busy_power * dt) + obj.w_cost * c / (p.fpga.cost_per_sec() * dt)
+}
+
+#[test]
+fn dp_matches_milp_randomized() {
+    prop_check(8, |case| {
+        let t = 3 + case.rng.below(3) as usize;
+        let demand: Vec<f64> = (0..t).map(|_| case.rng.below(3) as f64).collect();
+        let f = inst(demand.clone(), 10.0);
+        for obj in [Objective::energy(), Objective::cost(), Objective::balanced()] {
+            let d = dp::solve(&f, PlatformMode::Hybrid, obj);
+            let milp = match f.build_milp(PlatformMode::Hybrid, obj).solve(300_000) {
+                Ok(m) => m,
+                Err(MilpError::NodeLimit) => continue, // rare; skip case
+                Err(e) => {
+                    return PropResult::assert(false, format!("milp error {e:?} on {demand:?}"))
+                }
+            };
+            let ds = score(obj, d.energy, d.cost, 10.0);
+            let p = PropResult::approx_eq(ds, milp.objective, 1e-4, "dp vs milp");
+            if !p.ok {
+                return PropResult::assert(
+                    false,
+                    format!("{obj:?} {demand:?}: dp {ds} milp {}", milp.objective),
+                );
+            }
+        }
+        PropResult::pass()
+    });
+}
+
+#[test]
+fn ranksolve_matches_milp_with_persistence() {
+    prop_check(5, |case| {
+        let t = 5 + case.rng.below(2) as usize;
+        let s = 2 + case.rng.below(2) as usize;
+        let demand: Vec<f64> = (0..t).map(|_| case.rng.below(3) as f64).collect();
+        let f = inst(demand.clone(), 1.0);
+        let obj = Objective::energy();
+        let milp = match f
+            .build_milp_persist(PlatformMode::Hybrid, obj, s)
+            .solve(500_000)
+        {
+            Ok(m) => m,
+            Err(MilpError::NodeLimit) => return PropResult::pass(),
+            Err(e) => return PropResult::assert(false, format!("milp {e:?} on {demand:?}")),
+        };
+        let r = ranksolve::solve(&f, PlatformMode::Hybrid, obj, s);
+        let rs = score(obj, r.energy, r.cost, 1.0);
+        PropResult::assert(
+            (rs - milp.objective).abs() < 1e-3 * (1.0 + milp.objective),
+            format!("S={s} {demand:?}: rank {rs} vs milp {}", milp.objective),
+        )
+    });
+}
+
+#[test]
+fn ranksolve_reduces_to_dp_at_s1() {
+    prop_check(8, |case| {
+        let t = 5 + case.rng.below(20) as usize;
+        let demand: Vec<f64> = (0..t)
+            .map(|_| case.rng.range_f64(0.0, 5.0).floor())
+            .collect();
+        let f = inst(demand.clone(), 10.0);
+        for (mode, obj) in [
+            (PlatformMode::Hybrid, Objective::energy()),
+            (PlatformMode::FpgaOnly, Objective::cost()),
+        ] {
+            let a = ranksolve::solve(&f, mode, obj, 1);
+            let b = dp::solve(&f, mode, obj);
+            let sa = score(obj, a.energy, a.cost, 10.0);
+            let sb = score(obj, b.energy, b.cost, 10.0);
+            if (sa - sb).abs() > 1e-6 * (1.0 + sb.abs()) {
+                return PropResult::assert(
+                    false,
+                    format!("{mode:?}: rank {sa} vs dp {sb} on {demand:?}"),
+                );
+            }
+        }
+        PropResult::pass()
+    });
+}
+
+#[test]
+fn homogeneous_rank_decomposition_matches_dp() {
+    prop_check(8, |case| {
+        let t = 5 + case.rng.below(30) as usize;
+        let demand: Vec<u32> = (0..t).map(|_| case.rng.below(6) as u32).collect();
+        let f = inst(demand.iter().map(|&d| d as f64).collect(), 10.0);
+        let d = dp::solve(&f, PlatformMode::FpgaOnly, Objective::energy());
+        let r = rank::solve(&demand, &f.platform.fpga, 10.0, true);
+        PropResult::approx_eq(d.energy, r.energy(), 1e-9, "dp vs rank energy")
+    });
+}
+
+#[test]
+fn hybrid_dominates_homogeneous_under_persistence() {
+    // The Fig 2 dominance property at §3 granularity.
+    prop_check(6, |case| {
+        let t = 60 + case.rng.below(60) as usize;
+        let demand: Vec<f64> = (0..t).map(|_| case.rng.range_f64(0.0, 8.0)).collect();
+        let f = inst(demand, 1.0);
+        for obj in [Objective::energy(), Objective::cost()] {
+            let h = ranksolve::solve(&f, PlatformMode::Hybrid, obj, 10);
+            let fo = ranksolve::solve(&f, PlatformMode::FpgaOnly, obj, 10);
+            let co = ranksolve::solve(&f, PlatformMode::CpuOnly, obj, 10);
+            let sh = score(obj, h.energy, h.cost, 1.0);
+            let sf = score(obj, fo.energy, fo.cost, 1.0);
+            let sc = score(obj, co.energy, co.cost, 1.0);
+            if sh > sf + 1e-6 || sh > sc + 1e-6 {
+                return PropResult::assert(
+                    false,
+                    format!("hybrid dominated: {sh} vs fpga {sf} cpu {sc} (seed {})", case.seed),
+                );
+            }
+        }
+        PropResult::pass()
+    });
+}
+
+#[test]
+fn burstier_demand_never_helps_fpga_only() {
+    // Monotonicity sanity: concentrating the same volume into fewer slots
+    // (a bursty rearrangement) cannot reduce FPGA-only overheads.
+    use spork::trace::bmodel;
+    use spork::util::rng::Rng;
+    let mut rng = Rng::new(4);
+    let smooth = inst(vec![4.0; 256], 1.0);
+    let bursty = inst(
+        bmodel::bmodel_series(&mut rng, 0.72, 256, 4.0 * 256.0),
+        1.0,
+    );
+    let obj = Objective::energy();
+    let rs = ranksolve::solve(&smooth, PlatformMode::FpgaOnly, obj, 10);
+    let rb = ranksolve::solve(&bursty, PlatformMode::FpgaOnly, obj, 10);
+    assert!(
+        rb.energy > rs.energy,
+        "bursty {} should cost more energy than smooth {}",
+        rb.energy,
+        rs.energy
+    );
+}

@@ -1,0 +1,152 @@
+//! Integration: the AOT HLO-text → PJRT round trip, the correctness
+//! contract between worker kinds, and the XLA-offloaded predictor vs the
+//! rust predictor. Skipped gracefully (with a loud marker) when
+//! `artifacts/` hasn't been built — run `make artifacts` first.
+
+use spork::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime load"))
+}
+
+/// Deterministic pseudo-input (must not depend on rand crates).
+fn test_input(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = spork::util::rng::Rng::new(seed);
+    (0..len).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.names();
+    for base in ["app_fpga", "app_cpu"] {
+        for batch in &rt.manifest.batch_sizes {
+            assert!(
+                names.contains(&format!("{base}_b{batch}")),
+                "missing {base}_b{batch} in {names:?}"
+            );
+        }
+    }
+    assert!(names.contains(&"predictor".to_string()));
+    assert_eq!(rt.manifest.layers, vec![128, 256, 128]);
+}
+
+#[test]
+fn fpga_and_cpu_builds_agree_numerically() {
+    // The hybrid-computing contract (§2.1): a request produces the same
+    // answer on either worker kind. The FPGA build lowers through the
+    // Pallas kernel, the CPU build through plain jnp — they must match.
+    let Some(rt) = runtime() else { return };
+    for &batch in &rt.manifest.batch_sizes.clone() {
+        let fpga = rt.compile(&format!("app_fpga_b{batch}")).unwrap();
+        let cpu = rt.compile(&format!("app_cpu_b{batch}")).unwrap();
+        let x = test_input(fpga.arg_specs()[0].element_count(), 42 + batch as u64);
+        let yf = fpga.run_f32(&[&x]).unwrap();
+        let yc = cpu.run_f32(&[&x]).unwrap();
+        assert_eq!(yf.len(), yc.len());
+        assert_eq!(yf.len(), batch * 128);
+        for (i, (a, b)) in yf.iter().zip(&yc).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * (1.0 + a.abs().max(b.abs())),
+                "batch {batch} output {i}: fpga {a} vs cpu {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn outputs_change_with_inputs() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile("app_fpga_b8").unwrap();
+    let n = exe.arg_specs()[0].element_count();
+    let y1 = exe.run_f32(&[&test_input(n, 1)]).unwrap();
+    let y2 = exe.run_f32(&[&test_input(n, 2)]).unwrap();
+    assert_ne!(y1, y2, "model must not be constant");
+    // Repeatability.
+    let y1b = exe.run_f32(&[&test_input(n, 1)]).unwrap();
+    assert_eq!(y1, y1b);
+}
+
+#[test]
+fn shape_mismatch_is_an_error() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile("app_fpga_b8").unwrap();
+    let too_short = vec![0.0f32; 8];
+    assert!(exe.run_f32(&[&too_short]).is_err());
+    assert!(exe.run_f32(&[]).is_err());
+}
+
+#[test]
+fn xla_predictor_matches_rust_predictor() {
+    // The predictor artifact computes Alg 2's expectation; its argmin
+    // must agree with the rust scalar implementation (spin-up
+    // amortization disabled on both sides).
+    use spork::config::PlatformConfig;
+    use spork::sched::spork::predictor::Predictor;
+    use spork::sched::Objective;
+
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile("predictor").unwrap();
+
+    let cases: Vec<Vec<(u32, u32)>> = vec![
+        vec![(5, 10)],                       // deterministic at 5
+        vec![(2, 5), (10, 5)],               // bimodal
+        vec![(1, 1), (3, 2), (8, 1), (20, 1)], // skewed
+    ];
+    for (ci, case) in cases.iter().enumerate() {
+        for (obj, we, wc) in [
+            (Objective::energy(), 1.0f32, 0.0f32),
+            (Objective::cost(), 0.0, 1.0),
+            (Objective::balanced(), 0.5, 0.5),
+        ] {
+            // Rust side.
+            let mut p = Predictor::new(PlatformConfig::paper_default(), 10.0, obj);
+            p.set_account_spinup(false);
+            for &(value, count) in case {
+                for _ in 0..count {
+                    p.observe(7, value);
+                }
+            }
+            let rust_pick = p.predict(7, 0);
+
+            // XLA side: pad to the fixed kernel shapes.
+            let total: u32 = case.iter().map(|&(_, c)| c).sum();
+            let mut probs = vec![0.0f32; 64];
+            let mut bins = vec![0.0f32; 64];
+            for (i, &(value, count)) in case.iter().enumerate() {
+                bins[i] = value as f32;
+                probs[i] = count as f32 / total as f32;
+            }
+            let cands: Vec<f32> = (0..64).map(|i| i as f32).collect();
+            let knobs = vec![
+                10.0,
+                50.0,
+                20.0,
+                150.0,
+                2.0,
+                0.982 / 3600.0,
+                0.668 / 3600.0,
+                we,
+                wc,
+            ];
+            let scores = exe.run_f32(&[&probs, &bins, &cands, &knobs]).unwrap();
+            // Argmin over the candidate range the rust side considers
+            // (min..=max observed bins).
+            let lo = case.iter().map(|&(v, _)| v).min().unwrap() as usize;
+            let hi = case.iter().map(|&(v, _)| v).max().unwrap() as usize;
+            let xla_pick = (lo..=hi)
+                .min_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap())
+                .unwrap() as u32;
+            assert_eq!(
+                rust_pick, xla_pick,
+                "case {ci} ({we},{wc}): rust {rust_pick} vs xla {xla_pick} (scores {:?})",
+                &scores[lo..=hi]
+            );
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Property-based integration tests over the simulator + schedulers,
+//! using the in-repo prop harness (`spork::util::prop`).
+
+use spork::config::{PlatformConfig, SchedulerKind, SimConfig};
+use spork::sched;
+use spork::trace::{synthetic_app, AppTrace, Arrival};
+use spork::util::prop::{prop_check, PropResult};
+use spork::util::rng::Rng;
+
+fn defaults() -> PlatformConfig {
+    PlatformConfig::paper_default()
+}
+
+#[test]
+fn every_scheduler_conserves_requests() {
+    // No request is ever dropped or double-served, for any scheduler, on
+    // randomized bursty workloads.
+    prop_check(12, |case| {
+        let b = case.rng.range_f64(0.5, 0.75);
+        let rate = case.rng.range_f64(50.0, 400.0);
+        let trace = synthetic_app(
+            "prop",
+            &mut case.rng,
+            b,
+            240.0,
+            rate,
+            0.010,
+        );
+        let cfg = SimConfig::paper_default();
+        for kind in SchedulerKind::table8_roster() {
+            let r = sched::run_scheduler(&kind, &trace, &cfg, &defaults());
+            let p = PropResult::assert(
+                r.metrics.requests as usize == trace.len()
+                    && r.metrics.on_cpu + r.metrics.on_fpga == r.metrics.requests,
+                format!(
+                    "{}: {} requests in, {} dispatched (seed {})",
+                    kind.name(),
+                    trace.len(),
+                    r.metrics.requests,
+                    case.seed
+                ),
+            );
+            if !p.ok {
+                return p;
+            }
+        }
+        PropResult::pass()
+    });
+}
+
+#[test]
+fn busy_energy_identity() {
+    // Busy energy must equal total dispatched service time x busy power,
+    // exactly, per worker kind (work conservation in the accounting).
+    prop_check(10, |case| {
+        let b = case.rng.range_f64(0.5, 0.75);
+        let trace = synthetic_app("prop", &mut case.rng, b, 300.0, 200.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let r = sched::run_scheduler(&SchedulerKind::spork_e(), &trace, &cfg, &defaults());
+        let m = &r.metrics;
+        // on_fpga requests ran at size/2 on 50 W; on_cpu at size on 150 W.
+        let expect_fpga = m.on_fpga as f64 * 0.010 / 2.0 * 50.0;
+        let expect_cpu = m.on_cpu as f64 * 0.010 * 150.0;
+        PropResult::approx_eq(m.fpga_energy.busy, expect_fpga, 1e-9, "fpga busy")
+            .and(PropResult::approx_eq(m.cpu_energy.busy, expect_cpu, 1e-9, "cpu busy"))
+    });
+}
+
+#[test]
+fn energy_components_nonnegative_and_cost_positive() {
+    prop_check(10, |case| {
+        let b = case.rng.range_f64(0.5, 0.75);
+        let trace = synthetic_app("prop", &mut case.rng, b, 200.0, 150.0, 0.020);
+        let cfg = SimConfig::paper_default();
+        for kind in [
+            SchedulerKind::spork_c(),
+            SchedulerKind::MarkIdeal,
+            SchedulerKind::CpuDynamic,
+        ] {
+            let r = sched::run_scheduler(&kind, &trace, &cfg, &defaults());
+            let m = &r.metrics;
+            for (label, v) in [
+                ("cpu alloc", m.cpu_energy.alloc),
+                ("cpu busy", m.cpu_energy.busy),
+                ("cpu idle", m.cpu_energy.idle),
+                ("fpga idle", m.fpga_energy.idle),
+                ("fpga dealloc", m.fpga_energy.dealloc),
+            ] {
+                if v < 0.0 {
+                    return PropResult::assert(false, format!("{label} negative: {v}"));
+                }
+            }
+            if trace.len() > 0 && m.total_cost() <= 0.0 {
+                return PropResult::assert(false, format!("{} zero cost", kind.name()));
+            }
+        }
+        PropResult::pass()
+    });
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let mut rng = Rng::new(5);
+    let trace = synthetic_app("det", &mut rng, 0.65, 400.0, 250.0, 0.010);
+    let cfg = SimConfig::paper_default();
+    let a = sched::run_scheduler(&SchedulerKind::spork_e(), &trace, &cfg, &defaults());
+    let b = sched::run_scheduler(&SchedulerKind::spork_e(), &trace, &cfg, &defaults());
+    assert_eq!(a.metrics.total_energy(), b.metrics.total_energy());
+    assert_eq!(a.metrics.total_cost(), b.metrics.total_cost());
+    assert_eq!(a.metrics.fpga_spinups, b.metrics.fpga_spinups);
+}
+
+#[test]
+fn hybrid_beats_cpu_only_on_energy_everywhere() {
+    // Core paper claim, as a property over random workloads: SporkE is
+    // always materially more energy-efficient than CPU-dynamic.
+    prop_check(8, |case| {
+        let b = case.rng.range_f64(0.5, 0.75);
+        let rate = case.rng.range_f64(100.0, 500.0);
+        let trace = synthetic_app("prop", &mut case.rng, b, 400.0, rate, 0.010);
+        let cfg = SimConfig::paper_default();
+        let spork = sched::run_scheduler(&SchedulerKind::spork_e(), &trace, &cfg, &defaults());
+        let cpu = sched::run_scheduler(&SchedulerKind::CpuDynamic, &trace, &cfg, &defaults());
+        PropResult::assert(
+            spork.energy_efficiency() > 1.5 * cpu.energy_efficiency(),
+            format!(
+                "sporkE {} vs cpu {} at b={b} (seed {})",
+                spork.energy_efficiency(),
+                cpu.energy_efficiency(),
+                case.seed
+            ),
+        )
+    });
+}
+
+#[test]
+fn deadline_misses_bounded_for_hybrids() {
+    // Hybrid schedulers have the CPU escape hatch: misses stay tiny.
+    prop_check(8, |case| {
+        let b = case.rng.range_f64(0.5, 0.75);
+        let trace = synthetic_app("prop", &mut case.rng, b, 300.0, 300.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        for kind in [
+            SchedulerKind::spork_e(),
+            SchedulerKind::spork_c(),
+            SchedulerKind::MarkIdeal,
+        ] {
+            let r = sched::run_scheduler(&kind, &trace, &cfg, &defaults());
+            if r.miss_fraction() > 0.02 {
+                return PropResult::assert(
+                    false,
+                    format!("{}: {:.2}% misses (seed {})", kind.name(), 100.0 * r.miss_fraction(), case.seed),
+                );
+            }
+        }
+        PropResult::pass()
+    });
+}
+
+#[test]
+fn empty_and_degenerate_traces() {
+    let cfg = SimConfig::paper_default();
+    // Empty trace: no requests, no energy.
+    let empty = AppTrace::new("empty", vec![], 100.0);
+    let r = sched::run_scheduler(&SchedulerKind::spork_e(), &empty, &cfg, &defaults());
+    assert_eq!(r.metrics.requests, 0);
+    // Single request.
+    let one = AppTrace::new(
+        "one",
+        vec![Arrival { time: 1.0, size: 0.05 }],
+        10.0,
+    );
+    let r = sched::run_scheduler(&SchedulerKind::spork_e(), &one, &cfg, &defaults());
+    assert_eq!(r.metrics.requests, 1);
+    assert_eq!(r.metrics.deadline_misses, 0);
+}
+
+#[test]
+fn worker_caps_respected_under_pressure() {
+    prop_check(6, |case| {
+        let mut cfg = SimConfig::paper_default();
+        cfg.max_cpus = Some(1 + case.rng.below(4) as u32);
+        cfg.max_fpgas = Some(1 + case.rng.below(3) as u32);
+        let trace = synthetic_app("prop", &mut case.rng, 0.7, 120.0, 300.0, 0.010);
+        let r = sched::run_scheduler(&SchedulerKind::spork_e(), &trace, &cfg, &defaults());
+        PropResult::assert(
+            r.metrics.peak_cpus <= cfg.max_cpus.unwrap()
+                && r.metrics.peak_fpgas <= cfg.max_fpgas.unwrap()
+                && r.metrics.requests as usize == trace.len(),
+            format!(
+                "peaks {}/{} vs caps {:?}/{:?}",
+                r.metrics.peak_cpus, r.metrics.peak_fpgas, cfg.max_cpus, cfg.max_fpgas
+            ),
+        )
+    });
+}
