@@ -11,6 +11,7 @@ use spork::exp::ExpCtx;
 use std::path::PathBuf;
 use std::time::Instant;
 
+#[allow(dead_code)] // each bench target compiles this module; not all use every helper
 pub fn bench_ctx() -> ExpCtx {
     ExpCtx {
         out_dir: PathBuf::from(
@@ -19,9 +20,16 @@ pub fn bench_ctx() -> ExpCtx {
         seeds: 1,
         scale: 0.3,
         full: false,
+        // Benches time the sweep the way users run it: parallel by
+        // default, overridable for serial baselines.
+        jobs: std::env::var("SPORK_BENCH_JOBS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0),
     }
 }
 
+#[allow(dead_code)]
 pub fn run_experiment_bench(id: &str) {
     let ctx = bench_ctx();
     let t0 = Instant::now();
@@ -41,6 +49,7 @@ pub fn run_experiment_bench(id: &str) {
 }
 
 /// Simple repeated-timing helper for microbenches.
+#[allow(dead_code)]
 pub fn time_it<F: FnMut() -> R, R>(label: &str, iters: u32, mut f: F) -> f64 {
     // Warmup.
     for _ in 0..iters.div_ceil(10).max(1) {

@@ -15,6 +15,41 @@ use spork::sim::{Request, SimState, WorkerState};
 use spork::trace::synthetic_app;
 use spork::util::rng::Rng;
 
+fn bench_sweep_engine() {
+    use spork::exp::{SweepCell, SweepGrid, WorkloadSpec};
+    println!("-- sweep engine (SweepGrid, serial vs parallel) --");
+    let build = |jobs: usize| {
+        let mut grid = SweepGrid::with(2, jobs);
+        for &b in &[0.55, 0.65, 0.75] {
+            for kind in [SchedulerKind::spork_e(), SchedulerKind::MarkIdeal] {
+                grid.push(SweepCell {
+                    scheduler: kind,
+                    cfg: SimConfig::paper_default(),
+                    workload: WorkloadSpec {
+                        burstiness: b,
+                        rate: 300.0,
+                        size: 0.010,
+                        duration: 240.0,
+                    },
+                    seed_base: 71,
+                });
+            }
+        }
+        grid
+    };
+    // (Byte-identical results across --jobs are pinned by
+    // rust/tests/determinism.rs; this bench only measures the speedup.)
+    let serial = common::time_it("sweep 6 cells x 2 seeds, --jobs 1", 2, || build(1).run());
+    let auto = common::time_it("sweep 6 cells x 2 seeds, --jobs 0 (auto)", 2, || {
+        build(0).run()
+    });
+    println!(
+        "{:<48} {:>9.2}x",
+        "  parallel speedup",
+        serial / auto.max(1e-12)
+    );
+}
+
 fn bench_sim_engine() {
     println!("-- sim engine (end-to-end DES) --");
     for &(rate, dur) in &[(500.0, 600.0), (2000.0, 600.0)] {
@@ -127,6 +162,7 @@ fn bench_predictor() {
 }
 
 fn main() {
+    bench_sweep_engine();
     bench_sim_engine();
     bench_dispatch();
     bench_predictor();

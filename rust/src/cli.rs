@@ -105,6 +105,15 @@ impl Args {
         }
     }
 
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected an integer, got '{v}'")),
+        }
+    }
+
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
@@ -191,6 +200,14 @@ mod tests {
     fn bad_number_is_error() {
         let a = Args::parse(&sv(&["simulate", "--seed", "abc"]), &specs()).unwrap();
         assert!(a.u64_or("seed", 0).is_err());
+        assert!(a.usize_or("seed", 0).is_err());
+    }
+
+    #[test]
+    fn usize_parses_and_defaults() {
+        let a = Args::parse(&sv(&["simulate", "--seed", "8"]), &specs()).unwrap();
+        assert_eq!(a.usize_or("seed", 1).unwrap(), 8);
+        assert_eq!(a.usize_or("missing", 4).unwrap(), 4);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! deadline-aware allocation extension.
 
 use super::common::{Cell, ExpCtx};
+use super::sweep::parallel_map;
 use crate::config::{PlatformConfig, SimConfig};
 use crate::sched::{self, Objective, Oracle};
 use crate::sim;
@@ -11,16 +12,18 @@ use crate::trace::synthetic_app;
 use crate::util::rng::Rng;
 use crate::util::table::{pct, ratio, Table};
 
+/// Run a custom-built Spork variant over the ablation workload, one
+/// independent RNG stream per seed, replicates merged in seed order.
 fn run_spork(
     ctx: &ExpCtx,
     cfg: &SimConfig,
     b: f64,
-    make: impl Fn(&SimConfig, &crate::trace::AppTrace) -> Box<dyn sim::Scheduler>,
+    make: impl Fn(&SimConfig, &crate::trace::AppTrace) -> Box<dyn sim::Scheduler> + Sync,
 ) -> Cell {
     let defaults = PlatformConfig::paper_default();
-    let mut cell = Cell::default();
-    for s in 0..ctx.seeds {
-        let mut rng = Rng::new(900 + s);
+    let seeds: Vec<u64> = (0..ctx.seeds).collect();
+    let runs = parallel_map(&seeds, ctx.effective_jobs(), |_, &s| {
+        let mut rng = Rng::for_stream(900, s);
         let trace = synthetic_app(
             "abl",
             &mut rng,
@@ -31,7 +34,11 @@ fn run_spork(
         );
         let mut sched = make(cfg, &trace);
         let r = sim::run(&trace, cfg.clone(), &defaults, sched.as_mut());
-        cell.add_run(&r.metrics, &r.ideal);
+        Cell::from_run(&r.metrics, &r.ideal)
+    });
+    let mut cell = Cell::default();
+    for run in &runs {
+        cell.merge(run);
     }
     cell.finish()
 }

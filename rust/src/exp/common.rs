@@ -2,11 +2,11 @@
 //! multi-app aggregation (§5.1: synthetic results average 10 trace runs;
 //! production energy/cost aggregate across applications).
 
+use super::sweep::{self, SweepCell, SweepGrid, WorkloadSpec};
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
 use crate::sched;
 use crate::sim::{IdealBaseline, Metrics};
 use crate::trace::AppTrace;
-use crate::util::rng::Rng;
 use std::path::PathBuf;
 
 /// CLI-derived experiment context.
@@ -20,6 +20,8 @@ pub struct ExpCtx {
     pub scale: f64,
     /// Paper-scale workloads (slow).
     pub full: bool,
+    /// Sweep worker threads (`--jobs`); 0 = one per available core.
+    pub jobs: usize,
 }
 
 impl ExpCtx {
@@ -38,11 +40,16 @@ impl ExpCtx {
             300.0
         }
     }
+
+    /// The resolved worker count (0 → available cores).
+    pub fn effective_jobs(&self) -> usize {
+        sweep::effective_jobs(self.jobs)
+    }
 }
 
 /// Normalized outcome of one (scheduler, workload) cell, averaged over
 /// seeds where applicable.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Cell {
     pub energy_eff: f64,
     pub rel_cost: f64,
@@ -54,16 +61,39 @@ pub struct Cell {
 }
 
 impl Cell {
-    pub fn add_run(&mut self, metrics: &Metrics, ideal: &IdealBaseline) {
-        self.energy_eff += ideal.energy / metrics.total_energy();
-        self.rel_cost += metrics.total_cost() / ideal.cost;
-        self.miss_frac += metrics.deadline_misses as f64 / metrics.requests.max(1) as f64;
-        self.cpu_req_frac += metrics.cpu_request_fraction();
-        self.fpga_spinups += metrics.fpga_spinups as f64;
-        self.peak_fpgas += metrics.peak_fpgas as f64;
-        self.runs += 1;
+    /// The normalized outcome of a single simulation run.
+    pub fn from_run(metrics: &Metrics, ideal: &IdealBaseline) -> Cell {
+        Cell {
+            energy_eff: ideal.energy / metrics.total_energy(),
+            rel_cost: metrics.total_cost() / ideal.cost,
+            miss_frac: metrics.deadline_misses as f64 / metrics.requests.max(1) as f64,
+            cpu_req_frac: metrics.cpu_request_fraction(),
+            fpga_spinups: metrics.fpga_spinups as f64,
+            peak_fpgas: metrics.peak_fpgas as f64,
+            runs: 1,
+        }
     }
 
+    /// Merge another cell's (possibly multi-run) sums into this one. The
+    /// sweep engine merges per-replicate cells in a fixed order, so
+    /// averages are bit-identical regardless of execution parallelism.
+    pub fn merge(&mut self, other: &Cell) {
+        self.energy_eff += other.energy_eff;
+        self.rel_cost += other.rel_cost;
+        self.miss_frac += other.miss_frac;
+        self.cpu_req_frac += other.cpu_req_frac;
+        self.fpga_spinups += other.fpga_spinups;
+        self.peak_fpgas += other.peak_fpgas;
+        self.runs += other.runs;
+    }
+
+    /// Accumulate one run in place (kept for call sites that aggregate
+    /// metrics themselves; equivalent to merging [`Cell::from_run`]).
+    pub fn add_run(&mut self, metrics: &Metrics, ideal: &IdealBaseline) {
+        self.merge(&Cell::from_run(metrics, ideal));
+    }
+
+    /// Convert accumulated sums into per-run averages.
     pub fn finish(mut self) -> Cell {
         let n = self.runs.max(1) as f64;
         self.energy_eff /= n;
@@ -76,7 +106,10 @@ impl Cell {
     }
 }
 
-/// Run `kind` on one synthetic workload per seed and average.
+/// Run `kind` on one synthetic workload per seed and average — a
+/// single-cell [`SweepGrid`] (replicates run in parallel under
+/// `ctx.jobs`, deterministically).
+#[allow(clippy::too_many_arguments)]
 pub fn run_synthetic(
     kind: &SchedulerKind,
     cfg: &SimConfig,
@@ -87,21 +120,26 @@ pub fn run_synthetic(
     duration: f64,
     seed_base: u64,
 ) -> Cell {
-    let defaults = PlatformConfig::paper_default();
-    let mut cell = Cell::default();
-    for s in 0..ctx.seeds {
-        let mut rng = Rng::new(seed_base + s);
-        let trace =
-            crate::trace::synthetic_app("exp", &mut rng, burstiness, duration, rate, size);
-        let r = sched::run_scheduler(kind, &trace, cfg, &defaults);
-        cell.add_run(&r.metrics, &r.ideal);
-    }
-    cell.finish()
+    let mut grid = SweepGrid::from_ctx(ctx);
+    grid.push(SweepCell {
+        scheduler: kind.clone(),
+        cfg: cfg.clone(),
+        workload: WorkloadSpec {
+            burstiness,
+            rate,
+            size,
+            duration,
+        },
+        seed_base,
+    });
+    grid.run().pop().expect("single-cell grid")
 }
 
 /// Run `kind` over a multi-app production workload: each app gets its own
 /// pool + scheduler instance; energy/cost aggregate across apps before
-/// normalizing (§5.2).
+/// normalizing (§5.2). Serial by design — production experiments
+/// parallelize across the (scheduler × dataset) grid instead, so worker
+/// threads never nest.
 pub fn run_production(kind: &SchedulerKind, cfg: &SimConfig, apps: &[AppTrace]) -> Cell {
     let defaults = PlatformConfig::paper_default();
     let mut total = Metrics::default();
@@ -110,9 +148,7 @@ pub fn run_production(kind: &SchedulerKind, cfg: &SimConfig, apps: &[AppTrace]) 
         total.merge(&r.metrics);
     }
     let ideal = IdealBaseline::for_work(total.total_work, &defaults);
-    let mut cell = Cell::default();
-    cell.add_run(&total, &ideal);
-    cell.finish()
+    Cell::from_run(&total, &ideal).finish()
 }
 
 #[cfg(test)]
@@ -150,12 +186,31 @@ mod tests {
     }
 
     #[test]
+    fn cell_merge_equals_sequential_add() {
+        let ideal = IdealBaseline {
+            energy: 50.0,
+            cost: 1.0,
+        };
+        let runs = [metrics(100.0, 2.0, 10, 1), metrics(50.0, 4.0, 10, 3)];
+        let mut seq = Cell::default();
+        for m in &runs {
+            seq.add_run(m, &ideal);
+        }
+        let mut merged = Cell::default();
+        for m in &runs {
+            merged.merge(&Cell::from_run(m, &ideal));
+        }
+        assert_eq!(seq, merged);
+    }
+
+    #[test]
     fn synthetic_runner_deterministic() {
         let ctx = ExpCtx {
             out_dir: PathBuf::from("/tmp"),
             seeds: 2,
             scale: 1.0,
             full: false,
+            jobs: 0,
         };
         let cfg = SimConfig::paper_default();
         let a = run_synthetic(

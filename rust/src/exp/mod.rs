@@ -7,8 +7,10 @@ pub mod common;
 pub mod offline;
 pub mod production_exp;
 pub mod sensitivity;
+pub mod sweep;
 
-pub use common::ExpCtx;
+pub use common::{Cell, ExpCtx};
+pub use sweep::{SweepCell, SweepGrid, WorkloadSpec};
 
 use crate::cli::Args;
 use crate::report;
@@ -83,6 +85,7 @@ pub fn cmd_experiment(args: &Args) -> Result<(), String> {
         seeds: args.u64_or("seeds", if id.starts_with("table") { 1 } else { 3 })?,
         scale: args.f64_or("scale", 1.0)?,
         full: args.has_flag("full"),
+        jobs: args.usize_or("jobs", 0)?,
     };
     run(id, &ctx).map(|_| ())
 }

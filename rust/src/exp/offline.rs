@@ -4,8 +4,13 @@
 //! average, 10 ms constant requests, paper-default workers, results
 //! normalized to the idealized FPGA-only platform and averaged over ten
 //! trace runs.
+//!
+//! Solves parallelize over (burstiness, seed) units via the sweep
+//! engine; every unit builds its instance from `Rng::new(seed)` — a pure
+//! function of the unit — so results are independent of `--jobs`.
 
 use super::common::ExpCtx;
+use super::sweep::parallel_map;
 use crate::config::PlatformConfig;
 use crate::opt::{pareto, ranksolve, FluidInstance, PlatformMode};
 use crate::sched::Objective;
@@ -28,11 +33,37 @@ fn instance(ctx: &ExpCtx, b: f64, seed: u64) -> FluidInstance {
     FluidInstance::from_rates(&rates, 0.010, 1.0, platform)
 }
 
+/// The (burstiness, seed) unit list for a figure, in table-row order.
+fn units(bursts: &[f64], seeds: u64) -> Vec<(f64, u64)> {
+    bursts
+        .iter()
+        .flat_map(|&b| (0..seeds).map(move |s| (b, s)))
+        .collect()
+}
+
 /// Fig 2: energy-optimal (a) and cost-optimal (b) scheduling of CPU-only,
 /// FPGA-only, and hybrid platforms vs burstiness.
 pub fn fig2(ctx: &ExpCtx) -> Vec<Table> {
+    const MODES: [PlatformMode; 3] = [
+        PlatformMode::CpuOnly,
+        PlatformMode::FpgaOnly,
+        PlatformMode::Hybrid,
+    ];
+    let units = units(BURSTS, ctx.seeds);
     let mut tables = Vec::new();
-    for (tag, obj) in [("2a energy-optimal", Objective::energy()), ("2b cost-optimal", Objective::cost())] {
+    for (tag, obj) in [
+        ("2a energy-optimal", Objective::energy()),
+        ("2b cost-optimal", Objective::cost()),
+    ] {
+        // One unit = one trace instance solved under all three platform
+        // modes; [[eff, cost]; 3] per unit.
+        let results = parallel_map(&units, ctx.effective_jobs(), |_, &(b, s)| {
+            let inst = instance(ctx, b, 1000 + s);
+            MODES.map(|mode| {
+                let r = ranksolve::solve(&inst, mode, obj, S_INTERVALS);
+                [r.energy_efficiency(&inst), r.relative_cost(&inst)]
+            })
+        });
         let mut t = Table::new(
             &format!("Fig {tag}: optimal scheduling vs burstiness (normalized to idealized FPGA-only)"),
             &[
@@ -42,24 +73,15 @@ pub fn fig2(ctx: &ExpCtx) -> Vec<Table> {
                 "Hybrid eff", "Hybrid cost",
             ],
         );
-        for &b in BURSTS {
+        let n = ctx.seeds as f64;
+        for (group, &b) in results.chunks_exact(ctx.seeds as usize).zip(BURSTS) {
             let mut acc = [[0.0f64; 2]; 3];
-            for s in 0..ctx.seeds {
-                let inst = instance(ctx, b, 1000 + s);
-                for (i, mode) in [
-                    PlatformMode::CpuOnly,
-                    PlatformMode::FpgaOnly,
-                    PlatformMode::Hybrid,
-                ]
-                .iter()
-                .enumerate()
-                {
-                    let r = ranksolve::solve(&inst, *mode, obj, S_INTERVALS);
-                    acc[i][0] += r.energy_efficiency(&inst);
-                    acc[i][1] += r.relative_cost(&inst);
+            for unit in group {
+                for (i, m) in unit.iter().enumerate() {
+                    acc[i][0] += m[0];
+                    acc[i][1] += m[1];
                 }
             }
-            let n = ctx.seeds as f64;
             t.row(vec![
                 format!("{b}"),
                 pct(acc[0][0] / n),
@@ -79,20 +101,28 @@ pub fn fig2(ctx: &ExpCtx) -> Vec<Table> {
 /// three burstiness levels.
 pub fn fig3(ctx: &ExpCtx) -> Vec<Table> {
     let points = 9;
+    let bursts = [0.55, 0.65, 0.75];
+    let units = units(&bursts, ctx.seeds);
+    let results = parallel_map(&units, ctx.effective_jobs(), |_, &(b, s)| {
+        let inst = instance(ctx, b, 2000 + s);
+        pareto::sweep_persist(&inst, points, S_INTERVALS)
+            .into_iter()
+            .map(|p| (p.energy_efficiency, p.relative_cost))
+            .collect::<Vec<_>>()
+    });
     let mut t = Table::new(
         "Fig 3: pareto-optimal energy/cost trade-offs (hybrid, weighted objectives)",
         &["b", "w_energy", "Energy Eff.", "Rel. Cost"],
     );
-    for &b in &[0.55, 0.65, 0.75] {
+    let n = ctx.seeds as f64;
+    for (group, &b) in results.chunks_exact(ctx.seeds as usize).zip(&bursts) {
         let mut acc = vec![(0.0f64, 0.0f64); points];
-        for s in 0..ctx.seeds {
-            let inst = instance(ctx, b, 2000 + s);
-            for (i, p) in pareto::sweep_persist(&inst, points, S_INTERVALS).iter().enumerate() {
-                acc[i].0 += p.energy_efficiency;
-                acc[i].1 += p.relative_cost;
+        for unit in group {
+            for (i, &(e, c)) in unit.iter().enumerate() {
+                acc[i].0 += e;
+                acc[i].1 += c;
             }
         }
-        let n = ctx.seeds as f64;
         for (i, (e, c)) in acc.iter().enumerate() {
             let w = i as f64 / (points - 1) as f64;
             t.row(vec![format!("{b}"), sig3(w), pct(e / n), ratio(c / n)]);

@@ -1,7 +1,12 @@
 //! Table 8 (scheduler roster on production workloads) and Table 9
 //! (dispatch policy ablation).
+//!
+//! Workloads are generated once per table, then the (scheduler × dataset)
+//! / (trace × policy) grids run through the parallel sweep engine —
+//! multi-app runs themselves stay serial so worker threads never nest.
 
 use super::common::{run_production, Cell, ExpCtx};
+use super::sweep::parallel_map;
 use crate::config::{
     DispatchPolicy, PlatformConfig, SchedulerKind, SimConfig, SizeBucket,
 };
@@ -39,8 +44,17 @@ pub fn workload(ctx: &ExpCtx, dataset: Dataset, bucket: SizeBucket, seed: u64) -
 /// Table 8: full scheduler roster on short and medium production traces.
 pub fn table8(ctx: &ExpCtx) -> Vec<Table> {
     let cfg = SimConfig::paper_default();
+    let roster = SchedulerKind::table8_roster();
     let mut tables = Vec::new();
     for (bucket, tag) in [(SizeBucket::Short, "8a short"), (SizeBucket::Medium, "8b medium")] {
+        let azure = workload(ctx, Dataset::AzureFunctions, bucket, 11);
+        let alibaba = workload(ctx, Dataset::AlibabaMicroservices, bucket, 13);
+        let cells = parallel_map(&roster, ctx.effective_jobs(), |_, kind| {
+            (
+                run_production(kind, &cfg, &azure),
+                run_production(kind, &cfg, &alibaba),
+            )
+        });
         let mut t = Table::new(
             &format!("Table {tag} requests: production workloads"),
             &[
@@ -49,11 +63,7 @@ pub fn table8(ctx: &ExpCtx) -> Vec<Table> {
                 "Alibaba eff", "Alibaba cost",
             ],
         );
-        let azure = workload(ctx, Dataset::AzureFunctions, bucket, 11);
-        let alibaba = workload(ctx, Dataset::AlibabaMicroservices, bucket, 13);
-        for kind in SchedulerKind::table8_roster() {
-            let az = run_production(&kind, &cfg, &azure);
-            let al = run_production(&kind, &cfg, &alibaba);
+        for (kind, (az, al)) in roster.iter().zip(&cells) {
             t.row(vec![
                 kind.display(),
                 pct(az.energy_eff),
@@ -77,25 +87,32 @@ pub fn table9(ctx: &ExpCtx) -> Vec<Table> {
         (Dataset::AlibabaMicroservices, SizeBucket::Short),
         (Dataset::AlibabaMicroservices, SizeBucket::Medium),
     ];
+    let policies = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::IndexPacking,
+        DispatchPolicy::EfficientFirst,
+    ];
+    let workloads: Vec<Vec<AppTrace>> = rows
+        .iter()
+        .map(|&(dataset, bucket)| workload(ctx, dataset, bucket, 17))
+        .collect();
+    let units: Vec<(usize, DispatchPolicy)> = (0..rows.len())
+        .flat_map(|i| policies.iter().map(move |&p| (i, p)))
+        .collect();
+    let cells = parallel_map(&units, ctx.effective_jobs(), |_, &(i, policy)| {
+        run_spork_with_dispatch(&cfg, &workloads[i], policy)
+    });
+
     let mut t = Table::new(
         "Table 9: energy efficiency by dispatch policy (SporkE allocation)",
         &["Trace", "Round Robin", "Index Packing", "Spork (efficient-first)"],
     );
-    for (dataset, bucket) in rows {
-        let apps = workload(ctx, dataset, bucket, 17);
-        let mut cells = Vec::new();
-        for policy in [
-            DispatchPolicy::RoundRobin,
-            DispatchPolicy::IndexPacking,
-            DispatchPolicy::EfficientFirst,
-        ] {
-            cells.push(run_spork_with_dispatch(&cfg, &apps, policy));
-        }
+    for (row, &(dataset, bucket)) in cells.chunks_exact(policies.len()).zip(&rows) {
         t.row(vec![
             format!("{} ({})", dataset.name(), bucket.name()),
-            pct(cells[0].energy_eff),
-            pct(cells[1].energy_eff),
-            pct(cells[2].energy_eff),
+            pct(row[0].energy_eff),
+            pct(row[1].energy_eff),
+            pct(row[2].energy_eff),
         ]);
     }
     vec![t]
@@ -116,7 +133,5 @@ pub fn run_spork_with_dispatch(
         total.merge(&r.metrics);
     }
     let ideal = IdealBaseline::for_work(total.total_work, &defaults);
-    let mut cell = Cell::default();
-    cell.add_run(&total, &ideal);
-    cell.finish()
+    Cell::from_run(&total, &ideal).finish()
 }

@@ -1,6 +1,12 @@
 //! Fig 4-7: sensitivity studies on synthetic (b-model per-minute) traces.
+//!
+//! Each figure declares its whole (parameter × scheduler) grid as a
+//! [`SweepGrid`] and executes it in one deterministic parallel pass;
+//! result cells come back in push order, so rows render exactly as the
+//! paper tables do regardless of `--jobs`.
 
-use super::common::{run_synthetic, ExpCtx};
+use super::common::ExpCtx;
+use super::sweep::{SweepCell, SweepGrid, WorkloadSpec};
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig, SizeBucket};
 use crate::util::table::{pct, ratio, sig3, Table};
 
@@ -14,6 +20,28 @@ fn cfg_with_fpga(spin_up: f64, speedup: f64, busy_power: f64) -> SimConfig {
     SimConfig::from_platform(platform)
 }
 
+fn cell(
+    ctx: &ExpCtx,
+    scheduler: &SchedulerKind,
+    cfg: &SimConfig,
+    burstiness: f64,
+    rate: f64,
+    size: f64,
+    seed_base: u64,
+) -> SweepCell {
+    SweepCell {
+        scheduler: scheduler.clone(),
+        cfg: cfg.clone(),
+        workload: WorkloadSpec {
+            burstiness,
+            rate,
+            size,
+            duration: ctx.synthetic_duration(),
+        },
+        seed_base,
+    }
+}
+
 /// Fig 4: Spork vs MArk-ideal under a 60 s spin-up, with CPU-request
 /// shares and FPGA spin-up counts (right panel).
 pub fn fig4(ctx: &ExpCtx) -> Vec<Table> {
@@ -24,6 +52,14 @@ pub fn fig4(ctx: &ExpCtx) -> Vec<Table> {
         SchedulerKind::spork_e(),
         SchedulerKind::spork_e_ideal(),
     ];
+    let mut grid = SweepGrid::from_ctx(ctx);
+    for &b in BURSTS {
+        for k in &roster {
+            grid.push(cell(ctx, k, &cfg, b, ctx.synthetic_rate(), 0.010, 31));
+        }
+    }
+    let cells = grid.run();
+
     let mut left = Table::new(
         "Fig 4 (left): energy efficiency and cost vs burstiness @ 60s FPGA spin-up",
         &["b", "Scheduler", "Energy Eff.", "Rel. Cost"],
@@ -32,39 +68,18 @@ pub fn fig4(ctx: &ExpCtx) -> Vec<Table> {
         "Fig 4 (right): CPU request share and FPGA spin-ups (normalized to row max)",
         &["b", "Scheduler", "CPU req %", "FPGA spin-ups (norm)"],
     );
-    for &b in BURSTS {
-        let cells: Vec<_> = roster
-            .iter()
-            .map(|k| {
-                (
-                    k.display(),
-                    run_synthetic(
-                        k,
-                        &cfg,
-                        ctx,
-                        b,
-                        ctx.synthetic_rate(),
-                        0.010,
-                        ctx.synthetic_duration(),
-                        31,
-                    ),
-                )
-            })
-            .collect();
-        let max_spin = cells
-            .iter()
-            .map(|(_, c)| c.fpga_spinups)
-            .fold(1.0f64, f64::max);
-        for (name, c) in &cells {
+    for (row, &b) in cells.chunks_exact(roster.len()).zip(BURSTS) {
+        let max_spin = row.iter().map(|c| c.fpga_spinups).fold(1.0f64, f64::max);
+        for (k, c) in roster.iter().zip(row) {
             left.row(vec![
                 format!("{b}"),
-                name.clone(),
+                k.display(),
                 pct(c.energy_eff),
                 ratio(c.rel_cost),
             ]);
             right.row(vec![
                 format!("{b}"),
-                name.clone(),
+                k.display(),
                 pct(c.cpu_req_frac),
                 sig3(c.fpga_spinups / max_spin),
             ]);
@@ -80,30 +95,33 @@ pub fn fig5(ctx: &ExpCtx) -> Vec<Table> {
     } else {
         &[1.0, 10.0, 60.0]
     };
+    let bursts = [0.5, 0.6, 0.7, 0.75];
     let roster = [
         SchedulerKind::CpuDynamic,
         SchedulerKind::FpgaStatic,
         SchedulerKind::FpgaDynamic,
         SchedulerKind::spork_e(),
     ];
+    let mut grid = SweepGrid::from_ctx(ctx);
+    for &su in spinups {
+        let cfg = cfg_with_fpga(su, 2.0, 50.0);
+        for &b in &bursts {
+            for k in &roster {
+                grid.push(cell(ctx, k, &cfg, b, ctx.synthetic_rate(), 0.010, 41));
+            }
+        }
+    }
+    let cells = grid.run();
+
     let mut t = Table::new(
         "Fig 5: sensitivity to burstiness and FPGA spin-up time",
         &["spin-up", "b", "Scheduler", "Energy Eff.", "Rel. Cost"],
     );
+    let mut it = cells.iter();
     for &su in spinups {
-        let cfg = cfg_with_fpga(su, 2.0, 50.0);
-        for &b in &[0.5, 0.6, 0.7, 0.75] {
+        for &b in &bursts {
             for k in &roster {
-                let c = run_synthetic(
-                    k,
-                    &cfg,
-                    ctx,
-                    b,
-                    ctx.synthetic_rate(),
-                    0.010,
-                    ctx.synthetic_duration(),
-                    41,
-                );
+                let c = it.next().expect("grid/table mismatch");
                 t.row(vec![
                     format!("{su}s"),
                     format!("{b}"),
@@ -120,30 +138,34 @@ pub fn fig5(ctx: &ExpCtx) -> Vec<Table> {
 /// Fig 6: FPGA speedup x busy power draw (both log-scale axes in the
 /// paper).
 pub fn fig6(ctx: &ExpCtx) -> Vec<Table> {
+    let speedups = [1.0, 2.0, 4.0];
+    let powers = [25.0, 50.0, 100.0];
     let roster = [
         SchedulerKind::CpuDynamic,
         SchedulerKind::FpgaStatic,
         SchedulerKind::FpgaDynamic,
         SchedulerKind::spork_e(),
     ];
+    let mut grid = SweepGrid::from_ctx(ctx);
+    for &speedup in &speedups {
+        for &bp in &powers {
+            let cfg = cfg_with_fpga(10.0, speedup, bp);
+            for k in &roster {
+                grid.push(cell(ctx, k, &cfg, 0.6, ctx.synthetic_rate(), 0.010, 51));
+            }
+        }
+    }
+    let cells = grid.run();
+
     let mut t = Table::new(
         "Fig 6: sensitivity to FPGA speedup and busy power (b=0.6, short requests)",
         &["speedup", "busy W", "Scheduler", "Energy Eff.", "Rel. Cost"],
     );
-    for &speedup in &[1.0, 2.0, 4.0] {
-        for &bp in &[25.0, 50.0, 100.0] {
-            let cfg = cfg_with_fpga(10.0, speedup, bp);
+    let mut it = cells.iter();
+    for &speedup in &speedups {
+        for &bp in &powers {
             for k in &roster {
-                let c = run_synthetic(
-                    k,
-                    &cfg,
-                    ctx,
-                    0.6,
-                    ctx.synthetic_rate(),
-                    0.010,
-                    ctx.synthetic_duration(),
-                    51,
-                );
+                let c = it.next().expect("grid/table mismatch");
                 t.row(vec![
                     format!("{speedup}x"),
                     format!("{bp}"),
@@ -166,28 +188,34 @@ pub fn fig7(ctx: &ExpCtx) -> Vec<Table> {
         SchedulerKind::spork_e(),
     ];
     let cfg = SimConfig::paper_default();
+    let buckets = [SizeBucket::Short, SizeBucket::Medium, SizeBucket::Long];
+    // Geometric midpoint of each bucket; rate scaled to keep total demand
+    // (in workers) constant at 100 x scale, as in §5.1.
+    let sizes: Vec<f64> = buckets
+        .iter()
+        .map(|bucket| {
+            let (lo, hi) = bucket.bounds();
+            (lo * hi).sqrt()
+        })
+        .collect();
+    let mut grid = SweepGrid::from_ctx(ctx);
+    for &size in &sizes {
+        let demand_workers = ctx.synthetic_rate() * 0.010; // same demand as short runs
+        let rate = demand_workers / size;
+        for k in &roster {
+            grid.push(cell(ctx, k, &cfg, 0.6, rate, size, 61));
+        }
+    }
+    let cells = grid.run();
+
     let mut t = Table::new(
         "Fig 7: sensitivity to request sizes (b=0.6; deadline = 10x size)",
         &["bucket", "size", "Scheduler", "Energy Eff.", "Rel. Cost"],
     );
-    for bucket in [SizeBucket::Short, SizeBucket::Medium, SizeBucket::Long] {
-        // Geometric midpoint of the bucket; rate scaled to keep total
-        // demand (in workers) constant at 100 x scale, as in §5.1.
-        let (lo, hi) = bucket.bounds();
-        let size = (lo * hi).sqrt();
-        let demand_workers = ctx.synthetic_rate() * 0.010; // same demand as short runs
-        let rate = demand_workers / size;
+    let mut it = cells.iter();
+    for (bucket, &size) in buckets.iter().zip(&sizes) {
         for k in &roster {
-            let c = run_synthetic(
-                k,
-                &cfg,
-                ctx,
-                0.6,
-                rate,
-                size,
-                ctx.synthetic_duration(),
-                61,
-            );
+            let c = it.next().expect("grid/table mismatch");
             t.row(vec![
                 bucket.name().into(),
                 format!("{:.3}s", size),

@@ -1,0 +1,242 @@
+//! Deterministic parallel sweep engine for the experiment harness.
+//!
+//! Every figure/table in the paper is a grid of (scheduler, workload,
+//! seed) cells, and each cell is an independent simulation — the classic
+//! embarrassingly-parallel parameter sweep. [`SweepGrid`] makes the grid
+//! *declarative*: experiments push cells, `run()` executes them across
+//! `std::thread::scope` workers, and the result vector comes back in push
+//! order.
+//!
+//! Determinism contract (tested in `rust/tests/determinism.rs`): results
+//! are **bit-identical for every `--jobs` value**, because
+//!
+//! 1. each (cell, seed) replicate draws from its own RNG stream derived
+//!    as a pure function of `(seed_base, seed)` via [`Rng::for_stream`]
+//!    — no shared generator is consumed in scheduling order;
+//! 2. workers return `(index, Cell)` pairs and the engine re-assembles
+//!    them by index, so floating-point merge order never depends on
+//!    which thread finished first.
+//!
+//! The lower-level [`parallel_map`] is shared by the experiments whose
+//! cells do not fit the synthetic-workload shape (production tables,
+//! offline fig2/fig3 solves, ablations).
+
+use super::common::{Cell, ExpCtx};
+use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
+use crate::sched;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A synthetic (b-model) workload point of a sweep grid.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub burstiness: f64,
+    /// Mean request rate (req/s).
+    pub rate: f64,
+    /// Request size (CPU-seconds).
+    pub size: f64,
+    /// Trace duration (seconds).
+    pub duration: f64,
+}
+
+/// One declarative grid cell: a scheduler on a platform config and
+/// workload, replicated over the grid's seed count.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub scheduler: SchedulerKind,
+    pub cfg: SimConfig,
+    pub workload: WorkloadSpec,
+    /// Root of this cell's RNG streams; replicate `s` uses
+    /// `Rng::for_stream(seed_base, s)`.
+    pub seed_base: u64,
+}
+
+/// A declarative grid of sweep cells with an execution policy.
+pub struct SweepGrid {
+    cells: Vec<SweepCell>,
+    seeds: u64,
+    jobs: usize,
+}
+
+impl SweepGrid {
+    /// Grid with explicit seed replication and worker count (`jobs == 0`
+    /// means one worker per available core).
+    pub fn with(seeds: u64, jobs: usize) -> Self {
+        Self {
+            cells: Vec::new(),
+            seeds: seeds.max(1),
+            jobs,
+        }
+    }
+
+    /// Grid driven by an experiment context (its seed count and `--jobs`).
+    pub fn from_ctx(ctx: &ExpCtx) -> Self {
+        Self::with(ctx.seeds, ctx.jobs)
+    }
+
+    /// Add a cell; returns its index in `run()`'s result vector.
+    pub fn push(&mut self, cell: SweepCell) -> usize {
+        self.cells.push(cell);
+        self.cells.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Execute every (cell, seed) replicate, merge replicates per cell,
+    /// and return one seed-averaged [`Cell`] per pushed cell, in push
+    /// order. Bit-identical for any worker count.
+    pub fn run(&self) -> Vec<Cell> {
+        let defaults = PlatformConfig::paper_default();
+        let seeds = self.seeds;
+        let units: Vec<(usize, u64)> = (0..self.cells.len())
+            .flat_map(|c| (0..seeds).map(move |s| (c, s)))
+            .collect();
+        let runs = parallel_map(&units, self.jobs, |_, &(c, s)| {
+            let cell = &self.cells[c];
+            let w = &cell.workload;
+            let mut rng = Rng::for_stream(cell.seed_base, s);
+            let trace = crate::trace::synthetic_app(
+                "exp",
+                &mut rng,
+                w.burstiness,
+                w.duration,
+                w.rate,
+                w.size,
+            );
+            let r = sched::run_scheduler(&cell.scheduler, &trace, &cell.cfg, &defaults);
+            Cell::from_run(&r.metrics, &r.ideal)
+        });
+        // Merge replicates in unit order (units are sorted by (cell,
+        // seed)), so float accumulation order is fixed.
+        let mut merged = vec![Cell::default(); self.cells.len()];
+        for (&(c, _s), run) in units.iter().zip(&runs) {
+            merged[c].merge(run);
+        }
+        merged.into_iter().map(Cell::finish).collect()
+    }
+}
+
+/// Resolve a `--jobs` value: `0` means auto (one worker per core).
+pub fn effective_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        jobs
+    }
+}
+
+/// Order-preserving parallel map: applies `f` to every item across up to
+/// `jobs` scoped worker threads (work-stealing over an atomic cursor) and
+/// returns results in item order. `f(i, item)` must depend only on its
+/// arguments for the output to be deterministic — *scheduling* order is
+/// not deterministic, result *placement* is.
+pub fn parallel_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let jobs = effective_jobs(jobs).min(items.len().max(1));
+    if jobs <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut parts: Vec<Vec<(usize, R)>> = Vec::with_capacity(jobs);
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..jobs)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for w in workers {
+            parts.push(w.join().expect("sweep worker panicked"));
+        }
+    });
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    for (i, r) in parts.into_iter().flatten() {
+        debug_assert!(slots[i].is_none(), "duplicate sweep result for {i}");
+        slots[i] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|r| r.expect("missing sweep result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order_and_coverage() {
+        let items: Vec<u64> = (0..257).collect();
+        for jobs in [1, 2, 7] {
+            let out = parallel_map(&items, jobs, |i, &x| {
+                assert_eq!(i as u64, x);
+                x * 3 + 1
+            });
+            assert_eq!(out.len(), items.len());
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as u64 * 3 + 1, "jobs={jobs}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_handles_empty_and_single() {
+        let out: Vec<u32> = parallel_map(&[], 4, |_, x: &u32| *x);
+        assert!(out.is_empty());
+        let out = parallel_map(&[9u32], 4, |_, x| x + 1);
+        assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn effective_jobs_resolves_auto() {
+        assert!(effective_jobs(0) >= 1);
+        assert_eq!(effective_jobs(3), 3);
+    }
+
+    #[test]
+    fn grid_runs_cells_in_push_order() {
+        use crate::config::SimConfig;
+        let mut grid = SweepGrid::with(1, 2);
+        let cfg = SimConfig::paper_default();
+        for &b in &[0.5, 0.7] {
+            grid.push(SweepCell {
+                scheduler: SchedulerKind::CpuDynamic,
+                cfg: cfg.clone(),
+                workload: WorkloadSpec {
+                    burstiness: b,
+                    rate: 50.0,
+                    size: 0.010,
+                    duration: 60.0,
+                },
+                seed_base: 5,
+            });
+        }
+        let cells = grid.run();
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert_eq!(c.runs, 1);
+            assert!(c.energy_eff > 0.0);
+        }
+    }
+}

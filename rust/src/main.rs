@@ -64,6 +64,7 @@ fn specs() -> Vec<Spec> {
                 ("out", true, "results directory (default results/)"),
                 ("seeds", true, "trace repetitions (default 10 synthetic, 1 production)"),
                 ("scale", true, "demand scale for production traces (default 1.0)"),
+                ("jobs", true, "parallel sweep workers (default 0 = all cores; 1 = serial)"),
                 ("full", false, "paper-scale workloads (slow)"),
             ],
         },

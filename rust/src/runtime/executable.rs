@@ -1,6 +1,7 @@
 //! A compiled artifact with shape-checked f32 execution.
 
 use super::artifacts::ArtifactEntry;
+use super::xla;
 use anyhow::{Context, Result};
 
 pub struct Executable {

@@ -9,9 +9,19 @@
 
 mod artifacts;
 mod executable;
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub;
 
 pub use artifacts::{ArgSpec, ArtifactEntry, Manifest};
 pub use executable::Executable;
+
+// The `xla` name the runtime modules compile against: the real PJRT
+// bindings under the `pjrt` feature, the in-tree stub otherwise (see
+// pjrt_stub.rs and Cargo.toml for how to enable the real path).
+#[cfg(feature = "pjrt")]
+pub(crate) use ::xla;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) use pjrt_stub as xla;
 
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};

@@ -158,3 +158,106 @@ mod tests {
         assert!(!PropResult::approx_eq(1.0, 1.1, 1e-9, "x").ok);
     }
 }
+
+/// Simulator invariants checked through the prop harness: the worker
+/// [`crate::sim::pool::Pool`] must respect the configured `max_cpus` /
+/// `max_fpgas` caps for every scheduler, and aggregate energy/cost must
+/// be non-negative and monotone in the trace duration (causality: a
+/// longer trace is a superset of work, and the engine never un-spends
+/// energy or refunds occupancy).
+#[cfg(test)]
+mod sim_invariant_props {
+    use super::*;
+    use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
+    use crate::sched::run_scheduler;
+    use crate::trace::{synthetic_app, AppTrace};
+
+    fn defaults() -> PlatformConfig {
+        PlatformConfig::paper_default()
+    }
+
+    #[test]
+    fn pool_allocation_never_exceeds_caps() {
+        prop_check(6, |case| {
+            let mut cfg = SimConfig::paper_default();
+            let cpu_cap = 1 + case.rng.below(6) as u32;
+            let fpga_cap = 1 + case.rng.below(4) as u32;
+            cfg.max_cpus = Some(cpu_cap);
+            cfg.max_fpgas = Some(fpga_cap);
+            let b = case.rng.range_f64(0.55, 0.75);
+            let trace = synthetic_app("caps", &mut case.rng, b, 150.0, 250.0, 0.010);
+            for kind in [
+                SchedulerKind::CpuDynamic,
+                SchedulerKind::spork_e(),
+                SchedulerKind::MarkIdeal,
+            ] {
+                let r = run_scheduler(&kind, &trace, &cfg, &defaults());
+                let p = PropResult::assert(
+                    r.metrics.peak_cpus <= cpu_cap
+                        && r.metrics.peak_fpgas <= fpga_cap
+                        && r.metrics.requests as usize == trace.len(),
+                    format!(
+                        "{}: peaks {}/{} vs caps {cpu_cap}/{fpga_cap}, {} of {} requests (seed {})",
+                        kind.name(),
+                        r.metrics.peak_cpus,
+                        r.metrics.peak_fpgas,
+                        r.metrics.requests,
+                        trace.len(),
+                        case.seed
+                    ),
+                );
+                if !p.ok {
+                    return p;
+                }
+            }
+            PropResult::pass()
+        });
+    }
+
+    #[test]
+    fn energy_and_cost_nonnegative_and_monotone_in_duration() {
+        prop_check(5, |case| {
+            let b = case.rng.range_f64(0.5, 0.75);
+            let rate = case.rng.range_f64(80.0, 200.0);
+            let full = synthetic_app("mono", &mut case.rng, b, 360.0, rate, 0.010);
+            let cfg = SimConfig::paper_default();
+            // Reactive/causal schedulers only: the oracle-fitted baselines
+            // (FPGA-static/dynamic) size fleets from the *whole* trace, so
+            // prefix monotonicity is not an invariant for them.
+            for kind in [SchedulerKind::CpuDynamic, SchedulerKind::spork_e()] {
+                let mut prev = (0.0f64, 0.0f64);
+                for &d in &[120.0, 240.0, 360.0] {
+                    let prefix = AppTrace::new(
+                        "mono",
+                        full.arrivals
+                            .iter()
+                            .copied()
+                            .filter(|a| a.time < d)
+                            .collect(),
+                        d,
+                    );
+                    let r = run_scheduler(&kind, &prefix, &cfg, &defaults());
+                    let e = r.metrics.total_energy();
+                    let c = r.metrics.total_cost();
+                    let tol_e = 1e-9 * (1.0 + prev.0);
+                    let tol_c = 1e-9 * (1.0 + prev.1);
+                    let p = PropResult::assert(
+                        e >= 0.0 && c >= 0.0 && e + tol_e >= prev.0 && c + tol_c >= prev.1,
+                        format!(
+                            "{} at d={d}: energy {e} (prev {}), cost {c} (prev {}) (seed {})",
+                            kind.name(),
+                            prev.0,
+                            prev.1,
+                            case.seed
+                        ),
+                    );
+                    if !p.ok {
+                        return p;
+                    }
+                    prev = (e, c);
+                }
+            }
+            PropResult::pass()
+        });
+    }
+}

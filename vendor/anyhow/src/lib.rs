@@ -1,0 +1,222 @@
+//! Offline stand-in for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build environment for this repository has no network access and no
+//! crates.io registry, so the workspace vendors the small subset of the
+//! anyhow API the `spork` crate actually uses:
+//!
+//! * [`Error`] / [`Result`] — a context-chain error type,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — construction macros,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Semantics follow upstream anyhow: `Display` prints the outermost
+//! context message, the `{:#}` alternate form prints the whole chain
+//! joined by `": "`, and `Debug` prints the chain as a `Caused by:` list.
+//! Unlike upstream, sources are eagerly rendered to strings (no backtrace
+//! capture, no downcasting) — sufficient for error *reporting*, which is
+//! all this workspace does with errors.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-chain error. The first entry is the outermost context; the
+/// last is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a context message (what `.context(..)` does).
+    fn wrap(mut self, context: String) -> Self {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))?;
+        for cause in self.chain.iter().skip(1) {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow: any std error converts into `Error`. `Error`
+// itself deliberately does NOT implement `std::error::Error`, which keeps
+// this blanket impl coherent alongside the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment for `Result` and `Option`, mirroring anyhow's
+/// `Context` trait.
+pub trait Context<T, E> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate_and_debug() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "loading config".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("loading config"));
+        assert!(dbg.contains("Caused by"));
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("sevens are right out");
+            }
+            Err(anyhow!("fell through with {}", x))
+        }
+        assert_eq!(format!("{}", inner(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", inner(7).unwrap_err()), "sevens are right out");
+        assert_eq!(format!("{}", inner(1).unwrap_err()), "fell through with 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<f64> {
+            Ok(s.parse::<f64>()?)
+        }
+        assert!(parse("1.5").is_ok());
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_chains_nest() {
+        let e = Err::<(), Error>(anyhow!("root"))
+            .context("middle")
+            .context("outer")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+        assert_eq!(e.chain().count(), 3);
+    }
+}
