@@ -8,9 +8,11 @@
 //!    Pallas kernel) to HLO text under `artifacts/` — built beforehand.
 //! 2. A warm pool of worker threads compiles the artifacts via PJRT:
 //!    "FPGA" workers get the Pallas build, CPU workers the jnp build.
-//! 3. The router replays a bursty b-model trace in scaled real time,
-//!    running Spork's interval allocator + efficient-first dispatcher;
-//!    every request executes real XLA compute, batched dynamically.
+//! 3. The router replays a bursty b-model trace in scaled real time: the
+//!    real-time driver paces the shared policy core (SporkE here — any
+//!    Table 8 kind works via `spork serve --scheduler`) and mirrors its
+//!    alloc/dispatch/retire actions onto the warm pool; every request
+//!    executes real XLA compute, batched dynamically.
 //! 4. The report prints throughput, latency percentiles, deadline misses,
 //!    the FPGA/CPU split, and Table 6 energy/cost — recorded in
 //!    EXPERIMENTS.md.
@@ -29,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     // 5x time compression: a 10s FPGA "reconfiguration" takes 2 wall
     // seconds; 100 simulated seconds of bursty load run in 20 wall seconds.
     // Sized for small hosts (this image is single-core); raise the rate and
-    // scale on bigger machines.
+    // scale on bigger machines. Warm pool sizes derive from trace demand.
     let time_scale = 5.0;
     let cfg = ServeConfig::defaults(&artifacts, time_scale);
     let mut rng = Rng::new(42);

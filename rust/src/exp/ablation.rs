@@ -6,6 +6,7 @@
 use super::common::{Cell, ExpCtx};
 use super::sweep::parallel_map;
 use crate::config::{PlatformConfig, SimConfig};
+use crate::policy::Policy;
 use crate::sched::{self, Objective, Oracle};
 use crate::sim;
 use crate::trace::synthetic_app;
@@ -18,7 +19,7 @@ fn run_spork(
     ctx: &ExpCtx,
     cfg: &SimConfig,
     b: f64,
-    make: impl Fn(&SimConfig, &crate::trace::AppTrace) -> Box<dyn sim::Scheduler> + Sync,
+    make: impl Fn(&SimConfig, &crate::trace::AppTrace) -> Box<dyn Policy> + Sync,
 ) -> Cell {
     let defaults = PlatformConfig::paper_default();
     let seeds: Vec<u64> = (0..ctx.seeds).collect();

@@ -136,10 +136,10 @@ pub fn run_synthetic(
 }
 
 /// Run `kind` over a multi-app production workload: each app gets its own
-/// pool + scheduler instance; energy/cost aggregate across apps before
-/// normalizing (§5.2). Serial by design — production experiments
-/// parallelize across the (scheduler × dataset) grid instead, so worker
-/// threads never nest.
+/// pool + a fitted policy instance from the `sched::build` factory;
+/// energy/cost aggregate across apps before normalizing (§5.2). Serial by
+/// design — production experiments parallelize across the (scheduler ×
+/// dataset) grid instead, so worker threads never nest.
 pub fn run_production(kind: &SchedulerKind, cfg: &SimConfig, apps: &[AppTrace]) -> Cell {
     let defaults = PlatformConfig::paper_default();
     let mut total = Metrics::default();

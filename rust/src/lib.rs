@@ -18,6 +18,7 @@ pub mod config;
 pub mod exp;
 pub mod milp;
 pub mod opt;
+pub mod policy;
 pub mod report;
 pub mod runtime;
 pub mod sched;

@@ -70,14 +70,18 @@ fn specs() -> Vec<Spec> {
         },
         Spec {
             name: "serve",
-            about: "serve a compiled model through the hybrid runtime (requires artifacts/)",
+            about: "serve a compiled model through the hybrid runtime (requires artifacts/, or --dry-run)",
             opts: vec![
                 ("artifacts", true, "artifacts directory (default artifacts/)"),
+                ("scheduler", true, "any Table-8 kind: cpu-dynamic|fpga-static|fpga-dynamic|mark-ideal|spork-{e,c,b}[-ideal] (default spork-e)"),
                 ("rate", true, "offered simulated load req/s (default 40)"),
                 ("duration", true, "wall seconds of load (default 20)"),
                 ("burstiness", true, "b-model bias (default 0.65)"),
                 ("time-scale", true, "simulated seconds per wall second (default 5)"),
+                ("pool-cpus", true, "warm CPU pool size (default 0 = derive from trace demand)"),
+                ("pool-fpgas", true, "warm FPGA pool size (default 0 = derive from trace demand)"),
                 ("seed", true, "rng seed (default 1)"),
+                ("dry-run", false, "stub compute: no artifacts, no pacing; model accounting only"),
             ],
         },
         Spec {

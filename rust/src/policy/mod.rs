@@ -1,0 +1,45 @@
+//! The transport-agnostic scheduling policy API — one policy, many
+//! drivers.
+//!
+//! A [`Policy`] is a pure decision procedure: it receives typed
+//! [`Observation`]s (ticks, arrivals, completions, worker lifecycle
+//! events) together with a read-only [`PolicyView`] of the worker pool,
+//! and returns typed [`Action`]s (allocate, dispatch, retire, keep-alive).
+//! It never mutates driver state directly, so the same implementation runs
+//! unchanged under
+//!
+//! * the **sim driver** ([`crate::sim::engine`]) — the discrete-event
+//!   engine that evaluates policies at scale and keeps every accounting
+//!   invariant (energy, cost, deadlines) in one place, and
+//! * the **real-time driver** ([`crate::serve`]) — the serving runtime
+//!   that paces the same decision loop against the wall clock and applies
+//!   the actions to a warm pool of worker threads executing real compiled
+//!   compute.
+//!
+//! Both drivers emit the applied-[`Effect`] stream, and
+//! `rust/tests/policy_parity.rs` pins that the two streams are identical
+//! for every scheduler in the Table 8 roster — served behavior equals
+//! simulated behavior by construction.
+
+mod types;
+pub mod view;
+
+pub use types::{Action, Effect, Observation, Request, Target, WorkerId, WorkerObs, WorkerState};
+pub use view::{earliest_finishing, PolicyView};
+
+/// A scheduling policy: the paper's Spork variants and every §5.1
+/// baseline implement this.
+pub trait Policy {
+    /// Machine name (matches `SchedulerKind::name()` where applicable).
+    fn name(&self) -> String;
+
+    /// Scheduling interval T_s. Drivers tick at t = T_s, 2·T_s, ... while
+    /// the trace is live. Return `f64::INFINITY` for purely reactive
+    /// policies that don't want ticks.
+    fn interval(&self) -> f64;
+
+    /// Handle one observation, appending any resulting actions to `out`.
+    /// Actions are applied by the driver in order, after this call
+    /// returns; `view` always reflects the pre-action state.
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>);
+}

@@ -1,0 +1,160 @@
+//! The shared vocabulary of the policy API: requests, worker identity and
+//! lifecycle, the observations drivers feed to policies, and the actions
+//! policies return.
+//!
+//! Everything here is `Copy` and transport-free: the same values describe a
+//! simulated worker pool and the serving runtime's warm thread pool.
+
+use crate::config::WorkerKind;
+
+/// Stable worker identifier (slab index in the owning driver's pool).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkerId(pub u32);
+
+/// Worker lifecycle: `SpinningUp → Active (busy|idle) → SpinningDown`.
+/// Workers may be assigned work while spinning up (Alg 3's α list); their
+/// effective start time is then their readiness time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WorkerState {
+    SpinningUp,
+    Active,
+    SpinningDown,
+}
+
+/// One request moving through the system. Sizes are known in advance
+/// (paper §4.5); `deadline` is absolute.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub arrival: f64,
+    /// Service time on a CPU worker, seconds.
+    pub size: f64,
+    pub deadline: f64,
+}
+
+/// Read-only per-worker snapshot a policy sees through
+/// [`super::PolicyView`].
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerObs {
+    pub id: WorkerId,
+    pub kind: WorkerKind,
+    pub state: WorkerState,
+    /// When the worker is (or became) ready to process work.
+    pub ready_at: f64,
+    /// Completion horizon: all queued work finishes at this time.
+    pub busy_until: f64,
+    /// Number of queued + running requests.
+    pub queued: u32,
+    /// Time the worker last became idle (valid when idle).
+    pub idle_since: f64,
+}
+
+impl WorkerObs {
+    /// Worker can accept new work (not spinning down).
+    pub fn accepting(&self) -> bool {
+        self.state != WorkerState::SpinningDown
+    }
+
+    /// Completion time if a request needing `service` seconds were
+    /// dispatched now.
+    pub fn finish_time(&self, now: f64, service: f64) -> f64 {
+        self.busy_until.max(now) + service
+    }
+}
+
+/// What a driver tells a policy. Every variant is a point-in-time fact;
+/// the current pool state is always available through the
+/// [`super::PolicyView`] passed alongside.
+#[derive(Clone, Copy, Debug)]
+pub enum Observation {
+    /// t = 0, before any arrivals (pre-provisioning hook).
+    Start,
+    /// The interval boundary at t = `index`·T_s. `cpu_work`/`fpga_work`
+    /// are the service-time sums dispatched per kind during the interval
+    /// that just ended (Alg 1's 𝓒 and 𝓕 inputs); the driver drains its
+    /// counters before observing, so the sums arrive exactly once.
+    Tick {
+        index: usize,
+        cpu_work: f64,
+        fpga_work: f64,
+    },
+    /// A request arrived and must be dispatched by the returned actions
+    /// (possibly to a fresh worker — Alg 3 line 6).
+    Arrival { req: Request },
+    /// A request finished on `worker`.
+    Completion { worker: WorkerId },
+    /// A worker finished spinning up and became available.
+    WorkerReady { worker: WorkerId },
+    /// `worker` sat idle for a full timeout window. Return
+    /// [`Action::KeepAlive`] to hold it for another window (pinned fleets,
+    /// standing headroom); return nothing to let the driver retire it.
+    IdleExpired { worker: WorkerId },
+    /// A worker fully deallocated (after spin-down). `lifetime` is
+    /// alloc→dealloc; `peers_at_alloc` is the same-kind allocated count at
+    /// the worker's allocation (Spork's 𝕃 key).
+    Dealloc {
+        kind: WorkerKind,
+        lifetime: f64,
+        peers_at_alloc: u32,
+    },
+}
+
+/// Where a dispatch should land.
+#[derive(Clone, Copy, Debug)]
+pub enum Target {
+    /// A specific live worker.
+    Worker(WorkerId),
+    /// Spin up a fresh worker of `kind` and queue the request on it — the
+    /// burst path (Alg 3 line 6). If the worker cap is reached, the driver
+    /// falls back to the earliest-finishing live worker.
+    Fresh(WorkerKind),
+}
+
+/// What a policy asks a driver to do. Actions are applied in return order,
+/// after the observation that produced them, so a policy's view is always
+/// the pre-action state.
+#[derive(Clone, Copy, Debug)]
+pub enum Action {
+    /// Spin up `n` workers of `kind`. `prewarmed` workers are ready
+    /// immediately (statically provisioned before the workload window);
+    /// the one-time spin-up energy is still charged.
+    Alloc {
+        kind: WorkerKind,
+        n: u32,
+        prewarmed: bool,
+    },
+    /// Dispatch a request.
+    Dispatch { req: Request, to: Target },
+    /// Begin spin-down of up to `n` idle workers of `kind`, longest-idle
+    /// first.
+    Retire { kind: WorkerKind, n: u32 },
+    /// Hold the idle worker for another timeout window. Only meaningful in
+    /// response to [`Observation::IdleExpired`].
+    KeepAlive { worker: WorkerId },
+}
+
+/// A resolved side effect a driver applied — the audit stream both drivers
+/// emit, letting tests pin that the sim driver and the real-time driver
+/// execute identical action sequences for the same policy and trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Effect {
+    Allocated {
+        worker: WorkerId,
+        kind: WorkerKind,
+        prewarmed: bool,
+    },
+    Dispatched {
+        worker: WorkerId,
+        kind: WorkerKind,
+        arrival: f64,
+        size: f64,
+        deadline: f64,
+        finish: f64,
+    },
+    Retired {
+        worker: WorkerId,
+        kind: WorkerKind,
+    },
+    KeptAlive {
+        worker: WorkerId,
+    },
+}

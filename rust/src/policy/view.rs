@@ -1,0 +1,59 @@
+//! The read-only pool view drivers expose to policies.
+
+use super::types::{WorkerId, WorkerObs};
+use crate::config::WorkerKind;
+
+/// What a policy may observe about the world between actions. Both drivers
+/// implement this: the sim driver over [`crate::sim::SimState`]'s pool,
+/// the real-time driver over the same state paced in wall-clock time.
+///
+/// Iteration order contract: `live_ids` / `for_each_worker` enumerate
+/// workers in the owning pool's live-list order — stable between
+/// observations but arbitrary after removals (the pool swap-removes).
+/// Tie-breaking in dispatch scans is deterministic and driver-independent
+/// because both drivers step the same pool implementation; a new driver
+/// must reproduce this order (or share the pool) to keep effect-stream
+/// parity.
+pub trait PolicyView {
+    /// Current time in trace seconds.
+    fn now(&self) -> f64;
+
+    /// Whether the arrival window is still open (schedulers pinning fleets
+    /// release them once the trace ends so the pool can drain).
+    fn trace_live(&self) -> bool;
+
+    /// Service time of a `size`-CPU-seconds request on `kind`.
+    fn service_time(&self, kind: WorkerKind, size: f64) -> f64;
+
+    /// Number of allocated (spinning-up or active) workers of `kind`.
+    fn allocated(&self, kind: WorkerKind) -> u32;
+
+    /// Live worker ids of `kind` (any state), in allocation order.
+    fn live_ids(&self, kind: WorkerKind) -> Vec<WorkerId>;
+
+    /// Snapshot of one live worker.
+    fn worker(&self, id: WorkerId) -> Option<WorkerObs>;
+
+    /// Visit every live worker of `kind` in allocation order without
+    /// materializing the id list (the dispatch hot path).
+    fn for_each_worker(&self, kind: WorkerKind, f: &mut dyn FnMut(&WorkerObs)) {
+        for id in self.live_ids(kind) {
+            if let Some(w) = self.worker(id) {
+                f(&w);
+            }
+        }
+    }
+}
+
+/// Earliest-finishing accepting worker of `kind` — the best-effort
+/// dispatch fallback of the FPGA-only baselines. First of equal minima
+/// wins (matches `Iterator::min_by`).
+pub fn earliest_finishing(view: &dyn PolicyView, kind: WorkerKind) -> Option<WorkerId> {
+    let mut best: Option<(f64, WorkerId)> = None;
+    view.for_each_worker(kind, &mut |w| {
+        if w.accepting() && best.map_or(true, |(b, _)| w.busy_until < b) {
+            best = Some((w.busy_until, w.id));
+        }
+    });
+    best.map(|(_, id)| id)
+}

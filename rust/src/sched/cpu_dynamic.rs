@@ -5,7 +5,7 @@
 
 use super::dispatch::Dispatcher;
 use crate::config::{DispatchPolicy, WorkerKind};
-use crate::sim::{Request, Scheduler, SimState};
+use crate::policy::{Action, Observation, Policy, PolicyView, Target};
 
 pub struct CpuDynamic {
     dispatcher: Dispatcher,
@@ -25,7 +25,7 @@ impl Default for CpuDynamic {
     }
 }
 
-impl Scheduler for CpuDynamic {
+impl Policy for CpuDynamic {
     fn name(&self) -> String {
         "cpu-dynamic".into()
     }
@@ -34,15 +34,14 @@ impl Scheduler for CpuDynamic {
         f64::INFINITY // purely reactive
     }
 
-    fn on_request(&mut self, req: Request, sim: &mut SimState) {
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
         const KINDS: &[WorkerKind] = &[WorkerKind::Cpu];
-        match self.dispatcher.find(sim, &req, KINDS) {
-            Some(w) => {
-                sim.dispatch(req, w);
-            }
-            None => {
-                sim.dispatch_to_new_cpu(req);
-            }
+        if let Observation::Arrival { req } = obs {
+            let to = match self.dispatcher.find(view, &req, KINDS) {
+                Some(w) => Target::Worker(w),
+                None => Target::Fresh(WorkerKind::Cpu),
+            };
+            out.push(Action::Dispatch { req, to });
         }
     }
 }

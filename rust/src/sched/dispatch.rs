@@ -14,11 +14,12 @@
 //!   distributes requests ... rarely lets workers idle").
 //!
 //! All policies fall back to `None` when no worker can meet the deadline;
-//! the caller then spins up a fresh CPU (Alg 3 line 6).
+//! the caller then spins up a fresh CPU (Alg 3 line 6). The scans run on
+//! the transport-agnostic [`PolicyView`], so the same dispatcher serves
+//! both the sim driver and the real-time serving driver.
 
 use crate::config::{DispatchPolicy, WorkerKind};
-use crate::sim::worker::WorkerState;
-use crate::sim::{Request, SimState, WorkerId};
+use crate::policy::{PolicyView, Request, WorkerId, WorkerState};
 
 /// Stateful dispatcher (round robin needs a cursor).
 #[derive(Clone, Debug)]
@@ -34,11 +35,16 @@ impl Dispatcher {
 
     /// Find a worker for `req` per the policy, restricted to `kinds` (the
     /// homogeneous baselines pass a single kind).
-    pub fn find(&mut self, sim: &SimState, req: &Request, kinds: &[WorkerKind]) -> Option<WorkerId> {
+    pub fn find(
+        &mut self,
+        view: &dyn PolicyView,
+        req: &Request,
+        kinds: &[WorkerKind],
+    ) -> Option<WorkerId> {
         match self.policy {
-            DispatchPolicy::EfficientFirst => self.efficient_first(sim, req, kinds),
-            DispatchPolicy::IndexPacking => self.index_packing(sim, req, kinds),
-            DispatchPolicy::RoundRobin => self.round_robin(sim, req, kinds),
+            DispatchPolicy::EfficientFirst => self.efficient_first(view, req, kinds),
+            DispatchPolicy::IndexPacking => self.index_packing(view, req, kinds),
+            DispatchPolicy::RoundRobin => self.round_robin(view, req, kinds),
         }
     }
 
@@ -47,20 +53,20 @@ impl Dispatcher {
     /// decreasing queued load) preference in one O(W) scan.
     fn efficient_first(
         &self,
-        sim: &SimState,
+        view: &dyn PolicyView,
         req: &Request,
         kinds: &[WorkerKind],
     ) -> Option<WorkerId> {
-        let now = sim.now();
+        let now = view.now();
         for &kind in kinds {
-            let svc = sim.service_time(kind, req.size);
+            let svc = view.service_time(kind, req.size);
             // Best candidate per preference class.
             let mut best_busy: Option<(f64, WorkerId)> = None; // max backlog
             let mut best_idle: Option<(f64, WorkerId)> = None; // max idle_since (least time idle)
             let mut best_alloc: Option<(f64, WorkerId)> = None; // max queued load
-            for w in sim.pool.iter_kind(kind) {
+            view.for_each_worker(kind, &mut |w| {
                 if !w.accepting() || w.finish_time(now, svc) > req.deadline {
-                    continue;
+                    return;
                 }
                 match w.state {
                     WorkerState::Active if w.queued > 0 => {
@@ -82,7 +88,7 @@ impl Dispatcher {
                     }
                     WorkerState::SpinningDown => {}
                 }
-            }
+            });
             if let Some((_, id)) = best_busy.or(best_idle).or(best_alloc) {
                 return Some(id);
             }
@@ -95,18 +101,18 @@ impl Dispatcher {
     /// idle first among idle.
     fn index_packing(
         &self,
-        sim: &SimState,
+        view: &dyn PolicyView,
         req: &Request,
         kinds: &[WorkerKind],
     ) -> Option<WorkerId> {
-        let now = sim.now();
+        let now = view.now();
         let mut best_busy: Option<(f64, WorkerId)> = None;
         let mut best_idle: Option<(f64, WorkerId)> = None;
         for &kind in kinds {
-            let svc = sim.service_time(kind, req.size);
-            for w in sim.pool.iter_kind(kind) {
+            let svc = view.service_time(kind, req.size);
+            view.for_each_worker(kind, &mut |w| {
                 if !w.accepting() || w.finish_time(now, svc) > req.deadline {
-                    continue;
+                    return;
                 }
                 if w.queued > 0 || w.state == WorkerState::SpinningUp {
                     let load = w.busy_until - now;
@@ -116,7 +122,7 @@ impl Dispatcher {
                 } else if best_idle.map_or(true, |(s, _)| w.idle_since > s) {
                     best_idle = Some((w.idle_since, w.id));
                 }
-            }
+            });
         }
         best_busy.or(best_idle).map(|(_, id)| id)
     }
@@ -125,14 +131,14 @@ impl Dispatcher {
     /// first feasible worker from the cursor wins.
     fn round_robin(
         &mut self,
-        sim: &SimState,
+        view: &dyn PolicyView,
         req: &Request,
         kinds: &[WorkerKind],
     ) -> Option<WorkerId> {
-        let now = sim.now();
+        let now = view.now();
         let ids: Vec<WorkerId> = kinds
             .iter()
-            .flat_map(|&k| sim.pool.live_ids(k).iter().copied())
+            .flat_map(|&k| view.live_ids(k))
             .collect();
         if ids.is_empty() {
             return None;
@@ -140,8 +146,8 @@ impl Dispatcher {
         let n = ids.len();
         for probe in 0..n {
             let idx = (self.rr_cursor + probe) % n;
-            let w = sim.pool.get(ids[idx]).unwrap();
-            let svc = sim.service_time(w.kind, req.size);
+            let w = view.worker(ids[idx]).unwrap();
+            let svc = view.service_time(w.kind, req.size);
             if w.accepting() && w.finish_time(now, svc) <= req.deadline {
                 self.rr_cursor = (idx + 1) % n;
                 return Some(w.id);

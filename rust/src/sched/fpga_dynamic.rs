@@ -2,8 +2,9 @@
 //! tracks load with a fixed excess headroom, like traditional autoscaling
 //! [4, 27, 72]. The headroom is an integer multiple `k` of the maximum
 //! consecutive-interval change in needed workers; per the paper, each
-//! trace uses the least `k` that meets request deadlines — [`fit`]
-//! searches for it.
+//! trace uses the least `k` that meets request deadlines — [`fitted`]
+//! searches for it, and the `sched::build` factory always hands out the
+//! fitted policy so no caller can observe an unfitted variant.
 
 use super::breakeven::{
     breakeven_fpga_seconds, lambda_fpga_seconds, needed_fpgas, Objective,
@@ -11,7 +12,10 @@ use super::breakeven::{
 use super::dispatch::Dispatcher;
 use super::oracle::Oracle;
 use crate::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
-use crate::sim::{self, Request, RunResult, Scheduler, SimState, WorkerId};
+use crate::policy::{
+    earliest_finishing, Action, Observation, Policy, PolicyView, Target,
+};
+use crate::sim::{self, IdealBaseline, RunResult};
 use crate::trace::AppTrace;
 
 pub struct FpgaDynamic {
@@ -38,7 +42,7 @@ impl FpgaDynamic {
     }
 }
 
-impl Scheduler for FpgaDynamic {
+impl Policy for FpgaDynamic {
     fn name(&self) -> String {
         "fpga-dynamic".into()
     }
@@ -47,89 +51,115 @@ impl Scheduler for FpgaDynamic {
         self.interval
     }
 
-    fn on_start(&mut self, sim: &mut SimState) {
-        // Reactive autoscaler over an already-running deployment: the
-        // initial headroom is warm when the window opens.
-        sim.alloc_prewarmed(WorkerKind::Fpga, self.headroom.max(1));
-    }
-
-    fn on_tick(&mut self, sim: &mut SimState) {
-        let (cpu_work, fpga_work) = sim.take_interval_work();
-        debug_assert_eq!(cpu_work, 0.0, "FPGA-only platform saw CPU work");
-        let lambda = lambda_fpga_seconds(cpu_work, fpga_work, self.speedup);
-        let needed = needed_fpgas(lambda, self.interval, self.breakeven);
-        self.target = needed + self.headroom;
-        let cur = sim.allocated(WorkerKind::Fpga);
-        if self.target > cur {
-            sim.alloc_n(WorkerKind::Fpga, self.target - cur);
-        }
-        // Excess above the target drains via the idle timeout.
-    }
-
-    fn keep_alive(&self, _worker: WorkerId, sim: &SimState) -> bool {
-        // Maintain the standing headroom: don't let reclamation pull the
-        // fleet below the current target while the trace is live.
-        sim.trace_live() && sim.allocated(WorkerKind::Fpga) <= self.target
-    }
-
-    fn on_request(&mut self, req: Request, sim: &mut SimState) {
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
         const KINDS: &[WorkerKind] = &[WorkerKind::Fpga];
-        match self.dispatcher.find(sim, &req, KINDS) {
-            Some(w) => {
-                sim.dispatch(req, w);
+        match obs {
+            Observation::Start => {
+                // Reactive autoscaler over an already-running deployment:
+                // the initial headroom is warm when the window opens.
+                out.push(Action::Alloc {
+                    kind: WorkerKind::Fpga,
+                    n: self.headroom.max(1),
+                    prewarmed: true,
+                });
             }
-            None => {
-                // Allocation happens only at interval boundaries (FPGA
-                // spin-ups are useless within a 100ms-deadline burst);
-                // best-effort onto the earliest-finishing worker — misses
-                // here are exactly what the headroom fit eliminates.
-                let best: Option<WorkerId> = sim
-                    .pool
-                    .iter_kind(WorkerKind::Fpga)
-                    .filter(|w| w.accepting())
-                    .min_by(|a, b| a.busy_until.partial_cmp(&b.busy_until).unwrap())
-                    .map(|w| w.id);
-                match best {
-                    Some(w) => {
-                        sim.dispatch(req, w);
-                    }
-                    None => {
-                        // Fleet fully drained (deep lull): re-seed one.
-                        let w = sim
-                            .alloc(WorkerKind::Fpga)
-                            .expect("FPGA cap exhausted with empty pool");
-                        sim.dispatch(req, w);
-                    }
+            Observation::Tick {
+                cpu_work,
+                fpga_work,
+                ..
+            } => {
+                debug_assert_eq!(cpu_work, 0.0, "FPGA-only platform saw CPU work");
+                let lambda = lambda_fpga_seconds(cpu_work, fpga_work, self.speedup);
+                let needed = needed_fpgas(lambda, self.interval, self.breakeven);
+                self.target = needed + self.headroom;
+                let cur = view.allocated(WorkerKind::Fpga);
+                if self.target > cur {
+                    out.push(Action::Alloc {
+                        kind: WorkerKind::Fpga,
+                        n: self.target - cur,
+                        prewarmed: false,
+                    });
+                }
+                // Excess above the target drains via the idle timeout.
+            }
+            Observation::IdleExpired { worker } => {
+                // Maintain the standing headroom: don't let reclamation
+                // pull the fleet below the target while the trace is live.
+                if view.trace_live() && view.allocated(WorkerKind::Fpga) <= self.target {
+                    out.push(Action::KeepAlive { worker });
                 }
             }
+            Observation::Arrival { req } => {
+                let to = match self.dispatcher.find(view, &req, KINDS) {
+                    Some(w) => Target::Worker(w),
+                    None => {
+                        // Allocation happens only at interval boundaries
+                        // (FPGA spin-ups are useless within a 100ms-deadline
+                        // burst); best-effort onto the earliest-finishing
+                        // worker — misses here are exactly what the headroom
+                        // fit eliminates. If the fleet fully drained (deep
+                        // lull), re-seed one.
+                        match earliest_finishing(view, WorkerKind::Fpga) {
+                            Some(w) => Target::Worker(w),
+                            None => Target::Fresh(WorkerKind::Fpga),
+                        }
+                    }
+                };
+                out.push(Action::Dispatch { req, to });
+            }
+            _ => {}
         }
     }
 }
 
-/// Paper §5.1: "FPGA-dynamic allocates the least headroom that meets
-/// request deadlines based on an integer multiple of the maximum
-/// difference in known request rates between consecutive intervals."
-/// Returns the best run and the fitted multiple k.
+/// The §5.1 fitting search: least headroom multiple `k` (of the oracle's
+/// max consecutive delta) whose run meets deadlines within
+/// `miss_tolerance`. Returns the winning run (normalized against
+/// `cfg.platform`), the headroom, and k.
+fn search(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (RunResult, u32, u32) {
+    let oracle = Oracle::from_trace(trace, cfg, Objective::energy());
+    let delta = oracle.max_consecutive_delta().max(1);
+    let mut best: Option<(RunResult, u32, u32)> = None;
+    for k in 0..=8u32 {
+        let headroom = k * delta;
+        let mut policy = FpgaDynamic::new(cfg, headroom);
+        let r = sim::run(trace, cfg.clone(), &cfg.platform, &mut policy);
+        let feasible = r.miss_fraction() <= miss_tolerance;
+        best = Some((r, headroom, k));
+        if feasible {
+            break;
+        }
+    }
+    best.unwrap()
+}
+
+/// Least feasible headroom and its multiple k.
+pub fn fit_headroom(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (u32, u32) {
+    let (_, headroom, k) = search(trace, cfg, miss_tolerance);
+    (headroom, k)
+}
+
+/// The fitted policy (paper §5.1: "FPGA-dynamic allocates the least
+/// headroom that meets request deadlines based on an integer multiple of
+/// the maximum difference in known request rates between consecutive
+/// intervals").
+pub fn fitted(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> FpgaDynamic {
+    let (headroom, _k) = fit_headroom(trace, cfg, miss_tolerance);
+    FpgaDynamic::new(cfg, headroom)
+}
+
+/// Fit and run: the search's best run plus the fitted multiple k. The
+/// ideal baseline is rebased onto `defaults` — identical to re-running
+/// the fitted configuration (metrics never depend on the baseline), but
+/// without the extra simulation.
 pub fn fit(
     trace: &AppTrace,
     cfg: &SimConfig,
     defaults: &PlatformConfig,
     miss_tolerance: f64,
 ) -> (RunResult, u32) {
-    let oracle = Oracle::from_trace(trace, cfg, Objective::energy());
-    let delta = oracle.max_consecutive_delta().max(1);
-    let mut best: Option<(RunResult, u32)> = None;
-    for k in 0..=8u32 {
-        let headroom = k * delta;
-        let mut sched = FpgaDynamic::new(cfg, headroom);
-        let r = sim::run(trace, cfg.clone(), defaults, &mut sched);
-        let miss = r.miss_fraction();
-        best = Some((r, k));
-        if miss <= miss_tolerance {
-            break;
-        }
-    }
-    let (r, k) = best.unwrap();
+    let (mut r, _headroom, k) = search(trace, cfg, miss_tolerance);
+    r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
     (r, k)
 }
 
@@ -147,6 +177,24 @@ mod tests {
         let (r, _k) = fit(&trace, &cfg, &PlatformConfig::paper_default(), 0.01);
         assert!(r.miss_fraction() <= 0.05, "misses {}", r.miss_fraction());
         assert_eq!(r.metrics.on_cpu, 0);
+    }
+
+    #[test]
+    fn fitted_policy_reproduces_fit_run() {
+        // The factory path (fitted policy, fresh run) must be bit-identical
+        // to the fit search's best run — the divergence the old
+        // build/run_scheduler split allowed.
+        let mut rng = Rng::new(12);
+        let trace = synthetic_app("fd", &mut rng, 0.65, 200.0, 150.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        let (r, _k) = fit(&trace, &cfg, &defaults, 0.005);
+        let mut p = fitted(&trace, &cfg, 0.005);
+        let r2 = sim::run(&trace, cfg.clone(), &defaults, &mut p);
+        assert_eq!(r.metrics.deadline_misses, r2.metrics.deadline_misses);
+        assert_eq!(r.metrics.fpga_spinups, r2.metrics.fpga_spinups);
+        assert_eq!(r.metrics.total_energy(), r2.metrics.total_energy());
+        assert_eq!(r.metrics.total_cost(), r2.metrics.total_cost());
     }
 
     #[test]

@@ -5,13 +5,17 @@
 //!
 //! The peak per-interval demand gives ρ ≈ 1 during the peak interval,
 //! which transiently violates tight (10x-service) deadlines; the paper's
-//! best case "meets request deadlines", so [`fit`] searches for the least
-//! fleet ≥ peak that does.
+//! best case "meets request deadlines", so [`fitted`] searches for the
+//! least fleet ≥ peak that does, and the `sched::build` factory always
+//! hands out the fitted policy.
 
 use super::dispatch::Dispatcher;
 use super::oracle::Oracle;
 use crate::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
-use crate::sim::{self, Request, RunResult, Scheduler, SimState, WorkerId};
+use crate::policy::{
+    earliest_finishing, Action, Observation, Policy, PolicyView, Target,
+};
+use crate::sim::{self, IdealBaseline, RunResult};
 use crate::trace::AppTrace;
 
 pub struct FpgaStatic {
@@ -24,7 +28,7 @@ impl FpgaStatic {
         Self::with_fleet(oracle.peak().max(1))
     }
 
-    /// Explicit fleet size (used by [`fit`]).
+    /// Explicit fleet size (used by [`fitted`]).
     pub fn with_fleet(fleet: u32) -> Self {
         Self {
             fleet: fleet.max(1),
@@ -33,33 +37,53 @@ impl FpgaStatic {
     }
 }
 
-/// Best-case static provisioning: least fleet ≥ oracle peak whose run
-/// meets deadlines (`miss_tolerance` fraction). Step size scales with
-/// √peak (square-root staffing). Returns the run and the fleet size.
-pub fn fit(
-    trace: &AppTrace,
-    cfg: &SimConfig,
-    defaults: &PlatformConfig,
-    miss_tolerance: f64,
-) -> (RunResult, u32) {
+/// The fitting search: least fleet ≥ the oracle peak whose run meets
+/// deadlines within `miss_tolerance`. Step size scales with √peak
+/// (square-root staffing). Returns the winning run (normalized against
+/// `cfg.platform`) and the fleet.
+fn search(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (RunResult, u32) {
     let oracle = Oracle::from_trace(trace, cfg, super::breakeven::Objective::energy());
     let peak = oracle.peak().max(1);
     let step = ((peak as f64).sqrt().ceil() as u32).max(1);
     let mut best: Option<(RunResult, u32)> = None;
     for j in 0..=8u32 {
         let fleet = peak + j * step;
-        let mut sched = FpgaStatic::with_fleet(fleet);
-        let r = sim::run(trace, cfg.clone(), defaults, &mut sched);
-        let miss = r.miss_fraction();
+        let mut policy = FpgaStatic::with_fleet(fleet);
+        let r = sim::run(trace, cfg.clone(), &cfg.platform, &mut policy);
+        let feasible = r.miss_fraction() <= miss_tolerance;
         best = Some((r, fleet));
-        if miss <= miss_tolerance {
+        if feasible {
             break;
         }
     }
     best.unwrap()
 }
 
-impl Scheduler for FpgaStatic {
+/// Least feasible fleet size.
+pub fn fit_fleet(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> u32 {
+    search(trace, cfg, miss_tolerance).1
+}
+
+/// Best-case static provisioning: the fitted policy for `trace`.
+pub fn fitted(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> FpgaStatic {
+    FpgaStatic::with_fleet(fit_fleet(trace, cfg, miss_tolerance))
+}
+
+/// Fit and run: the search's best run plus the fitted fleet size. The
+/// ideal baseline is rebased onto `defaults` — identical to re-running
+/// the fitted configuration, without the extra simulation.
+pub fn fit(
+    trace: &AppTrace,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32) {
+    let (mut r, fleet) = search(trace, cfg, miss_tolerance);
+    r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
+    (r, fleet)
+}
+
+impl Policy for FpgaStatic {
     fn name(&self) -> String {
         "fpga-static".into()
     }
@@ -68,48 +92,43 @@ impl Scheduler for FpgaStatic {
         f64::INFINITY // static: no periodic decisions
     }
 
-    fn on_start(&mut self, sim: &mut SimState) {
-        // Statically provisioned before the workload window (the paper's
-        // static platform pays a "minor one-time spin-up cost" but is
-        // ready when traffic starts).
-        sim.alloc_prewarmed(WorkerKind::Fpga, self.fleet);
-    }
-
-    fn keep_alive(&self, _worker: WorkerId, sim: &SimState) -> bool {
-        // Statically provisioned: the fleet is pinned until the trace
-        // ends, then drains through the normal idle timeout.
-        sim.trace_live()
-    }
-
-    fn on_request(&mut self, req: Request, sim: &mut SimState) {
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
         const KINDS: &[WorkerKind] = &[WorkerKind::Fpga];
-        match self.dispatcher.find(sim, &req, KINDS) {
-            Some(w) => {
-                sim.dispatch(req, w);
+        match obs {
+            Observation::Start => {
+                // Statically provisioned before the workload window (the
+                // paper's static platform pays a "minor one-time spin-up
+                // cost" but is ready when traffic starts).
+                out.push(Action::Alloc {
+                    kind: WorkerKind::Fpga,
+                    n: self.fleet,
+                    prewarmed: true,
+                });
             }
-            None => {
-                // FPGA-only: no CPU escape hatch. Best-effort onto the
-                // earliest-finishing FPGA (a deadline miss if truly full).
-                let best: Option<WorkerId> = sim
-                    .pool
-                    .iter_kind(WorkerKind::Fpga)
-                    .filter(|w| w.accepting())
-                    .min_by(|a, b| a.busy_until.partial_cmp(&b.busy_until).unwrap())
-                    .map(|w| w.id);
-                match best {
-                    Some(w) => {
-                        sim.dispatch(req, w);
-                    }
-                    None => {
-                        // Entire fleet reclaimed by idle timeout (deep lull
-                        // longer than the timeout): re-provision.
-                        let w = sim
-                            .alloc(WorkerKind::Fpga)
-                            .expect("FPGA cap must allow static provisioning");
-                        sim.dispatch(req, w);
-                    }
+            Observation::IdleExpired { worker } => {
+                // Statically provisioned: the fleet is pinned until the
+                // trace ends, then drains through the normal idle timeout.
+                if view.trace_live() {
+                    out.push(Action::KeepAlive { worker });
                 }
             }
+            Observation::Arrival { req } => {
+                let to = match self.dispatcher.find(view, &req, KINDS) {
+                    Some(w) => Target::Worker(w),
+                    None => {
+                        // FPGA-only: no CPU escape hatch. Best-effort onto
+                        // the earliest-finishing FPGA (a deadline miss if
+                        // truly full); if the entire fleet was reclaimed by
+                        // the idle timeout (deep lull), re-provision.
+                        match earliest_finishing(view, WorkerKind::Fpga) {
+                            Some(w) => Target::Worker(w),
+                            None => Target::Fresh(WorkerKind::Fpga),
+                        }
+                    }
+                };
+                out.push(Action::Dispatch { req, to });
+            }
+            _ => {}
         }
     }
 }

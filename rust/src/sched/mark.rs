@@ -16,13 +16,12 @@ use super::breakeven::{breakeven_fpga_seconds, Objective};
 use super::dispatch::Dispatcher;
 use super::oracle::Oracle;
 use crate::config::{DispatchPolicy, SimConfig, WorkerKind};
-use crate::sim::{Request, Scheduler, SimState};
+use crate::policy::{Action, Observation, Policy, PolicyView, Target};
 
 pub struct MarkIdeal {
     oracle: Oracle,
     interval: f64,
     dispatcher: Dispatcher,
-    tick_index: usize,
 }
 
 impl MarkIdeal {
@@ -36,12 +35,11 @@ impl MarkIdeal {
             oracle: trace_oracle_cost,
             interval: cfg.interval,
             dispatcher: Dispatcher::new(DispatchPolicy::RoundRobin),
-            tick_index: 0,
         }
     }
 }
 
-impl Scheduler for MarkIdeal {
+impl Policy for MarkIdeal {
     fn name(&self) -> String {
         "mark-ideal".into()
     }
@@ -50,39 +48,48 @@ impl Scheduler for MarkIdeal {
         self.interval
     }
 
-    fn on_start(&mut self, sim: &mut SimState) {
-        // Perfect predictions: the first interval's fleet is warm when the
-        // window opens (allocation happened one interval earlier).
-        let n0 = self.oracle.needed_at(0).max(self.oracle.needed_at(1));
-        sim.alloc_prewarmed(WorkerKind::Fpga, n0);
-        self.tick_index = 1;
-    }
-
-    fn on_tick(&mut self, sim: &mut SimState) {
-        sim.take_interval_work(); // oracle-driven; counters unused
-        // Perfect two-interval lookahead: provision now what the next
-        // interval needs (allocation takes one interval).
-        let target = self.oracle.needed_at(self.tick_index + 1);
-        let cur = sim.allocated(WorkerKind::Fpga);
-        if target > cur {
-            sim.alloc_n(WorkerKind::Fpga, target - cur);
-        } else if cur > target {
-            // Cost-optimized: shed surplus FPGAs immediately rather than
-            // paying occupancy for the idle-timeout window.
-            sim.retire_idle(WorkerKind::Fpga, cur - target);
-        }
-        self.tick_index += 1;
-    }
-
-    fn on_request(&mut self, req: Request, sim: &mut SimState) {
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
         const KINDS: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
-        match self.dispatcher.find(sim, &req, KINDS) {
-            Some(w) => {
-                sim.dispatch(req, w);
+        match obs {
+            Observation::Start => {
+                // Perfect predictions: the first interval's fleet is warm
+                // when the window opens (allocation happened one interval
+                // earlier).
+                let n0 = self.oracle.needed_at(0).max(self.oracle.needed_at(1));
+                out.push(Action::Alloc {
+                    kind: WorkerKind::Fpga,
+                    n: n0,
+                    prewarmed: true,
+                });
             }
-            None => {
-                sim.dispatch_to_new_cpu(req);
+            Observation::Tick { index, .. } => {
+                // Perfect two-interval lookahead: provision now what the
+                // next interval needs (allocation takes one interval).
+                let target = self.oracle.needed_at(index + 1);
+                let cur = view.allocated(WorkerKind::Fpga);
+                if target > cur {
+                    out.push(Action::Alloc {
+                        kind: WorkerKind::Fpga,
+                        n: target - cur,
+                        prewarmed: false,
+                    });
+                } else if cur > target {
+                    // Cost-optimized: shed surplus FPGAs immediately rather
+                    // than paying occupancy for the idle-timeout window.
+                    out.push(Action::Retire {
+                        kind: WorkerKind::Fpga,
+                        n: cur - target,
+                    });
+                }
             }
+            Observation::Arrival { req } => {
+                let to = match self.dispatcher.find(view, &req, KINDS) {
+                    Some(w) => Target::Worker(w),
+                    None => Target::Fresh(WorkerKind::Cpu),
+                };
+                out.push(Action::Dispatch { req, to });
+            }
+            _ => {}
         }
     }
 }

@@ -1,5 +1,11 @@
-//! Schedulers: Spork (all variants) and the paper's baselines, plus the
+//! Schedulers: Spork (all variants) and the paper's baselines — all
+//! implementations of the transport-agnostic [`Policy`] trait — plus the
 //! factory mapping [`SchedulerKind`] to implementations.
+//!
+//! The factory is the single source of truth: [`build`] returns the
+//! *fitted* policy for every kind (FPGA-dynamic's least-feasible headroom,
+//! FPGA-static's least-feasible fleet), so the sim driver and the
+//! real-time serving driver can never diverge on what a kind means.
 
 pub mod breakeven;
 pub mod cpu_dynamic;
@@ -14,26 +20,27 @@ pub use breakeven::Objective;
 pub use oracle::Oracle;
 
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
-use crate::sim::{self, RunResult, Scheduler};
+use crate::policy::Policy;
+use crate::sim::{self, RunResult};
 use crate::trace::AppTrace;
 
-/// Build a scheduler for `kind`. Oracle-assisted baselines (FPGA-static,
-/// MArk-ideal, Spork-*-ideal) compute their oracle from `trace`.
-pub fn build(kind: &SchedulerKind, cfg: &SimConfig, trace: &AppTrace) -> Box<dyn Scheduler> {
+/// Deadline-miss tolerance of the baselines' fitting searches (paper
+/// §5.1: the fitted baselines "meet request deadlines").
+pub const FIT_MISS_TOLERANCE: f64 = 0.005;
+
+/// Build the policy for `kind`, fitted to `trace` where the paper requires
+/// it. Oracle-assisted baselines (FPGA-static, MArk-ideal, Spork-*-ideal)
+/// compute their oracle from `trace`; FPGA-dynamic and FPGA-static run
+/// their §5.1 fitting search so every caller gets the same policy
+/// `run_scheduler` evaluates.
+pub fn build(kind: &SchedulerKind, cfg: &SimConfig, trace: &AppTrace) -> Box<dyn Policy> {
     match kind {
         SchedulerKind::CpuDynamic => Box::new(cpu_dynamic::CpuDynamic::new()),
         SchedulerKind::FpgaStatic => {
-            let oracle = Oracle::from_trace(trace, cfg, Objective::energy());
-            Box::new(fpga_static::FpgaStatic::new(&oracle))
+            Box::new(fpga_static::fitted(trace, cfg, FIT_MISS_TOLERANCE))
         }
         SchedulerKind::FpgaDynamic => {
-            // Unfitted default (headroom = 1x max delta); prefer
-            // `run_scheduler`, which fits per the paper.
-            let oracle = Oracle::from_trace(trace, cfg, Objective::energy());
-            Box::new(fpga_dynamic::FpgaDynamic::new(
-                cfg,
-                oracle.max_consecutive_delta().max(1),
-            ))
+            Box::new(fpga_dynamic::fitted(trace, cfg, FIT_MISS_TOLERANCE))
         }
         SchedulerKind::MarkIdeal => {
             let oracle = Oracle::from_trace(trace, cfg, Objective::cost());
@@ -58,8 +65,11 @@ pub fn build(kind: &SchedulerKind, cfg: &SimConfig, trace: &AppTrace) -> Box<dyn
     }
 }
 
-/// Run one scheduler kind over one app trace, handling the baselines'
-/// fitting requirements (FPGA-dynamic's least-feasible headroom).
+/// Run one scheduler kind over one app trace through the sim driver. The
+/// fitted kinds reuse their fitting search's winning run instead of
+/// re-simulating it — byte-identical to running the [`build`]-returned
+/// policy (pinned by `factory_and_run_scheduler_agree_on_fitted_kinds`),
+/// just without the redundant simulation.
 pub fn run_scheduler(
     kind: &SchedulerKind,
     trace: &AppTrace,
@@ -68,16 +78,14 @@ pub fn run_scheduler(
 ) -> RunResult {
     match kind {
         SchedulerKind::FpgaDynamic => {
-            let (r, _k) = fpga_dynamic::fit(trace, cfg, defaults, 0.005);
-            r
+            fpga_dynamic::fit(trace, cfg, defaults, FIT_MISS_TOLERANCE).0
         }
         SchedulerKind::FpgaStatic => {
-            let (r, _fleet) = fpga_static::fit(trace, cfg, defaults, 0.005);
-            r
+            fpga_static::fit(trace, cfg, defaults, FIT_MISS_TOLERANCE).0
         }
         _ => {
-            let mut sched = build(kind, cfg, trace);
-            sim::run(trace, cfg.clone(), defaults, sched.as_mut())
+            let mut policy = build(kind, cfg, trace);
+            sim::run(trace, cfg.clone(), defaults, policy.as_mut())
         }
     }
 }
@@ -96,6 +104,29 @@ mod tests {
         for kind in SchedulerKind::table8_roster() {
             let s = build(&kind, &cfg, &trace);
             assert_eq!(s.name(), kind.name(), "factory/name mismatch");
+        }
+    }
+
+    #[test]
+    fn factory_and_run_scheduler_agree_on_fitted_kinds() {
+        // The old factory handed out an *unfitted* FPGA-dynamic while
+        // `run_scheduler` fitted it; pin that both paths now produce the
+        // same results.
+        let mut rng = Rng::new(3);
+        let trace = synthetic_app("t", &mut rng, 0.65, 120.0, 80.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        for kind in [SchedulerKind::FpgaDynamic, SchedulerKind::FpgaStatic] {
+            let mut via_factory = build(&kind, &cfg, &trace);
+            let a = sim::run(&trace, cfg.clone(), &defaults, via_factory.as_mut());
+            let b = run_scheduler(&kind, &trace, &cfg, &defaults);
+            assert_eq!(
+                a.metrics.deadline_misses, b.metrics.deadline_misses,
+                "{} diverged",
+                kind.name()
+            );
+            assert_eq!(a.metrics.total_energy(), b.metrics.total_energy());
+            assert_eq!(a.metrics.total_cost(), b.metrics.total_cost());
         }
     }
 

@@ -14,7 +14,7 @@ use super::breakeven::{
 use super::dispatch::Dispatcher;
 use super::oracle::Oracle;
 use crate::config::{DispatchPolicy, SimConfig, WorkerKind};
-use crate::sim::{Request, Scheduler, SimState};
+use crate::policy::{Action, Observation, Policy, PolicyView, Target};
 use predictor::Predictor;
 
 pub struct Spork {
@@ -29,10 +29,6 @@ pub struct Spork {
     /// Sliding lag buffer: [n_{t-2}, n_{t-1}] needed counts, so the
     /// histogram can be updated at key n_{t-3} when n_{t-1} materializes.
     lag: Vec<u32>,
-    /// Needed count in the previous interval (n_{t-1}).
-    n_prev: u32,
-    /// Index of the interval that starts at the *next* tick.
-    tick_index: usize,
     /// §4.5 optional extension: scale allocations down when deadlines are
     /// loose enough that queueing slack absorbs load (off = paper).
     deadline_aware: bool,
@@ -53,8 +49,6 @@ impl Spork {
             predictor: Predictor::new(cfg.platform, interval, obj),
             oracle: None,
             lag: Vec::new(),
-            n_prev: 0,
-            tick_index: 0,
             deadline_aware: cfg.deadline_aware,
             last_value_predictor: false,
         }
@@ -91,16 +85,9 @@ impl Spork {
             "spork-e"
         }
     }
-
-    /// Alg 1 lines 6-8: needed FPGAs in the interval that just ended.
-    fn needed_last_interval(&self, sim: &mut SimState) -> u32 {
-        let (cpu_work, fpga_work) = sim.take_interval_work();
-        let lambda = lambda_fpga_seconds(cpu_work, fpga_work, self.speedup);
-        needed_fpgas(lambda, self.interval, self.breakeven)
-    }
 }
 
-impl Scheduler for Spork {
+impl Policy for Spork {
     fn name(&self) -> String {
         if self.oracle.is_some() {
             format!("{}-ideal", self.variant_name())
@@ -113,75 +100,87 @@ impl Scheduler for Spork {
         self.interval
     }
 
-    fn on_start(&mut self, sim: &mut SimState) {
-        // Cold start (§5.1: no warm-up). The ideal variants may pre-spin
-        // for the first interval since they know the workload.
-        if let Some(oracle) = &self.oracle {
-            let n0 = oracle.needed_at(0).max(oracle.needed_at(1));
-            sim.alloc_prewarmed(WorkerKind::Fpga, n0);
-        }
-        self.tick_index = 1;
-    }
-
-    fn on_tick(&mut self, sim: &mut SimState) {
-        // Interval t just ended; we stand at the start of interval t+1 and
-        // decide allocations that become ready for interval t+2... i.e.
-        // the paper's "predict n_{t+1} rather than n_t" at lag one.
-        let n_needed = self.needed_last_interval(sim); // n_{t-1} in Alg 1
-        self.n_prev = n_needed;
-
-        // ℍ[n_{t-3}].add(n_{t-1})
-        self.lag.push(n_needed);
-        if self.lag.len() > 2 {
-            let key = self.lag.remove(0);
-            self.predictor.observe(key, n_needed);
-        }
-
-        let n_curr = sim.allocated(WorkerKind::Fpga);
-        let n_next = match &self.oracle {
-            Some(oracle) => oracle.needed_at(self.tick_index + 1),
-            None if self.last_value_predictor => n_needed,
-            None => self.predictor.predict(n_needed, n_curr),
-        };
-        let n_next = if self.deadline_aware {
-            // Optional §4.5 extension: with loose deadlines (relative to
-            // the interval) a small under-allocation is absorbed by
-            // queueing slack; shave one worker when slack is ample.
-            n_next.saturating_sub(1).max(n_needed.min(n_next))
-        } else {
-            n_next
-        };
-
-        if n_next > n_curr {
-            sim.alloc_n(WorkerKind::Fpga, n_next - n_curr);
-        }
-        // Over-allocations are reclaimed by the idle timeout (§5.1), not
-        // forced down — the "insurance against repetitive allocations".
-        self.tick_index += 1;
-    }
-
-    fn on_request(&mut self, req: Request, sim: &mut SimState) {
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
         const KINDS: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
-        match self.dispatcher.find(sim, &req, KINDS) {
-            Some(w) => {
-                sim.dispatch(req, w);
+        match obs {
+            Observation::Start => {
+                // Cold start (§5.1: no warm-up). The ideal variants may
+                // pre-spin for the first interval since they know the
+                // workload.
+                if let Some(oracle) = &self.oracle {
+                    let n0 = oracle.needed_at(0).max(oracle.needed_at(1));
+                    out.push(Action::Alloc {
+                        kind: WorkerKind::Fpga,
+                        n: n0,
+                        prewarmed: true,
+                    });
+                }
             }
-            None => {
-                // Alg 3 line 6: burst / under-allocation → fresh CPU.
-                sim.dispatch_to_new_cpu(req);
-            }
-        }
-    }
+            Observation::Tick {
+                index,
+                cpu_work,
+                fpga_work,
+            } => {
+                // Interval t just ended; we stand at the start of interval
+                // t+1 and decide allocations that become ready for interval
+                // t+2... i.e. the paper's "predict n_{t+1} rather than n_t"
+                // at lag one. Alg 1 lines 6-8: needed FPGAs in the interval
+                // that just ended.
+                let lambda = lambda_fpga_seconds(cpu_work, fpga_work, self.speedup);
+                let n_needed = needed_fpgas(lambda, self.interval, self.breakeven);
 
-    fn on_dealloc(
-        &mut self,
-        kind: WorkerKind,
-        lifetime: f64,
-        peers_at_alloc: u32,
-        _sim: &mut SimState,
-    ) {
-        if kind == WorkerKind::Fpga {
-            self.predictor.observe_lifetime(peers_at_alloc, lifetime);
+                // ℍ[n_{t-3}].add(n_{t-1})
+                self.lag.push(n_needed);
+                if self.lag.len() > 2 {
+                    let key = self.lag.remove(0);
+                    self.predictor.observe(key, n_needed);
+                }
+
+                let n_curr = view.allocated(WorkerKind::Fpga);
+                let n_next = match &self.oracle {
+                    Some(oracle) => oracle.needed_at(index + 1),
+                    None if self.last_value_predictor => n_needed,
+                    None => self.predictor.predict(n_needed, n_curr),
+                };
+                let n_next = if self.deadline_aware {
+                    // Optional §4.5 extension: with loose deadlines
+                    // (relative to the interval) a small under-allocation
+                    // is absorbed by queueing slack; shave one worker when
+                    // slack is ample.
+                    n_next.saturating_sub(1).max(n_needed.min(n_next))
+                } else {
+                    n_next
+                };
+
+                if n_next > n_curr {
+                    out.push(Action::Alloc {
+                        kind: WorkerKind::Fpga,
+                        n: n_next - n_curr,
+                        prewarmed: false,
+                    });
+                }
+                // Over-allocations are reclaimed by the idle timeout (§5.1),
+                // not forced down — the "insurance against repetitive
+                // allocations".
+            }
+            Observation::Arrival { req } => {
+                let to = match self.dispatcher.find(view, &req, KINDS) {
+                    Some(w) => Target::Worker(w),
+                    // Alg 3 line 6: burst / under-allocation → fresh CPU.
+                    None => Target::Fresh(WorkerKind::Cpu),
+                };
+                out.push(Action::Dispatch { req, to });
+            }
+            Observation::Dealloc {
+                kind,
+                lifetime,
+                peers_at_alloc,
+            } => {
+                if kind == WorkerKind::Fpga {
+                    self.predictor.observe_lifetime(peers_at_alloc, lifetime);
+                }
+            }
+            _ => {}
         }
     }
 }

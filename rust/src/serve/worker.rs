@@ -29,9 +29,10 @@ pub struct Job {
 
 #[derive(Debug)]
 pub enum WorkerMsg {
-    /// Begin serving after the scaled spin-up sleep. Carries the shared
-    /// wall-clock origin for completion timestamps.
-    Activate(Instant),
+    /// Begin serving after sleeping `spin_up` scaled simulated seconds
+    /// (0 for pre-warmed workers). Carries the shared wall-clock origin
+    /// for completion timestamps.
+    Activate { epoch: Instant, spin_up: f64 },
     Job(Job),
     /// Stop serving and park (worker stays warm).
     Park,
@@ -93,8 +94,8 @@ pub fn spawn_worker(
 
             loop {
                 // Parked: wait for activation.
-                let epoch = match rx.recv() {
-                    Ok(WorkerMsg::Activate(e)) => e,
+                let (epoch, spin_up) = match rx.recv() {
+                    Ok(WorkerMsg::Activate { epoch, spin_up }) => (epoch, spin_up),
                     Ok(WorkerMsg::Park) => continue,
                     Ok(WorkerMsg::Job(_)) => {
                         debug_assert!(false, "job sent to parked worker");
@@ -102,15 +103,18 @@ pub fn spawn_worker(
                     }
                     _ => return,
                 };
-                // Reconfiguration / cold-start latency (scaled).
-                std::thread::sleep(Duration::from_secs_f64(params.spin_up / time_scale));
+                // Reconfiguration / cold-start latency (scaled; 0 when the
+                // router activates a pre-warmed worker).
+                if spin_up > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(spin_up / time_scale));
+                }
 
                 // Active: serve until parked or shut down.
                 loop {
                     let first = match rx.recv() {
                         Ok(WorkerMsg::Job(j)) => j,
                         Ok(WorkerMsg::Park) => break,
-                        Ok(WorkerMsg::Activate(_)) => continue,
+                        Ok(WorkerMsg::Activate { .. }) => continue,
                         _ => return,
                     };
                     meta.clear();
@@ -124,7 +128,7 @@ pub fn spawn_worker(
                                 park_after = true;
                                 break;
                             }
-                            Ok(WorkerMsg::Activate(_)) => {}
+                            Ok(WorkerMsg::Activate { .. }) => {}
                             Ok(WorkerMsg::Shutdown) => {
                                 exit_after = true;
                                 break;

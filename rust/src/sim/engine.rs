@@ -1,20 +1,27 @@
-//! The simulation engine: event loop, worker lifecycle transitions, and the
-//! mutation API schedulers use ([`SimState`]).
+//! The sim driver: the discrete-event loop that feeds observations to a
+//! [`Policy`] and applies its actions to [`SimState`], keeping every
+//! accounting invariant (energy, cost, deadlines, peaks) in one place.
+//!
+//! [`Driver`] is the reusable stepping core: `sim::run` drives it to
+//! completion as fast as possible, while the serving runtime
+//! (`crate::serve`) paces the *same* core against the wall clock and
+//! mirrors each applied [`Effect`] onto real worker threads — which is
+//! what makes served behavior equal simulated behavior by construction.
 
 use super::event::{Event, EventQueue};
 use super::metrics::{IdealBaseline, Metrics, RunResult};
 use super::pool::Pool;
 use super::worker::{Worker, WorkerId, WorkerState};
-use super::{Request, Scheduler};
 use crate::config::{PlatformConfig, SimConfig, WorkerKind};
+use crate::policy::{Action, Effect, Observation, Policy, PolicyView, Request, Target, WorkerObs};
 use crate::trace::AppTrace;
 
 /// Latency subsampling factor (1/N of completions recorded).
 const LATENCY_SAMPLE: u64 = 61;
 
-/// Simulation state handed to schedulers. All allocation, dispatch, and
+/// Simulation state owned by the driver. All allocation, dispatch, and
 /// retirement flows through this API so energy/cost accounting stays
-/// consistent.
+/// consistent; policies only ever see it through [`PolicyView`].
 pub struct SimState {
     pub cfg: SimConfig,
     pub pool: Pool,
@@ -102,35 +109,20 @@ impl SimState {
         Some(id)
     }
 
-    /// Spin up `n` workers of `kind`; returns how many were granted.
-    pub fn alloc_n(&mut self, kind: WorkerKind, n: u32) -> u32 {
-        (0..n).take_while(|_| self.alloc(kind).is_some()).count() as u32
-    }
-
     /// Allocate a worker that is already warm (statically provisioned
     /// before the workload window — FPGA-static's fleet). The one-time
     /// spin-up energy is still charged, but the worker is Active now.
-    pub fn alloc_prewarmed(&mut self, kind: WorkerKind, n: u32) -> u32 {
-        let granted = self.alloc_n(kind, n);
+    /// (The pending `SpinUpDone` event becomes a no-op.)
+    pub fn alloc_warm(&mut self, kind: WorkerKind) -> Option<WorkerId> {
+        let id = self.alloc(kind)?;
         let now = self.now;
-        // Rewrite the just-created workers to be ready immediately and
-        // cancel their pending SpinUpDone by making it a no-op (the event
-        // handler tolerates already-active workers via state check below).
-        let ids: Vec<_> = self
-            .pool
-            .iter_kind(kind)
-            .filter(|w| w.state == WorkerState::SpinningUp && w.alloc_time == now)
-            .map(|w| w.id)
-            .collect();
-        for id in ids {
-            let w = self.pool.get_mut(id).unwrap();
-            w.state = WorkerState::Active;
-            w.ready_at = now;
-            w.busy_until = now;
-            w.idle_since = now;
-            self.schedule_idle_timeout(id);
-        }
-        granted
+        let w = self.pool.get_mut(id).expect("just-allocated worker");
+        w.state = WorkerState::Active;
+        w.ready_at = now;
+        w.busy_until = now;
+        w.idle_since = now;
+        self.schedule_idle_timeout(id);
+        Some(id)
     }
 
     /// Would `worker` finish a `size` request by `deadline` if dispatched
@@ -176,28 +168,6 @@ impl SimState {
         finish
     }
 
-    /// Convenience used by every scheduler's burst path (Alg 3 line 6):
-    /// spin up a CPU and queue the request on it. Falls back to the
-    /// least-loaded live worker if the CPU cap is reached.
-    pub fn dispatch_to_new_cpu(&mut self, req: Request) -> f64 {
-        match self.alloc(WorkerKind::Cpu) {
-            Some(id) => self.dispatch(req, id),
-            None => {
-                // Capped: best-effort onto the earliest-finishing worker.
-                let best = self
-                    .pool
-                    .iter_all()
-                    .filter(|w| w.accepting())
-                    .min_by(|a, b| {
-                        a.busy_until.partial_cmp(&b.busy_until).unwrap()
-                    })
-                    .map(|w| w.id)
-                    .expect("no workers and CPU cap reached");
-                self.dispatch(req, best)
-            }
-        }
-    }
-
     /// Begin spin-down of an idle or never-used worker. Accounts idle
     /// energy accrued over its active window and the spin-down energy.
     pub fn retire(&mut self, worker: WorkerId) {
@@ -218,8 +188,8 @@ impl SimState {
     }
 
     /// Retire up to `n` idle workers of `kind`, longest-idle first.
-    /// Returns how many were retired.
-    pub fn retire_idle(&mut self, kind: WorkerKind, n: u32) -> u32 {
+    /// Returns the retired ids.
+    pub fn retire_idle(&mut self, kind: WorkerKind, n: u32) -> Vec<WorkerId> {
         let now = self.now;
         let mut idle: Vec<(f64, WorkerId)> = self
             .pool
@@ -229,10 +199,11 @@ impl SimState {
             .collect();
         idle.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         let take = idle.len().min(n as usize);
-        for &(_, id) in idle.iter().take(take) {
+        let ids: Vec<WorkerId> = idle.iter().take(take).map(|&(_, id)| id).collect();
+        for &id in &ids {
             self.retire(id);
         }
-        take as u32
+        ids
     }
 
     /// Drain and reset the per-interval dispatched-work counters
@@ -258,170 +229,454 @@ impl SimState {
             },
         );
     }
+
+    fn worker_obs(w: &Worker) -> WorkerObs {
+        WorkerObs {
+            id: w.id,
+            kind: w.kind,
+            state: w.state,
+            ready_at: w.ready_at,
+            busy_until: w.busy_until,
+            queued: w.queued,
+            idle_since: w.idle_since,
+        }
+    }
 }
 
-/// Run `sched` over `trace` under `cfg`; returns normalized results.
+impl PolicyView for SimState {
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn trace_live(&self) -> bool {
+        SimState::trace_live(self)
+    }
+
+    fn service_time(&self, kind: WorkerKind, size: f64) -> f64 {
+        SimState::service_time(self, kind, size)
+    }
+
+    fn allocated(&self, kind: WorkerKind) -> u32 {
+        self.pool.allocated(kind)
+    }
+
+    fn live_ids(&self, kind: WorkerKind) -> Vec<WorkerId> {
+        self.pool.live_ids(kind).to_vec()
+    }
+
+    fn worker(&self, id: WorkerId) -> Option<WorkerObs> {
+        self.pool.get(id).map(SimState::worker_obs)
+    }
+
+    fn for_each_worker(&self, kind: WorkerKind, f: &mut dyn FnMut(&WorkerObs)) {
+        for w in self.pool.iter_kind(kind) {
+            f(&SimState::worker_obs(w));
+        }
+    }
+}
+
+/// The stepping core shared by both drivers: merges the sorted arrival
+/// array with the event heap and interval ticks, observes the policy at
+/// each occurrence, and applies the returned actions to [`SimState`].
+/// Every applied side effect is reported to the caller's sink.
+pub struct Driver<'a> {
+    sim: SimState,
+    policy: &'a mut dyn Policy,
+    arrivals: &'a [crate::trace::Arrival],
+    next_arrival: usize,
+    interval: f64,
+    next_tick: f64,
+    tick_index: usize,
+    deadline_factor: f64,
+    actions: Vec<Action>,
+}
+
+impl<'a> Driver<'a> {
+    pub fn new(trace: &'a AppTrace, cfg: SimConfig, policy: &'a mut dyn Policy) -> Self {
+        let mut sim = SimState::new(cfg);
+        sim.trace_end = trace.duration;
+        let deadline_factor = sim.cfg.deadline_factor;
+        let interval = policy.interval();
+        let next_tick = if interval.is_finite() { interval } else { f64::INFINITY };
+        Self {
+            sim,
+            policy,
+            arrivals: &trace.arrivals,
+            next_arrival: 0,
+            interval,
+            next_tick,
+            tick_index: 1,
+            deadline_factor,
+            actions: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.sim.now
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.sim.metrics
+    }
+
+    /// Observe `Start` at t = 0 (pre-provisioning). Call once before
+    /// stepping.
+    pub fn start(&mut self, sink: &mut dyn FnMut(&Effect)) {
+        self.observe(Observation::Start, sink);
+    }
+
+    /// Times of the next arrival, event, and tick (infinity = exhausted).
+    /// The single source of truth for both `next_time` and `step`, so the
+    /// real-time driver's pacing target always matches what `step`
+    /// processes.
+    fn frontier(&self) -> (f64, f64, f64) {
+        let ta = self
+            .arrivals
+            .get(self.next_arrival)
+            .map(|a| a.time)
+            .unwrap_or(f64::INFINITY);
+        let te = self.sim.events.peek_time().unwrap_or(f64::INFINITY);
+        // Ticks only while the trace is live; cleanup needs no allocator.
+        let tt = if self.next_tick <= self.sim.trace_end {
+            self.next_tick
+        } else {
+            f64::INFINITY
+        };
+        (ta, te, tt)
+    }
+
+    /// Simulated time of the next occurrence, or `None` when the run is
+    /// complete (trace consumed and pool drained).
+    pub fn next_time(&self) -> Option<f64> {
+        let (ta, te, tt) = self.frontier();
+        let t = ta.min(te).min(tt);
+        t.is_finite().then_some(t)
+    }
+
+    /// Process the next occurrence (tick, event, or arrival). Returns
+    /// `false` when the run is complete.
+    pub fn step(&mut self, sink: &mut dyn FnMut(&Effect)) -> bool {
+        let (ta, te, tt) = self.frontier();
+        let t = ta.min(te).min(tt);
+        if !t.is_finite() {
+            return false;
+        }
+        self.sim.now = t;
+
+        if tt <= ta && tt <= te {
+            self.next_tick += self.interval;
+            let index = self.tick_index;
+            self.tick_index += 1;
+            let (cpu_work, fpga_work) = self.sim.take_interval_work();
+            self.observe(
+                Observation::Tick {
+                    index,
+                    cpu_work,
+                    fpga_work,
+                },
+                sink,
+            );
+            return true;
+        }
+        if te <= ta {
+            let (_, event) = self.sim.events.pop().unwrap();
+            self.handle_event(event, sink);
+            return true;
+        }
+        let a = &self.arrivals[self.next_arrival];
+        self.next_arrival += 1;
+        let req = Request {
+            arrival: a.time,
+            size: a.size,
+            deadline: a.time + self.deadline_factor * a.size,
+        };
+        self.observe(Observation::Arrival { req }, sink);
+        true
+    }
+
+    /// Consume the driver: assert the pool drained and produce the
+    /// normalized result. `defaults` parameterizes the idealized FPGA-only
+    /// baseline (the paper always normalizes against *default* Table 6
+    /// parameters).
+    pub fn finish(self, defaults: &PlatformConfig) -> RunResult {
+        debug_assert!(self.sim.pool.is_empty(), "pool not drained at end of run");
+        RunResult {
+            scheduler: self.policy.name(),
+            ideal: IdealBaseline::for_work(self.sim.metrics.total_work, defaults),
+            metrics: self.sim.metrics,
+        }
+    }
+
+    fn observe(&mut self, obs: Observation, sink: &mut dyn FnMut(&Effect)) {
+        let mut actions = std::mem::take(&mut self.actions);
+        debug_assert!(actions.is_empty());
+        self.policy.observe(obs, &self.sim, &mut actions);
+        self.apply(&mut actions, sink);
+        self.actions = actions;
+    }
+
+    fn apply(&mut self, actions: &mut Vec<Action>, sink: &mut dyn FnMut(&Effect)) {
+        for action in actions.drain(..) {
+            match action {
+                Action::Alloc { kind, n, prewarmed } => {
+                    for _ in 0..n {
+                        let granted = if prewarmed {
+                            self.sim.alloc_warm(kind)
+                        } else {
+                            self.sim.alloc(kind)
+                        };
+                        match granted {
+                            Some(worker) => sink(&Effect::Allocated {
+                                worker,
+                                kind,
+                                prewarmed,
+                            }),
+                            None => break, // cap reached
+                        }
+                    }
+                }
+                Action::Dispatch { req, to } => {
+                    let worker = match to {
+                        Target::Worker(w) => w,
+                        Target::Fresh(kind) => match self.sim.alloc(kind) {
+                            Some(w) => {
+                                sink(&Effect::Allocated {
+                                    worker: w,
+                                    kind,
+                                    prewarmed: false,
+                                });
+                                w
+                            }
+                            None => {
+                                // Capped: best-effort onto the earliest-
+                                // finishing live worker of any kind.
+                                self.sim
+                                    .pool
+                                    .iter_all()
+                                    .filter(|w| w.accepting())
+                                    .min_by(|a, b| {
+                                        a.busy_until.partial_cmp(&b.busy_until).unwrap()
+                                    })
+                                    .map(|w| w.id)
+                                    .expect("no workers and worker cap reached")
+                            }
+                        },
+                    };
+                    let kind = self
+                        .sim
+                        .pool
+                        .get(worker)
+                        .expect("dispatch target vanished")
+                        .kind;
+                    let finish = self.sim.dispatch(req, worker);
+                    sink(&Effect::Dispatched {
+                        worker,
+                        kind,
+                        arrival: req.arrival,
+                        size: req.size,
+                        deadline: req.deadline,
+                        finish,
+                    });
+                }
+                Action::Retire { kind, n } => {
+                    for worker in self.sim.retire_idle(kind, n) {
+                        sink(&Effect::Retired { worker, kind });
+                    }
+                }
+                // Only meaningful while answering IdleExpired (handled in
+                // `handle_event`); stray keep-alives are inert.
+                Action::KeepAlive { .. } => {}
+            }
+        }
+    }
+
+    fn handle_event(&mut self, event: Event, sink: &mut dyn FnMut(&Effect)) {
+        match event {
+            Event::SpinUpDone { worker } => {
+                let Some(w) = self.sim.pool.get_mut(worker) else {
+                    return; // pre-warmed worker already retired
+                };
+                if w.state != WorkerState::SpinningUp {
+                    return; // pre-warmed via alloc_warm; nothing to do
+                }
+                w.state = WorkerState::Active;
+                if w.queued == 0 {
+                    w.idle_since = self.sim.now;
+                    self.sim.schedule_idle_timeout(worker);
+                }
+                self.observe(Observation::WorkerReady { worker }, sink);
+            }
+            Event::Completion {
+                worker,
+                arrival,
+                deadline,
+            } => {
+                let now = self.sim.now;
+                if now > deadline + 1e-9 {
+                    self.sim.metrics.deadline_misses += 1;
+                }
+                self.sim.completions_seen += 1;
+                if self.sim.completions_seen % LATENCY_SAMPLE == 0 {
+                    self.sim.metrics.latency.add(now - arrival);
+                }
+                let w = self
+                    .sim
+                    .pool
+                    .get_mut(worker)
+                    .expect("completion: unknown worker");
+                if w.complete_one(now) {
+                    self.sim.schedule_idle_timeout(worker);
+                }
+                self.observe(Observation::Completion { worker }, sink);
+            }
+            Event::IdleTimeout { worker, generation } => {
+                let now = self.sim.now;
+                let mature = match self.sim.pool.get(worker) {
+                    Some(w) => {
+                        w.state == WorkerState::Active
+                            && w.queued == 0
+                            && w.generation == generation
+                            && w.busy_until <= now
+                    }
+                    None => false,
+                };
+                if mature {
+                    // Consult the policy: KeepAlive holds the worker for
+                    // another timeout window (pinned fleet / standing
+                    // headroom), anything else lets it spin down.
+                    let mut actions = std::mem::take(&mut self.actions);
+                    self.policy
+                        .observe(Observation::IdleExpired { worker }, &self.sim, &mut actions);
+                    let keep = actions
+                        .iter()
+                        .any(|a| matches!(a, Action::KeepAlive { worker: w } if *w == worker));
+                    actions.retain(|a| !matches!(a, Action::KeepAlive { .. }));
+                    self.apply(&mut actions, sink);
+                    self.actions = actions;
+                    if keep {
+                        self.sim.schedule_idle_timeout(worker);
+                        sink(&Effect::KeptAlive { worker });
+                    } else {
+                        // Re-check after applying the policy's actions: a
+                        // Retire/Dispatch in the same batch may have already
+                        // retired this worker or handed it new work.
+                        let still_idle = self.sim.pool.get(worker).map_or(false, |w| {
+                            w.state == WorkerState::Active
+                                && w.queued == 0
+                                && w.busy_until <= now
+                        });
+                        if still_idle {
+                            let kind = self.sim.pool.get(worker).expect("idle worker").kind;
+                            self.sim.retire(worker);
+                            sink(&Effect::Retired { worker, kind });
+                        }
+                    }
+                }
+            }
+            Event::SpinDownDone { worker } => {
+                let w = self.sim.pool.remove(worker);
+                debug_assert_eq!(w.state, WorkerState::SpinningDown);
+                let params = self.sim.cfg.platform.params(w.kind);
+                let lifetime = self.sim.now - w.alloc_time;
+                match w.kind {
+                    WorkerKind::Cpu => {
+                        self.sim.metrics.cpu_cost += lifetime * params.cost_per_sec()
+                    }
+                    WorkerKind::Fpga => {
+                        self.sim.metrics.fpga_cost += lifetime * params.cost_per_sec()
+                    }
+                }
+                self.observe(
+                    Observation::Dealloc {
+                        kind: w.kind,
+                        lifetime,
+                        peers_at_alloc: w.peers_at_alloc,
+                    },
+                    sink,
+                );
+            }
+        }
+    }
+}
+
+/// Run `policy` over `trace` under `cfg`; returns normalized results.
 /// `defaults` parameterizes the idealized FPGA-only baseline (the paper
 /// always normalizes against *default* Table 6 parameters).
 pub fn run(
     trace: &AppTrace,
     cfg: SimConfig,
     defaults: &PlatformConfig,
-    sched: &mut dyn Scheduler,
+    policy: &mut dyn Policy,
 ) -> RunResult {
-    let mut sim = SimState::new(cfg);
-    sim.trace_end = trace.duration;
-    let deadline_factor = sim.cfg.deadline_factor;
-    let interval = sched.interval();
-
-    sched.on_start(&mut sim);
-
-    let mut next_tick = if interval.is_finite() { interval } else { f64::INFINITY };
-    let mut arrivals = trace.arrivals.iter().peekable();
-
-    loop {
-        let ta = arrivals.peek().map(|a| a.time).unwrap_or(f64::INFINITY);
-        let te = sim.events.peek_time().unwrap_or(f64::INFINITY);
-        // Ticks only while the trace is live; cleanup needs no allocator.
-        let tt = if next_tick <= trace.duration { next_tick } else { f64::INFINITY };
-
-        let t = ta.min(te).min(tt);
-        if !t.is_finite() {
-            break;
-        }
-        sim.now = t;
-
-        if tt <= ta && tt <= te {
-            next_tick += interval;
-            sched.on_tick(&mut sim);
-            continue;
-        }
-        if te <= ta {
-            let (_, event) = sim.events.pop().unwrap();
-            handle_event(&mut sim, sched, event);
-            continue;
-        }
-        let a = arrivals.next().unwrap();
-        let req = Request {
-            arrival: a.time,
-            size: a.size,
-            deadline: a.time + deadline_factor * a.size,
-        };
-        sched.on_request(req, &mut sim);
-    }
-
-    debug_assert!(sim.pool.is_empty(), "pool not drained at end of run");
-    RunResult {
-        scheduler: sched.name(),
-        ideal: IdealBaseline::for_work(sim.metrics.total_work, defaults),
-        metrics: sim.metrics,
-    }
+    run_with_sink(trace, cfg, defaults, policy, &mut |_| {})
 }
 
-fn handle_event(sim: &mut SimState, sched: &mut dyn Scheduler, event: Event) {
-    match event {
-        Event::SpinUpDone { worker } => {
-            let Some(w) = sim.pool.get_mut(worker) else {
-                return; // pre-warmed worker already retired
-            };
-            if w.state != WorkerState::SpinningUp {
-                return; // pre-warmed via alloc_prewarmed; nothing to do
-            }
-            w.state = WorkerState::Active;
-            if w.queued == 0 {
-                w.idle_since = sim.now;
-                sim.schedule_idle_timeout(worker);
-            }
-        }
-        Event::Completion {
-            worker,
-            arrival,
-            deadline,
-        } => {
-            let now = sim.now;
-            if now > deadline + 1e-9 {
-                sim.metrics.deadline_misses += 1;
-            }
-            sim.completions_seen += 1;
-            if sim.completions_seen % LATENCY_SAMPLE == 0 {
-                sim.metrics.latency.add(now - arrival);
-            }
-            let w = sim.pool.get_mut(worker).expect("completion: unknown worker");
-            if w.complete_one(now) {
-                sim.schedule_idle_timeout(worker);
-            }
-        }
-        Event::IdleTimeout { worker, generation } => {
-            let now = sim.now;
-            let retire = match sim.pool.get(worker) {
-                Some(w) => {
-                    w.state == WorkerState::Active
-                        && w.queued == 0
-                        && w.generation == generation
-                        && w.busy_until <= now
-                }
-                None => false,
-            };
-            if retire {
-                if sched.keep_alive(worker, sim) {
-                    // Pinned fleet / standing headroom: hold for another
-                    // timeout period, then re-evaluate.
-                    sim.schedule_idle_timeout(worker);
-                } else {
-                    sim.retire(worker);
-                }
-            }
-        }
-        Event::SpinDownDone { worker } => {
-            let w = sim.pool.remove(worker);
-            debug_assert_eq!(w.state, WorkerState::SpinningDown);
-            let params = sim.cfg.platform.params(w.kind);
-            let lifetime = sim.now - w.alloc_time;
-            match w.kind {
-                WorkerKind::Cpu => sim.metrics.cpu_cost += lifetime * params.cost_per_sec(),
-                WorkerKind::Fpga => sim.metrics.fpga_cost += lifetime * params.cost_per_sec(),
-            }
-            sched.on_dealloc(w.kind, lifetime, w.peers_at_alloc, sim);
-        }
-    }
+/// Like [`run`], reporting every applied [`Effect`] to `sink` — the audit
+/// stream the driver-parity suite compares against the real-time driver.
+pub fn run_with_sink(
+    trace: &AppTrace,
+    cfg: SimConfig,
+    defaults: &PlatformConfig,
+    policy: &mut dyn Policy,
+    sink: &mut dyn FnMut(&Effect),
+) -> RunResult {
+    let mut driver = Driver::new(trace, cfg, policy);
+    driver.start(sink);
+    while driver.step(sink) {}
+    driver.finish(defaults)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::Target;
     use crate::trace::{AppTrace, Arrival};
 
-    /// Trivial reactive scheduler: one new CPU per request (serverless
-    /// 1:1). Exercises the full worker lifecycle.
+    /// Trivial reactive policy: one new CPU per request (serverless 1:1).
+    /// Exercises the full worker lifecycle.
     struct OnePerRequest;
-    impl Scheduler for OnePerRequest {
+    impl Policy for OnePerRequest {
         fn name(&self) -> String {
             "one-per-request".into()
         }
         fn interval(&self) -> f64 {
             f64::INFINITY
         }
-        fn on_request(&mut self, req: Request, sim: &mut SimState) {
-            sim.dispatch_to_new_cpu(req);
+        fn observe(&mut self, obs: Observation, _view: &dyn PolicyView, out: &mut Vec<Action>) {
+            if let Observation::Arrival { req } = obs {
+                out.push(Action::Dispatch {
+                    req,
+                    to: Target::Fresh(WorkerKind::Cpu),
+                });
+            }
         }
     }
 
-    /// Scheduler that packs everything onto a single pre-allocated FPGA.
-    struct OneFpga {
-        id: Option<WorkerId>,
-    }
-    impl Scheduler for OneFpga {
+    /// Policy that packs everything onto a single pre-allocated FPGA.
+    struct OneFpga;
+    impl Policy for OneFpga {
         fn name(&self) -> String {
             "one-fpga".into()
         }
         fn interval(&self) -> f64 {
             f64::INFINITY
         }
-        fn on_start(&mut self, sim: &mut SimState) {
-            self.id = Some(sim.alloc(WorkerKind::Fpga).unwrap());
-        }
-        fn on_request(&mut self, req: Request, sim: &mut SimState) {
-            sim.dispatch(req, self.id.unwrap());
+        fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+            match obs {
+                Observation::Start => out.push(Action::Alloc {
+                    kind: WorkerKind::Fpga,
+                    n: 1,
+                    prewarmed: false,
+                }),
+                Observation::Arrival { req } => {
+                    let id = view.live_ids(WorkerKind::Fpga)[0];
+                    out.push(Action::Dispatch {
+                        req,
+                        to: Target::Worker(id),
+                    });
+                }
+                _ => {}
+            }
         }
     }
 
@@ -481,7 +736,7 @@ mod tests {
             .collect();
         let trace = AppTrace::new("mini", arrivals, 11.2);
         let cfg = SimConfig::paper_default();
-        let r = run(&trace, cfg, &defaults(), &mut OneFpga { id: None });
+        let r = run(&trace, cfg, &defaults(), &mut OneFpga);
         let m = &r.metrics;
         assert_eq!(m.on_fpga, 100);
         assert_eq!(m.fpga_spinups, 1);
@@ -501,7 +756,7 @@ mod tests {
             .collect();
         let trace = AppTrace::new("burst", arrivals, 1.0);
         let cfg = SimConfig::paper_default();
-        let r = run(&trace, cfg, &defaults(), &mut OneFpga { id: None });
+        let r = run(&trace, cfg, &defaults(), &mut OneFpga);
         // deadline = 0.1; spin_up 10s dominates → all miss.
         assert_eq!(r.metrics.deadline_misses, 20);
     }
@@ -528,30 +783,31 @@ mod tests {
         let mut cfg = SimConfig::paper_default();
         cfg.cpu_idle_timeout = 1.0;
         let trace = mini_trace(10, 0.5, 0.010);
-        let r = run(&trace, cfg, &defaults(), &mut ReuseCpu { id: None });
+        let r = run(&trace, cfg, &defaults(), &mut ReuseCpu);
         assert_eq!(r.metrics.cpu_spinups, 1, "worker should be reused");
     }
 
-    /// Reuses one CPU if alive, else allocates.
-    struct ReuseCpu {
-        id: Option<WorkerId>,
-    }
-    impl Scheduler for ReuseCpu {
+    /// Reuses the first accepting CPU if alive, else allocates fresh.
+    struct ReuseCpu;
+    impl Policy for ReuseCpu {
         fn name(&self) -> String {
             "reuse-cpu".into()
         }
         fn interval(&self) -> f64 {
             f64::INFINITY
         }
-        fn on_request(&mut self, req: Request, sim: &mut SimState) {
-            let alive = self
-                .id
-                .and_then(|id| sim.pool.get(id).map(|w| w.accepting()))
-                .unwrap_or(false);
-            if !alive {
-                self.id = Some(sim.alloc(WorkerKind::Cpu).unwrap());
+        fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+            if let Observation::Arrival { req } = obs {
+                let alive = view
+                    .live_ids(WorkerKind::Cpu)
+                    .into_iter()
+                    .find(|&id| view.worker(id).map_or(false, |w| w.accepting()));
+                let to = match alive {
+                    Some(id) => Target::Worker(id),
+                    None => Target::Fresh(WorkerKind::Cpu),
+                };
+                out.push(Action::Dispatch { req, to });
             }
-            sim.dispatch(req, self.id.unwrap());
         }
     }
 
@@ -569,24 +825,56 @@ mod tests {
     fn ticks_fire_while_trace_live() {
         struct TickCounter {
             ticks: u32,
+            last_index: usize,
         }
-        impl Scheduler for TickCounter {
+        impl Policy for TickCounter {
             fn name(&self) -> String {
                 "ticks".into()
             }
             fn interval(&self) -> f64 {
                 1.0
             }
-            fn on_tick(&mut self, _sim: &mut SimState) {
-                self.ticks += 1;
-            }
-            fn on_request(&mut self, req: Request, sim: &mut SimState) {
-                sim.dispatch_to_new_cpu(req);
+            fn observe(&mut self, obs: Observation, _view: &dyn PolicyView, out: &mut Vec<Action>) {
+                match obs {
+                    Observation::Tick { index, .. } => {
+                        self.ticks += 1;
+                        self.last_index = index;
+                    }
+                    Observation::Arrival { req } => out.push(Action::Dispatch {
+                        req,
+                        to: Target::Fresh(WorkerKind::Cpu),
+                    }),
+                    _ => {}
+                }
             }
         }
         let trace = mini_trace(5, 2.0, 0.010); // duration 10
-        let mut s = TickCounter { ticks: 0 };
+        let mut s = TickCounter { ticks: 0, last_index: 0 };
         run(&trace, SimConfig::paper_default(), &defaults(), &mut s);
         assert_eq!(s.ticks, 10); // t = 1..=10
+        assert_eq!(s.last_index, 10); // Tick index k <=> t = k * T_s
+    }
+
+    #[test]
+    fn effect_stream_covers_run() {
+        let trace = mini_trace(10, 1.0, 0.010);
+        let mut dispatched = 0u32;
+        let mut allocated = 0u32;
+        let mut retired = 0u32;
+        run_with_sink(
+            &trace,
+            SimConfig::paper_default(),
+            &defaults(),
+            &mut OnePerRequest,
+            &mut |e| match e {
+                Effect::Dispatched { .. } => dispatched += 1,
+                Effect::Allocated { .. } => allocated += 1,
+                Effect::Retired { .. } => retired += 1,
+                Effect::KeptAlive { .. } => {}
+            },
+        );
+        assert_eq!(dispatched, 10);
+        assert_eq!(allocated, 10);
+        assert_eq!(retired, 10, "every worker must retire by drain");
     }
 }

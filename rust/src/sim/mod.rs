@@ -1,7 +1,7 @@
 //! Discrete-event simulator for hybrid FPGA-CPU platforms.
 //!
 //! The simulator executes one application's arrival trace against a
-//! [`Scheduler`] implementation over a worker [`pool::Pool`], accounting
+//! [`Policy`] implementation over a worker [`pool::Pool`], accounting
 //! energy (alloc / busy / idle / dealloc), occupancy cost, and deadline
 //! behaviour exactly as §5.1 of the paper specifies:
 //!
@@ -18,60 +18,11 @@ pub mod metrics;
 pub mod pool;
 pub mod worker;
 
-pub use engine::{run, SimState};
+pub use engine::{run, run_with_sink, Driver, SimState};
 pub use metrics::{EnergyBreakdown, IdealBaseline, Metrics, RunResult};
 pub use worker::{Worker, WorkerId, WorkerState};
 
-use crate::config::WorkerKind;
-
-/// One request moving through the system. Sizes are known in advance
-/// (paper §4.5); `deadline` is absolute.
-#[derive(Clone, Copy, Debug)]
-pub struct Request {
-    pub arrival: f64,
-    /// Service time on a CPU worker, seconds.
-    pub size: f64,
-    pub deadline: f64,
-}
-
-/// Scheduler interface: the engine calls these hooks; implementations make
-/// allocation and dispatch decisions through [`SimState`].
-pub trait Scheduler {
-    /// Machine name (matches `SchedulerKind::name()` where applicable).
-    fn name(&self) -> String;
-
-    /// Scheduling interval T_s. The engine ticks at t = 0, T_s, 2*T_s, ...
-    /// while the trace is live. Return `f64::INFINITY` for purely reactive
-    /// schedulers that don't want ticks.
-    fn interval(&self) -> f64;
-
-    /// Called once at t = 0 before any arrivals (pre-provisioning).
-    fn on_start(&mut self, _sim: &mut SimState) {}
-
-    /// Called at every interval boundary (t > 0).
-    fn on_tick(&mut self, _sim: &mut SimState) {}
-
-    /// Called for every arriving request; the implementation must dispatch
-    /// it (possibly by spinning up a new worker — Alg 3 line 6).
-    fn on_request(&mut self, req: Request, sim: &mut SimState);
-
-    /// Consulted when a worker's idle timeout matures: return `true` to
-    /// keep the worker alive for another timeout period (statically
-    /// provisioned fleets / standing headroom), `false` to let it spin
-    /// down. Defaults to the paper's universal idle-timeout reclamation.
-    fn keep_alive(&self, _worker: WorkerId, _sim: &SimState) -> bool {
-        false
-    }
-
-    /// Notification that a worker fully deallocated (after spin-down).
-    /// `lifetime` is alloc→dealloc; `peers_at_alloc` is the same-kind
-    /// allocated count at the worker's allocation (Spork's 𝕃 key).
-    fn on_dealloc(
-        &mut self,
-        _kind: WorkerKind,
-        _lifetime: f64,
-        _peers_at_alloc: u32,
-        _sim: &mut SimState,
-    ) {
-    }
-}
+// The scheduling interface lives in the transport-agnostic `policy`
+// module (one policy API, many drivers); re-exported here because the
+// simulator is its reference driver.
+pub use crate::policy::{Policy, Request};

@@ -7,16 +7,10 @@
 
 use crate::config::WorkerKind;
 
-/// Stable worker identifier (slab index in the pool).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct WorkerId(pub u32);
-
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum WorkerState {
-    SpinningUp,
-    Active,
-    SpinningDown,
-}
+// Worker identity and lifecycle are part of the transport-agnostic policy
+// vocabulary; re-exported here so `sim::worker::{WorkerId, WorkerState}`
+// paths keep working.
+pub use crate::policy::{WorkerId, WorkerState};
 
 #[derive(Clone, Debug)]
 pub struct Worker {

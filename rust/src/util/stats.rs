@@ -112,6 +112,11 @@ impl Sample {
         self.xs.is_empty()
     }
 
+    /// The stored values (sorted iff a percentile was taken).
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+
     fn ensure_sorted(&mut self) {
         if !self.sorted {
             self.xs

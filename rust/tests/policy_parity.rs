@@ -1,0 +1,166 @@
+//! Driver-equivalence suite: the sim driver and the real-time serving
+//! driver must execute *identical* action streams for the same policy,
+//! trace, and pool caps — the acceptance bar of the policy-core redesign
+//! (served behavior equals simulated behavior).
+//!
+//! The serve side runs at effectively infinite time scale with stubbed
+//! compute (no artifacts, no worker threads, no pacing sleeps), so the
+//! comparison is exact and fast. Every `SchedulerKind` in the Table 8
+//! roster is replayed through both drivers.
+
+use spork::config::{PlatformConfig, SchedulerKind};
+use spork::policy::Effect;
+use spork::sched;
+use spork::serve::{run_serve_policy, Compute, ServeConfig};
+use spork::sim;
+use spork::trace::{synthetic_app, AppTrace};
+use spork::util::rng::Rng;
+
+const POOL_CPUS: usize = 8;
+const POOL_FPGAS: usize = 4;
+
+fn parity_trace() -> AppTrace {
+    let mut rng = Rng::new(21);
+    synthetic_app("parity", &mut rng, 0.6, 120.0, 60.0, 0.010)
+}
+
+fn serve_cfg() -> ServeConfig {
+    // Stubbed compute never sleeps, so the time scale is nominal.
+    let mut cfg = ServeConfig::defaults("unused-artifacts", 1e6);
+    cfg.pool_cpus = POOL_CPUS;
+    cfg.pool_fpgas = POOL_FPGAS;
+    cfg
+}
+
+/// Action stream from the sim driver.
+fn sim_effects(kind: &SchedulerKind, trace: &AppTrace) -> Vec<Effect> {
+    let sim_cfg = serve_cfg().sim_config(POOL_CPUS, POOL_FPGAS);
+    let mut policy = sched::build(kind, &sim_cfg, trace);
+    let mut log = Vec::new();
+    sim::run_with_sink(
+        trace,
+        sim_cfg,
+        &PlatformConfig::paper_default(),
+        policy.as_mut(),
+        &mut |e| log.push(*e),
+    );
+    log
+}
+
+/// Action stream from the real-time driver (stubbed compute).
+fn serve_effects(kind: &SchedulerKind, trace: &AppTrace) -> Vec<Effect> {
+    let cfg = serve_cfg();
+    let sim_cfg = cfg.sim_config(POOL_CPUS, POOL_FPGAS);
+    let mut policy = sched::build(kind, &sim_cfg, trace);
+    let mut rng = Rng::new(7);
+    let mut log = Vec::new();
+    run_serve_policy(
+        &cfg,
+        policy.as_mut(),
+        trace,
+        &mut rng,
+        Compute::Stub,
+        &mut |e| log.push(*e),
+    )
+    .expect("stub serve cannot fail");
+    log
+}
+
+#[test]
+fn every_table8_kind_runs_identically_under_both_drivers() {
+    let trace = parity_trace();
+    for kind in SchedulerKind::table8_roster() {
+        let a = sim_effects(&kind, &trace);
+        let b = serve_effects(&kind, &trace);
+        assert!(
+            !a.is_empty(),
+            "{}: sim driver produced no effects",
+            kind.name()
+        );
+        assert_eq!(
+            a.len(),
+            b.len(),
+            "{}: effect counts diverge (sim {} vs serve {})",
+            kind.name(),
+            a.len(),
+            b.len()
+        );
+        for (i, (ea, eb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                ea,
+                eb,
+                "{}: drivers diverge at effect #{i}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn spork_stream_is_pinned_and_complete() {
+    let trace = parity_trace();
+    let kind = SchedulerKind::spork_e();
+    let stream = sim_effects(&kind, &trace);
+    assert_eq!(stream, serve_effects(&kind, &trace));
+
+    // Every request is dispatched exactly once, in arrival order.
+    let dispatches: Vec<f64> = stream
+        .iter()
+        .filter_map(|e| match e {
+            Effect::Dispatched { arrival, .. } => Some(*arrival),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(dispatches.len(), trace.len());
+    for (d, a) in dispatches.iter().zip(&trace.arrivals) {
+        assert_eq!(*d, a.time);
+    }
+
+    // The stream exercises the full action vocabulary: allocations and
+    // retirements must balance (pool drained at end of run).
+    let allocs = stream
+        .iter()
+        .filter(|e| matches!(e, Effect::Allocated { .. }))
+        .count();
+    let retires = stream
+        .iter()
+        .filter(|e| matches!(e, Effect::Retired { .. }))
+        .count();
+    assert!(allocs > 0, "Spork never allocated");
+    assert_eq!(allocs, retires, "every allocated worker must retire");
+}
+
+#[test]
+fn parity_holds_under_tight_pool_caps() {
+    // Caps force the Fresh-dispatch fallback (cap reached → earliest-
+    // finishing worker) onto both drivers; they must still agree.
+    let mut rng = Rng::new(33);
+    let trace = synthetic_app("tight", &mut rng, 0.7, 90.0, 120.0, 0.010);
+    let mut cfg = ServeConfig::defaults("unused-artifacts", 1e6);
+    cfg.pool_cpus = 2;
+    cfg.pool_fpgas = 1;
+    let sim_cfg = cfg.sim_config(2, 1);
+    for kind in [
+        SchedulerKind::spork_e(),
+        SchedulerKind::CpuDynamic,
+        SchedulerKind::MarkIdeal,
+    ] {
+        let mut p1 = sched::build(&kind, &sim_cfg, &trace);
+        let mut a = Vec::new();
+        sim::run_with_sink(
+            &trace,
+            sim_cfg.clone(),
+            &PlatformConfig::paper_default(),
+            p1.as_mut(),
+            &mut |e| a.push(*e),
+        );
+        let mut p2 = sched::build(&kind, &sim_cfg, &trace);
+        let mut b = Vec::new();
+        let mut rng2 = Rng::new(1);
+        run_serve_policy(&cfg, p2.as_mut(), &trace, &mut rng2, Compute::Stub, &mut |e| {
+            b.push(*e)
+        })
+        .unwrap();
+        assert_eq!(a, b, "{} diverged under caps", kind.name());
+    }
+}

@@ -1,5 +1,8 @@
-//! Smoke test for the serving runtime: a short scaled-time run through
-//! the full three-layer stack. Gated on artifacts (run `make artifacts`).
+//! Smoke test for the serving runtime with *real* compute: a short
+//! scaled-time run through the full three-layer stack, SporkE driving the
+//! warm PJRT pool via the real-time driver. Gated on artifacts (run
+//! `make artifacts`); the artifact-free serve path is covered by
+//! `policy_parity.rs` and the in-module stub tests.
 
 use spork::serve::{run_serve_trace, ServeConfig};
 use spork::trace::synthetic_app_dt;
@@ -29,6 +32,7 @@ fn serve_end_to_end_smoke() {
     assert_eq!(report.requests as usize, trace.len(), "lost requests");
     assert_eq!(report.on_cpu + report.on_fpga, report.requests);
     assert_eq!(completions.len(), trace.len());
+    assert_eq!(report.scheduler, "spork-e");
     // Real compute happened: outputs are not all identical/zero.
     let distinct: std::collections::HashSet<u32> = completions
         .iter()
