@@ -81,10 +81,12 @@ fn state_with_workers(n_fpga: u32, n_cpu: u32) -> SimState {
         let n = if kind == WorkerKind::Fpga { n_fpga } else { n_cpu };
         for _ in 0..n {
             let id = sim.alloc(kind).unwrap();
-            let w = sim.pool.get_mut(id).unwrap();
-            w.state = WorkerState::Active;
-            w.busy_until = rng.range_f64(0.0, 0.05);
-            w.queued = 1;
+            let busy = rng.range_f64(0.0, 0.05);
+            sim.pool.with_mut(id, |w| {
+                w.state = WorkerState::Active;
+                w.busy_until = busy;
+                w.queued = 1;
+            });
         }
     }
     sim
@@ -161,7 +163,34 @@ fn bench_predictor() {
     }
 }
 
+fn bench_streaming_replay() {
+    // The perf-trajectory headline: a long synthetic trace through the
+    // streaming path (constant memory in trace length). Defaults to 200k
+    // arrivals to keep `cargo bench` snappy; set SPORK_BENCH_ARRIVALS
+    // (e.g. 1000000) for the full datacenter-scale replay. Runs FIRST in
+    // main(): VmHWM is a process-lifetime high-water mark, so the RSS
+    // figure is only meaningful before the materialized benches run.
+    // (`spork bench-sim` is the canonical standalone-process number and
+    // writes BENCH_sim_throughput.json for CI artifact tracking.)
+    println!("-- streaming replay (spork bench-sim harness) --");
+    let n: u64 = std::env::var("SPORK_BENCH_ARRIVALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200_000);
+    let r = spork::exp::run_bench_sim(&SchedulerKind::spork_e(), n, 2000.0, 1);
+    println!(
+        "{:<48} {:>10.2} M arrivals/s",
+        format!("  sporkE streaming: {} arrivals", r.arrivals),
+        r.arrivals_per_sec / 1e6
+    );
+    println!(
+        "{:<48} {:>9} kB",
+        "  peak RSS (VmHWM proxy)", r.peak_rss_kb
+    );
+}
+
 fn main() {
+    bench_streaming_replay();
     bench_sweep_engine();
     bench_sim_engine();
     bench_dispatch();

@@ -1,0 +1,174 @@
+//! `spork bench-sim`: the simulator-throughput trajectory harness.
+//!
+//! Replays a large (default 1M-arrival) synthetic trace through the
+//! streaming sim path (`sched::build_source` + `sim::run_source`, with
+//! any fitting passes excluded from the timer) and reports arrivals/sec
+//! plus a peak-RSS proxy to `BENCH_sim_throughput.json`.
+//! The workload streams from its `(seed, 0)` RNG, so memory stays
+//! bounded by pool size + pending events no matter how many arrivals
+//! replay — the point the bench exists to keep true. CI runs a reduced-N
+//! smoke configuration and uploads the JSON as a per-PR artifact, so
+//! throughput or memory regressions are visible in review.
+
+use crate::cli::Args;
+use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
+use crate::sched;
+use crate::sim;
+use crate::trace::{synthetic_source, ArrivalSource};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchSimReport {
+    pub scheduler: String,
+    /// Arrivals actually replayed (Poisson sampling jitters around the
+    /// target).
+    pub arrivals: u64,
+    pub sim_seconds: f64,
+    pub wall_seconds: f64,
+    pub arrivals_per_sec: f64,
+    /// Peak resident set size in kB (Linux `VmHWM`; 0 where unavailable).
+    /// A process-lifetime high-water mark — an upper bound on what the
+    /// replay itself needed.
+    pub peak_rss_kb: u64,
+    pub deadline_misses: u64,
+}
+
+impl BenchSimReport {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"scheduler\": \"{}\",\n  \"arrivals\": {},\n  \
+             \"sim_seconds\": {:.3},\n  \"wall_seconds\": {:.3},\n  \
+             \"arrivals_per_sec\": {:.1},\n  \"peak_rss_kb\": {},\n  \
+             \"deadline_misses\": {}\n}}\n",
+            self.scheduler,
+            self.arrivals,
+            self.sim_seconds,
+            self.wall_seconds,
+            self.arrivals_per_sec,
+            self.peak_rss_kb,
+            self.deadline_misses,
+        )
+    }
+}
+
+/// Peak resident set size (`VmHWM`) in kB. Linux-only proc parse; returns
+/// 0 on other platforms (the JSON field then just reads as "unknown").
+pub fn peak_rss_kb() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+/// Replay `target_arrivals` synthetic arrivals (rate `rate` req/s,
+/// b = 0.65, 10 ms requests) through `kind` on the streaming path and
+/// time it end-to-end.
+pub fn run_bench_sim(
+    kind: &SchedulerKind,
+    target_arrivals: u64,
+    rate: f64,
+    seed: u64,
+) -> BenchSimReport {
+    let duration = target_arrivals as f64 / rate;
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    // The factory owns only Copy parameters, so it is 'static and
+    // re-creatable for however many passes the kind needs.
+    let make = move || -> Box<dyn ArrivalSource> {
+        Box::new(synthetic_source(
+            "bench",
+            Rng::for_stream(seed, 0),
+            0.65,
+            duration,
+            rate,
+            0.010,
+            60.0,
+        ))
+    };
+    // Build (including any fitting/oracle passes) outside the timer so
+    // arrivals_per_sec measures exactly one streaming replay for every
+    // kind — fitted kinds would otherwise amortize up to 9 untracked
+    // passes into the reported throughput.
+    let mut policy = sched::build_source(kind, &cfg, &make);
+    let t0 = Instant::now();
+    let r = sim::run_source(make(), cfg.clone(), &defaults, policy.as_mut());
+    let wall = t0.elapsed().as_secs_f64();
+    BenchSimReport {
+        scheduler: r.scheduler.clone(),
+        arrivals: r.metrics.requests,
+        sim_seconds: duration,
+        wall_seconds: wall,
+        arrivals_per_sec: r.metrics.requests as f64 / wall.max(1e-9),
+        peak_rss_kb: peak_rss_kb(),
+        deadline_misses: r.metrics.deadline_misses,
+    }
+}
+
+/// `spork bench-sim` CLI entrypoint.
+pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
+    let arrivals = args.u64_or("arrivals", 1_000_000)?;
+    let rate = args.f64_or("rate", 2000.0)?;
+    if arrivals == 0 {
+        return Err("--arrivals must be > 0".into());
+    }
+    if !(rate > 0.0 && rate.is_finite()) {
+        return Err("--rate must be a finite positive number".into());
+    }
+    let seed = args.u64_or("seed", 1)?;
+    let out = args.str_or("out", "BENCH_sim_throughput.json");
+    let name = args.str_or("scheduler", "spork-e");
+    let kind = SchedulerKind::from_name(&name)
+        .ok_or(format!("unknown scheduler '{name}'"))?;
+    eprintln!(
+        "replaying ~{arrivals} arrivals at {rate} req/s through {} (streaming)...",
+        kind.display()
+    );
+    let report = run_bench_sim(&kind, arrivals, rate, seed);
+    let json = report.to_json();
+    std::fs::write(&out, &json).map_err(|e| format!("writing {out}: {e}"))?;
+    println!(
+        "{} arrivals in {:.2}s = {:.0} arrivals/s (peak RSS {} kB, {} misses) -> {}",
+        report.arrivals,
+        report.wall_seconds,
+        report.arrivals_per_sec,
+        report.peak_rss_kb,
+        report.deadline_misses,
+        out
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_bench_runs_and_reports() {
+        let r = run_bench_sim(&SchedulerKind::spork_e(), 5_000, 500.0, 7);
+        assert_eq!(r.scheduler, "spork-e");
+        // Poisson jitter: within 20% of target.
+        assert!(
+            (r.arrivals as f64 - 5_000.0).abs() < 1_000.0,
+            "arrivals {}",
+            r.arrivals
+        );
+        assert!(r.arrivals_per_sec > 0.0);
+        let j = r.to_json();
+        assert!(j.contains("\"arrivals_per_sec\""));
+        assert!(crate::util::json::Json::parse(&j).is_ok(), "bench JSON must parse");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = run_bench_sim(&SchedulerKind::spork_e(), 2_000, 400.0, 3);
+        let b = run_bench_sim(&SchedulerKind::spork_e(), 2_000, 400.0, 3);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.deadline_misses, b.deadline_misses);
+    }
+}

@@ -3,12 +3,14 @@
 //! to stdout and under `results/` as txt/csv/md.
 
 pub mod ablation;
+pub mod benchsim;
 pub mod common;
 pub mod offline;
 pub mod production_exp;
 pub mod sensitivity;
 pub mod sweep;
 
+pub use benchsim::{cmd_bench_sim, run_bench_sim, BenchSimReport};
 pub use common::{Cell, ExpCtx};
 pub use sweep::{SweepCell, SweepGrid, WorkloadSpec};
 

@@ -100,16 +100,39 @@ impl SweepGrid {
         let runs = parallel_map(&units, self.jobs, |_, &(c, s)| {
             let cell = &self.cells[c];
             let w = &cell.workload;
-            let mut rng = Rng::for_stream(cell.seed_base, s);
-            let trace = crate::trace::synthetic_app(
-                "exp",
-                &mut rng,
-                w.burstiness,
-                w.duration,
-                w.rate,
-                w.size,
-            );
-            let r = sched::run_scheduler(&cell.scheduler, &trace, &cell.cfg, &defaults);
+            // Single-pass kinds stream the workload straight into the
+            // driver: the b-model synthesis is lazy (sequence-identical
+            // to the materialized `synthetic_app`, pinned by
+            // tests/source_parity.rs), so a cell's memory is bounded by
+            // pool + events, not trace length. Multi-pass kinds (oracle
+            // construction / the §5.1 fitting searches replay the
+            // workload up to ~11 times) synthesize once and re-run the
+            // materialized trace instead — sweep cells are bounded, so
+            // trading that memory for not re-synthesizing every pass is
+            // the right call here; genuinely huge streams go through
+            // `run_scheduler_source` with a re-creatable factory.
+            let source = || {
+                crate::trace::synthetic_source(
+                    "exp",
+                    Rng::for_stream(cell.seed_base, s),
+                    w.burstiness,
+                    w.duration,
+                    w.rate,
+                    w.size,
+                    60.0,
+                )
+            };
+            let r = match &cell.scheduler {
+                SchedulerKind::CpuDynamic | SchedulerKind::Spork { ideal: false, .. } => {
+                    sched::run_scheduler_source(&cell.scheduler, &cell.cfg, &defaults, &|| {
+                        Box::new(source())
+                    })
+                }
+                _ => {
+                    let trace = crate::trace::AppTrace::from_source(&mut source());
+                    sched::run_scheduler(&cell.scheduler, &trace, &cell.cfg, &defaults)
+                }
+            };
             Cell::from_run(&r.metrics, &r.ideal)
         });
         // Merge replicates in unit order (units are sorted by (cell,

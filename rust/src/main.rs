@@ -69,6 +69,17 @@ fn specs() -> Vec<Spec> {
             ],
         },
         Spec {
+            name: "bench-sim",
+            about: "replay a large synthetic trace through the streaming sim path; writes BENCH_sim_throughput.json",
+            opts: vec![
+                ("arrivals", true, "target arrival count (default 1000000)"),
+                ("rate", true, "mean req/s of the synthetic trace (default 2000)"),
+                ("scheduler", true, "any Table-8 kind (default spork-e)"),
+                ("seed", true, "rng stream seed (default 1)"),
+                ("out", true, "output JSON path (default BENCH_sim_throughput.json)"),
+            ],
+        },
+        Spec {
             name: "serve",
             about: "serve a compiled model through the hybrid runtime (requires artifacts/, or --dry-run)",
             opts: vec![
@@ -124,6 +135,7 @@ fn main() {
         Some("compare") => cmd_compare(&args),
         Some("trace-gen") => cmd_trace_gen(&args),
         Some("experiment") => spork::exp::cmd_experiment(&args),
+        Some("bench-sim") => spork::exp::cmd_bench_sim(&args),
         Some("serve") => spork::serve::cmd_serve(&args),
         Some("pareto") => spork::opt::cmd_pareto(&args),
         _ => Err("no subcommand given; see --help".to_string()),

@@ -8,12 +8,11 @@ use crate::config::WorkerKind;
 /// the real-time driver over the same state paced in wall-clock time.
 ///
 /// Iteration order contract: `live_ids` / `for_each_worker` enumerate
-/// workers in the owning pool's live-list order — stable between
-/// observations but arbitrary after removals (the pool swap-removes).
-/// Tie-breaking in dispatch scans is deterministic and driver-independent
-/// because both drivers step the same pool implementation; a new driver
-/// must reproduce this order (or share the pool) to keep effect-stream
-/// parity.
+/// workers in ascending id order (the pool's live index) — fully
+/// deterministic and independent of removal history. Tie-breaking in
+/// dispatch scans is therefore deterministic and driver-independent; a
+/// new driver must reproduce this order (or share the pool) to keep
+/// effect-stream parity.
 pub trait PolicyView {
     /// Current time in trace seconds.
     fn now(&self) -> f64;

@@ -173,13 +173,15 @@ mod tests {
             .iter()
             .map(|&(kind, backlog)| {
                 let id = sim.alloc(kind).unwrap();
-                // Force active with the requested backlog.
-                let w = sim.pool.get_mut(id).unwrap();
-                w.state = WorkerState::Active;
-                w.busy_until = backlog;
-                if backlog > 0.0 {
-                    w.queued = 1;
-                }
+                // Force active with the requested backlog (with_mut keeps
+                // the pool's ordered indexes coherent).
+                sim.pool.with_mut(id, |w| {
+                    w.state = WorkerState::Active;
+                    w.busy_until = backlog;
+                    if backlog > 0.0 {
+                        w.queued = 1;
+                    }
+                });
                 id
             })
             .collect();

@@ -11,6 +11,7 @@ use super::breakeven::{
 };
 use super::dispatch::Dispatcher;
 use super::oracle::Oracle;
+use super::MakeSource;
 use crate::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
 use crate::policy::{
     earliest_finishing, Action, Observation, Policy, PolicyView, Target,
@@ -116,14 +117,14 @@ impl Policy for FpgaDynamic {
 /// max consecutive delta) whose run meets deadlines within
 /// `miss_tolerance`. Returns the winning run (normalized against
 /// `cfg.platform`), the headroom, and k.
-fn search(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (RunResult, u32, u32) {
-    let oracle = Oracle::from_trace(trace, cfg, Objective::energy());
+fn search(make: &MakeSource<'_>, cfg: &SimConfig, miss_tolerance: f64) -> (RunResult, u32, u32) {
+    let oracle = Oracle::from_source(&mut *make(), cfg, Objective::energy());
     let delta = oracle.max_consecutive_delta().max(1);
     let mut best: Option<(RunResult, u32, u32)> = None;
     for k in 0..=8u32 {
         let headroom = k * delta;
         let mut policy = FpgaDynamic::new(cfg, headroom);
-        let r = sim::run(trace, cfg.clone(), &cfg.platform, &mut policy);
+        let r = sim::run_source(make(), cfg.clone(), &cfg.platform, &mut policy);
         let feasible = r.miss_fraction() <= miss_tolerance;
         best = Some((r, headroom, k));
         if feasible {
@@ -135,7 +136,7 @@ fn search(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (RunResult,
 
 /// Least feasible headroom and its multiple k.
 pub fn fit_headroom(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (u32, u32) {
-    let (_, headroom, k) = search(trace, cfg, miss_tolerance);
+    let (_, headroom, k) = search(&|| Box::new(trace.source()), cfg, miss_tolerance);
     (headroom, k)
 }
 
@@ -145,6 +146,17 @@ pub fn fit_headroom(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (
 /// intervals").
 pub fn fitted(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> FpgaDynamic {
     let (headroom, _k) = fit_headroom(trace, cfg, miss_tolerance);
+    FpgaDynamic::new(cfg, headroom)
+}
+
+/// [`fitted`] over a re-creatable source stream (each search pass
+/// streams; constant memory in trace length).
+pub fn fitted_source(
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    miss_tolerance: f64,
+) -> FpgaDynamic {
+    let (_, headroom, _k) = search(make, cfg, miss_tolerance);
     FpgaDynamic::new(cfg, headroom)
 }
 
@@ -158,7 +170,17 @@ pub fn fit(
     defaults: &PlatformConfig,
     miss_tolerance: f64,
 ) -> (RunResult, u32) {
-    let (mut r, _headroom, k) = search(trace, cfg, miss_tolerance);
+    fit_source(&|| Box::new(trace.source()), cfg, defaults, miss_tolerance)
+}
+
+/// [`fit`] over a re-creatable source stream.
+pub fn fit_source(
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32) {
+    let (mut r, _headroom, k) = search(make, cfg, miss_tolerance);
     r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
     (r, k)
 }

@@ -11,6 +11,7 @@
 
 use super::dispatch::Dispatcher;
 use super::oracle::Oracle;
+use super::MakeSource;
 use crate::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
 use crate::policy::{
     earliest_finishing, Action, Observation, Policy, PolicyView, Target,
@@ -40,16 +41,18 @@ impl FpgaStatic {
 /// The fitting search: least fleet ≥ the oracle peak whose run meets
 /// deadlines within `miss_tolerance`. Step size scales with √peak
 /// (square-root staffing). Returns the winning run (normalized against
-/// `cfg.platform`) and the fleet.
-fn search(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (RunResult, u32) {
-    let oracle = Oracle::from_trace(trace, cfg, super::breakeven::Objective::energy());
+/// `cfg.platform`) and the fleet. Every pass streams a fresh source from
+/// `make`, so the search runs in constant memory for any trace length.
+fn search(make: &MakeSource<'_>, cfg: &SimConfig, miss_tolerance: f64) -> (RunResult, u32) {
+    let oracle =
+        Oracle::from_source(&mut *make(), cfg, super::breakeven::Objective::energy());
     let peak = oracle.peak().max(1);
     let step = ((peak as f64).sqrt().ceil() as u32).max(1);
     let mut best: Option<(RunResult, u32)> = None;
     for j in 0..=8u32 {
         let fleet = peak + j * step;
         let mut policy = FpgaStatic::with_fleet(fleet);
-        let r = sim::run(trace, cfg.clone(), &cfg.platform, &mut policy);
+        let r = sim::run_source(make(), cfg.clone(), &cfg.platform, &mut policy);
         let feasible = r.miss_fraction() <= miss_tolerance;
         best = Some((r, fleet));
         if feasible {
@@ -61,12 +64,21 @@ fn search(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (RunResult,
 
 /// Least feasible fleet size.
 pub fn fit_fleet(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> u32 {
-    search(trace, cfg, miss_tolerance).1
+    search(&|| Box::new(trace.source()), cfg, miss_tolerance).1
 }
 
 /// Best-case static provisioning: the fitted policy for `trace`.
 pub fn fitted(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> FpgaStatic {
     FpgaStatic::with_fleet(fit_fleet(trace, cfg, miss_tolerance))
+}
+
+/// [`fitted`] over a re-creatable source stream.
+pub fn fitted_source(
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    miss_tolerance: f64,
+) -> FpgaStatic {
+    FpgaStatic::with_fleet(search(make, cfg, miss_tolerance).1)
 }
 
 /// Fit and run: the search's best run plus the fitted fleet size. The
@@ -78,7 +90,17 @@ pub fn fit(
     defaults: &PlatformConfig,
     miss_tolerance: f64,
 ) -> (RunResult, u32) {
-    let (mut r, fleet) = search(trace, cfg, miss_tolerance);
+    fit_source(&|| Box::new(trace.source()), cfg, defaults, miss_tolerance)
+}
+
+/// [`fit`] over a re-creatable source stream.
+pub fn fit_source(
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32) {
+    let (mut r, fleet) = search(make, cfg, miss_tolerance);
     r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
     (r, fleet)
 }

@@ -22,11 +22,19 @@ pub use oracle::Oracle;
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
 use crate::policy::Policy;
 use crate::sim::{self, RunResult};
-use crate::trace::AppTrace;
+use crate::trace::{AppTrace, ArrivalSource};
 
 /// Deadline-miss tolerance of the baselines' fitting searches (paper
 /// §5.1: the fitted baselines "meet request deadlines").
 pub const FIT_MISS_TOLERANCE: f64 = 0.005;
+
+/// A re-creatable workload stream: calling the factory yields a fresh
+/// [`ArrivalSource`] positioned at t = 0. Oracle construction and the
+/// §5.1 fitting searches replay the workload several times; with a
+/// factory each pass streams in constant memory instead of requiring a
+/// materialized trace. Synthetic factories rebuild the source from its
+/// `(seed_base, seed)` stream; CSV factories re-open the file.
+pub type MakeSource<'a> = dyn Fn() -> Box<dyn ArrivalSource + 'a> + 'a;
 
 /// Build the policy for `kind`, fitted to `trace` where the paper requires
 /// it. Oracle-assisted baselines (FPGA-static, MArk-ideal, Spork-*-ideal)
@@ -34,16 +42,26 @@ pub const FIT_MISS_TOLERANCE: f64 = 0.005;
 /// their §5.1 fitting search so every caller gets the same policy
 /// `run_scheduler` evaluates.
 pub fn build(kind: &SchedulerKind, cfg: &SimConfig, trace: &AppTrace) -> Box<dyn Policy> {
+    build_source(kind, cfg, &|| Box::new(trace.source()))
+}
+
+/// [`build`] over a re-creatable source stream — constant-memory for
+/// every kind (the fitting searches stream each pass).
+pub fn build_source(
+    kind: &SchedulerKind,
+    cfg: &SimConfig,
+    make: &MakeSource<'_>,
+) -> Box<dyn Policy> {
     match kind {
         SchedulerKind::CpuDynamic => Box::new(cpu_dynamic::CpuDynamic::new()),
         SchedulerKind::FpgaStatic => {
-            Box::new(fpga_static::fitted(trace, cfg, FIT_MISS_TOLERANCE))
+            Box::new(fpga_static::fitted_source(make, cfg, FIT_MISS_TOLERANCE))
         }
         SchedulerKind::FpgaDynamic => {
-            Box::new(fpga_dynamic::fitted(trace, cfg, FIT_MISS_TOLERANCE))
+            Box::new(fpga_dynamic::fitted_source(make, cfg, FIT_MISS_TOLERANCE))
         }
         SchedulerKind::MarkIdeal => {
-            let oracle = Oracle::from_trace(trace, cfg, Objective::cost());
+            let oracle = Oracle::from_source(&mut *make(), cfg, Objective::cost());
             Box::new(mark::MarkIdeal::new(cfg, oracle))
         }
         SchedulerKind::Spork {
@@ -56,7 +74,7 @@ pub fn build(kind: &SchedulerKind, cfg: &SimConfig, trace: &AppTrace) -> Box<dyn
                 w_cost: *w_cost,
             };
             if *ideal {
-                let oracle = Oracle::from_trace(trace, cfg, obj);
+                let oracle = Oracle::from_source(&mut *make(), cfg, obj);
                 Box::new(spork::Spork::ideal(cfg, obj, oracle))
             } else {
                 Box::new(spork::Spork::new(cfg, obj))
@@ -76,16 +94,29 @@ pub fn run_scheduler(
     cfg: &SimConfig,
     defaults: &PlatformConfig,
 ) -> RunResult {
+    run_scheduler_source(kind, cfg, defaults, &|| Box::new(trace.source()))
+}
+
+/// [`run_scheduler`] over a re-creatable source stream: every pass
+/// (oracle construction, fitting iterations, the final run) streams the
+/// workload, so memory is bounded by pool size + pending events — the
+/// path the sweep engine and the million-request bench replay through.
+pub fn run_scheduler_source(
+    kind: &SchedulerKind,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    make: &MakeSource<'_>,
+) -> RunResult {
     match kind {
         SchedulerKind::FpgaDynamic => {
-            fpga_dynamic::fit(trace, cfg, defaults, FIT_MISS_TOLERANCE).0
+            fpga_dynamic::fit_source(make, cfg, defaults, FIT_MISS_TOLERANCE).0
         }
         SchedulerKind::FpgaStatic => {
-            fpga_static::fit(trace, cfg, defaults, FIT_MISS_TOLERANCE).0
+            fpga_static::fit_source(make, cfg, defaults, FIT_MISS_TOLERANCE).0
         }
         _ => {
-            let mut policy = build(kind, cfg, trace);
-            sim::run(trace, cfg.clone(), defaults, policy.as_mut())
+            let mut policy = build_source(kind, cfg, make);
+            sim::run_source(make(), cfg.clone(), defaults, policy.as_mut())
         }
     }
 }

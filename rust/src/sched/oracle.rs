@@ -5,7 +5,7 @@
 
 use super::breakeven::{breakeven_fpga_seconds, needed_fpgas, Objective};
 use crate::config::SimConfig;
-use crate::trace::AppTrace;
+use crate::trace::{AppTrace, ArrivalSource};
 
 #[derive(Clone, Debug)]
 pub struct Oracle {
@@ -17,11 +17,24 @@ pub struct Oracle {
 
 impl Oracle {
     pub fn from_trace(trace: &AppTrace, cfg: &SimConfig, obj: Objective) -> Self {
+        Self::from_source(&mut trace.source(), cfg, obj)
+    }
+
+    /// Build the per-interval needed-FPGA counts by streaming `src` once:
+    /// O(intervals) memory regardless of arrival count. Identical to
+    /// [`Oracle::from_trace`] on the materialized equivalent — both use
+    /// the shared `trace::interval_bins` / `trace::interval_index`
+    /// binning rule and accumulate in arrival order.
+    pub fn from_source(src: &mut dyn ArrivalSource, cfg: &SimConfig, obj: Objective) -> Self {
         let interval = cfg.interval;
         let speedup = cfg.platform.fpga.speedup;
         let tb = breakeven_fpga_seconds(&cfg.platform, interval, obj);
-        let needed = trace
-            .work_per_interval(interval)
+        let n = crate::trace::interval_bins(src.duration(), interval);
+        let mut work = vec![0.0f64; n];
+        while let Some(a) = src.next_arrival() {
+            work[crate::trace::interval_index(a.time, interval, n)] += a.size;
+        }
+        let needed = work
             .iter()
             .map(|w| needed_fpgas(w / speedup, interval, tb))
             .collect();

@@ -32,7 +32,7 @@ use crate::config::{PlatformConfig, SchedulerKind, SimConfig, WorkerKind};
 use crate::policy::{Effect, Policy, WorkerId};
 use crate::sched::breakeven::{breakeven_fpga_seconds, needed_fpgas, Objective};
 use crate::sim::Driver;
-use crate::trace::{synthetic_app_dt, AppTrace};
+use crate::trace::{synthetic_app_dt, AppTrace, ArrivalSource};
 use crate::util::rng::Rng;
 use crate::util::stats::Sample;
 use std::collections::HashMap;
@@ -231,9 +231,38 @@ pub fn run_serve_policy(
     compute: Compute,
     sink: &mut dyn FnMut(&Effect),
 ) -> anyhow::Result<(ServeReport, Vec<Completion>)> {
+    let (pool_cpus, pool_fpgas) = cfg.resolved_pools(trace);
+    run_serve_source(
+        cfg,
+        policy,
+        Box::new(trace.source()),
+        pool_cpus,
+        pool_fpgas,
+        rng,
+        compute,
+        sink,
+    )
+}
+
+/// [`run_serve_policy`] over a streaming arrival source: router memory is
+/// bounded by the warm pool + in-flight work, never by stream length —
+/// the serving path for endless or million-request request streams.
+/// Pool sizes must be given explicitly (deriving them from demand needs a
+/// full pass over the workload; see [`derive_pools`] for materialized
+/// traces, or size from capacity planning).
+#[allow(clippy::too_many_arguments)]
+pub fn run_serve_source<'a>(
+    cfg: &ServeConfig,
+    policy: &'a mut dyn Policy,
+    source: Box<dyn ArrivalSource + 'a>,
+    pool_cpus: usize,
+    pool_fpgas: usize,
+    rng: &mut Rng,
+    compute: Compute,
+    sink: &mut dyn FnMut(&Effect),
+) -> anyhow::Result<(ServeReport, Vec<Completion>)> {
     let scale = cfg.time_scale;
     let real = compute == Compute::Real;
-    let (pool_cpus, pool_fpgas) = cfg.resolved_pools(trace);
     let sim_cfg = cfg.sim_config(pool_cpus, pool_fpgas);
     let platform = sim_cfg.platform.clone();
 
@@ -287,7 +316,7 @@ pub fn run_serve_policy(
     let d_in = 128usize;
     let epoch = Instant::now();
 
-    let mut driver = Driver::new(trace, sim_cfg, policy);
+    let mut driver = Driver::from_source(source, sim_cfg, policy);
     {
         let mut handle = |e: &Effect| {
             if real {

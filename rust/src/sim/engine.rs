@@ -14,7 +14,7 @@ use super::pool::Pool;
 use super::worker::{Worker, WorkerId, WorkerState};
 use crate::config::{PlatformConfig, SimConfig, WorkerKind};
 use crate::policy::{Action, Effect, Observation, Policy, PolicyView, Request, Target, WorkerObs};
-use crate::trace::AppTrace;
+use crate::trace::{AppTrace, Arrival, ArrivalSource};
 
 /// Latency subsampling factor (1/N of completions recorded).
 const LATENCY_SAMPLE: u64 = 61;
@@ -116,11 +116,12 @@ impl SimState {
     pub fn alloc_warm(&mut self, kind: WorkerKind) -> Option<WorkerId> {
         let id = self.alloc(kind)?;
         let now = self.now;
-        let w = self.pool.get_mut(id).expect("just-allocated worker");
-        w.state = WorkerState::Active;
-        w.ready_at = now;
-        w.busy_until = now;
-        w.idle_since = now;
+        self.pool.with_mut(id, |w| {
+            w.state = WorkerState::Active;
+            w.ready_at = now;
+            w.busy_until = now;
+            w.idle_since = now;
+        });
         self.schedule_idle_timeout(id);
         Some(id)
     }
@@ -138,11 +139,13 @@ impl SimState {
     /// dispatched work runs to completion).
     pub fn dispatch(&mut self, req: Request, worker: WorkerId) -> f64 {
         let now = self.now;
-        let w = self.pool.get_mut(worker).expect("dispatch: unknown worker");
-        debug_assert!(w.accepting(), "dispatch to spinning-down worker");
-        let kind = w.kind;
-        let svc = self.cfg.platform.params(kind).service_time(req.size);
-        let finish = w.assign(now, svc);
+        // One slab transaction on the per-request hot path: kind read,
+        // service-time lookup, and assignment in a single with_mut.
+        let (kind, svc, finish) = self.pool.with_mut(worker, |w| {
+            debug_assert!(w.accepting(), "dispatch to spinning-down worker");
+            let svc = self.cfg.platform.params(w.kind).service_time(req.size);
+            (w.kind, svc, w.assign(now, svc))
+        });
         self.events.push(
             finish,
             Event::Completion {
@@ -172,14 +175,15 @@ impl SimState {
     /// energy accrued over its active window and the spin-down energy.
     pub fn retire(&mut self, worker: WorkerId) {
         let now = self.now;
-        let w = self.pool.get_mut(worker).expect("retire: unknown worker");
-        debug_assert!(
-            w.state == WorkerState::Active && w.queued == 0,
-            "retire requires an idle worker"
-        );
-        let kind = w.kind;
-        let idle_secs = w.idle_seconds(now);
-        w.state = WorkerState::SpinningDown;
+        let (kind, idle_secs) = self.pool.with_mut(worker, |w| {
+            debug_assert!(
+                w.state == WorkerState::Active && w.queued == 0,
+                "retire requires an idle worker"
+            );
+            let idle_secs = w.idle_seconds(now);
+            w.state = WorkerState::SpinningDown;
+            (w.kind, idle_secs)
+        });
         let params = self.cfg.platform.params(kind);
         self.metrics.energy_mut(kind).idle += idle_secs * params.idle_power;
         self.metrics.energy_mut(kind).dealloc += params.spin_down_energy();
@@ -187,19 +191,10 @@ impl SimState {
             .push(now + params.spin_down, Event::SpinDownDone { worker });
     }
 
-    /// Retire up to `n` idle workers of `kind`, longest-idle first.
-    /// Returns the retired ids.
+    /// Retire up to `n` idle workers of `kind`, longest-idle first —
+    /// the head of the pool's idle index (no sort-per-decision).
     pub fn retire_idle(&mut self, kind: WorkerKind, n: u32) -> Vec<WorkerId> {
-        let now = self.now;
-        let mut idle: Vec<(f64, WorkerId)> = self
-            .pool
-            .iter_kind(kind)
-            .filter(|w| w.is_idle(now))
-            .map(|w| (w.idle_since, w.id))
-            .collect();
-        idle.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let take = idle.len().min(n as usize);
-        let ids: Vec<WorkerId> = idle.iter().take(take).map(|&(_, id)| id).collect();
+        let ids: Vec<WorkerId> = self.pool.idle_ordered(kind).take(n as usize).collect();
         for &id in &ids {
             self.retire(id);
         }
@@ -261,7 +256,7 @@ impl PolicyView for SimState {
     }
 
     fn live_ids(&self, kind: WorkerKind) -> Vec<WorkerId> {
-        self.pool.live_ids(kind).to_vec()
+        self.pool.live_ids(kind)
     }
 
     fn worker(&self, id: WorkerId) -> Option<WorkerObs> {
@@ -275,15 +270,25 @@ impl PolicyView for SimState {
     }
 }
 
-/// The stepping core shared by both drivers: merges the sorted arrival
-/// array with the event heap and interval ticks, observes the policy at
-/// each occurrence, and applies the returned actions to [`SimState`].
-/// Every applied side effect is reported to the caller's sink.
+/// The stepping core shared by both drivers: merges a time-ordered
+/// [`ArrivalSource`] (pulled lazily, one look-ahead) with the event heap
+/// and interval ticks, observes the policy at each occurrence, and
+/// applies the returned actions to [`SimState`]. Every applied side
+/// effect is reported to the caller's sink.
+///
+/// Memory is bounded by the worker pool and the in-flight event heap —
+/// never by trace length, which is what lets a single driver replay
+/// million-request (or unbounded) streams.
 pub struct Driver<'a> {
     sim: SimState,
     policy: &'a mut dyn Policy,
-    arrivals: &'a [crate::trace::Arrival],
-    next_arrival: usize,
+    source: Box<dyn ArrivalSource + 'a>,
+    /// One-arrival look-ahead (`frontier` needs the next arrival time
+    /// without consuming it).
+    pending: Option<Arrival>,
+    /// Time of the last pulled arrival, to fail loudly on an unsorted or
+    /// NaN-bearing source before it can corrupt the run.
+    last_arrival: f64,
     interval: f64,
     next_tick: f64,
     tick_index: usize,
@@ -293,22 +298,63 @@ pub struct Driver<'a> {
 
 impl<'a> Driver<'a> {
     pub fn new(trace: &'a AppTrace, cfg: SimConfig, policy: &'a mut dyn Policy) -> Self {
+        Self::from_source(Box::new(trace.source()), cfg, policy)
+    }
+
+    /// Drive a streaming source directly (constant memory in the trace
+    /// length). The source's `duration()` is the arrival-window end that
+    /// gates ticks and fleet pinning.
+    pub fn from_source(
+        mut source: Box<dyn ArrivalSource + 'a>,
+        cfg: SimConfig,
+        policy: &'a mut dyn Policy,
+    ) -> Self {
         let mut sim = SimState::new(cfg);
-        sim.trace_end = trace.duration;
+        sim.trace_end = source.duration();
+        assert!(
+            sim.trace_end >= 0.0 && !sim.trace_end.is_nan(),
+            "source '{}' has an invalid duration",
+            source.name()
+        );
         let deadline_factor = sim.cfg.deadline_factor;
         let interval = policy.interval();
         let next_tick = if interval.is_finite() { interval } else { f64::INFINITY };
-        Self {
+        let pending = source.next_arrival();
+        let mut driver = Self {
             sim,
             policy,
-            arrivals: &trace.arrivals,
-            next_arrival: 0,
+            source,
+            pending: None,
+            last_arrival: f64::NEG_INFINITY,
             interval,
             next_tick,
             tick_index: 1,
             deadline_factor,
             actions: Vec::new(),
+        };
+        driver.admit(pending);
+        driver
+    }
+
+    /// Validate and stage the next pulled arrival.
+    fn admit(&mut self, a: Option<Arrival>) {
+        if let Some(a) = a {
+            assert!(
+                a.time.is_finite() && a.time >= self.last_arrival,
+                "source '{}' is not time-ordered (or yields NaN) at t={}",
+                self.source.name(),
+                a.time
+            );
+            assert!(
+                a.size > 0.0 && a.size.is_finite(),
+                "source '{}' yields invalid size {} at t={}",
+                self.source.name(),
+                a.size,
+                a.time
+            );
+            self.last_arrival = a.time;
         }
+        self.pending = a;
     }
 
     pub fn now(&self) -> f64 {
@@ -330,11 +376,7 @@ impl<'a> Driver<'a> {
     /// real-time driver's pacing target always matches what `step`
     /// processes.
     fn frontier(&self) -> (f64, f64, f64) {
-        let ta = self
-            .arrivals
-            .get(self.next_arrival)
-            .map(|a| a.time)
-            .unwrap_or(f64::INFINITY);
+        let ta = self.pending.map(|a| a.time).unwrap_or(f64::INFINITY);
         let te = self.sim.events.peek_time().unwrap_or(f64::INFINITY);
         // Ticks only while the trace is live; cleanup needs no allocator.
         let tt = if self.next_tick <= self.sim.trace_end {
@@ -383,8 +425,9 @@ impl<'a> Driver<'a> {
             self.handle_event(event, sink);
             return true;
         }
-        let a = &self.arrivals[self.next_arrival];
-        self.next_arrival += 1;
+        let a = self.pending.expect("frontier said an arrival is due");
+        let next = self.source.next_arrival();
+        self.admit(next);
         let req = Request {
             arrival: a.time,
             size: a.size,
@@ -449,15 +492,11 @@ impl<'a> Driver<'a> {
                             }
                             None => {
                                 // Capped: best-effort onto the earliest-
-                                // finishing live worker of any kind.
+                                // finishing live worker of any kind —
+                                // O(log n) off the pool's ready index.
                                 self.sim
                                     .pool
-                                    .iter_all()
-                                    .filter(|w| w.accepting())
-                                    .min_by(|a, b| {
-                                        a.busy_until.partial_cmp(&b.busy_until).unwrap()
-                                    })
-                                    .map(|w| w.id)
+                                    .earliest_ready_any()
                                     .expect("no workers and worker cap reached")
                             }
                         },
@@ -493,15 +532,23 @@ impl<'a> Driver<'a> {
     fn handle_event(&mut self, event: Event, sink: &mut dyn FnMut(&Effect)) {
         match event {
             Event::SpinUpDone { worker } => {
-                let Some(w) = self.sim.pool.get_mut(worker) else {
-                    return; // pre-warmed worker already retired
-                };
-                if w.state != WorkerState::SpinningUp {
-                    return; // pre-warmed via alloc_warm; nothing to do
+                match self.sim.pool.get(worker) {
+                    None => return, // pre-warmed worker already retired
+                    // Pre-warmed via alloc_warm; nothing to do.
+                    Some(w) if w.state != WorkerState::SpinningUp => return,
+                    Some(_) => {}
                 }
-                w.state = WorkerState::Active;
-                if w.queued == 0 {
-                    w.idle_since = self.sim.now;
+                let now = self.sim.now;
+                let went_idle = self.sim.pool.with_mut(worker, |w| {
+                    w.state = WorkerState::Active;
+                    if w.queued == 0 {
+                        w.idle_since = now;
+                        true
+                    } else {
+                        false
+                    }
+                });
+                if went_idle {
                     self.sim.schedule_idle_timeout(worker);
                 }
                 self.observe(Observation::WorkerReady { worker }, sink);
@@ -519,12 +566,8 @@ impl<'a> Driver<'a> {
                 if self.sim.completions_seen % LATENCY_SAMPLE == 0 {
                     self.sim.metrics.latency.add(now - arrival);
                 }
-                let w = self
-                    .sim
-                    .pool
-                    .get_mut(worker)
-                    .expect("completion: unknown worker");
-                if w.complete_one(now) {
+                let went_idle = self.sim.pool.with_mut(worker, |w| w.complete_one(now));
+                if went_idle {
                     self.sim.schedule_idle_timeout(worker);
                 }
                 self.observe(Observation::Completion { worker }, sink);
@@ -620,7 +663,30 @@ pub fn run_with_sink(
     policy: &mut dyn Policy,
     sink: &mut dyn FnMut(&Effect),
 ) -> RunResult {
-    let mut driver = Driver::new(trace, cfg, policy);
+    run_source_with_sink(Box::new(trace.source()), cfg, defaults, policy, sink)
+}
+
+/// Run `policy` over a streaming arrival source. Memory is bounded by
+/// the worker pool and pending events, not the stream length — the entry
+/// point for million-request replays and CSV streams too large to load.
+pub fn run_source(
+    source: Box<dyn ArrivalSource + '_>,
+    cfg: SimConfig,
+    defaults: &PlatformConfig,
+    policy: &mut dyn Policy,
+) -> RunResult {
+    run_source_with_sink(source, cfg, defaults, policy, &mut |_| {})
+}
+
+/// Like [`run_source`], reporting every applied [`Effect`] to `sink`.
+pub fn run_source_with_sink<'a>(
+    source: Box<dyn ArrivalSource + 'a>,
+    cfg: SimConfig,
+    defaults: &PlatformConfig,
+    policy: &'a mut dyn Policy,
+    sink: &mut dyn FnMut(&Effect),
+) -> RunResult {
+    let mut driver = Driver::from_source(source, cfg, policy);
     driver.start(sink);
     while driver.step(sink) {}
     driver.finish(defaults)

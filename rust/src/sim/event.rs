@@ -44,10 +44,12 @@ impl Eq for Entry {}
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for a min-heap; ties broken by insertion order.
+        // total_cmp keeps the hottest comparator in the simulator
+        // panic-free: a NaN time is rejected loudly at `push` (debug) and
+        // at the trace-validation boundary, never mid-heap-sift.
         other
             .time
-            .partial_cmp(&self.time)
-            .expect("NaN event time")
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -69,7 +71,12 @@ impl EventQueue {
     }
 
     pub fn push(&mut self, time: f64, event: Event) {
-        debug_assert!(time.is_finite(), "non-finite event time");
+        // Hard assert (not debug): the heap comparator uses total_cmp and
+        // will no longer panic on NaN, so this is the loud trip-wire for
+        // non-finite event times from config-derived arithmetic (e.g. a
+        // NaN service-time parameter) — one branch per push, negligible
+        // next to the heap sift.
+        assert!(time.is_finite(), "non-finite event time");
         self.heap.push(Entry {
             time,
             seq: self.seq,
@@ -143,7 +150,7 @@ mod tests {
 
     #[test]
     #[should_panic]
-    fn rejects_nan_times_in_debug() {
+    fn rejects_nan_times() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, ev(1));
         q.push(1.0, ev(2));

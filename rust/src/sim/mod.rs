@@ -18,7 +18,7 @@ pub mod metrics;
 pub mod pool;
 pub mod worker;
 
-pub use engine::{run, run_with_sink, Driver, SimState};
+pub use engine::{run, run_source, run_source_with_sink, run_with_sink, Driver, SimState};
 pub use metrics::{EnergyBreakdown, IdealBaseline, Metrics, RunResult};
 pub use worker::{Worker, WorkerId, WorkerState};
 

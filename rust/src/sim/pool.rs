@@ -1,22 +1,85 @@
-//! Worker pool: slab storage with per-kind live lists.
+//! Worker pool: slab storage with per-kind *ordered indexes*.
 //!
 //! The pool only stores workers; allocation/deallocation *policy* lives in
-//! the schedulers and the engine drives state transitions.
+//! the schedulers and the engine drives state transitions. Three ordered
+//! indexes ride on top of the slab so the engine's hot decisions are
+//! O(log n) instead of scan-or-sort-per-decision:
+//!
+//! * **live** — the live ids of each kind, ordered by id. Serves
+//!   [`PolicyView`](crate::policy::PolicyView) enumeration with an order
+//!   that is deterministic *and* independent of removal history (the old
+//!   swap-removed live list reshuffled on every retirement).
+//! * **idle** — `(idle_since, id)` over Active workers with an empty
+//!   queue: longest-idle-first retirement pops from the front instead of
+//!   sorting the idle set on every `Retire` action.
+//! * **ready** — `(busy_until, id)` over accepting (non-spinning-down)
+//!   workers: the earliest-finishing fallback of capped dispatch is a
+//!   range head instead of a full scan.
+//!
+//! Keys wrap [`OrdF64`] (IEEE `total_cmp`), so a NaN timestamp can never
+//! panic a comparator mid-run — NaNs are rejected at trace validation.
+//!
+//! Index coherence is the pool's job: every mutation of an indexed field
+//! must go through [`Pool::with_mut`], which re-keys the worker around
+//! the closure. Direct `&mut Worker` access is deliberately not exposed.
 
 use super::worker::{Worker, WorkerId, WorkerState};
 use crate::config::WorkerKind;
+use crate::util::ordf64::OrdF64;
+use std::collections::BTreeSet;
+
+type Key = (OrdF64, WorkerId);
+
+/// Per-kind index slot.
+const fn ix(kind: WorkerKind) -> usize {
+    match kind {
+        WorkerKind::Cpu => 0,
+        WorkerKind::Fpga => 1,
+    }
+}
 
 #[derive(Debug, Default)]
 pub struct Pool {
     slots: Vec<Option<Worker>>,
     free: Vec<u32>,
-    live_cpu: Vec<WorkerId>,
-    live_fpga: Vec<WorkerId>,
+    live: [BTreeSet<WorkerId>; 2],
+    idle: [BTreeSet<Key>; 2],
+    ready: [BTreeSet<Key>; 2],
+    /// Live workers excluding spinning-down, per kind (the "allocated"
+    /// count schedulers reason about), maintained O(1).
+    allocated: [u32; 2],
 }
 
 impl Pool {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Add `w`'s entries to the idle/ready indexes and allocated count.
+    fn index_state(&mut self, w: &Worker) {
+        let k = ix(w.kind);
+        if w.state != WorkerState::SpinningDown {
+            self.allocated[k] += 1;
+            self.ready[k].insert((OrdF64(w.busy_until), w.id));
+        }
+        if w.state == WorkerState::Active && w.queued == 0 {
+            self.idle[k].insert((OrdF64(w.idle_since), w.id));
+        }
+    }
+
+    /// Remove `w`'s entries from the idle/ready indexes and allocated
+    /// count (must mirror [`Self::index_state`] for the same snapshot).
+    fn unindex_state(&mut self, w: &Worker) {
+        let k = ix(w.kind);
+        if w.state != WorkerState::SpinningDown {
+            self.allocated[k] -= 1;
+            let removed = self.ready[k].remove(&(OrdF64(w.busy_until), w.id));
+            debug_assert!(removed, "ready index desync");
+        }
+        if w.state == WorkerState::Active && w.queued == 0 {
+            let removed = self.idle[k].remove(&(OrdF64(w.idle_since), w.id));
+            debug_assert!(removed, "idle index desync");
+        }
     }
 
     pub fn insert(&mut self, make: impl FnOnce(WorkerId) -> Worker) -> WorkerId {
@@ -29,10 +92,9 @@ impl Pool {
         };
         let id = WorkerId(idx);
         let w = make(id);
-        match w.kind {
-            WorkerKind::Cpu => self.live_cpu.push(id),
-            WorkerKind::Fpga => self.live_fpga.push(id),
-        }
+        debug_assert_eq!(w.id, id, "worker id must match its slot");
+        self.live[ix(w.kind)].insert(id);
+        self.index_state(&w);
         self.slots[idx as usize] = Some(w);
         id
     }
@@ -41,12 +103,9 @@ impl Pool {
         let w = self.slots[id.0 as usize]
             .take()
             .expect("removing nonexistent worker");
-        let live = match w.kind {
-            WorkerKind::Cpu => &mut self.live_cpu,
-            WorkerKind::Fpga => &mut self.live_fpga,
-        };
-        let pos = live.iter().position(|&x| x == id).expect("live list desync");
-        live.swap_remove(pos);
+        let was_live = self.live[ix(w.kind)].remove(&id);
+        debug_assert!(was_live, "live index desync");
+        self.unindex_state(&w);
         self.free.push(id.0);
         w
     }
@@ -55,21 +114,34 @@ impl Pool {
         self.slots.get(id.0 as usize).and_then(|s| s.as_ref())
     }
 
-    pub fn get_mut(&mut self, id: WorkerId) -> Option<&mut Worker> {
-        self.slots.get_mut(id.0 as usize).and_then(|s| s.as_mut())
+    /// Mutate a worker while keeping the ordered indexes coherent: the
+    /// worker is de-indexed, handed to `f`, and re-keyed from its new
+    /// state. `f` must not change `id` or `kind` (debug-asserted). This
+    /// is the only mutation path — there is no public `get_mut`.
+    pub fn with_mut<R>(&mut self, id: WorkerId, f: impl FnOnce(&mut Worker) -> R) -> R {
+        let slot = id.0 as usize;
+        let mut w = self.slots[slot].take().expect("with_mut: unknown worker");
+        self.unindex_state(&w);
+        let (old_id, old_kind) = (w.id, w.kind);
+        let r = f(&mut w);
+        debug_assert!(
+            w.id == old_id && w.kind == old_kind,
+            "with_mut must not change identity"
+        );
+        self.index_state(&w);
+        self.slots[slot] = Some(w);
+        r
     }
 
-    pub fn live_ids(&self, kind: WorkerKind) -> &[WorkerId] {
-        match kind {
-            WorkerKind::Cpu => &self.live_cpu,
-            WorkerKind::Fpga => &self.live_fpga,
-        }
+    /// Live worker ids of `kind` (any state), ordered by id.
+    pub fn live_ids(&self, kind: WorkerKind) -> Vec<WorkerId> {
+        self.live[ix(kind)].iter().copied().collect()
     }
 
     pub fn iter_kind(&self, kind: WorkerKind) -> impl Iterator<Item = &Worker> + '_ {
-        self.live_ids(kind).iter().map(move |&id| {
-            self.get(id).expect("live list points at empty slot")
-        })
+        self.live[ix(kind)]
+            .iter()
+            .map(move |&id| self.get(id).expect("live index points at empty slot"))
     }
 
     pub fn iter_all(&self) -> impl Iterator<Item = &Worker> + '_ {
@@ -77,25 +149,56 @@ impl Pool {
             .chain(self.iter_kind(WorkerKind::Fpga))
     }
 
+    /// Idle (Active, empty-queue) workers of `kind`, longest-idle first —
+    /// the retirement order, straight off the idle index.
+    pub fn idle_ordered(&self, kind: WorkerKind) -> impl Iterator<Item = WorkerId> + '_ {
+        self.idle[ix(kind)].iter().map(|&(_, id)| id)
+    }
+
+    /// Number of idle workers of `kind`.
+    pub fn idle_count(&self, kind: WorkerKind) -> u32 {
+        self.idle[ix(kind)].len() as u32
+    }
+
+    /// The earliest-finishing accepting worker of `kind` with its
+    /// completion horizon, in O(log n) off the ready index.
+    pub fn earliest_ready(&self, kind: WorkerKind) -> Option<(f64, WorkerId)> {
+        self.ready[ix(kind)]
+            .first()
+            .map(|&(OrdF64(t), id)| (t, id))
+    }
+
+    /// The earliest-finishing accepting worker of any kind. CPU wins a
+    /// cross-kind tie (matching the historical CPU-then-FPGA scan order).
+    pub fn earliest_ready_any(&self) -> Option<WorkerId> {
+        match (
+            self.earliest_ready(WorkerKind::Cpu),
+            self.earliest_ready(WorkerKind::Fpga),
+        ) {
+            (Some((tc, c)), Some((tf, f))) => Some(if tc <= tf { c } else { f }),
+            (Some((_, c)), None) => Some(c),
+            (None, Some((_, f))) => Some(f),
+            (None, None) => None,
+        }
+    }
+
     /// Live workers of a kind (any state).
     pub fn count(&self, kind: WorkerKind) -> u32 {
-        self.live_ids(kind).len() as u32
+        self.live[ix(kind)].len() as u32
     }
 
     /// Live workers excluding those spinning down, i.e. the "allocated"
-    /// count schedulers reason about (spinning-up + active).
+    /// count schedulers reason about (spinning-up + active). O(1).
     pub fn allocated(&self, kind: WorkerKind) -> u32 {
-        self.iter_kind(kind)
-            .filter(|w| w.state != WorkerState::SpinningDown)
-            .count() as u32
+        self.allocated[ix(kind)]
     }
 
     pub fn is_empty(&self) -> bool {
-        self.live_cpu.is_empty() && self.live_fpga.is_empty()
+        self.live.iter().all(|l| l.is_empty())
     }
 
     pub fn total(&self) -> usize {
-        self.live_cpu.len() + self.live_fpga.len()
+        self.live.iter().map(|l| l.len()).sum()
     }
 }
 
@@ -105,6 +208,16 @@ mod tests {
 
     fn mk(pool: &mut Pool, kind: WorkerKind) -> WorkerId {
         pool.insert(|id| Worker::new(id, kind, 0.0, 1.0, 0))
+    }
+
+    /// Force a worker Active and idle at `since` (test scaffolding).
+    fn activate(pool: &mut Pool, id: WorkerId, since: f64) {
+        pool.with_mut(id, |w| {
+            w.state = WorkerState::Active;
+            w.ready_at = since;
+            w.busy_until = since;
+            w.idle_since = since;
+        });
     }
 
     #[test]
@@ -136,9 +249,72 @@ mod tests {
         let mut p = Pool::new();
         let a = mk(&mut p, WorkerKind::Fpga);
         mk(&mut p, WorkerKind::Fpga);
-        p.get_mut(a).unwrap().state = WorkerState::SpinningDown;
+        p.with_mut(a, |w| w.state = WorkerState::SpinningDown);
         assert_eq!(p.count(WorkerKind::Fpga), 2);
         assert_eq!(p.allocated(WorkerKind::Fpga), 1);
+    }
+
+    #[test]
+    fn idle_index_orders_longest_idle_first() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Cpu);
+        let b = mk(&mut p, WorkerKind::Cpu);
+        let c = mk(&mut p, WorkerKind::Cpu);
+        activate(&mut p, a, 5.0);
+        activate(&mut p, b, 1.0);
+        activate(&mut p, c, 3.0);
+        let order: Vec<WorkerId> = p.idle_ordered(WorkerKind::Cpu).collect();
+        assert_eq!(order, vec![b, c, a]);
+        assert_eq!(p.idle_count(WorkerKind::Cpu), 3);
+        // Giving b work drops it from the idle index.
+        p.with_mut(b, |w| {
+            w.assign(6.0, 1.0);
+        });
+        let order: Vec<WorkerId> = p.idle_ordered(WorkerKind::Cpu).collect();
+        assert_eq!(order, vec![c, a]);
+    }
+
+    #[test]
+    fn ready_index_tracks_busy_until() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Fpga); // busy_until = spin_up = 1.0
+        let b = mk(&mut p, WorkerKind::Fpga);
+        activate(&mut p, b, 0.0);
+        p.with_mut(b, |w| {
+            w.assign(0.0, 0.25); // busy_until = 0.25 < a's 1.0
+        });
+        assert_eq!(p.earliest_ready(WorkerKind::Fpga), Some((0.25, b)));
+        p.with_mut(b, |w| {
+            w.assign(0.0, 2.0); // now 2.25 > 1.0
+        });
+        assert_eq!(p.earliest_ready(WorkerKind::Fpga), Some((1.0, a)));
+        // Spinning-down workers leave the ready index entirely.
+        p.with_mut(a, |w| w.state = WorkerState::SpinningDown);
+        assert_eq!(p.earliest_ready(WorkerKind::Fpga), Some((2.25, b)));
+    }
+
+    #[test]
+    fn earliest_ready_any_prefers_cpu_on_tie() {
+        let mut p = Pool::new();
+        let f = mk(&mut p, WorkerKind::Fpga);
+        let c = mk(&mut p, WorkerKind::Cpu);
+        // Both have busy_until = 1.0 (same spin-up): CPU wins the tie.
+        assert_eq!(p.earliest_ready_any(), Some(c));
+        p.remove(c);
+        assert_eq!(p.earliest_ready_any(), Some(f));
+    }
+
+    #[test]
+    fn live_ids_are_id_ordered_and_removal_stable() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Cpu);
+        let b = mk(&mut p, WorkerKind::Cpu);
+        let c = mk(&mut p, WorkerKind::Cpu);
+        assert_eq!(p.live_ids(WorkerKind::Cpu), vec![a, b, c]);
+        // Removing the middle worker must not reshuffle the rest (the old
+        // swap-removed Vec moved `c` into `b`'s position).
+        p.remove(b);
+        assert_eq!(p.live_ids(WorkerKind::Cpu), vec![a, c]);
     }
 
     #[test]

@@ -34,10 +34,18 @@ pub fn load_csv(path: &Path) -> Result<AppTrace> {
         if line.is_empty() {
             continue;
         }
+        // Header-token grammar shared with the streaming reader
+        // (`source::CsvSource::open_impl`) — keep the two in sync.
         if let Some(rest) = line.strip_prefix('#') {
             for tok in rest.split_whitespace() {
                 if let Some(v) = tok.strip_prefix("duration=") {
-                    duration = v.parse().ok();
+                    duration = Some(v.parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "{}:{}: bad duration '{v}' in header",
+                            path.display(),
+                            lineno + 1
+                        )
+                    })?);
                 } else if let Some(v) = tok.strip_prefix("app=") {
                     name = v.to_string();
                 }
@@ -58,10 +66,21 @@ pub fn load_csv(path: &Path) -> Result<AppTrace> {
             .trim()
             .parse()
             .with_context(|| format!("{}:{}: bad size", path.display(), lineno + 1))?;
-        anyhow::ensure!(size > 0.0, "{}:{}: size must be > 0", path.display(), lineno + 1);
+        anyhow::ensure!(
+            time.is_finite() && time >= 0.0,
+            "{}:{}: time must be finite and >= 0",
+            path.display(),
+            lineno + 1
+        );
+        anyhow::ensure!(
+            size > 0.0 && size.is_finite(),
+            "{}:{}: size must be finite and > 0",
+            path.display(),
+            lineno + 1
+        );
         arrivals.push(Arrival { time, size });
     }
-    arrivals.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+    arrivals.sort_by(|a, b| a.time.total_cmp(&b.time));
     let duration = duration.unwrap_or_else(|| arrivals.last().map_or(0.0, |a| a.time));
     Ok(AppTrace::new(&name, arrivals, duration))
 }
@@ -151,6 +170,45 @@ mod tests {
         assert!(load_csv(&p).is_err());
         std::fs::write(&p, "1.0,-0.5\n").unwrap();
         assert!(load_csv(&p).is_err());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn csv_source_streams_what_load_csv_materializes() {
+        use crate::trace::source::{ArrivalSource, CsvSource};
+        let d = tmpdir("src");
+        let p = d.join("demo.csv");
+        save_csv(&sample(), &p).unwrap();
+        let eager = load_csv(&p).unwrap();
+        let mut src = CsvSource::open(&p).unwrap();
+        assert_eq!(src.name(), "demo");
+        assert_eq!(src.duration(), eager.duration);
+        let streamed: Vec<Arrival> = std::iter::from_fn(|| src.next_arrival()).collect();
+        assert_eq!(streamed, eager.arrivals);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn csv_source_requires_duration_and_order() {
+        use crate::trace::source::{ArrivalSource, CsvSource};
+        let d = tmpdir("srcbad");
+        // Headerless: no window length available for streaming.
+        let p = d.join("raw.csv");
+        std::fs::write(&p, "1.0,0.1\n2.0,0.1\n").unwrap();
+        assert!(CsvSource::open(&p).is_err());
+        let mut src = CsvSource::open_with_duration(&p, 5.0).unwrap();
+        assert_eq!(src.duration(), 5.0);
+        assert!(src.next_arrival().is_some());
+        // Out-of-order rows fail loudly at the offending line.
+        let q = d.join("unsorted.csv");
+        std::fs::write(&q, "# duration=9\n5.0,0.1\n1.0,0.2\n").unwrap();
+        let mut src = CsvSource::open(&q).unwrap();
+        assert!(src.next_arrival().is_some());
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            src.next_arrival()
+        }))
+        .is_err();
+        assert!(panicked, "out-of-order row must fail loudly");
         let _ = std::fs::remove_dir_all(&d);
     }
 

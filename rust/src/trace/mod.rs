@@ -1,18 +1,28 @@
 //! Workload traces: rate series, request arrival streams, and generators.
 //!
-//! Two representations flow through the system:
+//! Three representations flow through the system:
 //!
 //! * [`RateTrace`] — piecewise request *rates* (req/s per slot). This is what
 //!   the b-model produces, what §3's fluid/optimal analysis consumes, and
 //!   what drives non-homogeneous Poisson arrival synthesis.
-//! * [`AppTrace`] — a concrete stream of [`Arrival`]s (time + size) for one
-//!   application, consumed by the discrete-event simulator and the serving
-//!   runtime.
+//! * [`ArrivalSource`] — a pull-based, time-ordered *stream* of
+//!   [`Arrival`]s (time + size): the constant-memory representation the
+//!   simulator and serving runtime consume, generated lazily by the
+//!   synthesis pipelines or replayed from CSV without materialization.
+//! * [`AppTrace`] — a fully materialized arrival vector for one
+//!   application: a thin `collect()` of a source, kept for callers that
+//!   need random access (fitting searches, saved-trace tooling).
 
 pub mod bmodel;
 pub mod io;
 pub mod poisson;
 pub mod production;
+pub mod source;
+
+pub use source::{
+    synthetic_source, ArrivalSource, CsvSource, MergeSource, PoissonSource, TraceSource,
+    VecSource,
+};
 
 use crate::util::rng::Rng;
 
@@ -116,6 +126,36 @@ impl AppTrace {
         }
     }
 
+    /// Materialize a streaming source — the thin `collect()` adapter that
+    /// lets source-producing pipelines feed legacy `Vec`-consuming
+    /// callers. Streams of unbounded length should instead flow straight
+    /// into [`crate::sim::run_source`].
+    pub fn from_source(src: &mut dyn ArrivalSource) -> AppTrace {
+        let name = src.name().to_string();
+        let duration = src.duration();
+        let mut arrivals = Vec::new();
+        while let Some(a) = src.next_arrival() {
+            arrivals.push(a);
+        }
+        AppTrace::new(&name, arrivals, duration)
+    }
+
+    /// Borrowing streaming view of this trace (the adapter every
+    /// source-based API uses to accept materialized traces).
+    pub fn source(&self) -> TraceSource<'_> {
+        TraceSource::new(self)
+    }
+
+    /// Consume the trace into an owning source.
+    pub fn into_source(self) -> VecSource {
+        let AppTrace {
+            name,
+            arrivals,
+            duration,
+        } = self;
+        VecSource::new(&name, arrivals, duration)
+    }
+
     pub fn len(&self) -> usize {
         self.arrivals.len()
     }
@@ -132,25 +172,39 @@ impl AppTrace {
     /// Aggregate per-interval demand in CPU-seconds (used by oracle
     /// schedulers and needed-worker computations).
     pub fn work_per_interval(&self, interval: f64) -> Vec<f64> {
-        let n = (self.duration / interval).ceil() as usize;
-        let mut w = vec![0.0; n.max(1)];
+        let n = interval_bins(self.duration, interval);
+        let mut w = vec![0.0; n];
         for a in &self.arrivals {
-            let i = ((a.time / interval) as usize).min(w.len() - 1);
-            w[i] += a.size;
+            w[interval_index(a.time, interval, n)] += a.size;
         }
         w
     }
 
     /// Per-interval arrival counts.
     pub fn counts_per_interval(&self, interval: f64) -> Vec<u64> {
-        let n = (self.duration / interval).ceil() as usize;
-        let mut c = vec![0u64; n.max(1)];
+        let n = interval_bins(self.duration, interval);
+        let mut c = vec![0u64; n];
         for a in &self.arrivals {
-            let i = ((a.time / interval) as usize).min(c.len() - 1);
-            c[i] += 1;
+            c[interval_index(a.time, interval, n)] += 1;
         }
         c
     }
+}
+
+/// Number of `interval`-wide bins covering `duration` (always >= 1) —
+/// the single binning rule shared by [`AppTrace::work_per_interval`] /
+/// [`AppTrace::counts_per_interval`] and the streaming oracle
+/// construction (`sched::Oracle::from_source`), so the materialized and
+/// streaming paths can never disagree on interval layout.
+pub fn interval_bins(duration: f64, interval: f64) -> usize {
+    ((duration / interval).ceil() as usize).max(1)
+}
+
+/// Clamped bin index of an arrival at `time` (overruns — e.g. a
+/// minute-aligned rate grid past a non-aligned window — land in the
+/// final bin).
+pub fn interval_index(time: f64, interval: f64, bins: usize) -> usize {
+    ((time / interval) as usize).min(bins - 1)
 }
 
 /// §5.1's synthetic workload: constant-size requests with **per-minute**

@@ -11,8 +11,10 @@
 use super::{Arrival, RateTrace};
 use crate::util::rng::Rng;
 
-/// Integration step for arrival placement (seconds).
-const STEP: f64 = 1.0;
+/// Integration step for arrival placement (seconds). Shared with the
+/// streaming [`super::source::PoissonSource`], whose chunking must mirror
+/// this loop exactly.
+pub(crate) const STEP: f64 = 1.0;
 
 /// Generate sorted arrivals over `rates.duration()`. `size_of` maps arrival
 /// time → request size, letting callers use constant sizes (§3.2) or
@@ -38,8 +40,10 @@ pub fn poisson_arrivals(
                 size: 0.0, // sized after sorting for determinism by time order
             });
         }
-        // Keep arrivals time-sorted within the step.
-        arrivals[base..].sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+        // Keep arrivals time-sorted within the step. total_cmp: a NaN
+        // (impossible here, but this is a hot path) sorts instead of
+        // panicking; validation rejects NaNs at the source boundary.
+        arrivals[base..].sort_by(|a, b| a.time.total_cmp(&b.time));
         t += step;
     }
     for a in &mut arrivals {

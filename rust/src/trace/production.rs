@@ -19,6 +19,7 @@
 //! * Two-hour windows, time-varying Poisson interarrivals with per-minute
 //!   linear rate interpolation (§5.1).
 
+use super::source::PoissonSource;
 use super::{bmodel, poisson, AppTrace, RateTrace};
 use crate::config::SizeBucket;
 use crate::util::rng::Rng;
@@ -126,7 +127,26 @@ pub fn generate(params: &ProductionParams, rng: &mut Rng) -> Vec<AppTrace> {
     apps
 }
 
-fn generate_app(params: &ProductionParams, index: usize, rng: &mut Rng) -> AppTrace {
+/// Streaming counterpart of [`generate`]: one lazy per-app source per
+/// heavy-demand app. Per-app setup (size, demand, per-minute rates) is
+/// materialized eagerly — it is O(minutes), not O(arrivals) — and the
+/// Poisson synthesis streams, so a paper-scale two-hour population holds
+/// only its rate grids in memory. Sequence-identical to [`generate`] for
+/// the same parent RNG (pinned by `rust/tests/source_parity.rs`).
+pub fn app_sources(params: &ProductionParams, rng: &mut Rng) -> Vec<PoissonSource> {
+    let n_apps = params
+        .max_apps
+        .map_or(params.dataset.app_count(params.bucket), |m| {
+            m.min(params.dataset.app_count(params.bucket))
+        });
+    (0..n_apps)
+        .map(|i| app_source(params, i, rng.fork(i as u64)))
+        .collect()
+}
+
+/// The shared per-app setup: request size, demand draw, and the
+/// per-minute rate grid (base × diurnal drift × b-model variability).
+fn app_rates(params: &ProductionParams, rng: &mut Rng) -> (f64, RateTrace) {
     let (lo, hi) = params.bucket.bounds();
     // Log-uniform request size within the bucket.
     let size = lo * (hi / lo).powf(rng.f64());
@@ -151,13 +171,37 @@ fn generate_app(params: &ProductionParams, index: usize, rng: &mut Rng) -> AppTr
             (mean_rate * variability[m] * diurnal).max(0.0)
         })
         .collect();
-    let rate_trace = RateTrace::new(60.0, rates);
-    let arrivals = poisson::poisson_arrivals(rng, &rate_trace, |_| size);
-    AppTrace::new(
-        &format!("{}-{}-app{:03}", params.dataset.name(), params.bucket.name(), index),
-        arrivals,
-        params.duration,
+    (size, RateTrace::new(60.0, rates))
+}
+
+fn app_name(params: &ProductionParams, index: usize) -> String {
+    format!(
+        "{}-{}-app{:03}",
+        params.dataset.name(),
+        params.bucket.name(),
+        index
     )
+}
+
+fn generate_app(params: &ProductionParams, index: usize, rng: &mut Rng) -> AppTrace {
+    let (size, rate_trace) = app_rates(params, rng);
+    let arrivals = poisson::poisson_arrivals(rng, &rate_trace, |_| size);
+    AppTrace::new(&app_name(params, index), arrivals, params.duration)
+}
+
+fn app_source(params: &ProductionParams, index: usize, mut rng: Rng) -> PoissonSource {
+    let (size, rate_trace) = app_rates(params, &mut rng);
+    // The minute-aligned rate grid may overrun a non-minute-aligned
+    // window; `generate` has always kept those arrivals, so the streaming
+    // path does too.
+    PoissonSource::new(
+        &app_name(params, index),
+        rng,
+        rate_trace,
+        params.duration,
+        Box::new(move |_| size),
+    )
+    .with_unclipped_window()
 }
 
 #[cfg(test)]
@@ -255,7 +299,7 @@ mod tests {
         };
         // Pareto demand: top quarter of apps should carry most of the work.
         let mut works: Vec<f64> = generate(&p, &mut rng).iter().map(|a| a.total_work()).collect();
-        works.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        works.sort_by(|a, b| b.total_cmp(a));
         let total: f64 = works.iter().sum();
         let top_quarter: f64 = works[..works.len() / 4].iter().sum();
         assert!(

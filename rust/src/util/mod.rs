@@ -3,6 +3,7 @@
 //! property-testing harness.
 
 pub mod json;
+pub mod ordf64;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,70 @@
+//! A total-order wrapper for `f64` sort/index keys.
+//!
+//! `f64` is only `PartialOrd`, which forces `partial_cmp(..).unwrap()`
+//! comparators into hot sort paths — and those panic mid-run the moment a
+//! NaN slips into a trace. [`OrdF64`] carries IEEE 754 `total_cmp` order
+//! instead (NaN sorts deterministically after +inf), so ordered indexes
+//! and k-way merges stay panic-free; NaN rejection happens loudly at
+//! validation boundaries (trace loading / source construction), not in
+//! the middle of a simulation.
+
+use std::cmp::Ordering;
+
+/// `f64` with `Ord`/`Eq` via [`f64::total_cmp`]. Suitable as a `BTreeSet`
+/// / heap key: the total order refines the usual numeric order on
+/// non-NaN values (with `-0.0 < +0.0`).
+#[derive(Clone, Copy, Debug)]
+pub struct OrdF64(pub f64);
+
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_like_f64_on_numbers() {
+        let mut v = [OrdF64(3.0), OrdF64(-1.0), OrdF64(0.5)];
+        v.sort();
+        assert_eq!(v.map(|x| x.0), [-1.0, 0.5, 3.0]);
+    }
+
+    #[test]
+    fn nan_is_ordered_not_panicking() {
+        let mut v = [OrdF64(f64::NAN), OrdF64(1.0), OrdF64(f64::INFINITY)];
+        v.sort(); // must not panic
+        assert_eq!(v[0].0, 1.0);
+        assert_eq!(v[1].0, f64::INFINITY);
+        assert!(v[2].0.is_nan());
+    }
+
+    #[test]
+    fn usable_as_btree_key() {
+        use std::collections::BTreeSet;
+        let mut s = BTreeSet::new();
+        s.insert((OrdF64(2.0), 1u32));
+        s.insert((OrdF64(1.0), 2u32));
+        s.insert((OrdF64(1.0), 1u32));
+        // Ordered by (value, id): (1.0, 1) < (1.0, 2) < (2.0, 1).
+        let order: Vec<u32> = s.iter().map(|&(_, id)| id).collect();
+        assert_eq!(order, vec![1, 2, 1]);
+    }
+}
