@@ -71,6 +71,8 @@ fn bench_sim_engine() {
     }
 }
 
+/// A fleet with a realistic state mix (≈60% busy, ≈30% idle, ≈10%
+/// spinning up) so every indexed preference class is populated.
 fn state_with_workers(n_fpga: u32, n_cpu: u32) -> SimState {
     let mut cfg = SimConfig::paper_default();
     cfg.platform.fpga.spin_up = 0.0;
@@ -82,10 +84,21 @@ fn state_with_workers(n_fpga: u32, n_cpu: u32) -> SimState {
         for _ in 0..n {
             let id = sim.alloc(kind).unwrap();
             let busy = rng.range_f64(0.0, 0.05);
+            let roll = rng.below(10);
             sim.pool.with_mut(id, |w| {
-                w.state = WorkerState::Active;
-                w.busy_until = busy;
-                w.queued = 1;
+                if roll < 6 {
+                    w.state = WorkerState::Active;
+                    w.busy_until = busy;
+                    w.queued = 1;
+                } else if roll < 9 {
+                    w.state = WorkerState::Active;
+                    w.busy_until = 0.0;
+                    w.idle_since = -busy;
+                } else {
+                    w.state = WorkerState::SpinningUp;
+                    w.ready_at = busy.max(1e-4);
+                    w.busy_until = w.ready_at + busy;
+                }
             });
         }
     }
@@ -93,8 +106,10 @@ fn state_with_workers(n_fpga: u32, n_cpu: u32) -> SimState {
 }
 
 fn bench_dispatch() {
-    println!("-- dispatch policies --");
-    for &pool in &[16u32, 128, 1024] {
+    // The pool-size axis: O(log W) indexed dispatch should be near-flat
+    // from 100 to 10k workers; an O(W) scan grows ~100x.
+    println!("-- dispatch policies (pool-size scaling axis) --");
+    for &pool in &[100u32, 1_000, 10_000] {
         let sim = state_with_workers(pool / 2, pool / 2);
         let req = Request {
             arrival: 0.0,
@@ -113,6 +128,25 @@ fn bench_dispatch() {
                 || d.find(&sim, &req, &[WorkerKind::Fpga, WorkerKind::Cpu]),
             );
         }
+    }
+}
+
+fn bench_pool_scaling() {
+    // End-to-end counterpart of bench_dispatch: full streaming replays
+    // against pinned fleets (the `spork bench-sim` pool_scaling axis, at
+    // reduced N so `cargo bench` stays snappy). arrivals/sec per fleet
+    // size should stay within a small factor across the two decades.
+    println!("-- pool-size scaling (streaming replay, pinned fleets) --");
+    let n: u64 = std::env::var("SPORK_BENCH_SCALING_ARRIVALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50_000);
+    for p in spork::exp::run_pool_scaling(&[100, 1_000, 10_000], n, 1) {
+        println!(
+            "{:<48} {:>10.2} M arrivals/s",
+            format!("  pinned fleet {:>6}: {} arrivals", p.workers, p.arrivals),
+            p.arrivals_per_sec / 1e6
+        );
     }
 }
 
@@ -191,6 +225,7 @@ fn bench_streaming_replay() {
 
 fn main() {
     bench_streaming_replay();
+    bench_pool_scaling();
     bench_sweep_engine();
     bench_sim_engine();
     bench_dispatch();

@@ -9,10 +9,20 @@
 //! replay — the point the bench exists to keep true. CI runs a reduced-N
 //! smoke configuration and uploads the JSON as a per-PR artifact, so
 //! throughput or memory regressions are visible in review.
+//!
+//! A second axis replays against *pinned fleets* of ~100 / 1k / 10k
+//! workers ([`run_pool_scaling`]): per-arrival dispatch cost is the
+//! hot-path term that scales with fleet size, and the indexed dispatch
+//! queries keep it O(log W). The `pool_scaling` JSON array reports
+//! arrivals/sec per fleet size; `--assert-scaling R` fails the run when
+//! per-arrival cost at the largest fleet exceeds R× the smallest — the
+//! loud CI tripwire for an accidental return to O(W) scans (a linear
+//! scan is ~100× from 100 to 10k workers).
 
 use crate::cli::Args;
-use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
-use crate::sched;
+use crate::config::{DispatchPolicy, PlatformConfig, SchedulerKind, SimConfig, WorkerKind};
+use crate::policy::{Action, Observation, Policy, PolicyView, Target};
+use crate::sched::{self, dispatch::Dispatcher};
 use crate::sim;
 use crate::trace::{synthetic_source, ArrivalSource};
 use crate::util::rng::Rng;
@@ -32,15 +42,45 @@ pub struct BenchSimReport {
     /// replay itself needed.
     pub peak_rss_kb: u64,
     pub deadline_misses: u64,
+    /// Pool-size scaling axis (empty when not measured).
+    pub pool_scaling: Vec<PoolScalePoint>,
+}
+
+/// One point of the pool-size scaling axis: a pinned fleet of `workers`
+/// serving an arrival stream sized to keep per-worker load constant.
+#[derive(Debug, Clone)]
+pub struct PoolScalePoint {
+    pub workers: u32,
+    pub arrivals: u64,
+    pub wall_seconds: f64,
+    pub arrivals_per_sec: f64,
+}
+
+impl PoolScalePoint {
+    /// Wall-clock cost per replayed arrival (seconds).
+    pub fn per_arrival(&self) -> f64 {
+        self.wall_seconds / self.arrivals.max(1) as f64
+    }
 }
 
 impl BenchSimReport {
     pub fn to_json(&self) -> String {
+        let scaling: Vec<String> = self
+            .pool_scaling
+            .iter()
+            .map(|p| {
+                format!(
+                    "    {{\"workers\": {}, \"arrivals\": {}, \
+                     \"wall_seconds\": {:.3}, \"arrivals_per_sec\": {:.1}}}",
+                    p.workers, p.arrivals, p.wall_seconds, p.arrivals_per_sec
+                )
+            })
+            .collect();
         format!(
             "{{\n  \"scheduler\": \"{}\",\n  \"arrivals\": {},\n  \
              \"sim_seconds\": {:.3},\n  \"wall_seconds\": {:.3},\n  \
              \"arrivals_per_sec\": {:.1},\n  \"peak_rss_kb\": {},\n  \
-             \"deadline_misses\": {}\n}}\n",
+             \"deadline_misses\": {},\n  \"pool_scaling\": [\n{}\n  ]\n}}\n",
             self.scheduler,
             self.arrivals,
             self.sim_seconds,
@@ -48,6 +88,7 @@ impl BenchSimReport {
             self.arrivals_per_sec,
             self.peak_rss_kb,
             self.deadline_misses,
+            scaling.join(",\n"),
         )
     }
 }
@@ -107,7 +148,115 @@ pub fn run_bench_sim(
         arrivals_per_sec: r.metrics.requests as f64 / wall.max(1e-9),
         peak_rss_kb: peak_rss_kb(),
         deadline_misses: r.metrics.deadline_misses,
+        pool_scaling: Vec::new(),
     }
+}
+
+/// A statically provisioned fleet that exists only to measure dispatch:
+/// pre-warms `cpus + fpgas` workers at t = 0, keeps them alive while the
+/// trace is live, and routes every arrival through [`Dispatcher::find`]
+/// over the full fleet — so per-arrival cost is dominated by exactly the
+/// term the pool-scaling axis tracks.
+struct PinnedFleet {
+    cpus: u32,
+    fpgas: u32,
+    dispatcher: Dispatcher,
+}
+
+impl PinnedFleet {
+    fn new(cpus: u32, fpgas: u32) -> Self {
+        Self {
+            cpus,
+            fpgas,
+            dispatcher: Dispatcher::new(DispatchPolicy::EfficientFirst),
+        }
+    }
+}
+
+impl Policy for PinnedFleet {
+    fn name(&self) -> String {
+        "pinned-fleet".into()
+    }
+
+    fn interval(&self) -> f64 {
+        f64::INFINITY
+    }
+
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+        const KINDS: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
+        match obs {
+            Observation::Start => {
+                out.push(Action::Alloc {
+                    kind: WorkerKind::Fpga,
+                    n: self.fpgas,
+                    prewarmed: true,
+                });
+                out.push(Action::Alloc {
+                    kind: WorkerKind::Cpu,
+                    n: self.cpus,
+                    prewarmed: true,
+                });
+            }
+            Observation::Arrival { req } => {
+                let to = match self.dispatcher.find(view, &req, KINDS) {
+                    Some(w) => Target::Worker(w),
+                    // Caps equal the fleet, so this falls back to the
+                    // earliest-finishing worker instead of growing.
+                    None => Target::Fresh(WorkerKind::Cpu),
+                };
+                out.push(Action::Dispatch { req, to });
+            }
+            Observation::IdleExpired { worker } => {
+                if view.trace_live() {
+                    out.push(Action::KeepAlive { worker });
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Replay `arrivals_each` arrivals against a pinned fleet of each size in
+/// `sizes` (per-worker load held constant at ~20 req/s of 10 ms work, so
+/// only the fleet dimension varies) and time the replays. Idle timeouts
+/// are pinned to the replay window so event traffic doesn't scale with
+/// fleet size — the measured axis is dispatch cost.
+pub fn run_pool_scaling(sizes: &[u32], arrivals_each: u64, seed: u64) -> Vec<PoolScalePoint> {
+    let defaults = PlatformConfig::paper_default();
+    let mut points = Vec::new();
+    for &workers in sizes {
+        let fpgas = (workers / 2).max(1);
+        let cpus = (workers - fpgas).max(1);
+        let rate = workers as f64 * 20.0;
+        let duration = arrivals_each as f64 / rate;
+        let mut cfg = SimConfig::paper_default();
+        cfg.max_fpgas = Some(fpgas);
+        cfg.max_cpus = Some(cpus);
+        // One idle-expiry consult per worker after the window, not a
+        // per-5ms KeepAlive storm across a 10k-CPU fleet.
+        cfg.cpu_idle_timeout = duration.max(1.0);
+        cfg.fpga_idle_timeout = duration.max(1.0);
+        let source = synthetic_source(
+            "scale",
+            Rng::for_stream(seed, workers as u64),
+            0.65,
+            duration,
+            rate,
+            0.010,
+            60.0,
+        );
+        let mut policy = PinnedFleet::new(cpus, fpgas);
+        let t0 = Instant::now();
+        let r = sim::run_source(Box::new(source), cfg, &defaults, &mut policy);
+        let wall = t0.elapsed().as_secs_f64();
+        points.push(PoolScalePoint {
+            workers,
+            arrivals: r.metrics.requests,
+            wall_seconds: wall,
+            arrivals_per_sec: r.metrics.requests as f64 / wall.max(1e-9),
+        });
+    }
+    points
 }
 
 /// `spork bench-sim` CLI entrypoint.
@@ -125,11 +274,26 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
     let name = args.str_or("scheduler", "spork-e");
     let kind = SchedulerKind::from_name(&name)
         .ok_or(format!("unknown scheduler '{name}'"))?;
+    let sizes = parse_pool_sizes(&args.str_or("pool-sizes", "100,1000,10000"))?;
+    let scaling_arrivals = args.u64_or("scaling-arrivals", 200_000)?;
+    let assert_scaling = match args.get("assert-scaling") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| format!("--assert-scaling: invalid ratio '{v}'"))?,
+        ),
+        None => None,
+    };
     eprintln!(
         "replaying ~{arrivals} arrivals at {rate} req/s through {} (streaming)...",
         kind.display()
     );
-    let report = run_bench_sim(&kind, arrivals, rate, seed);
+    let mut report = run_bench_sim(&kind, arrivals, rate, seed);
+    if !sizes.is_empty() && scaling_arrivals > 0 {
+        eprintln!(
+            "pool-scaling axis: ~{scaling_arrivals} arrivals per fleet size {sizes:?}..."
+        );
+        report.pool_scaling = run_pool_scaling(&sizes, scaling_arrivals, seed);
+    }
     let json = report.to_json();
     std::fs::write(&out, &json).map_err(|e| format!("writing {out}: {e}"))?;
     println!(
@@ -141,7 +305,49 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
         report.deadline_misses,
         out
     );
+    for p in &report.pool_scaling {
+        println!(
+            "  pool {:>6} workers: {} arrivals in {:.2}s = {:.0} arrivals/s",
+            p.workers, p.arrivals, p.wall_seconds, p.arrivals_per_sec
+        );
+    }
+    if let Some(cap) = assert_scaling {
+        let (small, large) = match (report.pool_scaling.first(), report.pool_scaling.last()) {
+            (Some(s), Some(l)) if s.workers < l.workers => (s, l),
+            _ => return Err("--assert-scaling needs >= 2 ascending --pool-sizes".into()),
+        };
+        let ratio = large.per_arrival() / small.per_arrival().max(1e-12);
+        println!(
+            "  per-arrival cost growth {}->{} workers: {ratio:.2}x (cap {cap}x)",
+            small.workers, large.workers
+        );
+        if ratio > cap {
+            return Err(format!(
+                "dispatch cost scaling regression: per-arrival cost grew {ratio:.2}x \
+                 from {} to {} workers (cap {cap}x) — an O(fleet) scan is back on \
+                 the arrival hot path",
+                small.workers, large.workers
+            ));
+        }
+    }
     Ok(())
+}
+
+/// Parse a `--pool-sizes` comma list ("100,1000,10000").
+fn parse_pool_sizes(spec: &str) -> Result<Vec<u32>, String> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Ok(Vec::new());
+    }
+    spec.split(',')
+        .map(|t| {
+            let t = t.trim();
+            match t.parse::<u32>() {
+                Ok(n) if n > 0 => Ok(n),
+                _ => Err(format!("--pool-sizes: invalid fleet size '{t}'")),
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -170,5 +376,35 @@ mod tests {
         let b = run_bench_sim(&SchedulerKind::spork_e(), 2_000, 400.0, 3);
         assert_eq!(a.arrivals, b.arrivals);
         assert_eq!(a.deadline_misses, b.deadline_misses);
+    }
+
+    #[test]
+    fn pool_scaling_replays_every_size_and_serializes() {
+        let points = run_pool_scaling(&[8, 32], 1_500, 11);
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            // Poisson jitter around the per-size target.
+            assert!(
+                (p.arrivals as f64 - 1_500.0).abs() < 600.0,
+                "arrivals {} at {} workers",
+                p.arrivals,
+                p.workers
+            );
+            assert!(p.arrivals_per_sec > 0.0);
+        }
+        let mut r = run_bench_sim(&SchedulerKind::spork_e(), 1_000, 400.0, 3);
+        r.pool_scaling = points;
+        let j = r.to_json();
+        assert!(j.contains("\"pool_scaling\""));
+        assert!(j.contains("\"workers\": 32"));
+        assert!(crate::util::json::Json::parse(&j).is_ok(), "bench JSON must parse");
+    }
+
+    #[test]
+    fn pool_sizes_parse() {
+        assert_eq!(parse_pool_sizes("100, 1000,10000").unwrap(), vec![100, 1000, 10000]);
+        assert_eq!(parse_pool_sizes("").unwrap(), Vec::<u32>::new());
+        assert!(parse_pool_sizes("12,oops").is_err());
+        assert!(parse_pool_sizes("0").is_err());
     }
 }

@@ -10,7 +10,7 @@ pub mod production_exp;
 pub mod sensitivity;
 pub mod sweep;
 
-pub use benchsim::{cmd_bench_sim, run_bench_sim, BenchSimReport};
+pub use benchsim::{cmd_bench_sim, run_bench_sim, run_pool_scaling, BenchSimReport, PoolScalePoint};
 pub use common::{Cell, ExpCtx};
 pub use sweep::{SweepCell, SweepGrid, WorkloadSpec};
 

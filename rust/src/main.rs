@@ -77,6 +77,9 @@ fn specs() -> Vec<Spec> {
                 ("scheduler", true, "any Table-8 kind (default spork-e)"),
                 ("seed", true, "rng stream seed (default 1)"),
                 ("out", true, "output JSON path (default BENCH_sim_throughput.json)"),
+                ("pool-sizes", true, "pool-scaling fleet sizes (default 100,1000,10000)"),
+                ("scaling-arrivals", true, "arrivals per pool-scaling point (default 200000)"),
+                ("assert-scaling", true, "max per-arrival cost ratio largest/smallest fleet"),
             ],
         },
         Spec {

@@ -1,6 +1,6 @@
 //! The read-only pool view drivers expose to policies.
 
-use super::types::{WorkerId, WorkerObs};
+use super::types::{WorkerId, WorkerObs, WorkerState};
 use crate::config::WorkerKind;
 
 /// What a policy may observe about the world between actions. Both drivers
@@ -13,6 +13,21 @@ use crate::config::WorkerKind;
 /// dispatch scans is therefore deterministic and driver-independent; a
 /// new driver must reproduce this order (or share the pool) to keep
 /// effect-stream parity.
+///
+/// # Indexed dispatch queries
+///
+/// The `*_feasible` / extremal methods answer the dispatch hot path's
+/// preference classes (DESIGN.md §3, "indexed dispatch"). Each has a
+/// reference scan as its default implementation, so a custom view only
+/// has to implement the enumeration primitives; [`crate::sim::SimState`]
+/// overrides them with O(log n) queries against the pool's ordered
+/// indexes. The contract every override must honor (pinned by
+/// `rust/tests/dispatch_parity.rs`): results are identical to the default
+/// scan, including ties — equal-key extrema resolve to the lowest worker
+/// id, and deadline feasibility is the *canonical comparison*
+/// `busy_until.max(now) <= bound` with `bound = deadline - service_time`
+/// (a prefix over `busy_until`, which is what makes the queries
+/// indexable).
 pub trait PolicyView {
     /// Current time in trace seconds.
     fn now(&self) -> f64;
@@ -42,17 +57,117 @@ pub trait PolicyView {
             }
         }
     }
+
+    /// Visit live ids of `kind` in ascending id order, starting strictly
+    /// after `after` (from the smallest id when `None`). Stop early when
+    /// `f` returns `false`. Overrides cursor the live index directly so
+    /// round-robin dispatch allocates nothing per arrival.
+    fn for_each_live_id_after(
+        &self,
+        kind: WorkerKind,
+        after: Option<WorkerId>,
+        f: &mut dyn FnMut(WorkerId) -> bool,
+    ) {
+        for id in self.live_ids(kind) {
+            if let Some(a) = after {
+                if id <= a {
+                    continue;
+                }
+            }
+            if !f(id) {
+                return;
+            }
+        }
+    }
+
+    /// Busiest busy-Active worker of `kind` within the deadline prefix
+    /// `busy_until <= bound` (Alg 3's β class): max `busy_until`, lowest
+    /// id on ties. Returns `(busy_until, id)`. Busy workers always have
+    /// `busy_until >= now`, so the prefix *is* the feasibility set.
+    fn busiest_busy_feasible(&self, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        let mut best: Option<(f64, WorkerId)> = None;
+        self.for_each_worker(kind, &mut |w| {
+            if w.state == WorkerState::Active
+                && w.queued > 0
+                && w.busy_until <= bound
+                && best.map_or(true, |(b, _)| w.busy_until > b)
+            {
+                best = Some((w.busy_until, w.id));
+            }
+        });
+        best
+    }
+
+    /// Most-recently-idle worker of `kind` (Alg 3's ι class): max
+    /// `idle_since`, lowest id on ties. Returns `(idle_since, id)`. Idle
+    /// workers satisfy `busy_until <= now`, so their deadline feasibility
+    /// is uniform — the caller checks `now <= bound` once for the class.
+    fn most_recently_idle(&self, kind: WorkerKind) -> Option<(f64, WorkerId)> {
+        let mut best: Option<(f64, WorkerId)> = None;
+        self.for_each_worker(kind, &mut |w| {
+            if w.state == WorkerState::Active
+                && w.queued == 0
+                && best.map_or(true, |(s, _)| w.idle_since > s)
+            {
+                best = Some((w.idle_since, w.id));
+            }
+        });
+        best
+    }
+
+    /// Most-loaded spinning-up worker of `kind` with `busy_until <= bound`
+    /// (Alg 3's α class): max queued load (`busy_until - ready_at`),
+    /// lowest feasible id on load ties. Returns `(queued_load, id)`.
+    fn most_loaded_spinup_feasible(&self, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        let mut best: Option<(f64, WorkerId)> = None;
+        self.for_each_worker(kind, &mut |w| {
+            if w.state == WorkerState::SpinningUp && w.busy_until <= bound {
+                let load = w.busy_until - w.ready_at;
+                if best.map_or(true, |(l, _)| load > l) {
+                    best = Some((load, w.id));
+                }
+            }
+        });
+        best
+    }
+
+    /// Busiest feasible worker of `kind` over busy-Active *and*
+    /// spinning-up workers (AutoScale index packing ranks both by
+    /// completion horizon): max `busy_until <= bound`, lowest id on ties.
+    /// Returns `(busy_until, id)`.
+    fn busiest_packed_feasible(&self, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        let mut best: Option<(f64, WorkerId)> = None;
+        self.for_each_worker(kind, &mut |w| {
+            let packed = w.state == WorkerState::SpinningUp
+                || (w.state == WorkerState::Active && w.queued > 0);
+            if packed
+                && w.busy_until <= bound
+                && best.map_or(true, |(b, _)| w.busy_until > b)
+            {
+                best = Some((w.busy_until, w.id));
+            }
+        });
+        best
+    }
+
+    /// Earliest-finishing accepting worker of `kind`: min `busy_until`,
+    /// lowest id on ties. Returns `(busy_until, id)` — the best-effort
+    /// fallback of the FPGA-only baselines and capped dispatch.
+    fn earliest_ready(&self, kind: WorkerKind) -> Option<(f64, WorkerId)> {
+        let mut best: Option<(f64, WorkerId)> = None;
+        self.for_each_worker(kind, &mut |w| {
+            if w.accepting() && best.map_or(true, |(b, _)| w.busy_until < b) {
+                best = Some((w.busy_until, w.id));
+            }
+        });
+        best
+    }
 }
 
 /// Earliest-finishing accepting worker of `kind` — the best-effort
 /// dispatch fallback of the FPGA-only baselines. First of equal minima
-/// wins (matches `Iterator::min_by`).
+/// wins (lowest id); an O(log n) probe of the pool's ready index under
+/// the sim view, the reference scan for custom views.
 pub fn earliest_finishing(view: &dyn PolicyView, kind: WorkerKind) -> Option<WorkerId> {
-    let mut best: Option<(f64, WorkerId)> = None;
-    view.for_each_worker(kind, &mut |w| {
-        if w.accepting() && best.map_or(true, |(b, _)| w.busy_until < b) {
-            best = Some((w.busy_until, w.id));
-        }
-    });
-    best.map(|(_, id)| id)
+    view.earliest_ready(kind).map(|(_, id)| id)
 }

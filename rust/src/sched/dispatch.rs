@@ -14,23 +14,35 @@
 //!   distributes requests ... rarely lets workers idle").
 //!
 //! All policies fall back to `None` when no worker can meet the deadline;
-//! the caller then spins up a fresh CPU (Alg 3 line 6). The scans run on
-//! the transport-agnostic [`PolicyView`], so the same dispatcher serves
-//! both the sim driver and the real-time serving driver.
+//! the caller then spins up a fresh CPU (Alg 3 line 6).
+//!
+//! Every preference class is an *extremal query over a deadline
+//! feasibility prefix*: a worker can meet the deadline iff
+//! `busy_until.max(now) <= bound` with `bound = deadline - service_time`,
+//! which is downward-closed in `busy_until`. The dispatcher therefore
+//! asks the [`PolicyView`]'s indexed queries (answered in O(log n) off
+//! the pool's ordered indexes under both drivers) instead of scanning
+//! the fleet per arrival; round robin cursors the live index directly
+//! and allocates nothing. Custom views fall back to the trait's
+//! reference scans — decision parity between the two paths is pinned by
+//! `rust/tests/dispatch_parity.rs`.
 
 use crate::config::{DispatchPolicy, WorkerKind};
-use crate::policy::{PolicyView, Request, WorkerId, WorkerState};
+use crate::policy::{PolicyView, Request, WorkerId};
 
 /// Stateful dispatcher (round robin needs a cursor).
 #[derive(Clone, Debug)]
 pub struct Dispatcher {
     pub policy: DispatchPolicy,
-    rr_cursor: usize,
+    /// Round-robin cursor: kind and id of the last dispatched worker.
+    /// Probing resumes at the next live id after it (wrapping), so the
+    /// rotation survives workers joining and leaving between arrivals.
+    rr_last: Option<(WorkerKind, WorkerId)>,
 }
 
 impl Dispatcher {
     pub fn new(policy: DispatchPolicy) -> Self {
-        Self { policy, rr_cursor: 0 }
+        Self { policy, rr_last: None }
     }
 
     /// Find a worker for `req` per the policy, restricted to `kinds` (the
@@ -50,7 +62,9 @@ impl Dispatcher {
 
     /// Alg 3: kinds in efficiency order; per kind the β (busy, decreasing
     /// load), ι (idle, increasing idle duration), α (allocating,
-    /// decreasing queued load) preference in one O(W) scan.
+    /// decreasing queued load) preference — three indexed extremal
+    /// queries over the kind's deadline-feasibility prefix instead of a
+    /// fleet scan.
     fn efficient_first(
         &self,
         view: &dyn PolicyView,
@@ -59,37 +73,22 @@ impl Dispatcher {
     ) -> Option<WorkerId> {
         let now = view.now();
         for &kind in kinds {
-            let svc = view.service_time(kind, req.size);
-            // Best candidate per preference class.
-            let mut best_busy: Option<(f64, WorkerId)> = None; // max backlog
-            let mut best_idle: Option<(f64, WorkerId)> = None; // max idle_since (least time idle)
-            let mut best_alloc: Option<(f64, WorkerId)> = None; // max queued load
-            view.for_each_worker(kind, &mut |w| {
-                if !w.accepting() || w.finish_time(now, svc) > req.deadline {
-                    return;
-                }
-                match w.state {
-                    WorkerState::Active if w.queued > 0 => {
-                        let load = w.busy_until - now;
-                        if best_busy.map_or(true, |(l, _)| load > l) {
-                            best_busy = Some((load, w.id));
-                        }
-                    }
-                    WorkerState::Active => {
-                        if best_idle.map_or(true, |(s, _)| w.idle_since > s) {
-                            best_idle = Some((w.idle_since, w.id));
-                        }
-                    }
-                    WorkerState::SpinningUp => {
-                        let load = w.busy_until - w.ready_at;
-                        if best_alloc.map_or(true, |(l, _)| load > l) {
-                            best_alloc = Some((load, w.id));
-                        }
-                    }
-                    WorkerState::SpinningDown => {}
-                }
-            });
-            if let Some((_, id)) = best_busy.or(best_idle).or(best_alloc) {
+            let bound = req.deadline - view.service_time(kind, req.size);
+            if now > bound {
+                // Even an instantly-free worker of this kind would miss.
+                continue;
+            }
+            // β: busiest busy worker inside the feasibility prefix.
+            if let Some((_, id)) = view.busiest_busy_feasible(kind, bound) {
+                return Some(id);
+            }
+            // ι: idle workers all have busy_until <= now <= bound, so the
+            // whole class is feasible — take the most recently idle.
+            if let Some((_, id)) = view.most_recently_idle(kind) {
+                return Some(id);
+            }
+            // α: most queued load among feasible spinning-up workers.
+            if let Some((_, id)) = view.most_loaded_spinup_feasible(kind, bound) {
                 return Some(id);
             }
         }
@@ -98,7 +97,9 @@ impl Dispatcher {
 
     /// AutoScale index packing: busiest feasible worker across all kinds;
     /// idle workers rank below any busy worker (packing), most-recently
-    /// idle first among idle.
+    /// idle first among idle. Cross-kind ranking compares completion
+    /// horizons (`busy_until`) with strict `>` replacement, so equal
+    /// horizons keep the earlier kind — the scan's tie order.
     fn index_packing(
         &self,
         view: &dyn PolicyView,
@@ -106,29 +107,34 @@ impl Dispatcher {
         kinds: &[WorkerKind],
     ) -> Option<WorkerId> {
         let now = view.now();
-        let mut best_busy: Option<(f64, WorkerId)> = None;
-        let mut best_idle: Option<(f64, WorkerId)> = None;
+        let mut best_busy: Option<(f64, WorkerId)> = None; // max busy_until
+        let mut best_idle: Option<(f64, WorkerId)> = None; // max idle_since
         for &kind in kinds {
-            let svc = view.service_time(kind, req.size);
-            view.for_each_worker(kind, &mut |w| {
-                if !w.accepting() || w.finish_time(now, svc) > req.deadline {
-                    return;
+            let bound = req.deadline - view.service_time(kind, req.size);
+            if now > bound {
+                continue;
+            }
+            if let Some((b, id)) = view.busiest_packed_feasible(kind, bound) {
+                if best_busy.map_or(true, |(bb, _)| b > bb) {
+                    best_busy = Some((b, id));
                 }
-                if w.queued > 0 || w.state == WorkerState::SpinningUp {
-                    let load = w.busy_until - now;
-                    if best_busy.map_or(true, |(l, _)| load > l) {
-                        best_busy = Some((load, w.id));
-                    }
-                } else if best_idle.map_or(true, |(s, _)| w.idle_since > s) {
-                    best_idle = Some((w.idle_since, w.id));
+            }
+            if let Some((s, id)) = view.most_recently_idle(kind) {
+                if best_idle.map_or(true, |(bs, _)| s > bs) {
+                    best_idle = Some((s, id));
                 }
-            });
+            }
         }
         best_busy.or(best_idle).map(|(_, id)| id)
     }
 
-    /// MArk round robin: rotate a cursor across the combined live list;
-    /// first feasible worker from the cursor wins.
+    /// MArk round robin: resume probing at the next live id after the
+    /// last dispatched worker (cycling kinds in `kinds` order, wrapping
+    /// back through the starting kind); first feasible worker wins. The
+    /// cursor is a (kind, id) position in the live index, so probing
+    /// ranges over the index directly — no per-arrival id-list
+    /// materialization, and the rotation is stable under workers joining
+    /// or leaving between arrivals.
     fn round_robin(
         &mut self,
         view: &dyn PolicyView,
@@ -136,22 +142,60 @@ impl Dispatcher {
         kinds: &[WorkerKind],
     ) -> Option<WorkerId> {
         let now = view.now();
-        let ids: Vec<WorkerId> = kinds
-            .iter()
-            .flat_map(|&k| view.live_ids(k))
-            .collect();
-        if ids.is_empty() {
-            return None;
-        }
-        let n = ids.len();
-        for probe in 0..n {
-            let idx = (self.rr_cursor + probe) % n;
-            let w = view.worker(ids[idx]).unwrap();
-            let svc = view.service_time(w.kind, req.size);
-            if w.accepting() && w.finish_time(now, svc) <= req.deadline {
-                self.rr_cursor = (idx + 1) % n;
-                return Some(w.id);
+        // Resolve the cursor against this call's kind set; a cursor kind
+        // outside `kinds` (caller changed the restriction) resets the
+        // rotation to the first kind's smallest id.
+        let start = self
+            .rr_last
+            .and_then(|(k, id)| kinds.iter().position(|&x| x == k).map(|p| (p, id)));
+        let (start_pos, last_id) = match start {
+            Some((p, id)) => (p, Some(id)),
+            None => (0, None),
+        };
+        let mut found: Option<(WorkerKind, WorkerId)> = None;
+        for step in 0..kinds.len() {
+            let kind = kinds[(start_pos + step) % kinds.len()];
+            let bound = req.deadline - view.service_time(kind, req.size);
+            if now > bound {
+                continue;
             }
+            let after = if step == 0 { last_id } else { None };
+            view.for_each_live_id_after(kind, after, &mut |id| {
+                let w = view.worker(id).expect("live id vanished mid-probe");
+                if w.accepting() && w.busy_until.max(now) <= bound {
+                    found = Some((kind, id));
+                    return false;
+                }
+                true
+            });
+            if found.is_some() {
+                break;
+            }
+        }
+        // Wrap-around: the starting kind's ids up to (and including) the
+        // cursor — a worker may be re-picked when it is the only feasible
+        // one left.
+        if found.is_none() {
+            if let (Some(last), Some(&kind)) = (last_id, kinds.get(start_pos)) {
+                let bound = req.deadline - view.service_time(kind, req.size);
+                if now <= bound {
+                    view.for_each_live_id_after(kind, None, &mut |id| {
+                        if id > last {
+                            return false; // past the cursor — already probed
+                        }
+                        let w = view.worker(id).expect("live id vanished mid-probe");
+                        if w.accepting() && w.busy_until.max(now) <= bound {
+                            found = Some((kind, id));
+                            return false;
+                        }
+                        true
+                    });
+                }
+            }
+        }
+        if let Some((kind, id)) = found {
+            self.rr_last = Some((kind, id));
+            return Some(id);
         }
         None
     }
@@ -161,6 +205,7 @@ impl Dispatcher {
 mod tests {
     use super::*;
     use crate::config::SimConfig;
+    use crate::policy::WorkerState;
     use crate::sim::SimState;
 
     /// Build a state with pre-spun workers: (kind, backlog_seconds).
@@ -267,6 +312,41 @@ mod tests {
         for _ in 0..4 {
             assert_eq!(d.find(&sim, &req(0.010, 0.1), BOTH).unwrap(), ids[1]);
         }
+    }
+
+    #[test]
+    fn equal_backlog_ties_resolve_to_lowest_id() {
+        // Equal-extremal picks must match the historical id-ascending
+        // scan: first (lowest id) of the tied group wins.
+        let (sim, ids) = state_with(&[
+            (WorkerKind::Fpga, 0.04),
+            (WorkerKind::Fpga, 0.04),
+            (WorkerKind::Fpga, 0.02),
+        ]);
+        let mut d = Dispatcher::new(DispatchPolicy::EfficientFirst);
+        assert_eq!(d.find(&sim, &req(0.010, 0.1), BOTH).unwrap(), ids[0]);
+        let mut d = Dispatcher::new(DispatchPolicy::IndexPacking);
+        assert_eq!(d.find(&sim, &req(0.010, 0.1), BOTH).unwrap(), ids[0]);
+    }
+
+    #[test]
+    fn round_robin_cursor_survives_churn() {
+        // The cursor is a (kind, id) position, so removing a worker
+        // between arrivals must not reshuffle the rotation (the old
+        // positional cursor pointed into a shifted list).
+        let (mut sim, ids) = state_with(&[
+            (WorkerKind::Cpu, 0.0),
+            (WorkerKind::Cpu, 0.0),
+            (WorkerKind::Cpu, 0.0),
+        ]);
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let r = req(0.010, 1.0);
+        assert_eq!(d.find(&sim, &r, BOTH).unwrap(), ids[0]);
+        sim.pool.remove(ids[1]);
+        // Rotation resumes after ids[0]: next live id is ids[2], then
+        // wraps back to ids[0].
+        assert_eq!(d.find(&sim, &r, BOTH).unwrap(), ids[2]);
+        assert_eq!(d.find(&sim, &r, BOTH).unwrap(), ids[0]);
     }
 
     #[test]

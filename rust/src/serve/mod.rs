@@ -13,7 +13,11 @@
 //! Because the decision loop *is* the sim driver, served behavior equals
 //! simulated behavior action-for-action (pinned by
 //! `rust/tests/policy_parity.rs`), and every Table 8 scheduler kind runs
-//! under `spork serve --scheduler <kind>`. Energy and cost integrate
+//! under `spork serve --scheduler <kind>`. The router also inherits the
+//! sim driver's indexed dispatch for free (DESIGN.md §3.1): policies
+//! query the shared pool's ordered indexes through `PolicyView`, so
+//! per-request routing cost is O(log W) in warm-pool size — the serving
+//! hot path never scans the fleet. Energy and cost integrate
 //! Table 6 powers/prices over *simulated* time through the same
 //! accounting as the simulator; latencies and deadline misses come from
 //! the real completion timestamps.

@@ -76,6 +76,10 @@ impl SimState {
     /// reached. Alloc energy (busy power over the spin-up window) is
     /// accounted immediately.
     pub fn alloc(&mut self, kind: WorkerKind) -> Option<WorkerId> {
+        self.alloc_inner(kind, false)
+    }
+
+    fn alloc_inner(&mut self, kind: WorkerKind, warm: bool) -> Option<WorkerId> {
         let cap = match kind {
             WorkerKind::Cpu => self.cfg.max_cpus,
             WorkerKind::Fpga => self.cfg.max_fpgas,
@@ -91,7 +95,13 @@ impl SimState {
         let id = self
             .pool
             .insert(|id| Worker::new(id, kind, now, params.spin_up, current));
-        self.events.push(now + params.spin_up, Event::SpinUpDone { worker: id });
+        // Warm allocs go Active immediately (the caller flips the state in
+        // this same transaction group), so their SpinUpDone would be a
+        // guaranteed no-op — skip it instead of bloating the event heap by
+        // one dead entry per worker of a large pre-warmed fleet.
+        if !warm {
+            self.events.push(now + params.spin_up, Event::SpinUpDone { worker: id });
+        }
         self.metrics.energy_mut(kind).alloc += params.spin_up_energy();
         // Peak tracks *allocated* workers (spinning-up + active), matching
         // the cap semantics; spinning-down workers are draining capacity.
@@ -111,10 +121,11 @@ impl SimState {
 
     /// Allocate a worker that is already warm (statically provisioned
     /// before the workload window — FPGA-static's fleet). The one-time
-    /// spin-up energy is still charged, but the worker is Active now.
-    /// (The pending `SpinUpDone` event becomes a no-op.)
+    /// spin-up energy is still charged, but the worker is Active now and
+    /// no `SpinUpDone` is scheduled (the `handle_event` guard stays as a
+    /// defensive no-op for any stray event).
     pub fn alloc_warm(&mut self, kind: WorkerKind) -> Option<WorkerId> {
-        let id = self.alloc(kind)?;
+        let id = self.alloc_inner(kind, true)?;
         let now = self.now;
         self.pool.with_mut(id, |w| {
             w.state = WorkerState::Active;
@@ -127,11 +138,13 @@ impl SimState {
     }
 
     /// Would `worker` finish a `size` request by `deadline` if dispatched
-    /// now?
+    /// now? Uses the canonical feasibility comparison
+    /// (`busy_until.max(now) <= deadline - svc`) so the answer always
+    /// agrees with the indexed dispatch queries.
     pub fn can_finish(&self, worker: WorkerId, size: f64, deadline: f64) -> bool {
         let w = self.pool.get(worker).expect("can_finish: unknown worker");
         let svc = self.service_time(w.kind, size);
-        w.accepting() && w.finish_time(self.now, svc) <= deadline
+        w.accepting() && w.busy_until.max(self.now) <= deadline - svc
     }
 
     /// Dispatch a request to a specific worker; returns the completion
@@ -267,6 +280,55 @@ impl PolicyView for SimState {
         for w in self.pool.iter_kind(kind) {
             f(&SimState::worker_obs(w));
         }
+    }
+
+    // Indexed overrides of the dispatch hot-path queries: identical
+    // results to the trait's reference scans (including lowest-id ties —
+    // pinned by `rust/tests/dispatch_parity.rs`), answered off the pool's
+    // ordered indexes instead of a fleet-sized scan.
+
+    fn for_each_live_id_after(
+        &self,
+        kind: WorkerKind,
+        after: Option<WorkerId>,
+        f: &mut dyn FnMut(WorkerId) -> bool,
+    ) {
+        match after {
+            Some(a) => {
+                for id in self.pool.live_ids_after(kind, a) {
+                    if !f(id) {
+                        return;
+                    }
+                }
+            }
+            None => {
+                for id in self.pool.live_ids_iter(kind) {
+                    if !f(id) {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    fn busiest_busy_feasible(&self, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        self.pool.busiest_busy(kind, bound)
+    }
+
+    fn most_recently_idle(&self, kind: WorkerKind) -> Option<(f64, WorkerId)> {
+        self.pool.most_recently_idle(kind)
+    }
+
+    fn most_loaded_spinup_feasible(&self, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        self.pool.most_loaded_spinup(kind, bound)
+    }
+
+    fn busiest_packed_feasible(&self, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        self.pool.busiest_packed(kind, bound)
+    }
+
+    fn earliest_ready(&self, kind: WorkerKind) -> Option<(f64, WorkerId)> {
+        self.pool.earliest_ready(kind)
     }
 }
 
@@ -919,6 +981,20 @@ mod tests {
         run(&trace, SimConfig::paper_default(), &defaults(), &mut s);
         assert_eq!(s.ticks, 10); // t = 1..=10
         assert_eq!(s.last_index, 10); // Tick index k <=> t = k * T_s
+    }
+
+    #[test]
+    fn warm_alloc_schedules_no_spinup_event() {
+        // A warm alloc is Active immediately, so its SpinUpDone would be a
+        // guaranteed no-op — it must not be pushed at all (one dead heap
+        // entry per worker of a pre-warmed fpga-static fleet otherwise).
+        let mut sim = SimState::new(SimConfig::paper_default());
+        let id = sim.alloc_warm(WorkerKind::Fpga).unwrap();
+        assert_eq!(sim.pool.get(id).unwrap().state, WorkerState::Active);
+        assert_eq!(sim.events.len(), 1, "only the idle timeout is pending");
+        // A cold alloc still schedules its SpinUpDone.
+        sim.alloc(WorkerKind::Fpga).unwrap();
+        assert_eq!(sim.events.len(), 2);
     }
 
     #[test]

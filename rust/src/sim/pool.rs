@@ -1,7 +1,7 @@
 //! Worker pool: slab storage with per-kind *ordered indexes*.
 //!
 //! The pool only stores workers; allocation/deallocation *policy* lives in
-//! the schedulers and the engine drives state transitions. Three ordered
+//! the schedulers and the engine drives state transitions. Five ordered
 //! indexes ride on top of the slab so the engine's hot decisions are
 //! O(log n) instead of scan-or-sort-per-decision:
 //!
@@ -11,13 +11,29 @@
 //!   swap-removed live list reshuffled on every retirement).
 //! * **idle** — `(idle_since, id)` over Active workers with an empty
 //!   queue: longest-idle-first retirement pops from the front instead of
-//!   sorting the idle set on every `Retire` action.
+//!   sorting the idle set on every `Retire` action; the dispatch β→ι
+//!   fallback takes the *tail* (most-recently-idle).
 //! * **ready** — `(busy_until, id)` over accepting (non-spinning-down)
 //!   workers: the earliest-finishing fallback of capped dispatch is a
 //!   range head instead of a full scan.
+//! * **busy** — `(busy_until, id)` over Active workers with queued work:
+//!   Alg 3's "busiest feasible worker" is the tail of the deadline
+//!   prefix `range(..=bound).next_back()` (see [`Pool::busiest_busy`]).
+//! * **spinup** — `(queued_load, id)` over spinning-up workers: Alg 3's
+//!   "most-loaded allocating worker" walks load groups from the tail —
+//!   bounded by the (transient, small) spinning-up set, never fleet size.
 //!
 //! Keys wrap [`OrdF64`] (IEEE `total_cmp`), so a NaN timestamp can never
 //! panic a comparator mid-run — NaNs are rejected at trace validation.
+//!
+//! **Tie-break contract.** Dispatch historically scanned workers in
+//! ascending id order with strict `>` replacement, so equal-key extrema
+//! resolve to the *lowest* id. Index keys are `(key, id)`, so an extremal
+//! entry found with `next_back()` may carry the highest id of its key
+//! group; every extremal query therefore finishes with a group-head
+//! lookup (`range((key, WorkerId(0))..).next()`) to return the lowest id
+//! of the extremal key — two O(log n) probes, scan-identical picks
+//! (pinned by `rust/tests/dispatch_parity.rs`).
 //!
 //! Index coherence is the pool's job: every mutation of an indexed field
 //! must go through [`Pool::with_mut`], which re-keys the worker around
@@ -45,9 +61,20 @@ pub struct Pool {
     live: [BTreeSet<WorkerId>; 2],
     idle: [BTreeSet<Key>; 2],
     ready: [BTreeSet<Key>; 2],
+    /// Active workers with queued work, keyed `(busy_until, id)`.
+    busy: [BTreeSet<Key>; 2],
+    /// Spinning-up workers, keyed `(queued_load, id)` where queued_load =
+    /// `busy_until - ready_at` (work already packed onto the allocation).
+    spinup: [BTreeSet<Key>; 2],
     /// Live workers excluding spinning-down, per kind (the "allocated"
     /// count schedulers reason about), maintained O(1).
     allocated: [u32; 2],
+}
+
+/// The queued-load key of a spinning-up worker (work packed onto the
+/// not-yet-ready allocation — Alg 3's α preference).
+fn spinup_load(w: &Worker) -> f64 {
+    w.busy_until - w.ready_at
 }
 
 impl Pool {
@@ -55,19 +82,28 @@ impl Pool {
         Self::default()
     }
 
-    /// Add `w`'s entries to the idle/ready indexes and allocated count.
+    /// Add `w`'s entries to the state-keyed indexes and allocated count.
     fn index_state(&mut self, w: &Worker) {
         let k = ix(w.kind);
         if w.state != WorkerState::SpinningDown {
             self.allocated[k] += 1;
             self.ready[k].insert((OrdF64(w.busy_until), w.id));
         }
-        if w.state == WorkerState::Active && w.queued == 0 {
-            self.idle[k].insert((OrdF64(w.idle_since), w.id));
+        match w.state {
+            WorkerState::Active if w.queued == 0 => {
+                self.idle[k].insert((OrdF64(w.idle_since), w.id));
+            }
+            WorkerState::Active => {
+                self.busy[k].insert((OrdF64(w.busy_until), w.id));
+            }
+            WorkerState::SpinningUp => {
+                self.spinup[k].insert((OrdF64(spinup_load(w)), w.id));
+            }
+            WorkerState::SpinningDown => {}
         }
     }
 
-    /// Remove `w`'s entries from the idle/ready indexes and allocated
+    /// Remove `w`'s entries from the state-keyed indexes and allocated
     /// count (must mirror [`Self::index_state`] for the same snapshot).
     fn unindex_state(&mut self, w: &Worker) {
         let k = ix(w.kind);
@@ -76,9 +112,20 @@ impl Pool {
             let removed = self.ready[k].remove(&(OrdF64(w.busy_until), w.id));
             debug_assert!(removed, "ready index desync");
         }
-        if w.state == WorkerState::Active && w.queued == 0 {
-            let removed = self.idle[k].remove(&(OrdF64(w.idle_since), w.id));
-            debug_assert!(removed, "idle index desync");
+        match w.state {
+            WorkerState::Active if w.queued == 0 => {
+                let removed = self.idle[k].remove(&(OrdF64(w.idle_since), w.id));
+                debug_assert!(removed, "idle index desync");
+            }
+            WorkerState::Active => {
+                let removed = self.busy[k].remove(&(OrdF64(w.busy_until), w.id));
+                debug_assert!(removed, "busy index desync");
+            }
+            WorkerState::SpinningUp => {
+                let removed = self.spinup[k].remove(&(OrdF64(spinup_load(w)), w.id));
+                debug_assert!(removed, "spinup index desync");
+            }
+            WorkerState::SpinningDown => {}
         }
     }
 
@@ -136,6 +183,95 @@ impl Pool {
     /// Live worker ids of `kind` (any state), ordered by id.
     pub fn live_ids(&self, kind: WorkerKind) -> Vec<WorkerId> {
         self.live[ix(kind)].iter().copied().collect()
+    }
+
+    /// Non-allocating counterpart of [`Self::live_ids`]: live ids of
+    /// `kind` in ascending id order, straight off the live index.
+    pub fn live_ids_iter(&self, kind: WorkerKind) -> impl Iterator<Item = WorkerId> + '_ {
+        self.live[ix(kind)].iter().copied()
+    }
+
+    /// Live ids of `kind` strictly after `after`, ascending — the
+    /// round-robin cursor's resume point, without materializing the list.
+    pub fn live_ids_after(
+        &self,
+        kind: WorkerKind,
+        after: WorkerId,
+    ) -> impl Iterator<Item = WorkerId> + '_ {
+        use std::ops::Bound::{Excluded, Unbounded};
+        self.live[ix(kind)]
+            .range((Excluded(after), Unbounded))
+            .copied()
+    }
+
+    /// Lowest id carrying the extremal key `key` in `set` (the scan's
+    /// lowest-id tie-break; see the module docs' tie-break contract).
+    fn key_group_head(set: &BTreeSet<Key>, key: f64) -> Option<WorkerId> {
+        set.range((OrdF64(key), WorkerId(0))..).next().map(|&(_, id)| id)
+    }
+
+    /// Busiest busy-Active worker of `kind` within the deadline prefix
+    /// `busy_until <= bound`: max `busy_until`, lowest id on ties.
+    /// Returns `(busy_until, id)`. Two O(log n) probes of the busy index.
+    pub fn busiest_busy(&self, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        let set = &self.busy[ix(kind)];
+        let &(OrdF64(b), _) = set.range(..=(OrdF64(bound), WorkerId(u32::MAX))).next_back()?;
+        Self::key_group_head(set, b).map(|id| (b, id))
+    }
+
+    /// Most-recently-idle worker of `kind`: max `idle_since`, lowest id on
+    /// ties. Returns `(idle_since, id)`. Idle workers always satisfy
+    /// `busy_until <= now`, so deadline feasibility is uniform across the
+    /// class and stays with the caller (`now + svc <= deadline`).
+    pub fn most_recently_idle(&self, kind: WorkerKind) -> Option<(f64, WorkerId)> {
+        let set = &self.idle[ix(kind)];
+        let &(OrdF64(s), _) = set.last()?;
+        Self::key_group_head(set, s).map(|id| (s, id))
+    }
+
+    /// Most-loaded spinning-up worker of `kind` with `busy_until <=
+    /// bound`: max queued load, lowest feasible id on load ties. Returns
+    /// `(queued_load, id)`. Walks load groups from the tail of the spinup
+    /// index, checking feasibility per member — O(log n + inspected),
+    /// bounded by the spinning-up set (transiently small: alloc rate ×
+    /// spin-up window), never by fleet size.
+    pub fn most_loaded_spinup(&self, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        let set = &self.spinup[ix(kind)];
+        let mut next_group = set.last().map(|&(OrdF64(l), _)| l);
+        while let Some(load) = next_group {
+            let group = set.range((OrdF64(load), WorkerId(0))..=(OrdF64(load), WorkerId(u32::MAX)));
+            for &(_, id) in group {
+                let w = self.get(id).expect("spinup index points at empty slot");
+                if w.busy_until <= bound {
+                    return Some((load, id));
+                }
+            }
+            next_group = set
+                .range(..(OrdF64(load), WorkerId(0)))
+                .next_back()
+                .map(|&(OrdF64(l), _)| l);
+        }
+        None
+    }
+
+    /// Busiest feasible worker of `kind` over the *union* of busy-Active
+    /// and spinning-up workers (AutoScale's packing order treats both as
+    /// "busy", ranked by completion horizon): max `busy_until <= bound`,
+    /// lowest id on ties. Returns `(busy_until, id)`. The busy side is two
+    /// index probes; the spinning-up side walks its (small) set because it
+    /// is keyed by queued load, not horizon.
+    pub fn busiest_packed(&self, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        let mut best = self.busiest_busy(kind, bound);
+        for &(_, id) in &self.spinup[ix(kind)] {
+            let w = self.get(id).expect("spinup index points at empty slot");
+            let b = w.busy_until;
+            if b <= bound
+                && best.map_or(true, |(bb, bid)| b > bb || (b == bb && id < bid))
+            {
+                best = Some((b, id));
+            }
+        }
+        best
     }
 
     pub fn iter_kind(&self, kind: WorkerKind) -> impl Iterator<Item = &Worker> + '_ {
@@ -199,6 +335,46 @@ impl Pool {
 
     pub fn total(&self) -> usize {
         self.live.iter().map(|l| l.len()).sum()
+    }
+
+    /// Assert every ordered index against ground truth recomputed from the
+    /// slab. O(n log n) — test scaffolding for the index-coherence
+    /// property suite (`util::prop`), not a hot-path check.
+    pub fn check_coherence(&self) {
+        for kind in [WorkerKind::Cpu, WorkerKind::Fpga] {
+            let k = ix(kind);
+            let mut live = BTreeSet::new();
+            let mut idle = BTreeSet::new();
+            let mut ready = BTreeSet::new();
+            let mut busy = BTreeSet::new();
+            let mut spinup = BTreeSet::new();
+            let mut allocated = 0u32;
+            for w in self.slots.iter().flatten().filter(|w| w.kind == kind) {
+                live.insert(w.id);
+                if w.state != WorkerState::SpinningDown {
+                    allocated += 1;
+                    ready.insert((OrdF64(w.busy_until), w.id));
+                }
+                match w.state {
+                    WorkerState::Active if w.queued == 0 => {
+                        idle.insert((OrdF64(w.idle_since), w.id));
+                    }
+                    WorkerState::Active => {
+                        busy.insert((OrdF64(w.busy_until), w.id));
+                    }
+                    WorkerState::SpinningUp => {
+                        spinup.insert((OrdF64(spinup_load(w)), w.id));
+                    }
+                    WorkerState::SpinningDown => {}
+                }
+            }
+            assert_eq!(self.live[k], live, "live index desync ({kind:?})");
+            assert_eq!(self.idle[k], idle, "idle index desync ({kind:?})");
+            assert_eq!(self.ready[k], ready, "ready index desync ({kind:?})");
+            assert_eq!(self.busy[k], busy, "busy index desync ({kind:?})");
+            assert_eq!(self.spinup[k], spinup, "spinup index desync ({kind:?})");
+            assert_eq!(self.allocated[k], allocated, "allocated count desync ({kind:?})");
+        }
     }
 }
 
@@ -324,5 +500,101 @@ mod tests {
         let a = mk(&mut p, WorkerKind::Cpu);
         p.remove(a);
         p.remove(a);
+    }
+
+    /// Force a worker busy-Active with the given completion horizon.
+    fn make_busy(pool: &mut Pool, id: WorkerId, busy_until: f64) {
+        pool.with_mut(id, |w| {
+            w.state = WorkerState::Active;
+            w.ready_at = 0.0;
+            w.busy_until = busy_until;
+            w.queued = 1;
+        });
+    }
+
+    #[test]
+    fn busiest_busy_is_prefix_max_with_lowest_id_ties() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Fpga);
+        let b = mk(&mut p, WorkerKind::Fpga);
+        let c = mk(&mut p, WorkerKind::Fpga);
+        make_busy(&mut p, a, 0.04);
+        make_busy(&mut p, b, 0.02);
+        make_busy(&mut p, c, 0.04); // ties with a on the horizon
+        // Loose bound: busiest wins, lowest id (a) on the 0.04 tie.
+        assert_eq!(p.busiest_busy(WorkerKind::Fpga, 1.0), Some((0.04, a)));
+        // Tight bound excludes the 0.04 pair.
+        assert_eq!(p.busiest_busy(WorkerKind::Fpga, 0.03), Some((0.02, b)));
+        assert_eq!(p.busiest_busy(WorkerKind::Fpga, 0.01), None);
+        // Idle and spinning-up workers never appear in the busy index.
+        assert_eq!(p.busiest_busy(WorkerKind::Cpu, 1.0), None);
+    }
+
+    #[test]
+    fn most_recently_idle_breaks_ties_to_lowest_id() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Cpu);
+        let b = mk(&mut p, WorkerKind::Cpu);
+        let c = mk(&mut p, WorkerKind::Cpu);
+        activate(&mut p, a, 3.0);
+        activate(&mut p, b, 3.0); // ties with a
+        activate(&mut p, c, 1.0);
+        assert_eq!(p.most_recently_idle(WorkerKind::Cpu), Some((3.0, a)));
+        p.with_mut(a, |w| w.queued = 1); // a leaves the idle class
+        assert_eq!(p.most_recently_idle(WorkerKind::Cpu), Some((3.0, b)));
+    }
+
+    #[test]
+    fn most_loaded_spinup_respects_feasibility_and_ties() {
+        let mut p = Pool::new();
+        // Three spinning-up FPGAs (spin_up 1.0): stagger ready_at so equal
+        // loads carry different horizons.
+        let a = mk(&mut p, WorkerKind::Fpga);
+        let b = mk(&mut p, WorkerKind::Fpga);
+        let c = mk(&mut p, WorkerKind::Fpga);
+        p.with_mut(a, |w| w.assign(0.0, 0.5)); // load 0.5, horizon 1.5
+        p.with_mut(b, |w| {
+            w.ready_at = 2.0;
+            w.busy_until = 2.5; // load 0.5, horizon 2.5 — ties a on load
+        });
+        p.with_mut(c, |w| w.assign(0.0, 0.2)); // load 0.2, horizon 1.2
+        // Both 0.5-load workers feasible: lowest id (a) wins the tie.
+        assert_eq!(p.most_loaded_spinup(WorkerKind::Fpga, 3.0), Some((0.5, a)));
+        // Bound 2.0 cuts b out of its group; a still carries the max load.
+        assert_eq!(p.most_loaded_spinup(WorkerKind::Fpga, 2.0), Some((0.5, a)));
+        // Bound 1.4 kills the whole 0.5 group → next group (c).
+        assert_eq!(p.most_loaded_spinup(WorkerKind::Fpga, 1.4), Some((0.2, c)));
+        assert_eq!(p.most_loaded_spinup(WorkerKind::Fpga, 1.0), None);
+    }
+
+    #[test]
+    fn busiest_packed_unions_busy_and_spinup() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Cpu); // spinning up, horizon 1.0
+        let b = mk(&mut p, WorkerKind::Cpu);
+        make_busy(&mut p, b, 0.5);
+        // Spin-up horizon (1.0) beats the busy worker's 0.5.
+        assert_eq!(p.busiest_packed(WorkerKind::Cpu, 2.0), Some((1.0, a)));
+        // Bound 0.8 excludes the spin-up → busy worker wins.
+        assert_eq!(p.busiest_packed(WorkerKind::Cpu, 0.8), Some((0.5, b)));
+        // Horizon tie between classes resolves to the lowest id.
+        let c = mk(&mut p, WorkerKind::Cpu);
+        make_busy(&mut p, c, 1.0);
+        assert_eq!(p.busiest_packed(WorkerKind::Cpu, 2.0), Some((1.0, a)));
+        p.check_coherence();
+    }
+
+    #[test]
+    fn live_iterators_match_live_ids() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Cpu);
+        let b = mk(&mut p, WorkerKind::Cpu);
+        let c = mk(&mut p, WorkerKind::Cpu);
+        p.remove(b);
+        let iter: Vec<WorkerId> = p.live_ids_iter(WorkerKind::Cpu).collect();
+        assert_eq!(iter, p.live_ids(WorkerKind::Cpu));
+        let after: Vec<WorkerId> = p.live_ids_after(WorkerKind::Cpu, a).collect();
+        assert_eq!(after, vec![c]);
+        assert_eq!(p.live_ids_after(WorkerKind::Cpu, c).count(), 0);
     }
 }

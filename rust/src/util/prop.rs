@@ -159,6 +159,172 @@ mod tests {
     }
 }
 
+/// Pool-index coherence: the five ordered indexes (live / idle / ready /
+/// busy / spinup) must stay in sync with the slab through arbitrary
+/// [`crate::sim::pool::Pool::with_mut`] transitions, and the extremal
+/// dispatch queries must match brute-force scans — including the
+/// lowest-id tie-break, which the quantized value grid here exercises
+/// hard (many equal keys).
+#[cfg(test)]
+mod pool_index_props {
+    use super::*;
+    use crate::config::WorkerKind;
+    use crate::sim::pool::Pool;
+    use crate::sim::{Worker, WorkerId, WorkerState};
+
+    fn scan_busiest_busy(p: &Pool, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        let mut best: Option<(f64, WorkerId)> = None;
+        for w in p.iter_kind(kind) {
+            if w.state == WorkerState::Active
+                && w.queued > 0
+                && w.busy_until <= bound
+                && best.map_or(true, |(b, _)| w.busy_until > b)
+            {
+                best = Some((w.busy_until, w.id));
+            }
+        }
+        best
+    }
+
+    fn scan_most_recently_idle(p: &Pool, kind: WorkerKind) -> Option<(f64, WorkerId)> {
+        let mut best: Option<(f64, WorkerId)> = None;
+        for w in p.iter_kind(kind) {
+            if w.state == WorkerState::Active
+                && w.queued == 0
+                && best.map_or(true, |(s, _)| w.idle_since > s)
+            {
+                best = Some((w.idle_since, w.id));
+            }
+        }
+        best
+    }
+
+    fn scan_most_loaded_spinup(p: &Pool, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        let mut best: Option<(f64, WorkerId)> = None;
+        for w in p.iter_kind(kind) {
+            if w.state == WorkerState::SpinningUp && w.busy_until <= bound {
+                let load = w.busy_until - w.ready_at;
+                if best.map_or(true, |(l, _)| load > l) {
+                    best = Some((load, w.id));
+                }
+            }
+        }
+        best
+    }
+
+    fn scan_busiest_packed(p: &Pool, kind: WorkerKind, bound: f64) -> Option<(f64, WorkerId)> {
+        let mut best: Option<(f64, WorkerId)> = None;
+        for w in p.iter_kind(kind) {
+            let packed = w.state == WorkerState::SpinningUp
+                || (w.state == WorkerState::Active && w.queued > 0);
+            if packed && w.busy_until <= bound && best.map_or(true, |(b, _)| w.busy_until > b) {
+                best = Some((w.busy_until, w.id));
+            }
+        }
+        best
+    }
+
+    fn scan_earliest_ready(p: &Pool, kind: WorkerKind) -> Option<(f64, WorkerId)> {
+        let mut best: Option<(f64, WorkerId)> = None;
+        for w in p.iter_kind(kind) {
+            if w.accepting() && best.map_or(true, |(b, _)| w.busy_until < b) {
+                best = Some((w.busy_until, w.id));
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn pool_indexes_stay_coherent_under_random_transitions() {
+        let kinds = [WorkerKind::Cpu, WorkerKind::Fpga];
+        prop_check(60, |case| {
+            let mut pool = Pool::new();
+            let mut ids: Vec<WorkerId> = Vec::new();
+            let steps = 4 + case.len(150);
+            for _ in 0..steps {
+                // Quantized values → frequent equal keys → the tie-break
+                // paths actually run.
+                let grid = 0.25 * case.rng.below(8) as f64;
+                match case.rng.below(10) {
+                    0..=3 => {
+                        let kind = *case.rng.choose(&kinds);
+                        let spin = 0.25 * (1 + case.rng.below(4)) as f64;
+                        ids.push(pool.insert(|id| Worker::new(id, kind, grid, spin, 0)));
+                    }
+                    4..=8 if !ids.is_empty() => {
+                        let id = *case.rng.choose(&ids);
+                        let state = *case.rng.choose(&[
+                            WorkerState::SpinningUp,
+                            WorkerState::Active,
+                            WorkerState::Active,
+                            WorkerState::SpinningDown,
+                        ]);
+                        let queued = case.rng.below(3) as u32;
+                        let idle_since = 0.25 * case.rng.below(8) as f64;
+                        let load = 0.25 * case.rng.below(4) as f64;
+                        pool.with_mut(id, |w| {
+                            w.state = state;
+                            w.queued = queued;
+                            w.ready_at = grid;
+                            w.busy_until = grid + load;
+                            w.idle_since = idle_since;
+                        });
+                    }
+                    9 if !ids.is_empty() => {
+                        let i = case.rng.below(ids.len() as u64) as usize;
+                        pool.remove(ids.swap_remove(i));
+                    }
+                    _ => {}
+                }
+            }
+            pool.check_coherence();
+            // Extremal queries must equal the brute-force scans for a
+            // spread of feasibility bounds (including one excluding all
+            // and one admitting all).
+            for &kind in &kinds {
+                for bound in [-1.0, 0.5, 1.0, 1.75, 100.0] {
+                    let q = (
+                        pool.busiest_busy(kind, bound),
+                        pool.most_loaded_spinup(kind, bound),
+                        pool.busiest_packed(kind, bound),
+                    );
+                    let s = (
+                        scan_busiest_busy(&pool, kind, bound),
+                        scan_most_loaded_spinup(&pool, kind, bound),
+                        scan_busiest_packed(&pool, kind, bound),
+                    );
+                    if q != s {
+                        return PropResult::assert(
+                            false,
+                            format!(
+                                "indexed != scan for {kind:?} bound {bound}: {q:?} vs {s:?} \
+                                 (seed {})",
+                                case.seed
+                            ),
+                        );
+                    }
+                }
+                let idle = (pool.most_recently_idle(kind), pool.earliest_ready(kind));
+                let idle_s = (
+                    scan_most_recently_idle(&pool, kind),
+                    scan_earliest_ready(&pool, kind),
+                );
+                if idle != idle_s {
+                    return PropResult::assert(
+                        false,
+                        format!(
+                            "idle/ready indexed != scan for {kind:?}: {idle:?} vs {idle_s:?} \
+                             (seed {})",
+                            case.seed
+                        ),
+                    );
+                }
+            }
+            PropResult::pass()
+        });
+    }
+}
+
 /// Simulator invariants checked through the prop harness: the worker
 /// [`crate::sim::pool::Pool`] must respect the configured `max_cpus` /
 /// `max_fpgas` caps for every scheduler, and aggregate energy/cost must

@@ -1,0 +1,474 @@
+//! Dispatch-parity suite: the indexed dispatch hot path must pick the
+//! exact worker the historical O(W) reference scan picks — for every
+//! policy, pool shape, deadline regime, and tie pattern.
+//!
+//! Three layers:
+//!
+//! 1. **Pick parity** — randomized pools (quantized keys → dense ties) ×
+//!    all three [`DispatchPolicy`] variants × tight/loose deadlines ×
+//!    kind restrictions: `Dispatcher::find` (indexed queries under the
+//!    sim view) equals an independent reference scan written against the
+//!    enumeration primitives only.
+//! 2. **Cursor parity** — round-robin pick *sequences* with pool churn
+//!    between arrivals: the live-index cursor equals a materialized-list
+//!    reference rotation.
+//! 3. **Run parity** — full streaming runs dispatched via the indexed
+//!    dispatcher vs the reference scans produce byte-identical effect
+//!    streams and bit-identical aggregate metrics.
+//!
+//! Feasibility everywhere is the canonical comparison
+//! `busy_until.max(now) <= bound`, `bound = deadline - service_time`
+//! (see DESIGN.md § indexed dispatch).
+
+use spork::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
+use spork::policy::{
+    Action, Effect, Observation, Policy, PolicyView, Request, Target, WorkerId, WorkerState,
+};
+use spork::sched::dispatch::Dispatcher;
+use spork::sim::{self, SimState};
+use spork::trace::synthetic_app;
+use spork::util::prop::{prop_check, Case, PropResult};
+
+// ---------------------------------------------------------------------
+// Reference scans: the pre-index dispatch semantics, written only against
+// the PolicyView enumeration primitives (never the indexed queries).
+// ---------------------------------------------------------------------
+
+fn feasible(w: &spork::policy::WorkerObs, now: f64, bound: f64) -> bool {
+    w.accepting() && w.busy_until.max(now) <= bound
+}
+
+fn ref_efficient_first(
+    view: &dyn PolicyView,
+    req: &Request,
+    kinds: &[WorkerKind],
+) -> Option<WorkerId> {
+    let now = view.now();
+    for &kind in kinds {
+        let bound = req.deadline - view.service_time(kind, req.size);
+        let mut best_busy: Option<(f64, WorkerId)> = None;
+        let mut best_idle: Option<(f64, WorkerId)> = None;
+        let mut best_alloc: Option<(f64, WorkerId)> = None;
+        view.for_each_worker(kind, &mut |w| {
+            if !feasible(w, now, bound) {
+                return;
+            }
+            match w.state {
+                WorkerState::Active if w.queued > 0 => {
+                    if best_busy.map_or(true, |(b, _)| w.busy_until > b) {
+                        best_busy = Some((w.busy_until, w.id));
+                    }
+                }
+                WorkerState::Active => {
+                    if best_idle.map_or(true, |(s, _)| w.idle_since > s) {
+                        best_idle = Some((w.idle_since, w.id));
+                    }
+                }
+                WorkerState::SpinningUp => {
+                    let load = w.busy_until - w.ready_at;
+                    if best_alloc.map_or(true, |(l, _)| load > l) {
+                        best_alloc = Some((load, w.id));
+                    }
+                }
+                WorkerState::SpinningDown => {}
+            }
+        });
+        if let Some((_, id)) = best_busy.or(best_idle).or(best_alloc) {
+            return Some(id);
+        }
+    }
+    None
+}
+
+fn ref_index_packing(
+    view: &dyn PolicyView,
+    req: &Request,
+    kinds: &[WorkerKind],
+) -> Option<WorkerId> {
+    let now = view.now();
+    let mut best_busy: Option<(f64, WorkerId)> = None;
+    let mut best_idle: Option<(f64, WorkerId)> = None;
+    for &kind in kinds {
+        let bound = req.deadline - view.service_time(kind, req.size);
+        view.for_each_worker(kind, &mut |w| {
+            if !feasible(w, now, bound) {
+                return;
+            }
+            if w.queued > 0 || w.state == WorkerState::SpinningUp {
+                if best_busy.map_or(true, |(b, _)| w.busy_until > b) {
+                    best_busy = Some((w.busy_until, w.id));
+                }
+            } else if best_idle.map_or(true, |(s, _)| w.idle_since > s) {
+                best_idle = Some((w.idle_since, w.id));
+            }
+        });
+    }
+    best_busy.or(best_idle).map(|(_, id)| id)
+}
+
+/// Reference round robin: materialize the kind-major live list and rotate
+/// a (kind, id) cursor over it — the allocation-heavy shape the indexed
+/// cursor replaces.
+#[derive(Default)]
+struct RefRoundRobin {
+    last: Option<(WorkerKind, WorkerId)>,
+}
+
+impl RefRoundRobin {
+    fn find(
+        &mut self,
+        view: &dyn PolicyView,
+        req: &Request,
+        kinds: &[WorkerKind],
+    ) -> Option<WorkerId> {
+        let now = view.now();
+        let ids: Vec<(WorkerKind, WorkerId)> = kinds
+            .iter()
+            .flat_map(|&k| view.live_ids(k).into_iter().map(move |id| (k, id)))
+            .collect();
+        if ids.is_empty() {
+            return None;
+        }
+        let start = match self.last {
+            None => 0,
+            Some((lk, lid)) => match ids.iter().position(|&e| e == (lk, lid)) {
+                Some(p) => p + 1,
+                // Cursor worker gone: resume at the first entry past its
+                // (kind position, id) rank; a cursor kind outside `kinds`
+                // resets the rotation.
+                None => match kinds.iter().position(|&x| x == lk) {
+                    Some(lp) => ids
+                        .iter()
+                        .position(|&(k, id)| {
+                            let kp = kinds.iter().position(|&x| x == k).unwrap();
+                            (kp, id) > (lp, lid)
+                        })
+                        .unwrap_or(0),
+                    None => 0,
+                },
+            },
+        };
+        for probe in 0..ids.len() {
+            let (kind, id) = ids[(start + probe) % ids.len()];
+            let bound = req.deadline - view.service_time(kind, req.size);
+            let w = view.worker(id).unwrap();
+            if feasible(&w, now, bound) {
+                self.last = Some((kind, id));
+                return Some(id);
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// Randomized pool scaffolding.
+// ---------------------------------------------------------------------
+
+/// Build a SimState at t = 0 whose workers are spread over every state
+/// class, with *quantized* keys so equal-extremal ties are dense.
+fn random_state(case: &mut Case) -> SimState {
+    let mut sim = SimState::new(SimConfig::paper_default());
+    let n = 1 + case.len(40);
+    for _ in 0..n {
+        let kind = if case.rng.chance(0.5) {
+            WorkerKind::Fpga
+        } else {
+            WorkerKind::Cpu
+        };
+        let id = sim.alloc(kind).expect("uncapped alloc");
+        let class = case.rng.below(10);
+        let grid = 0.005 * case.rng.below(8) as f64;
+        let queued = 1 + case.rng.below(3) as u32;
+        let idle_grid = -0.005 * case.rng.below(8) as f64;
+        let ready = 0.25 * (1 + case.rng.below(8)) as f64;
+        let load = 0.005 * case.rng.below(4) as f64;
+        sim.pool.with_mut(id, |w| match class {
+            // Busy-Active: horizon on a small grid (>= now = 0).
+            0..=3 => {
+                w.state = WorkerState::Active;
+                w.ready_at = 0.0;
+                w.busy_until = grid;
+                w.queued = queued;
+            }
+            // Idle-Active: busy_until <= now (sim invariant), idle_since
+            // on a grid ending at 0 → heavy ties.
+            4..=6 => {
+                w.state = WorkerState::Active;
+                w.ready_at = idle_grid;
+                w.busy_until = 0.0;
+                w.queued = 0;
+                w.idle_since = idle_grid;
+            }
+            // Spinning up: ready in the future, quantized queued load.
+            7..=8 => {
+                w.ready_at = ready;
+                w.busy_until = ready + load;
+            }
+            // Draining: never a candidate.
+            _ => {
+                w.state = WorkerState::SpinningDown;
+            }
+        });
+    }
+    sim
+}
+
+fn random_request(case: &mut Case) -> Request {
+    let size = *case.rng.choose(&[0.005, 0.010, 0.020]);
+    let factor = *case.rng.choose(&[1.0, 2.0, 5.0, 10.0, 1000.0]);
+    Request {
+        arrival: 0.0,
+        size,
+        deadline: size * factor,
+    }
+}
+
+fn random_kinds(case: &mut Case) -> &'static [WorkerKind] {
+    *case.rng.choose(&[
+        &[WorkerKind::Fpga, WorkerKind::Cpu][..],
+        &[WorkerKind::Cpu, WorkerKind::Fpga][..],
+        &[WorkerKind::Fpga][..],
+        &[WorkerKind::Cpu][..],
+    ])
+}
+
+// ---------------------------------------------------------------------
+// 1. Pick parity.
+// ---------------------------------------------------------------------
+
+#[test]
+fn indexed_picks_equal_reference_scan_picks() {
+    prop_check(120, |case| {
+        let sim = random_state(case);
+        for _ in 0..6 {
+            let req = random_request(case);
+            let kinds = random_kinds(case);
+            let eff = Dispatcher::new(DispatchPolicy::EfficientFirst).find(&sim, &req, kinds);
+            let eff_ref = ref_efficient_first(&sim, &req, kinds);
+            if eff != eff_ref {
+                return PropResult::assert(
+                    false,
+                    format!(
+                        "efficient-first: indexed {eff:?} != scan {eff_ref:?} for {req:?} \
+                         kinds {kinds:?} (seed {})",
+                        case.seed
+                    ),
+                );
+            }
+            let pack = Dispatcher::new(DispatchPolicy::IndexPacking).find(&sim, &req, kinds);
+            let pack_ref = ref_index_packing(&sim, &req, kinds);
+            if pack != pack_ref {
+                return PropResult::assert(
+                    false,
+                    format!(
+                        "index-packing: indexed {pack:?} != scan {pack_ref:?} for {req:?} \
+                         kinds {kinds:?} (seed {})",
+                        case.seed
+                    ),
+                );
+            }
+        }
+        PropResult::pass()
+    });
+}
+
+// ---------------------------------------------------------------------
+// 2. Round-robin cursor parity under churn.
+// ---------------------------------------------------------------------
+
+#[test]
+fn round_robin_sequences_equal_reference_rotation() {
+    prop_check(80, |case| {
+        let mut sim = random_state(case);
+        let kinds = random_kinds(case);
+        let mut indexed = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let mut reference = RefRoundRobin::default();
+        for step in 0..10 {
+            let req = random_request(case);
+            let a = indexed.find(&sim, &req, kinds);
+            let b = reference.find(&sim, &req, kinds);
+            if a != b {
+                return PropResult::assert(
+                    false,
+                    format!(
+                        "round-robin step {step}: indexed {a:?} != reference {b:?} \
+                         for {req:?} kinds {kinds:?} (seed {})",
+                        case.seed
+                    ),
+                );
+            }
+            // Churn between arrivals: the rotation must stay aligned when
+            // workers leave or flip class — including the cursor itself.
+            if case.rng.chance(0.4) {
+                let live: Vec<WorkerId> = [WorkerKind::Cpu, WorkerKind::Fpga]
+                    .iter()
+                    .flat_map(|&k| sim.pool.live_ids(k))
+                    .collect();
+                if !live.is_empty() {
+                    let victim = *case.rng.choose(&live);
+                    if case.rng.chance(0.5) {
+                        sim.pool.remove(victim);
+                    } else {
+                        let grid = 0.005 * case.rng.below(8) as f64;
+                        sim.pool.with_mut(victim, |w| {
+                            if w.state != WorkerState::SpinningUp {
+                                w.state = WorkerState::Active;
+                                w.queued = if grid > 0.0 { 1 } else { 0 };
+                                w.ready_at = 0.0;
+                                w.busy_until = grid;
+                            }
+                        });
+                    }
+                }
+            }
+        }
+        PropResult::pass()
+    });
+}
+
+// ---------------------------------------------------------------------
+// 3. Full-run parity: byte-identical effect streams and metrics.
+// ---------------------------------------------------------------------
+
+/// A dispatch-only fleet policy parameterized by its finder, so the same
+/// allocation/keep-alive behavior runs over the indexed and reference
+/// dispatch paths.
+struct FleetPolicy<'a> {
+    fpgas: u32,
+    cpus: u32,
+    find: Box<dyn FnMut(&dyn PolicyView, &Request) -> Option<WorkerId> + 'a>,
+}
+
+const BOTH: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
+
+impl Policy for FleetPolicy<'_> {
+    fn name(&self) -> String {
+        "fleet".into()
+    }
+
+    fn interval(&self) -> f64 {
+        f64::INFINITY
+    }
+
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+        match obs {
+            Observation::Start => {
+                out.push(Action::Alloc {
+                    kind: WorkerKind::Fpga,
+                    n: self.fpgas,
+                    prewarmed: true,
+                });
+                // Cold CPUs: arrivals inside their (5 ms) spin-up window
+                // exercise the α preference class for real.
+                out.push(Action::Alloc {
+                    kind: WorkerKind::Cpu,
+                    n: self.cpus,
+                    prewarmed: false,
+                });
+            }
+            Observation::Arrival { req } => {
+                let to = match (self.find)(view, &req) {
+                    Some(w) => Target::Worker(w),
+                    None => Target::Fresh(WorkerKind::Cpu),
+                };
+                out.push(Action::Dispatch { req, to });
+            }
+            Observation::IdleExpired { worker } => {
+                // Deterministic partial pinning: even ids stay while the
+                // trace is live, odd ids drain — pool churn mid-run.
+                if view.trace_live() && worker.0 % 2 == 0 {
+                    out.push(Action::KeepAlive { worker });
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn run_fleet(
+    policy_kind: DispatchPolicy,
+    indexed: bool,
+    trace: &spork::trace::AppTrace,
+    cfg: &SimConfig,
+) -> (Vec<Effect>, spork::sim::RunResult) {
+    let defaults = PlatformConfig::paper_default();
+    let find: Box<dyn FnMut(&dyn PolicyView, &Request) -> Option<WorkerId>> = if indexed {
+        let mut d = Dispatcher::new(policy_kind);
+        Box::new(move |view, req| d.find(view, req, BOTH))
+    } else {
+        match policy_kind {
+            DispatchPolicy::EfficientFirst => {
+                Box::new(move |view, req| ref_efficient_first(view, req, BOTH))
+            }
+            DispatchPolicy::IndexPacking => {
+                Box::new(move |view, req| ref_index_packing(view, req, BOTH))
+            }
+            DispatchPolicy::RoundRobin => {
+                let mut rr = RefRoundRobin::default();
+                Box::new(move |view, req| rr.find(view, req, BOTH))
+            }
+        }
+    };
+    let mut policy = FleetPolicy {
+        fpgas: 3,
+        cpus: 4,
+        find,
+    };
+    let mut effects = Vec::new();
+    let result = sim::run_with_sink(trace, cfg.clone(), &defaults, &mut policy, &mut |e| {
+        effects.push(*e)
+    });
+    (effects, result)
+}
+
+#[test]
+fn full_runs_are_byte_identical_across_dispatch_paths() {
+    prop_check(6, |case| {
+        let b = case.rng.range_f64(0.55, 0.75);
+        let rate = case.rng.range_f64(60.0, 160.0);
+        let mut rng = case.rng.fork(1);
+        let trace = synthetic_app("parity", &mut rng, b, 90.0, rate, 0.010);
+        let mut cfg = SimConfig::paper_default();
+        // Tight-ish caps so the capped Fresh fallback fires too.
+        cfg.max_cpus = Some(12);
+        cfg.max_fpgas = Some(4);
+        cfg.deadline_factor = *case.rng.choose(&[2.0, 10.0]);
+        for policy_kind in [
+            DispatchPolicy::EfficientFirst,
+            DispatchPolicy::IndexPacking,
+            DispatchPolicy::RoundRobin,
+        ] {
+            let (ea, ra) = run_fleet(policy_kind, true, &trace, &cfg);
+            let (eb, rb) = run_fleet(policy_kind, false, &trace, &cfg);
+            if ea != eb {
+                let at = ea
+                    .iter()
+                    .zip(&eb)
+                    .position(|(x, y)| x != y)
+                    .unwrap_or(ea.len().min(eb.len()));
+                return PropResult::assert(
+                    false,
+                    format!(
+                        "{policy_kind:?}: effect streams diverge at index {at} \
+                         ({} vs {} effects, seed {})",
+                        ea.len(),
+                        eb.len(),
+                        case.seed
+                    ),
+                );
+            }
+            let same = ra.metrics.requests == rb.metrics.requests
+                && ra.metrics.deadline_misses == rb.metrics.deadline_misses
+                && ra.metrics.total_energy() == rb.metrics.total_energy()
+                && ra.metrics.total_cost() == rb.metrics.total_cost();
+            if !same {
+                return PropResult::assert(
+                    false,
+                    format!("{policy_kind:?}: metrics diverge (seed {})", case.seed),
+                );
+            }
+        }
+        PropResult::pass()
+    });
+}
