@@ -150,6 +150,45 @@ fn bench_pool_scaling() {
     }
 }
 
+fn bench_fit_search() {
+    // The §5.1 fitting searches: gallop + bisection with early-abort
+    // infeasible passes. The interesting numbers are the pass counts and
+    // how little of the trace the aborted probes stream — `spork
+    // bench-sim --fit` writes the same accounting to
+    // BENCH_fit_passes.json for CI tracking.
+    use spork::sched::{fpga_dynamic, fpga_static};
+    println!("-- §5.1 fitting searches (gallop+bisect, early abort) --");
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let mut rng = Rng::new(9);
+    let trace = synthetic_app("fit", &mut rng, 0.65, 600.0, 400.0, 0.010);
+    let report = |label: &str, s: &spork::sched::FitStats| {
+        println!(
+            "{:<48} {} passes, {} aborted, {:.2} full-trace equivalents",
+            format!("  {label} cost"),
+            s.pass_count(),
+            s.aborted_passes(),
+            s.full_trace_equivalents()
+        );
+    };
+
+    let mut stats = None;
+    common::time_it(&format!("fpga-static fit: {} arrivals", trace.len()), 3, || {
+        stats = Some(
+            fpga_static::fit_source_stats(&|| Box::new(trace.source()), &cfg, &defaults, 0.005).2,
+        );
+    });
+    report("fpga-static fit", &stats.expect("timed iteration"));
+
+    let mut stats = None;
+    common::time_it(&format!("fpga-dynamic fit: {} arrivals", trace.len()), 3, || {
+        stats = Some(
+            fpga_dynamic::fit_source_stats(&|| Box::new(trace.source()), &cfg, &defaults, 0.005).2,
+        );
+    });
+    report("fpga-dynamic fit", &stats.expect("timed iteration"));
+}
+
 fn bench_predictor() {
     println!("-- Alg 2 predictor --");
     let mut p = Predictor::new(PlatformConfig::paper_default(), 10.0, Objective::energy());
@@ -229,5 +268,6 @@ fn main() {
     bench_sweep_engine();
     bench_sim_engine();
     bench_dispatch();
+    bench_fit_search();
     bench_predictor();
 }

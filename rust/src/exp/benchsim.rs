@@ -18,15 +18,211 @@
 //! per-arrival cost at the largest fleet exceeds R× the smallest — the
 //! loud CI tripwire for an accidental return to O(W) scans (a linear
 //! scan is ~100× from 100 to 10k workers).
+//!
+//! A third axis (`--fit`, [`run_fit_bench`]) measures the §5.1 fitting
+//! searches: passes per search, arrivals simulated per pass (aborted vs
+//! full), and wall time, written to `BENCH_fit_passes.json`.
+//! `--assert-fit-abort F` is the matching tripwire: an aborted
+//! (provably infeasible) pass that streamed more than fraction `F` of
+//! the trace fails the run — early abort has stopped cutting infeasible
+//! passes short.
 
 use crate::cli::Args;
 use crate::config::{DispatchPolicy, PlatformConfig, SchedulerKind, SimConfig, WorkerKind};
 use crate::policy::{Action, Observation, Policy, PolicyView, Target};
-use crate::sched::{self, dispatch::Dispatcher};
+use crate::sched::{self, dispatch::Dispatcher, FitStats};
 use crate::sim;
 use crate::trace::{synthetic_source, ArrivalSource};
 use crate::util::rng::Rng;
 use std::time::Instant;
+
+/// One §5.1 fitting search measured by the `--fit` axis.
+#[derive(Debug, Clone)]
+pub struct FitSearchReport {
+    pub scheduler: String,
+    /// Fitted value (fleet size for fpga-static, headroom multiple k for
+    /// fpga-dynamic).
+    pub fitted: u32,
+    pub wall_seconds: f64,
+    pub stats: FitStats,
+}
+
+/// The `spork bench-sim --fit` axis: what the fitting searches cost in
+/// passes and arrivals, written to `BENCH_fit_passes.json`.
+#[derive(Debug, Clone)]
+pub struct FitBenchReport {
+    pub tolerance: f64,
+    pub searches: Vec<FitSearchReport>,
+}
+
+impl FitBenchReport {
+    pub fn to_json(&self) -> String {
+        let searches: Vec<String> = self
+            .searches
+            .iter()
+            .map(|s| {
+                let passes: Vec<String> = s
+                    .stats
+                    .passes
+                    .iter()
+                    .map(|p| {
+                        format!(
+                            "        {{\"candidate\": {}, \"arrivals\": {}, \
+                             \"aborted\": {}, \"feasible\": {}, \
+                             \"wall_seconds\": {:.4}}}",
+                            p.candidate, p.arrivals, p.aborted, p.feasible, p.wall_seconds
+                        )
+                    })
+                    .collect();
+                format!(
+                    "    {{\n      \"scheduler\": \"{}\",\n      \"fitted\": {},\n      \
+                     \"fitted_candidate\": {},\n      \"feasible\": {},\n      \
+                     \"total_arrivals\": {},\n      \"wall_seconds\": {:.3},\n      \
+                     \"passes_total\": {},\n      \"passes_aborted\": {},\n      \
+                     \"full_trace_equivalents\": {:.3},\n      \"passes\": [\n{}\n      ]\n    }}",
+                    s.scheduler,
+                    s.fitted,
+                    s.stats.fitted_candidate,
+                    s.stats.feasible,
+                    s.stats.total_arrivals,
+                    s.wall_seconds,
+                    s.stats.pass_count(),
+                    s.stats.aborted_passes(),
+                    s.stats.full_trace_equivalents(),
+                    passes.join(",\n"),
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"tolerance\": {},\n  \"searches\": [\n{}\n  ]\n}}\n",
+            self.tolerance,
+            searches.join(",\n"),
+        )
+    }
+
+    /// The CI tripwire, two checks per search:
+    ///
+    /// 1. **Disarm detector** (exact): every infeasible pass must be
+    ///    *aborted* — an infeasible pass with `aborted == false` means
+    ///    the miss budget never armed (e.g. a lost `len_hint`) and the
+    ///    search is back to streaming full linear passes. The deliberate
+    ///    unbounded rerun of the ceiling candidate on a failed search is
+    ///    the one exemption.
+    /// 2. **Early-abort demonstration**: the *most cheaply refuted*
+    ///    aborted pass must have stopped within `max_fraction` of the
+    ///    trace. The minimum (not every pass) is the sound gate: a
+    ///    marginal candidate just below the fitted one legitimately
+    ///    accrues its budget-crossing miss late in the trace, but the
+    ///    deeply underprovisioned gallop probes of this bench's workload
+    ///    must blow their budget almost immediately — if even the best
+    ///    abort streamed most of the trace, the budget is not cutting
+    ///    passes short.
+    pub fn assert_abort_fraction(&self, max_fraction: f64) -> Result<(), String> {
+        for s in &self.searches {
+            let total = s.stats.total_arrivals.max(1);
+            let passes = &s.stats.passes;
+            // On ceiling failure the last pass is an intentional
+            // unbounded rerun of the infeasible ceiling candidate.
+            let exempt_tail = usize::from(!s.stats.feasible);
+            let gated = &passes[..passes.len().saturating_sub(exempt_tail)];
+            if let Some(p) = gated.iter().find(|p| !p.feasible && !p.aborted) {
+                return Err(format!(
+                    "fit-abort regression: {} candidate {} was infeasible yet \
+                     streamed the trace unaborted ({} of {} arrivals) — the \
+                     early-abort budget is disarmed",
+                    s.scheduler, p.candidate, p.arrivals, total
+                ));
+            }
+            let min_frac = gated
+                .iter()
+                .filter(|p| p.aborted)
+                .map(|p| p.arrivals as f64 / total as f64)
+                .fold(f64::INFINITY, f64::min);
+            if min_frac.is_finite() && min_frac > max_fraction {
+                return Err(format!(
+                    "fit-abort regression: {}'s cheapest aborted pass still \
+                     streamed {:.0}% of the trace (cap {:.0}%) — the early-abort \
+                     budget is not cutting infeasible passes short",
+                    s.scheduler,
+                    min_frac * 100.0,
+                    max_fraction * 100.0
+                ));
+            }
+        }
+        // Vacuity guard: the gate only demonstrates anything if the bench
+        // workload actually forced an abort somewhere. If every search fit
+        // at its first candidate, nothing above ran and a disarmed budget
+        // would be invisible — fail loudly so the bench workload gets
+        // retuned to stay underprovisioned at candidate 0.
+        if self
+            .searches
+            .iter()
+            .all(|s| s.stats.aborted_passes() == 0)
+        {
+            return Err(
+                "fit-abort tripwire is vacuous: no fitting search produced an \
+                 aborted pass — the bench workload no longer exercises the \
+                 early-abort path; retune it (it must be infeasible at the \
+                 first candidate for at least one search)"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Measure both §5.1 fitting searches over a shared synthetic workload.
+///
+/// The workload is deliberately *underprovisioned at low candidates*: a
+/// steady stream (b = 0.5) whose initial fleet cannot keep up, so
+/// infeasible probes blow their miss budget within the first simulated
+/// seconds and the gallop has several cheap aborted passes to show. The
+/// searches stream every pass from the `(seed, 0)` RNG via the same
+/// factory the throughput bench uses.
+pub fn run_fit_bench(target_arrivals: u64, rate: f64, seed: u64) -> FitBenchReport {
+    let duration = target_arrivals as f64 / rate;
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let tolerance = sched::FIT_MISS_TOLERANCE;
+    let make = move || -> Box<dyn ArrivalSource> {
+        Box::new(synthetic_source(
+            "fitbench",
+            Rng::for_stream(seed, 0),
+            0.5,
+            duration,
+            rate,
+            0.010,
+            60.0,
+        ))
+    };
+    let mut searches = Vec::new();
+    {
+        let t0 = Instant::now();
+        let (_, fleet, stats) =
+            sched::fpga_static::fit_source_stats(&make, &cfg, &defaults, tolerance);
+        searches.push(FitSearchReport {
+            scheduler: "fpga-static".into(),
+            fitted: fleet,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            stats,
+        });
+    }
+    {
+        let t0 = Instant::now();
+        let (_, k, stats) =
+            sched::fpga_dynamic::fit_source_stats(&make, &cfg, &defaults, tolerance);
+        searches.push(FitSearchReport {
+            scheduler: "fpga-dynamic".into(),
+            fitted: k,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            stats,
+        });
+    }
+    FitBenchReport {
+        tolerance,
+        searches,
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchSimReport {
@@ -283,6 +479,19 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
         ),
         None => None,
     };
+    let fit = args.has_flag("fit");
+    let fit_arrivals = args.u64_or("fit-arrivals", 200_000)?;
+    let fit_out = args.str_or("fit-out", "BENCH_fit_passes.json");
+    let assert_fit_abort = match args.get("assert-fit-abort") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| format!("--assert-fit-abort: invalid fraction '{v}'"))?,
+        ),
+        None => None,
+    };
+    if assert_fit_abort.is_some() && !fit {
+        return Err("--assert-fit-abort requires --fit".into());
+    }
     eprintln!(
         "replaying ~{arrivals} arrivals at {rate} req/s through {} (streaming)...",
         kind.display()
@@ -328,6 +537,34 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
                  the arrival hot path",
                 small.workers, large.workers
             ));
+        }
+    }
+    if fit {
+        eprintln!(
+            "fit axis: ~{fit_arrivals} arrivals through both §5.1 fitting searches..."
+        );
+        let fit_report = run_fit_bench(fit_arrivals, rate, seed);
+        std::fs::write(&fit_out, fit_report.to_json())
+            .map_err(|e| format!("writing {fit_out}: {e}"))?;
+        for s in &fit_report.searches {
+            println!(
+                "  fit {:<14} fitted {:>5} in {} passes ({} aborted early, \
+                 {:.2} full-trace equivalents) {:.2}s -> {}",
+                s.scheduler,
+                s.fitted,
+                s.stats.pass_count(),
+                s.stats.aborted_passes(),
+                s.stats.full_trace_equivalents(),
+                s.wall_seconds,
+                fit_out
+            );
+        }
+        if let Some(frac) = assert_fit_abort {
+            fit_report.assert_abort_fraction(frac)?;
+            println!(
+                "  fit abort tripwire: all aborted passes streamed <= {:.0}% of the trace",
+                frac * 100.0
+            );
         }
     }
     Ok(())
@@ -398,6 +635,125 @@ mod tests {
         assert!(j.contains("\"pool_scaling\""));
         assert!(j.contains("\"workers\": 32"));
         assert!(crate::util::json::Json::parse(&j).is_ok(), "bench JSON must parse");
+    }
+
+    #[test]
+    fn fit_bench_reports_and_serializes() {
+        let r = run_fit_bench(15_000, 1500.0, 5);
+        assert_eq!(r.searches.len(), 2);
+        for s in &r.searches {
+            assert!(s.stats.pass_count() >= 1, "{} ran no passes", s.scheduler);
+            assert!(s.stats.total_arrivals > 0);
+            assert!(s.stats.feasible, "{} bench workload must be fittable", s.scheduler);
+            // The winning pass is always full-trace.
+            let last_full = s.stats.passes.iter().filter(|p| !p.aborted).last().unwrap();
+            assert_eq!(last_full.arrivals, s.stats.total_arrivals);
+        }
+        let j = r.to_json();
+        assert!(j.contains("\"full_trace_equivalents\""));
+        assert!(crate::util::json::Json::parse(&j).is_ok(), "fit JSON must parse");
+    }
+
+    #[test]
+    fn fit_abort_tripwire_flags_late_aborts() {
+        use crate::sched::{FitPass, FitStats};
+        let pass = |arrivals: u64, aborted: bool| FitPass {
+            candidate: 0,
+            arrivals,
+            aborted,
+            feasible: !aborted,
+            wall_seconds: 0.0,
+        };
+        let report = |abort_at: u64| FitBenchReport {
+            tolerance: 0.005,
+            searches: vec![FitSearchReport {
+                scheduler: "fpga-static".into(),
+                fitted: 1,
+                wall_seconds: 0.0,
+                stats: FitStats {
+                    label: "fpga-static".into(),
+                    fitted_candidate: 1,
+                    feasible: true,
+                    total_arrivals: 1000,
+                    passes: vec![pass(abort_at, true), pass(1000, false)],
+                },
+            }],
+        };
+        assert!(report(100).assert_abort_fraction(0.5).is_ok());
+        assert!(report(900).assert_abort_fraction(0.5).is_err());
+    }
+
+    #[test]
+    fn fit_abort_tripwire_catches_disarmed_abort() {
+        // A full-length pass that is *infeasible but not aborted* is the
+        // signature of a silently disarmed early-abort budget (e.g. a
+        // lost len_hint) — the tripwire must not pass vacuously.
+        use crate::sched::{FitPass, FitStats};
+        let disarmed = FitBenchReport {
+            tolerance: 0.005,
+            searches: vec![FitSearchReport {
+                scheduler: "fpga-dynamic".into(),
+                fitted: 1,
+                wall_seconds: 0.0,
+                stats: FitStats {
+                    label: "fpga-dynamic".into(),
+                    fitted_candidate: 1,
+                    feasible: true,
+                    total_arrivals: 1000,
+                    passes: vec![
+                        FitPass {
+                            candidate: 0,
+                            arrivals: 1000, // full trace, never aborted
+                            aborted: false,
+                            feasible: false,
+                            wall_seconds: 0.0,
+                        },
+                        FitPass {
+                            candidate: 1,
+                            arrivals: 1000,
+                            aborted: false,
+                            feasible: true,
+                            wall_seconds: 0.0,
+                        },
+                    ],
+                },
+            }],
+        };
+        assert!(disarmed.assert_abort_fraction(0.5).is_err());
+        // The deliberate unbounded rerun of a failed (ceiling) search is
+        // exempt — it is the only pass allowed to be infeasible AND full.
+        let mut failed = disarmed.clone();
+        failed.searches[0].stats.feasible = false;
+        failed.searches[0].stats.passes = vec![
+            FitPass {
+                candidate: 4096,
+                arrivals: 80,
+                aborted: true,
+                feasible: false,
+                wall_seconds: 0.0,
+            },
+            FitPass {
+                candidate: 4096,
+                arrivals: 1000,
+                aborted: false,
+                feasible: false,
+                wall_seconds: 0.0,
+            },
+        ];
+        assert!(failed.assert_abort_fraction(0.5).is_ok());
+        // All-feasible searches make the gate vacuous — that must fail
+        // too (the bench workload is supposed to force aborts).
+        let mut vacuous = disarmed.clone();
+        vacuous.searches[0].stats.fitted_candidate = 0;
+        vacuous.searches[0].stats.passes = vec![FitPass {
+            candidate: 0,
+            arrivals: 1000,
+            aborted: false,
+            feasible: true,
+            wall_seconds: 0.0,
+        }];
+        let err = vacuous.assert_abort_fraction(0.5).unwrap_err();
+        assert!(err.contains("vacuous"), "unexpected error: {err}");
     }
 
     #[test]

@@ -10,7 +10,10 @@ pub mod production_exp;
 pub mod sensitivity;
 pub mod sweep;
 
-pub use benchsim::{cmd_bench_sim, run_bench_sim, run_pool_scaling, BenchSimReport, PoolScalePoint};
+pub use benchsim::{
+    cmd_bench_sim, run_bench_sim, run_fit_bench, run_pool_scaling, BenchSimReport,
+    FitBenchReport, FitSearchReport, PoolScalePoint,
+};
 pub use common::{Cell, ExpCtx};
 pub use sweep::{SweepCell, SweepGrid, WorkloadSpec};
 

@@ -5,7 +5,7 @@
 //! / (trace × policy) grids run through the parallel sweep engine —
 //! multi-app runs themselves stay serial so worker threads never nest.
 
-use super::common::{run_production, Cell, ExpCtx};
+use super::common::{profile_apps, run_production_profiles, Cell, ExpCtx};
 use super::sweep::parallel_map;
 use crate::config::{
     DispatchPolicy, PlatformConfig, SchedulerKind, SimConfig, SizeBucket,
@@ -47,12 +47,16 @@ pub fn table8(ctx: &ExpCtx) -> Vec<Table> {
     let roster = SchedulerKind::table8_roster();
     let mut tables = Vec::new();
     for (bucket, tag) in [(SizeBucket::Short, "8a short"), (SizeBucket::Medium, "8b medium")] {
-        let azure = workload(ctx, Dataset::AzureFunctions, bucket, 11);
-        let alibaba = workload(ctx, Dataset::AlibabaMicroservices, bucket, 13);
+        // Profile each app population once; the whole roster shares the
+        // traces and per-interval bins (every kind used to re-stream each
+        // app's arrivals for its oracle/fitting passes).
+        let azure = profile_apps(workload(ctx, Dataset::AzureFunctions, bucket, 11), &cfg);
+        let alibaba =
+            profile_apps(workload(ctx, Dataset::AlibabaMicroservices, bucket, 13), &cfg);
         let cells = parallel_map(&roster, ctx.effective_jobs(), |_, kind| {
             (
-                run_production(kind, &cfg, &azure),
-                run_production(kind, &cfg, &alibaba),
+                run_production_profiles(kind, &cfg, &azure),
+                run_production_profiles(kind, &cfg, &alibaba),
             )
         });
         let mut t = Table::new(

@@ -23,9 +23,12 @@
 
 use super::common::{Cell, ExpCtx};
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
-use crate::sched;
+use crate::sched::{self, WorkloadProfile};
+use crate::trace::AppTrace;
 use crate::util::rng::Rng;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// A synthetic (b-model) workload point of a sweep grid.
 #[derive(Clone, Debug)]
@@ -91,46 +94,118 @@ impl SweepGrid {
     /// Execute every (cell, seed) replicate, merge replicates per cell,
     /// and return one seed-averaged [`Cell`] per pushed cell, in push
     /// order. Bit-identical for any worker count.
+    ///
+    /// Workload synthesis is shared: every (cell, seed) unit whose
+    /// workload identity — `(seed_base, seed, workload spec, scheduling
+    /// interval)` — matches runs against one cached [`WorkloadProfile`]
+    /// (Arc-shared trace + per-interval work bins), so a roster of N
+    /// scheduler kinds on one workload pays b-model + Poisson synthesis
+    /// once instead of N times, and the oracle-assisted kinds derive
+    /// their needed-counts from the cached bins instead of re-streaming
+    /// the arrivals. Only keys that are both shared (>1 consuming unit)
+    /// AND read by at least one profile-consuming kind are materialized
+    /// up front and held for the grid's lifetime; every other unit keeps
+    /// the pre-cache cost model — single-pass kinds stream in constant
+    /// memory, multi-pass kinds build a transient local profile — so
+    /// grid memory never exceeds the old bound of ~`jobs` live traces
+    /// plus the genuinely shared ones. Determinism is unchanged
+    /// because a profile is a pure function of its key and results are
+    /// still placed by unit index (bit-parity with per-cell
+    /// recomputation, across both the shared and unshared branches, is
+    /// pinned by `rust/tests/fit_parity.rs` and the
+    /// `shared_profiles_do_not_couple_cells` test below). Platform
+    /// parameters are *not* part of the key: bins are pre-breakeven
+    /// demand, so sensitivity sweeps that vary speedup/power/spin-up
+    /// share profiles across configs whenever the scheduling interval
+    /// agrees.
     pub fn run(&self) -> Vec<Cell> {
         let defaults = PlatformConfig::paper_default();
         let seeds = self.seeds;
         let units: Vec<(usize, u64)> = (0..self.cells.len())
             .flat_map(|c| (0..seeds).map(move |s| (c, s)))
             .collect();
-        let runs = parallel_map(&units, self.jobs, |_, &(c, s)| {
+
+        // Resolve each unit to its workload-profile key, first occurrence
+        // first — the profile list order is a pure function of the grid,
+        // independent of worker count — and count consumers per key.
+        let mut key_index: HashMap<ProfileKey, usize> = HashMap::new();
+        let mut key_specs: Vec<(u64, u64, WorkloadSpec, f64)> = Vec::new();
+        let mut key_uses: Vec<usize> = Vec::new();
+        let mut key_needs_profile: Vec<bool> = Vec::new();
+        let mut unit_key: Vec<usize> = Vec::with_capacity(units.len());
+        for &(c, s) in &units {
             let cell = &self.cells[c];
-            let w = &cell.workload;
-            // Single-pass kinds stream the workload straight into the
-            // driver: the b-model synthesis is lazy (sequence-identical
-            // to the materialized `synthetic_app`, pinned by
-            // tests/source_parity.rs), so a cell's memory is bounded by
-            // pool + events, not trace length. Multi-pass kinds (oracle
-            // construction / the §5.1 fitting searches replay the
-            // workload up to ~11 times) synthesize once and re-run the
-            // materialized trace instead — sweep cells are bounded, so
-            // trading that memory for not re-synthesizing every pass is
-            // the right call here; genuinely huge streams go through
-            // `run_scheduler_source` with a re-creatable factory.
-            let source = || {
-                crate::trace::synthetic_source(
-                    "exp",
-                    Rng::for_stream(cell.seed_base, s),
-                    w.burstiness,
-                    w.duration,
-                    w.rate,
-                    w.size,
-                    60.0,
-                )
-            };
-            let r = match &cell.scheduler {
-                SchedulerKind::CpuDynamic | SchedulerKind::Spork { ideal: false, .. } => {
-                    sched::run_scheduler_source(&cell.scheduler, &cell.cfg, &defaults, &|| {
-                        Box::new(source())
-                    })
-                }
-                _ => {
-                    let trace = crate::trace::AppTrace::from_source(&mut source());
-                    sched::run_scheduler(&cell.scheduler, &trace, &cell.cfg, &defaults)
+            let key = ProfileKey::of(cell, s);
+            let idx = *key_index.entry(key).or_insert_with(|| {
+                key_specs.push((cell.seed_base, s, cell.workload.clone(), cell.cfg.interval));
+                key_uses.push(0);
+                key_needs_profile.push(false);
+                key_specs.len() - 1
+            });
+            key_uses[idx] += 1;
+            key_needs_profile[idx] |= needs_profile(&cell.scheduler);
+            unit_key.push(idx);
+        }
+
+        // Synthesize each genuinely shared workload exactly once (in
+        // parallel — profiles are pure functions of their key). A key is
+        // worth pinning for the grid's lifetime only when it is shared
+        // AND some consumer actually reads the materialized trace/bins
+        // (a multi-pass or oracle-assisted kind); keys consumed solely
+        // by streaming kinds would hold O(arrivals) memory nobody needs.
+        let shared: Vec<Option<WorkloadProfile>> =
+            parallel_map(&key_specs, self.jobs, |i, spec| {
+                (key_uses[i] > 1 && key_needs_profile[i]).then(|| synth_profile(spec))
+            });
+
+        let runs = parallel_map(&units, self.jobs, |u, &(c, s)| {
+            let cell = &self.cells[c];
+            let r = match &shared[unit_key[u]] {
+                Some(profile) => sched::run_scheduler_profile(
+                    &cell.scheduler,
+                    profile,
+                    &cell.cfg,
+                    &defaults,
+                ),
+                // Unshared unit: the old per-unit cost model. Single-pass
+                // kinds stream the lazy synthesis (constant memory);
+                // multi-pass kinds build a transient profile dropped at
+                // the end of the unit.
+                None => {
+                    let w = &cell.workload;
+                    let source = || {
+                        crate::trace::synthetic_source(
+                            "exp",
+                            Rng::for_stream(cell.seed_base, s),
+                            w.burstiness,
+                            w.duration,
+                            w.rate,
+                            w.size,
+                            60.0,
+                        )
+                    };
+                    match &cell.scheduler {
+                        SchedulerKind::CpuDynamic
+                        | SchedulerKind::Spork { ideal: false, .. } => {
+                            sched::run_scheduler_source(
+                                &cell.scheduler,
+                                &cell.cfg,
+                                &defaults,
+                                &|| Box::new(source()),
+                            )
+                        }
+                        _ => {
+                            let trace = AppTrace::from_source(&mut source());
+                            let profile =
+                                WorkloadProfile::from_trace(trace, cell.cfg.interval);
+                            sched::run_scheduler_profile(
+                                &cell.scheduler,
+                                &profile,
+                                &cell.cfg,
+                                &defaults,
+                            )
+                        }
+                    }
                 }
             };
             Cell::from_run(&r.metrics, &r.ideal)
@@ -142,6 +217,64 @@ impl SweepGrid {
             merged[c].merge(run);
         }
         merged.into_iter().map(Cell::finish).collect()
+    }
+}
+
+/// Whether a kind's run path consumes a [`WorkloadProfile`] — the
+/// multi-pass fitted baselines and the oracle-assisted kinds. The
+/// remaining kinds make exactly one streaming pass and never read the
+/// materialized trace or its bins.
+fn needs_profile(kind: &SchedulerKind) -> bool {
+    !matches!(
+        kind,
+        SchedulerKind::CpuDynamic | SchedulerKind::Spork { ideal: false, .. }
+    )
+}
+
+/// Materialize one workload profile from its key spec (a pure function
+/// of the spec — the determinism contract's cornerstone).
+fn synth_profile(
+    (seed_base, seed, w, interval): &(u64, u64, WorkloadSpec, f64),
+) -> WorkloadProfile {
+    let trace = AppTrace::from_source(&mut crate::trace::synthetic_source(
+        "exp",
+        Rng::for_stream(*seed_base, *seed),
+        w.burstiness,
+        w.duration,
+        w.rate,
+        w.size,
+        60.0,
+    ));
+    WorkloadProfile::new(Arc::new(trace), *interval)
+}
+
+/// Workload identity of one (cell, seed) unit: everything the
+/// synthesized trace and its interval bins are a function of. Floats are
+/// keyed by their bit patterns — profile sharing requires *exact*
+/// parameter equality, anything less would let two almost-equal cells
+/// silently share a trace.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct ProfileKey {
+    seed_base: u64,
+    seed: u64,
+    burstiness: u64,
+    rate: u64,
+    size: u64,
+    duration: u64,
+    interval: u64,
+}
+
+impl ProfileKey {
+    fn of(cell: &SweepCell, seed: u64) -> Self {
+        Self {
+            seed_base: cell.seed_base,
+            seed,
+            burstiness: cell.workload.burstiness.to_bits(),
+            rate: cell.workload.rate.to_bits(),
+            size: cell.workload.size.to_bits(),
+            duration: cell.workload.duration.to_bits(),
+            interval: cell.cfg.interval.to_bits(),
+        }
     }
 }
 
@@ -235,6 +368,76 @@ mod tests {
     fn effective_jobs_resolves_auto() {
         assert!(effective_jobs(0) >= 1);
         assert_eq!(effective_jobs(3), 3);
+    }
+
+    #[test]
+    fn shared_profiles_do_not_couple_cells() {
+        // Kinds sharing one workload profile must produce exactly what
+        // each produces in a grid of its own (the cache shares synthesis,
+        // never state).
+        use crate::config::SimConfig;
+        let w = WorkloadSpec {
+            burstiness: 0.65,
+            rate: 80.0,
+            size: 0.010,
+            duration: 120.0,
+        };
+        let kinds = [SchedulerKind::spork_e(), SchedulerKind::MarkIdeal];
+        let mut grid = SweepGrid::with(2, 2);
+        for kind in &kinds {
+            grid.push(SweepCell {
+                scheduler: kind.clone(),
+                cfg: SimConfig::paper_default(),
+                workload: w.clone(),
+                seed_base: 9,
+            });
+        }
+        let shared = grid.run();
+        for (kind, cell) in kinds.iter().zip(&shared) {
+            let mut solo = SweepGrid::with(2, 1);
+            solo.push(SweepCell {
+                scheduler: kind.clone(),
+                cfg: SimConfig::paper_default(),
+                workload: w.clone(),
+                seed_base: 9,
+            });
+            assert_eq!(&solo.run()[0], cell, "{} diverged", kind.name());
+        }
+    }
+
+    #[test]
+    fn streaming_only_shared_keys_match_solo_grids() {
+        // Two single-pass kinds sharing one workload key: the cache
+        // skips materialization (nobody reads the profile), both units
+        // stream — output must still equal each kind's solo grid.
+        use crate::config::SimConfig;
+        let w = WorkloadSpec {
+            burstiness: 0.6,
+            rate: 60.0,
+            size: 0.010,
+            duration: 90.0,
+        };
+        let kinds = [SchedulerKind::spork_e(), SchedulerKind::spork_c()];
+        let mut grid = SweepGrid::with(1, 2);
+        for kind in &kinds {
+            grid.push(SweepCell {
+                scheduler: kind.clone(),
+                cfg: SimConfig::paper_default(),
+                workload: w.clone(),
+                seed_base: 13,
+            });
+        }
+        let shared = grid.run();
+        for (kind, cell) in kinds.iter().zip(&shared) {
+            let mut solo = SweepGrid::with(1, 1);
+            solo.push(SweepCell {
+                scheduler: kind.clone(),
+                cfg: SimConfig::paper_default(),
+                workload: w.clone(),
+                seed_base: 13,
+            });
+            assert_eq!(&solo.run()[0], cell, "{} diverged", kind.name());
+        }
     }
 
     #[test]

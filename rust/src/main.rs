@@ -80,6 +80,10 @@ fn specs() -> Vec<Spec> {
                 ("pool-sizes", true, "pool-scaling fleet sizes (default 100,1000,10000)"),
                 ("scaling-arrivals", true, "arrivals per pool-scaling point (default 200000)"),
                 ("assert-scaling", true, "max per-arrival cost ratio largest/smallest fleet"),
+                ("fit", false, "also measure the §5.1 fitting searches (gallop+bisect, early abort)"),
+                ("fit-arrivals", true, "arrivals for the fit axis workload (default 200000)"),
+                ("fit-out", true, "fit axis output JSON (default BENCH_fit_passes.json)"),
+                ("assert-fit-abort", true, "max trace fraction an aborted fitting pass may stream (e.g. 0.5)"),
             ],
         },
         Spec {

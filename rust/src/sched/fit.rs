@@ -1,0 +1,322 @@
+//! The shared §5.1 fitting-search engine: find the *least feasible*
+//! candidate (fleet-size step for FPGA-static, headroom multiple for
+//! FPGA-dynamic) in O(log k) full-trace passes instead of a linear scan.
+//!
+//! Feasibility — `miss_fraction() <= tolerance` — is monotone in the
+//! candidate index for both searches (more fleet / more headroom never
+//! adds misses; pinned by `more_headroom_fewer_misses` and the parity
+//! suite), which licenses the classic two-phase search:
+//!
+//! 1. **Gallop**: probe candidates 0, 1, 2, 4, 8, … until the first
+//!    feasible one. Each infeasible probe runs with the early-abort miss
+//!    budget armed (`sim::run_source_bounded`), so it touches only the
+//!    trace prefix needed to *prove* infeasibility.
+//! 2. **Bisect**: binary-search the (last-infeasible, first-feasible]
+//!    bracket for the least feasible candidate. Under monotonicity this
+//!    is exactly the candidate the old `for k in 0..=8` scan returned —
+//!    same fitted policy, same winning run, bit for bit — but without the
+//!    scan's hard cap of 8 (the cap silently returned an *infeasible* fit
+//!    when the search ran off its end).
+//!
+//! The winning run needs no re-simulation: a feasible pass never reaches
+//! its miss budget, so its bounded run IS the full run.
+//!
+//! If no candidate is feasible below [`FIT_HARD_CEILING`] the search
+//! fails loudly (stderr warning + `FitStats::feasible == false`) and
+//! returns a *full* run of the ceiling candidate, preserving the old
+//! "best effort so far" return contract without hiding the failure.
+
+use super::MakeSource;
+use crate::config::SimConfig;
+use crate::policy::Policy;
+use crate::sim::{self, BoundedRun, RunResult};
+use crate::trace::KnownLen;
+use std::time::Instant;
+
+/// Generous upper bound on the candidate index (the old searches capped
+/// at 8). Galloping reaches it in ~13 cheap aborted probes; a workload
+/// that is still infeasible at 4096 fleet steps / headroom multiples
+/// cannot be served at any plausible scale and the caller needs to hear
+/// about it, not simulate an even larger fleet.
+pub const FIT_HARD_CEILING: u32 = 4_096;
+
+/// One simulation pass of a fitting search.
+#[derive(Clone, Debug)]
+pub struct FitPass {
+    /// Candidate index probed (fleet step j / headroom multiple k).
+    pub candidate: u32,
+    /// Arrivals actually simulated (the full trace unless aborted).
+    pub arrivals: u64,
+    /// Whether the pass stopped at its miss budget (⟹ infeasible).
+    pub aborted: bool,
+    pub feasible: bool,
+    pub wall_seconds: f64,
+}
+
+/// What a fitting search cost and decided — surfaced by the `spork
+/// bench-sim --fit` axis and by `SPORK_FIT_VERBOSE=1`.
+#[derive(Clone, Debug)]
+pub struct FitStats {
+    pub label: String,
+    /// The fitted candidate index (least feasible, or the hard ceiling
+    /// when `feasible` is false).
+    pub fitted_candidate: u32,
+    /// False only when no candidate up to [`FIT_HARD_CEILING`] met the
+    /// tolerance — the loud-failure path.
+    pub feasible: bool,
+    /// Arrivals in one full pass (the workload's exact request count).
+    pub total_arrivals: u64,
+    pub passes: Vec<FitPass>,
+}
+
+impl FitStats {
+    pub fn pass_count(&self) -> usize {
+        self.passes.len()
+    }
+
+    pub fn aborted_passes(&self) -> usize {
+        self.passes.iter().filter(|p| p.aborted).count()
+    }
+
+    /// Total simulated arrivals across all passes, in units of one full
+    /// pass — the search's whole-trace-equivalent cost (the linear scan
+    /// paid ~1.0 per candidate probed).
+    pub fn full_trace_equivalents(&self) -> f64 {
+        if self.total_arrivals == 0 {
+            return self.passes.len() as f64;
+        }
+        self.passes.iter().map(|p| p.arrivals as f64).sum::<f64>()
+            / self.total_arrivals as f64
+    }
+
+    fn log_verbose(&self) {
+        if std::env::var_os("SPORK_FIT_VERBOSE").is_some() {
+            eprintln!(
+                "[fit] {}: fitted candidate {}{} after {} passes \
+                 ({} aborted early; {:.2} full-trace equivalents over {} arrivals)",
+                self.label,
+                self.fitted_candidate,
+                if self.feasible { "" } else { " (INFEASIBLE)" },
+                self.pass_count(),
+                self.aborted_passes(),
+                self.full_trace_equivalents(),
+                self.total_arrivals,
+            );
+        }
+    }
+}
+
+/// One candidate pass of a fitting search — the single copy of the
+/// pass-running protocol both searches share: wrap a fresh stream from
+/// `make` with the oracle-counted exact `total` (so the miss budget can
+/// arm even on generator sources), then run bounded (early abort) or
+/// unbounded (the ceiling-failure full rerun). Results are normalized
+/// against `cfg.platform`; callers rebase the ideal baseline.
+pub(crate) fn run_candidate_pass(
+    make: &MakeSource<'_>,
+    total: u64,
+    cfg: &SimConfig,
+    miss_tolerance: f64,
+    bounded: bool,
+    policy: &mut dyn Policy,
+) -> BoundedRun {
+    let src = Box::new(KnownLen::new(make(), total));
+    if bounded {
+        sim::run_source_bounded(src, cfg.clone(), &cfg.platform, policy, miss_tolerance)
+    } else {
+        BoundedRun {
+            result: sim::run_source(src, cfg.clone(), &cfg.platform, policy),
+            aborted: false,
+        }
+    }
+}
+
+/// Find the least feasible candidate by gallop + bisection.
+///
+/// `run_pass(candidate, bounded)` simulates one candidate; when `bounded`
+/// it must arm the early-abort budget for `miss_tolerance` (the engine
+/// passes `bounded == false` only for the ceiling-failure full rerun).
+/// `total_arrivals` is the workload's exact request count (from the
+/// oracle pass). Returns the winning run — always a complete pass — the
+/// fitted candidate, and the per-pass cost accounting.
+pub(crate) fn fit_least_feasible(
+    label: &str,
+    total_arrivals: u64,
+    miss_tolerance: f64,
+    run_pass: &mut dyn FnMut(u32, bool) -> BoundedRun,
+) -> (RunResult, u32, FitStats) {
+    let mut stats = FitStats {
+        label: label.to_string(),
+        fitted_candidate: 0,
+        feasible: false,
+        total_arrivals,
+        passes: Vec::new(),
+    };
+    let mut probe = |cand: u32, bounded: bool, stats: &mut FitStats| -> (RunResult, bool) {
+        let t0 = Instant::now();
+        let run = run_pass(cand, bounded);
+        // With the budget armed, `!aborted` already implies feasibility;
+        // the explicit miss_fraction check keeps unbounded passes (no
+        // len_hint, ceiling rerun) on the same predicate.
+        let feasible = !run.aborted && run.result.miss_fraction() <= miss_tolerance;
+        stats.passes.push(FitPass {
+            candidate: cand,
+            arrivals: run.result.metrics.requests,
+            aborted: run.aborted,
+            feasible,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        });
+        (run.result, feasible)
+    };
+
+    // Candidate 0 first — identical to the old scan's first probe, and
+    // the common case (most workloads fit without extra headroom).
+    let (r0, f0) = probe(0, true, &mut stats);
+    if f0 {
+        stats.fitted_candidate = 0;
+        stats.feasible = true;
+        stats.log_verbose();
+        return (r0, 0, stats);
+    }
+
+    // Gallop for the first feasible candidate: every miss is a cheap
+    // aborted prefix, and the bracket doubles each step.
+    let mut lo = 0u32; // greatest known-infeasible candidate
+    let mut hi = 1u32;
+    let mut best: RunResult;
+    loop {
+        let (r, feasible) = probe(hi, true, &mut stats);
+        if feasible {
+            best = r;
+            break;
+        }
+        if hi >= FIT_HARD_CEILING {
+            // Loud failure: the old scan silently returned its last
+            // infeasible run. Keep that return shape (callers get a full
+            // run to report) but mark and announce the failure, and
+            // re-run unbounded so the returned metrics cover the whole
+            // trace rather than the aborted prefix.
+            eprintln!(
+                "warning: [fit] {label}: no feasible candidate up to the hard \
+                 ceiling {FIT_HARD_CEILING}; returning the ceiling candidate's \
+                 run marked infeasible"
+            );
+            let (rf, _) = probe(hi, false, &mut stats);
+            stats.fitted_candidate = hi;
+            stats.feasible = false;
+            stats.log_verbose();
+            return (rf, hi, stats);
+        }
+        lo = hi;
+        hi = hi.saturating_mul(2).min(FIT_HARD_CEILING);
+    }
+
+    // Bisect (lo, hi]: lo is infeasible, hi is feasible with `best` its
+    // full run. Invariant holds until hi - lo == 1, when hi is least.
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        let (r, feasible) = probe(mid, true, &mut stats);
+        if feasible {
+            hi = mid;
+            best = r;
+        } else {
+            lo = mid;
+        }
+    }
+    stats.fitted_candidate = hi;
+    stats.feasible = true;
+    stats.log_verbose();
+    (best, hi, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{IdealBaseline, Metrics};
+
+    /// Synthetic pass runner: candidates below `least_feasible` "miss"
+    /// everything (and abort when bounded), the rest are clean.
+    fn runner(
+        least_feasible: u32,
+        total: u64,
+        log: std::rc::Rc<std::cell::RefCell<Vec<(u32, bool)>>>,
+    ) -> impl FnMut(u32, bool) -> BoundedRun {
+        move |cand, bounded| {
+            log.borrow_mut().push((cand, bounded));
+            let feasible = cand >= least_feasible;
+            let mut m = Metrics::default();
+            if feasible {
+                m.requests = total;
+                m.deadline_misses = 0;
+            } else if bounded {
+                // Aborted after a small prefix.
+                m.requests = (total / 10).max(1);
+                m.deadline_misses = m.requests;
+            } else {
+                m.requests = total;
+                m.deadline_misses = total;
+            }
+            // Distinguish runs so the winner can be identified.
+            m.total_work = cand as f64 + 1.0;
+            BoundedRun {
+                result: RunResult {
+                    scheduler: "fake".into(),
+                    metrics: m,
+                    ideal: IdealBaseline {
+                        energy: 0.0,
+                        cost: 0.0,
+                    },
+                },
+                aborted: bounded && !feasible,
+            }
+        }
+    }
+
+    fn fit(least: u32) -> (RunResult, u32, FitStats) {
+        let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let mut r = runner(least, 1000, log);
+        fit_least_feasible("test", 1000, 0.005, &mut r)
+    }
+
+    #[test]
+    fn finds_least_feasible_for_every_target() {
+        for least in [0u32, 1, 2, 3, 5, 8, 9, 13, 27, 100] {
+            let (run, fitted, stats) = fit(least);
+            assert_eq!(fitted, least, "least-feasible candidate");
+            assert!(stats.feasible);
+            // Winning run is the full pass of the fitted candidate.
+            assert_eq!(run.metrics.total_work, least as f64 + 1.0);
+            assert_eq!(run.metrics.requests, 1000);
+            // O(log k) full passes: only feasible probes stream the whole
+            // trace, and there are at most ~2·log2(k)+2 of them.
+            let full = stats.passes.iter().filter(|p| !p.aborted).count();
+            let bound = 2 * (32 - least.max(1).leading_zeros()) as usize + 2;
+            assert!(full <= bound, "least={least}: {full} full passes > {bound}");
+        }
+    }
+
+    #[test]
+    fn pass_count_beats_linear_scan_for_large_fits() {
+        let (_, fitted, stats) = fit(100);
+        assert_eq!(fitted, 100);
+        // Linear scan would pay 101 full passes; gallop+bisect stays
+        // logarithmic and aborted probes stream only a prefix.
+        assert!(stats.pass_count() <= 16, "passes {}", stats.pass_count());
+        assert!(stats.full_trace_equivalents() < 20.0);
+        assert!(stats.aborted_passes() > 0);
+    }
+
+    #[test]
+    fn ceiling_failure_is_loud_and_marked() {
+        let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let mut r = runner(u32::MAX, 1000, log.clone());
+        let (run, fitted, stats) = fit_least_feasible("test", 1000, 0.005, &mut r);
+        assert_eq!(fitted, FIT_HARD_CEILING);
+        assert!(!stats.feasible, "must be marked infeasible");
+        // The returned run is a full (unbounded) pass, not an aborted
+        // prefix.
+        assert_eq!(run.metrics.requests, 1000);
+        let last = log.borrow().last().copied().unwrap();
+        assert_eq!(last, (FIT_HARD_CEILING, false));
+    }
+}

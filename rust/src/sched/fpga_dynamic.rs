@@ -10,13 +10,14 @@ use super::breakeven::{
     breakeven_fpga_seconds, lambda_fpga_seconds, needed_fpgas, Objective,
 };
 use super::dispatch::Dispatcher;
-use super::oracle::Oracle;
+use super::fit::{self, FitStats};
+use super::oracle::{Oracle, WorkloadProfile};
 use super::MakeSource;
 use crate::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
 use crate::policy::{
     earliest_finishing, Action, Observation, Policy, PolicyView, Target,
 };
-use crate::sim::{self, IdealBaseline, RunResult};
+use crate::sim::{IdealBaseline, RunResult};
 use crate::trace::AppTrace;
 
 pub struct FpgaDynamic {
@@ -116,27 +117,42 @@ impl Policy for FpgaDynamic {
 /// The §5.1 fitting search: least headroom multiple `k` (of the oracle's
 /// max consecutive delta) whose run meets deadlines within
 /// `miss_tolerance`. Returns the winning run (normalized against
-/// `cfg.platform`), the headroom, and k.
-fn search(make: &MakeSource<'_>, cfg: &SimConfig, miss_tolerance: f64) -> (RunResult, u32, u32) {
+/// `cfg.platform`), the headroom, k, and the pass accounting.
+///
+/// Feasibility is monotone in the headroom (pinned by
+/// `more_headroom_fewer_misses`), so the search gallops to the first
+/// feasible multiple and bisects for the least one — O(log k) full
+/// passes, with every infeasible probe early-aborting at its exact miss
+/// budget (the oracle pass counts the workload's arrivals).
+fn search(
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32, u32, FitStats) {
     let oracle = Oracle::from_source(&mut *make(), cfg, Objective::energy());
+    search_with_oracle(&oracle, make, cfg, miss_tolerance)
+}
+
+/// [`search`] with a precomputed oracle (the profile-cached sweep path).
+fn search_with_oracle(
+    oracle: &Oracle,
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32, u32, FitStats) {
     let delta = oracle.max_consecutive_delta().max(1);
-    let mut best: Option<(RunResult, u32, u32)> = None;
-    for k in 0..=8u32 {
-        let headroom = k * delta;
-        let mut policy = FpgaDynamic::new(cfg, headroom);
-        let r = sim::run_source(make(), cfg.clone(), &cfg.platform, &mut policy);
-        let feasible = r.miss_fraction() <= miss_tolerance;
-        best = Some((r, headroom, k));
-        if feasible {
-            break;
-        }
-    }
-    best.unwrap()
+    let total = oracle.total_requests;
+    let (r, k, stats) =
+        fit::fit_least_feasible("fpga-dynamic", total, miss_tolerance, &mut |k, bounded| {
+            let mut policy = FpgaDynamic::new(cfg, k.saturating_mul(delta));
+            fit::run_candidate_pass(make, total, cfg, miss_tolerance, bounded, &mut policy)
+        });
+    (r, k.saturating_mul(delta), k, stats)
 }
 
 /// Least feasible headroom and its multiple k.
 pub fn fit_headroom(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (u32, u32) {
-    let (_, headroom, k) = search(&|| Box::new(trace.source()), cfg, miss_tolerance);
+    let (_, headroom, k, _stats) = search(&|| Box::new(trace.source()), cfg, miss_tolerance);
     (headroom, k)
 }
 
@@ -156,7 +172,7 @@ pub fn fitted_source(
     cfg: &SimConfig,
     miss_tolerance: f64,
 ) -> FpgaDynamic {
-    let (_, headroom, _k) = search(make, cfg, miss_tolerance);
+    let (_, headroom, _k, _stats) = search(make, cfg, miss_tolerance);
     FpgaDynamic::new(cfg, headroom)
 }
 
@@ -180,7 +196,40 @@ pub fn fit_source(
     defaults: &PlatformConfig,
     miss_tolerance: f64,
 ) -> (RunResult, u32) {
-    let (mut r, _headroom, k) = search(make, cfg, miss_tolerance);
+    let (r, k, _stats) = fit_source_stats(make, cfg, defaults, miss_tolerance);
+    (r, k)
+}
+
+/// [`fit_source`] that also surfaces the search's pass accounting (the
+/// `spork bench-sim --fit` axis).
+pub fn fit_source_stats(
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32, FitStats) {
+    let (mut r, _headroom, k, stats) = search(make, cfg, miss_tolerance);
+    r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
+    (r, k, stats)
+}
+
+/// [`fit`] against a cached [`WorkloadProfile`]: the oracle derives from
+/// the profile's bins (no arrival streaming) and every pass replays the
+/// shared materialized trace. Bit-identical to [`fit`] on the profile's
+/// trace.
+pub fn fit_profile(
+    profile: &WorkloadProfile,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32) {
+    let oracle = Oracle::from_profile(profile, cfg, Objective::energy());
+    let (mut r, _headroom, k, _stats) = search_with_oracle(
+        &oracle,
+        &|| Box::new(profile.source()),
+        cfg,
+        miss_tolerance,
+    );
     r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
     (r, k)
 }
@@ -188,6 +237,7 @@ pub fn fit_source(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim;
     use crate::trace::synthetic_app;
     use crate::util::rng::Rng;
 

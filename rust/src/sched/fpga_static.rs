@@ -10,13 +10,14 @@
 //! hands out the fitted policy.
 
 use super::dispatch::Dispatcher;
-use super::oracle::Oracle;
+use super::fit::{self, FitStats};
+use super::oracle::{Oracle, WorkloadProfile};
 use super::MakeSource;
 use crate::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
 use crate::policy::{
     earliest_finishing, Action, Observation, Policy, PolicyView, Target,
 };
-use crate::sim::{self, IdealBaseline, RunResult};
+use crate::sim::{IdealBaseline, RunResult};
 use crate::trace::AppTrace;
 
 pub struct FpgaStatic {
@@ -41,25 +42,42 @@ impl FpgaStatic {
 /// The fitting search: least fleet ≥ the oracle peak whose run meets
 /// deadlines within `miss_tolerance`. Step size scales with √peak
 /// (square-root staffing). Returns the winning run (normalized against
-/// `cfg.platform`) and the fleet. Every pass streams a fresh source from
-/// `make`, so the search runs in constant memory for any trace length.
-fn search(make: &MakeSource<'_>, cfg: &SimConfig, miss_tolerance: f64) -> (RunResult, u32) {
+/// `cfg.platform`), the fleet, and the pass accounting.
+///
+/// Feasibility is monotone in the fleet, so the search gallops to the
+/// first feasible step count and bisects for the least one — O(log j)
+/// full passes, and every infeasible probe early-aborts at its miss
+/// budget (the oracle pass counted the workload's exact arrivals, so the
+/// budget is exact even on generator streams). Every pass streams a
+/// fresh source from `make`, so the search runs in constant memory for
+/// any trace length.
+fn search(
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32, FitStats) {
     let oracle =
         Oracle::from_source(&mut *make(), cfg, super::breakeven::Objective::energy());
+    search_with_oracle(&oracle, make, cfg, miss_tolerance)
+}
+
+/// [`search`] with a precomputed oracle (the profile-cached sweep path).
+fn search_with_oracle(
+    oracle: &Oracle,
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32, FitStats) {
     let peak = oracle.peak().max(1);
     let step = ((peak as f64).sqrt().ceil() as u32).max(1);
-    let mut best: Option<(RunResult, u32)> = None;
-    for j in 0..=8u32 {
-        let fleet = peak + j * step;
-        let mut policy = FpgaStatic::with_fleet(fleet);
-        let r = sim::run_source(make(), cfg.clone(), &cfg.platform, &mut policy);
-        let feasible = r.miss_fraction() <= miss_tolerance;
-        best = Some((r, fleet));
-        if feasible {
-            break;
-        }
-    }
-    best.unwrap()
+    let total = oracle.total_requests;
+    let fleet_of = |j: u32| peak.saturating_add(j.saturating_mul(step));
+    let (r, j, stats) =
+        fit::fit_least_feasible("fpga-static", total, miss_tolerance, &mut |j, bounded| {
+            let mut policy = FpgaStatic::with_fleet(fleet_of(j));
+            fit::run_candidate_pass(make, total, cfg, miss_tolerance, bounded, &mut policy)
+        });
+    (r, fleet_of(j), stats)
 }
 
 /// Least feasible fleet size.
@@ -100,7 +118,40 @@ pub fn fit_source(
     defaults: &PlatformConfig,
     miss_tolerance: f64,
 ) -> (RunResult, u32) {
-    let (mut r, fleet) = search(make, cfg, miss_tolerance);
+    let (r, fleet, _stats) = fit_source_stats(make, cfg, defaults, miss_tolerance);
+    (r, fleet)
+}
+
+/// [`fit_source`] that also surfaces the search's pass accounting (the
+/// `spork bench-sim --fit` axis).
+pub fn fit_source_stats(
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32, FitStats) {
+    let (mut r, fleet, stats) = search(make, cfg, miss_tolerance);
+    r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
+    (r, fleet, stats)
+}
+
+/// [`fit`] against a cached [`WorkloadProfile`]: the oracle derives from
+/// the profile's bins (no arrival streaming) and every pass replays the
+/// shared materialized trace. Bit-identical to [`fit`] on the profile's
+/// trace.
+pub fn fit_profile(
+    profile: &WorkloadProfile,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32) {
+    let oracle = Oracle::from_profile(profile, cfg, super::breakeven::Objective::energy());
+    let (mut r, fleet, _stats) = search_with_oracle(
+        &oracle,
+        &|| Box::new(profile.source()),
+        cfg,
+        miss_tolerance,
+    );
     r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
     (r, fleet)
 }

@@ -10,6 +10,7 @@
 pub mod breakeven;
 pub mod cpu_dynamic;
 pub mod dispatch;
+pub mod fit;
 pub mod fpga_dynamic;
 pub mod fpga_static;
 pub mod mark;
@@ -17,7 +18,8 @@ pub mod oracle;
 pub mod spork;
 
 pub use breakeven::Objective;
-pub use oracle::Oracle;
+pub use fit::{FitPass, FitStats, FIT_HARD_CEILING};
+pub use oracle::{Oracle, WorkloadProfile};
 
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
 use crate::policy::Policy;
@@ -53,16 +55,29 @@ pub fn build_source(
     make: &MakeSource<'_>,
 ) -> Box<dyn Policy> {
     match kind {
-        SchedulerKind::CpuDynamic => Box::new(cpu_dynamic::CpuDynamic::new()),
         SchedulerKind::FpgaStatic => {
             Box::new(fpga_static::fitted_source(make, cfg, FIT_MISS_TOLERANCE))
         }
         SchedulerKind::FpgaDynamic => {
             Box::new(fpga_dynamic::fitted_source(make, cfg, FIT_MISS_TOLERANCE))
         }
+        _ => build_unfitted(kind, cfg, &|obj| Oracle::from_source(&mut *make(), cfg, obj)),
+    }
+}
+
+/// The single copy of the non-fitted kind → (objective, constructor)
+/// mapping, shared by the streaming ([`build_source`]) and
+/// profile-cached ([`run_scheduler_profile`]) paths — only the oracle
+/// *provider* differs between them, so the two paths cannot drift.
+fn build_unfitted(
+    kind: &SchedulerKind,
+    cfg: &SimConfig,
+    oracle_of: &dyn Fn(Objective) -> Oracle,
+) -> Box<dyn Policy> {
+    match kind {
+        SchedulerKind::CpuDynamic => Box::new(cpu_dynamic::CpuDynamic::new()),
         SchedulerKind::MarkIdeal => {
-            let oracle = Oracle::from_source(&mut *make(), cfg, Objective::cost());
-            Box::new(mark::MarkIdeal::new(cfg, oracle))
+            Box::new(mark::MarkIdeal::new(cfg, oracle_of(Objective::cost())))
         }
         SchedulerKind::Spork {
             w_energy,
@@ -74,11 +89,13 @@ pub fn build_source(
                 w_cost: *w_cost,
             };
             if *ideal {
-                let oracle = Oracle::from_source(&mut *make(), cfg, obj);
-                Box::new(spork::Spork::ideal(cfg, obj, oracle))
+                Box::new(spork::Spork::ideal(cfg, obj, oracle_of(obj)))
             } else {
                 Box::new(spork::Spork::new(cfg, obj))
             }
+        }
+        SchedulerKind::FpgaStatic | SchedulerKind::FpgaDynamic => {
+            unreachable!("fitted kinds are built by their §5.1 fitting searches")
         }
     }
 }
@@ -100,7 +117,7 @@ pub fn run_scheduler(
 /// [`run_scheduler`] over a re-creatable source stream: every pass
 /// (oracle construction, fitting iterations, the final run) streams the
 /// workload, so memory is bounded by pool size + pending events — the
-/// path the sweep engine and the million-request bench replay through.
+/// path the million-request bench replays through.
 pub fn run_scheduler_source(
     kind: &SchedulerKind,
     cfg: &SimConfig,
@@ -117,6 +134,35 @@ pub fn run_scheduler_source(
         _ => {
             let mut policy = build_source(kind, cfg, make);
             sim::run_source(make(), cfg.clone(), defaults, policy.as_mut())
+        }
+    }
+}
+
+/// [`run_scheduler`] against a cached [`WorkloadProfile`] — the sweep
+/// engine's path. Bit-identical to [`run_scheduler`] on the profile's
+/// trace (pinned by `rust/tests/fit_parity.rs`): the trace is the same
+/// materialized arrivals, and every oracle derives from the profile's
+/// cached bins through the same breakeven mapping `Oracle::from_source`
+/// applies. What changes is only the cost: one workload shared by N
+/// scheduler kinds pays synthesis and O(arrivals) binning once, not N
+/// times.
+pub fn run_scheduler_profile(
+    kind: &SchedulerKind,
+    profile: &WorkloadProfile,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+) -> RunResult {
+    match kind {
+        SchedulerKind::FpgaStatic => {
+            fpga_static::fit_profile(profile, cfg, defaults, FIT_MISS_TOLERANCE).0
+        }
+        SchedulerKind::FpgaDynamic => {
+            fpga_dynamic::fit_profile(profile, cfg, defaults, FIT_MISS_TOLERANCE).0
+        }
+        _ => {
+            let mut policy =
+                build_unfitted(kind, cfg, &|obj| Oracle::from_profile(profile, cfg, obj));
+            sim::run_source(Box::new(profile.source()), cfg.clone(), defaults, policy.as_mut())
         }
     }
 }
@@ -158,6 +204,41 @@ mod tests {
             );
             assert_eq!(a.metrics.total_energy(), b.metrics.total_energy());
             assert_eq!(a.metrics.total_cost(), b.metrics.total_cost());
+        }
+    }
+
+    #[test]
+    fn profile_path_matches_trace_path_for_all_kinds() {
+        // run_scheduler_profile must be bit-identical to run_scheduler on
+        // the profile's trace for the full Table-8 roster — the guarantee
+        // that lets the sweep engine share one profile per workload.
+        let mut rng = Rng::new(8);
+        let trace = synthetic_app("t", &mut rng, 0.65, 120.0, 80.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        let profile = WorkloadProfile::from_trace(trace.clone(), cfg.interval);
+        for kind in SchedulerKind::table8_roster() {
+            let a = run_scheduler(&kind, &trace, &cfg, &defaults);
+            let b = run_scheduler_profile(&kind, &profile, &cfg, &defaults);
+            assert_eq!(
+                a.metrics.deadline_misses, b.metrics.deadline_misses,
+                "{} misses diverged",
+                kind.name()
+            );
+            assert_eq!(a.metrics.requests, b.metrics.requests, "{}", kind.name());
+            assert_eq!(
+                a.metrics.total_energy(),
+                b.metrics.total_energy(),
+                "{} energy diverged",
+                kind.name()
+            );
+            assert_eq!(
+                a.metrics.total_cost(),
+                b.metrics.total_cost(),
+                "{} cost diverged",
+                kind.name()
+            );
+            assert_eq!(a.metrics.fpga_spinups, b.metrics.fpga_spinups, "{}", kind.name());
         }
     }
 

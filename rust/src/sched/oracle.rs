@@ -1,11 +1,14 @@
 //! Perfect-workload-knowledge helpers for the idealized baselines:
 //! per-interval needed-FPGA counts computed directly from the trace
 //! (FPGA-static's peak provisioning, MArk-ideal's and Spork-*-ideal's
-//! predictions, and FPGA-dynamic's headroom sizing).
+//! predictions, and FPGA-dynamic's headroom sizing), plus the shared
+//! [`WorkloadProfile`] that lets every oracle consumer of one workload
+//! pay the O(arrivals) binning pass exactly once.
 
 use super::breakeven::{breakeven_fpga_seconds, needed_fpgas, Objective};
 use crate::config::SimConfig;
-use crate::trace::{AppTrace, ArrivalSource};
+use crate::trace::{AppTrace, ArrivalSource, TraceSource};
+use std::sync::Arc;
 
 #[derive(Clone, Debug)]
 pub struct Oracle {
@@ -13,6 +16,13 @@ pub struct Oracle {
     pub needed: Vec<u32>,
     /// Interval length used.
     pub interval: f64,
+    /// Exact arrival count of the workload the oracle was built from —
+    /// the denominator of the fitting searches' miss-fraction feasibility
+    /// predicate. The oracle pass streams the whole workload anyway, so
+    /// counting here is what lets every subsequent search pass arm the
+    /// early-abort budget even on generator sources (whose `len_hint` is
+    /// unknowable before a full pass).
+    pub total_requests: u64,
 }
 
 impl Oracle {
@@ -27,18 +37,47 @@ impl Oracle {
     /// binning rule and accumulate in arrival order.
     pub fn from_source(src: &mut dyn ArrivalSource, cfg: &SimConfig, obj: Objective) -> Self {
         let interval = cfg.interval;
-        let speedup = cfg.platform.fpga.speedup;
-        let tb = breakeven_fpga_seconds(&cfg.platform, interval, obj);
         let n = crate::trace::interval_bins(src.duration(), interval);
         let mut work = vec![0.0f64; n];
+        let mut total_requests = 0u64;
         while let Some(a) = src.next_arrival() {
             work[crate::trace::interval_index(a.time, interval, n)] += a.size;
+            total_requests += 1;
         }
+        Self::from_bins(&work, total_requests, cfg, obj)
+    }
+
+    /// Derive an objective's needed-counts from a cached
+    /// [`WorkloadProfile`] — O(intervals), no arrival streaming. Exactly
+    /// equal to [`Oracle::from_source`] over the profile's trace: the
+    /// profile's bins were accumulated by the same binning rule in the
+    /// same arrival order, and the breakeven mapping below is the same
+    /// pure function of `(cfg, obj)`.
+    pub fn from_profile(profile: &WorkloadProfile, cfg: &SimConfig, obj: Objective) -> Self {
+        assert!(
+            profile.interval == cfg.interval,
+            "profile binned at interval {} but cfg.interval is {}",
+            profile.interval,
+            cfg.interval
+        );
+        Self::from_bins(&profile.work_bins, profile.total_requests, cfg, obj)
+    }
+
+    /// The shared bins → needed-counts mapping (breakeven rounding under
+    /// `cfg`'s platform and `obj`).
+    fn from_bins(work: &[f64], total_requests: u64, cfg: &SimConfig, obj: Objective) -> Self {
+        let interval = cfg.interval;
+        let speedup = cfg.platform.fpga.speedup;
+        let tb = breakeven_fpga_seconds(&cfg.platform, interval, obj);
         let needed = work
             .iter()
             .map(|w| needed_fpgas(w / speedup, interval, tb))
             .collect();
-        Self { needed, interval }
+        Self {
+            needed,
+            interval,
+            total_requests,
+        }
     }
 
     /// Needed count for the interval containing/indexed `t` (clamped).
@@ -63,6 +102,57 @@ impl Oracle {
             .map(|w| w[0].abs_diff(w[1]))
             .max()
             .unwrap_or(0)
+    }
+}
+
+/// One synthesized workload, bound once and shared by every consumer: the
+/// materialized trace (`Arc`, cheap to share across sweep units and
+/// threads), its per-interval work bins at a fixed scheduling interval,
+/// and its exact arrival count.
+///
+/// A profile is a pure function of the workload identity — for sweep
+/// cells, of `(seed_base, seed, workload-spec, interval)` — so caching
+/// one per distinct key and fanning it out to every scheduler kind in a
+/// grid preserves bit-determinism while paying trace synthesis once
+/// instead of once per kind, and the O(arrivals) oracle binning once
+/// instead of once per oracle-assisted kind. Platform parameters are
+/// deliberately *not* part of a profile: bins are pre-breakeven demand,
+/// so sensitivity sweeps that vary speedup or power reuse the same
+/// profile and re-derive needed-counts per config via
+/// [`Oracle::from_profile`].
+#[derive(Clone, Debug)]
+pub struct WorkloadProfile {
+    pub trace: Arc<AppTrace>,
+    /// Scheduling interval the bins were accumulated at.
+    pub interval: f64,
+    /// Per-interval dispatched work in CPU-seconds
+    /// (`AppTrace::work_per_interval`).
+    pub work_bins: Vec<f64>,
+    /// Exact arrival count (`trace.len()`).
+    pub total_requests: u64,
+}
+
+impl WorkloadProfile {
+    pub fn new(trace: Arc<AppTrace>, interval: f64) -> Self {
+        let work_bins = trace.work_per_interval(interval);
+        Self {
+            total_requests: trace.len() as u64,
+            interval,
+            work_bins,
+            trace,
+        }
+    }
+
+    /// Profile a trace by value.
+    pub fn from_trace(trace: AppTrace, interval: f64) -> Self {
+        Self::new(Arc::new(trace), interval)
+    }
+
+    /// A fresh streaming view of the workload, positioned at t = 0 (what
+    /// profile-aware run paths feed the sim driver; its `len_hint` is
+    /// exact, so bounded passes arm the early abort for free).
+    pub fn source(&self) -> TraceSource<'_> {
+        self.trace.source()
     }
 }
 
@@ -94,6 +184,7 @@ mod tests {
         assert_eq!(o.needed, vec![2, 0, 4]);
         assert_eq!(o.peak(), 4);
         assert_eq!(o.max_consecutive_delta(), 4);
+        assert_eq!(o.total_requests, 2);
     }
 
     #[test]
@@ -115,5 +206,30 @@ mod tests {
         let o = Oracle::from_trace(&trace, &cfg, Objective::energy());
         assert_eq!(o.needed_at(0), 1);
         assert_eq!(o.needed_at(99), 1); // clamped
+    }
+
+    #[test]
+    fn profile_oracle_matches_streaming_oracle() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let trace = crate::trace::synthetic_app("p", &mut rng, 0.65, 120.0, 80.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        let profile = WorkloadProfile::from_trace(trace.clone(), cfg.interval);
+        for obj in [Objective::energy(), Objective::cost()] {
+            let streamed = Oracle::from_trace(&trace, &cfg, obj);
+            let cached = Oracle::from_profile(&profile, &cfg, obj);
+            assert_eq!(streamed.needed, cached.needed);
+            assert_eq!(streamed.interval, cached.interval);
+            assert_eq!(streamed.total_requests, cached.total_requests);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cfg.interval")]
+    fn profile_interval_mismatch_is_loud() {
+        let cfg = SimConfig::paper_default();
+        let trace = trace_with_interval_work(&[20.0], 10.0);
+        let profile = WorkloadProfile::from_trace(trace, cfg.interval * 2.0);
+        Oracle::from_profile(&profile, &cfg, Objective::energy());
     }
 }

@@ -311,6 +311,7 @@ mod tests {
         let o = Oracle {
             needed: vec![0],
             interval: 10.0,
+            total_requests: 0,
         };
         assert_eq!(
             Spork::ideal(&cfg, Objective::energy(), o).name(),

@@ -9,7 +9,7 @@
 //! what makes served behavior equal simulated behavior by construction.
 
 use super::event::{Event, EventQueue};
-use super::metrics::{IdealBaseline, Metrics, RunResult};
+use super::metrics::{feasible_miss_budget, IdealBaseline, Metrics, RunResult};
 use super::pool::Pool;
 use super::worker::{Worker, WorkerId, WorkerState};
 use crate::config::{PlatformConfig, SimConfig, WorkerKind};
@@ -356,6 +356,16 @@ pub struct Driver<'a> {
     tick_index: usize,
     deadline_factor: f64,
     actions: Vec<Action>,
+    /// The source's exact arrival count, captured from `len_hint()`
+    /// before the first pull (None = unknown). Validated at exhaustion.
+    expected_arrivals: Option<u64>,
+    /// Arrivals pulled from the source so far.
+    pulled_arrivals: u64,
+    /// Early-abort threshold: stop the run once `deadline_misses`
+    /// exceeds this (see [`Driver::abort_on_excess_misses`]).
+    miss_budget: Option<u64>,
+    /// Whether the run was stopped by the miss budget.
+    aborted: bool,
 }
 
 impl<'a> Driver<'a> {
@@ -381,6 +391,9 @@ impl<'a> Driver<'a> {
         let deadline_factor = sim.cfg.deadline_factor;
         let interval = policy.interval();
         let next_tick = if interval.is_finite() { interval } else { f64::INFINITY };
+        // Capture the exact-count hint before the first pull consumes an
+        // arrival the hint would no longer cover.
+        let expected_arrivals = source.len_hint();
         let pending = source.next_arrival();
         let mut driver = Self {
             sim,
@@ -393,6 +406,10 @@ impl<'a> Driver<'a> {
             tick_index: 1,
             deadline_factor,
             actions: Vec::new(),
+            expected_arrivals,
+            pulled_arrivals: 0,
+            miss_budget: None,
+            aborted: false,
         };
         driver.admit(pending);
         driver
@@ -415,8 +432,44 @@ impl<'a> Driver<'a> {
                 a.time
             );
             self.last_arrival = a.time;
+            self.pulled_arrivals += 1;
+        } else if let Some(n) = self.expected_arrivals {
+            // len_hint is a contract, not an estimate: a miscount would
+            // invalidate any budget derived from it (early abort), so
+            // fail loudly at the first exhaustion.
+            assert!(
+                self.pulled_arrivals == n,
+                "source '{}' declared len_hint {} but yielded {} arrivals",
+                self.source.name(),
+                n,
+                self.pulled_arrivals
+            );
         }
         self.pending = a;
+    }
+
+    /// Arm the early-abort stop condition: the run halts (and
+    /// [`Driver::aborted`] reads true) the moment `deadline_misses`
+    /// exceeds the largest count still compatible with
+    /// `miss_fraction() <= miss_tolerance` at the end of a full pass.
+    /// Misses are monotone over a run, so an aborted run is *provably*
+    /// infeasible — and a feasible run never trips the budget, so arming
+    /// it cannot change a feasible run's result. Requires the source's
+    /// exact arrival count ([`ArrivalSource::len_hint`]); returns whether
+    /// the condition armed (false = unknown length, run is unbounded).
+    pub fn abort_on_excess_misses(&mut self, miss_tolerance: f64) -> bool {
+        match self.expected_arrivals {
+            Some(total) => {
+                self.miss_budget = Some(feasible_miss_budget(total, miss_tolerance));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Whether the run was stopped early by the miss budget.
+    pub fn aborted(&self) -> bool {
+        self.aborted
     }
 
     pub fn now(&self) -> f64 {
@@ -458,8 +511,17 @@ impl<'a> Driver<'a> {
     }
 
     /// Process the next occurrence (tick, event, or arrival). Returns
-    /// `false` when the run is complete.
+    /// `false` when the run is complete — or, with
+    /// [`Driver::abort_on_excess_misses`] armed, the moment the miss
+    /// budget is exceeded (the run is then provably infeasible and the
+    /// rest of the trace carries no information the caller needs).
     pub fn step(&mut self, sink: &mut dyn FnMut(&Effect)) -> bool {
+        if let Some(budget) = self.miss_budget {
+            if self.sim.metrics.deadline_misses > budget {
+                self.aborted = true;
+                return false;
+            }
+        }
         let (ta, te, tt) = self.frontier();
         let t = ta.min(te).min(tt);
         if !t.is_finite() {
@@ -504,7 +566,13 @@ impl<'a> Driver<'a> {
     /// baseline (the paper always normalizes against *default* Table 6
     /// parameters).
     pub fn finish(self, defaults: &PlatformConfig) -> RunResult {
-        debug_assert!(self.sim.pool.is_empty(), "pool not drained at end of run");
+        // An aborted run stops mid-flight with live workers; its partial
+        // metrics are only ever used to report how much work the abort
+        // saved, never as a run's result.
+        debug_assert!(
+            self.aborted || self.sim.pool.is_empty(),
+            "pool not drained at end of run"
+        );
         RunResult {
             scheduler: self.policy.name(),
             ideal: IdealBaseline::for_work(self.sim.metrics.total_work, defaults),
@@ -738,6 +806,44 @@ pub fn run_source(
     policy: &mut dyn Policy,
 ) -> RunResult {
     run_source_with_sink(source, cfg, defaults, policy, &mut |_| {})
+}
+
+/// A run that may have stopped at its miss budget (see
+/// [`run_source_bounded`]). When `aborted` is true the metrics are the
+/// partial tally up to the abort point — enough to report how much of
+/// the trace was saved (`metrics.requests` arrivals were processed),
+/// never a substitute for a full run's result.
+pub struct BoundedRun {
+    pub result: RunResult,
+    pub aborted: bool,
+}
+
+/// Run `policy` over a streaming source with the early-abort stop
+/// condition armed (when the source's length is known): the pass halts
+/// the instant its deadline misses provably exceed `miss_tolerance` of
+/// the full run. `aborted == true` ⟺ the full pass would have been
+/// infeasible; `aborted == false` yields a result bit-identical to
+/// [`run_source`] (a feasible run never reaches its budget, and the
+/// budget check is pure observation). The fitting searches run every
+/// candidate through this, so infeasible probes touch only a prefix of
+/// the trace.
+pub fn run_source_bounded<'a>(
+    source: Box<dyn ArrivalSource + 'a>,
+    cfg: SimConfig,
+    defaults: &PlatformConfig,
+    policy: &'a mut dyn Policy,
+    miss_tolerance: f64,
+) -> BoundedRun {
+    let mut driver = Driver::from_source(source, cfg, policy);
+    driver.abort_on_excess_misses(miss_tolerance);
+    let sink = &mut |_: &Effect| {};
+    driver.start(sink);
+    while driver.step(sink) {}
+    let aborted = driver.aborted();
+    BoundedRun {
+        result: driver.finish(defaults),
+        aborted,
+    }
 }
 
 /// Like [`run_source`], reporting every applied [`Effect`] to `sink`.
@@ -995,6 +1101,83 @@ mod tests {
         // A cold alloc still schedules its SpinUpDone.
         sim.alloc(WorkerKind::Fpga).unwrap();
         assert_eq!(sim.events.len(), 2);
+    }
+
+    #[test]
+    fn bounded_run_aborts_iff_infeasible() {
+        // 20 simultaneous arrivals on one FPGA behind a 10s spin-up: every
+        // request misses. Any tolerance < 1 must abort; tolerance 1 must
+        // run to completion and match the unbounded run bit-for-bit.
+        let arrivals: Vec<Arrival> = (0..20)
+            .map(|_| Arrival { time: 0.0, size: 0.010 })
+            .collect();
+        let trace = AppTrace::new("burst", arrivals, 1.0);
+        let cfg = SimConfig::paper_default();
+
+        let full = run(&trace, cfg.clone(), &defaults(), &mut OneFpga);
+        assert_eq!(full.metrics.deadline_misses, 20);
+
+        let b = run_source_bounded(
+            Box::new(trace.source()),
+            cfg.clone(),
+            &defaults(),
+            &mut OneFpga,
+            0.25,
+        );
+        assert!(b.aborted, "an infeasible pass must abort");
+        // budget = 5 misses; the abort fires on the first step after the
+        // 6th — far short of the 20 completions a full pass processes.
+        assert!(b.result.metrics.deadline_misses <= 7);
+
+        let f = run_source_bounded(
+            Box::new(trace.source()),
+            cfg,
+            &defaults(),
+            &mut OneFpga,
+            1.0,
+        );
+        assert!(!f.aborted, "a feasible pass never reaches its budget");
+        assert_eq!(f.result.metrics.deadline_misses, full.metrics.deadline_misses);
+        assert_eq!(f.result.metrics.requests, full.metrics.requests);
+        assert_eq!(f.result.metrics.total_energy(), full.metrics.total_energy());
+        assert_eq!(f.result.metrics.total_cost(), full.metrics.total_cost());
+    }
+
+    #[test]
+    fn bounded_run_without_len_hint_runs_full() {
+        // A generator source (no len_hint) cannot arm the abort: the run
+        // must complete and match the materialized pass.
+        use crate::trace::synthetic_source;
+        use crate::util::rng::Rng;
+        let src = synthetic_source("g", Rng::new(3), 0.6, 60.0, 50.0, 0.010, 60.0);
+        assert_eq!(crate::trace::ArrivalSource::len_hint(&src), None);
+        let b = run_source_bounded(
+            Box::new(src),
+            SimConfig::paper_default(),
+            &defaults(),
+            &mut OnePerRequest,
+            0.0,
+        );
+        assert!(!b.aborted);
+        assert!(b.result.metrics.requests > 0);
+    }
+
+    #[test]
+    fn driver_validates_len_hint_exactness() {
+        // A source that lies about its count must fail loudly at
+        // exhaustion, not silently skew the abort budget.
+        use crate::trace::KnownLen;
+        let trace = mini_trace(3, 1.0, 0.010);
+        let lying = KnownLen::new(Box::new(trace.clone().into_source()), 5);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_source(
+                Box::new(lying),
+                SimConfig::paper_default(),
+                &defaults(),
+                &mut OnePerRequest,
+            )
+        }));
+        assert!(result.is_err(), "miscounted len_hint must panic");
     }
 
     #[test]

@@ -132,22 +132,32 @@ pub struct RunResult {
 
 impl RunResult {
     /// Paper's "Energy Efficiency": ideal energy / measured energy (≤ 1 in
-    /// practice; reported as a percentage).
+    /// practice; reported as a percentage). A degenerate run (no energy
+    /// recorded, e.g. an empty trace) reads as 0.0, never NaN — ratio
+    /// metrics feed ordered comparisons (the fitting searches' feasibility
+    /// predicate among them) and a NaN would make every comparison
+    /// silently false.
     pub fn energy_efficiency(&self) -> f64 {
         if self.metrics.total_energy() <= 0.0 {
-            return f64::NAN;
+            return 0.0;
         }
         self.ideal.energy / self.metrics.total_energy()
     }
 
     /// Paper's "Relative Cost": measured cost / ideal cost (≥ 1 typically).
+    /// 0.0 (not NaN) when the ideal baseline is empty — see
+    /// [`RunResult::energy_efficiency`].
     pub fn relative_cost(&self) -> f64 {
         if self.ideal.cost <= 0.0 {
-            return f64::NAN;
+            return 0.0;
         }
         self.metrics.total_cost() / self.ideal.cost
     }
 
+    /// Fraction of requests that missed their deadline; 0.0 on a
+    /// zero-request run (an empty workload is trivially feasible — a NaN
+    /// here would poison the `miss_fraction() <= tolerance` feasibility
+    /// comparison and its early-abort counterpart).
     pub fn miss_fraction(&self) -> f64 {
         if self.metrics.requests == 0 {
             0.0
@@ -155,6 +165,32 @@ impl RunResult {
             self.metrics.deadline_misses as f64 / self.metrics.requests as f64
         }
     }
+}
+
+/// Largest miss count `m` such that `m / total <= tolerance` under the
+/// *exact* f64 division [`RunResult::miss_fraction`] performs — the
+/// integer inverse of the feasibility predicate. Deadline misses are
+/// monotone over a run, so the instant a run's misses exceed this budget
+/// its final miss fraction provably exceeds `tolerance`: aborting there
+/// (see `run_source_bounded`) decides infeasibility without streaming
+/// the rest of the trace. Computed by candidate-then-fixup rather than
+/// plain `floor(tolerance * total)` so rounding can never disagree with
+/// the final `miss_fraction() <= tolerance` comparison.
+pub fn feasible_miss_budget(total: u64, tolerance: f64) -> u64 {
+    if total == 0 || !(tolerance >= 0.0) {
+        // Zero-request runs never miss; a NaN tolerance makes every
+        // feasibility comparison false, so any miss must abort.
+        return 0;
+    }
+    let total_f = total as f64;
+    let mut m = ((tolerance * total_f).floor() as u64).min(total);
+    while m > 0 && m as f64 / total_f > tolerance {
+        m -= 1;
+    }
+    while m < total && (m + 1) as f64 / total_f <= tolerance {
+        m += 1;
+    }
+    m
 }
 
 #[cfg(test)]
@@ -197,6 +233,46 @@ mod tests {
         assert!((r.energy_efficiency() - 0.5).abs() < 1e-9);
         assert!((r.relative_cost() - 0.0273 / (50.0 * 0.982 / 3600.0)).abs() < 1e-6);
         assert!((r.miss_fraction() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratio_metrics_guard_degenerate_runs() {
+        // A zero-request run must read as all-zeros, never NaN: the
+        // fitting search's feasibility predicate (and its early-abort
+        // budget) compare these values, and NaN comparisons are silently
+        // false.
+        let r = RunResult {
+            scheduler: "empty".into(),
+            metrics: Metrics::default(),
+            ideal: IdealBaseline::for_work(0.0, &PlatformConfig::paper_default()),
+        };
+        assert_eq!(r.miss_fraction(), 0.0);
+        assert_eq!(r.energy_efficiency(), 0.0);
+        assert_eq!(r.relative_cost(), 0.0);
+    }
+
+    #[test]
+    fn miss_budget_inverts_miss_fraction_exactly() {
+        // For every (total, tolerance) probed: m <= budget iff m/total <=
+        // tolerance — the budget is the exact integer inverse of the
+        // feasibility comparison, never off by a rounding ulp.
+        for &total in &[1u64, 3, 7, 100, 1000, 999_983] {
+            for &tol in &[0.0, 0.005, 0.01, 1.0 / 3.0, 0.5, 1.0, 2.0] {
+                let b = feasible_miss_budget(total, tol);
+                assert!(b <= total);
+                if b > 0 {
+                    assert!((b as f64) / (total as f64) <= tol, "budget itself infeasible");
+                }
+                if b < total {
+                    assert!(
+                        ((b + 1) as f64) / (total as f64) > tol,
+                        "budget not maximal: total={total} tol={tol} b={b}"
+                    );
+                }
+            }
+        }
+        assert_eq!(feasible_miss_budget(0, 0.5), 0);
+        assert_eq!(feasible_miss_budget(100, f64::NAN), 0);
     }
 
     #[test]

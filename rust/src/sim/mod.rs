@@ -18,8 +18,11 @@ pub mod metrics;
 pub mod pool;
 pub mod worker;
 
-pub use engine::{run, run_source, run_source_with_sink, run_with_sink, Driver, SimState};
-pub use metrics::{EnergyBreakdown, IdealBaseline, Metrics, RunResult};
+pub use engine::{
+    run, run_source, run_source_bounded, run_source_with_sink, run_with_sink, BoundedRun,
+    Driver, SimState,
+};
+pub use metrics::{feasible_miss_budget, EnergyBreakdown, IdealBaseline, Metrics, RunResult};
 pub use worker::{Worker, WorkerId, WorkerState};
 
 // The scheduling interface lives in the transport-agnostic `policy`

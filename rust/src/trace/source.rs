@@ -60,6 +60,21 @@ pub trait ArrivalSource {
 
     /// Stream name (app name for per-app sources).
     fn name(&self) -> &str;
+
+    /// Exact number of arrivals this source will still yield, or `None`
+    /// when the count cannot be known up front. This is a *hint with an
+    /// exactness contract*, not an estimate: when `Some(n)` is returned,
+    /// exactly `n` more `next_arrival` calls succeed (the sim driver
+    /// asserts this at exhaustion). Materialized sources know their
+    /// count; generator sources ([`PoissonSource`]) return `None` because
+    /// the count is a function of RNG draws not yet made — callers that
+    /// replay a deterministic stream (the §5.1 fitting searches) learn
+    /// the exact count from a prior full pass and attach it via
+    /// [`KnownLen`]. The early-abort feasibility predicate
+    /// (`sim::run_source_bounded`) arms only when this is `Some`.
+    fn len_hint(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// Borrowing source over an already-materialized [`super::AppTrace`] —
@@ -88,6 +103,10 @@ impl ArrivalSource for TraceSource<'_> {
 
     fn name(&self) -> &str {
         &self.trace.name
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        Some((self.trace.arrivals.len() - self.pos) as u64)
     }
 }
 
@@ -121,6 +140,10 @@ impl ArrivalSource for VecSource {
 
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.arrivals.len() as u64)
     }
 }
 
@@ -318,6 +341,76 @@ impl ArrivalSource for MergeSource<'_> {
 
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        // Exact only if every child is exact: each in-flight head counts
+        // one arrival already pulled from its child but not yet yielded.
+        let mut total = self.heads.iter().flatten().count() as u64;
+        for src in &self.sources {
+            total += src.len_hint()?;
+        }
+        Some(total)
+    }
+}
+
+/// Attaches an externally-known exact arrival count to a source whose own
+/// [`ArrivalSource::len_hint`] is `None` — the adapter that lets the
+/// §5.1 fitting searches arm the early-abort predicate on *generator*
+/// streams. The count must come from a prior full pass over the *same*
+/// deterministic stream (the oracle pass counts arrivals as it bins
+/// work); the wrapper enforces exactness loudly: yielding past the
+/// declared count, or exhausting short of it, is a panic, because a
+/// miscount would invalidate the abort proof (`misses / total` would no
+/// longer be the final run's miss fraction).
+pub struct KnownLen<'a> {
+    inner: Box<dyn ArrivalSource + 'a>,
+    remaining: u64,
+}
+
+impl<'a> KnownLen<'a> {
+    pub fn new(inner: Box<dyn ArrivalSource + 'a>, total: u64) -> Self {
+        Self {
+            inner,
+            remaining: total,
+        }
+    }
+}
+
+impl ArrivalSource for KnownLen<'_> {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        match self.inner.next_arrival() {
+            Some(a) => {
+                assert!(
+                    self.remaining > 0,
+                    "KnownLen('{}'): source yielded more arrivals than its declared count",
+                    self.inner.name()
+                );
+                self.remaining -= 1;
+                Some(a)
+            }
+            None => {
+                assert!(
+                    self.remaining == 0,
+                    "KnownLen('{}'): source exhausted {} arrivals short of its declared count",
+                    self.inner.name(),
+                    self.remaining
+                );
+                None
+            }
+        }
+    }
+
+    fn duration(&self) -> f64 {
+        self.inner.duration()
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.remaining)
     }
 }
 
@@ -582,5 +675,66 @@ mod tests {
         let arr = vec![Arrival { time: 1.0, size: 0.5 }];
         let mut s = VecSource::new("v", arr.clone(), 2.0);
         assert_eq!(collect(&mut s), arr);
+    }
+
+    #[test]
+    fn len_hints_are_exact_where_known() {
+        let t = AppTrace::new(
+            "x",
+            vec![
+                Arrival { time: 0.5, size: 0.01 },
+                Arrival { time: 1.5, size: 0.02 },
+                Arrival { time: 2.5, size: 0.03 },
+            ],
+            4.0,
+        );
+        let mut s = TraceSource::new(&t);
+        assert_eq!(s.len_hint(), Some(3));
+        s.next_arrival();
+        assert_eq!(s.len_hint(), Some(2));
+
+        let mut v = VecSource::new("v", t.arrivals.clone(), 4.0);
+        assert_eq!(v.len_hint(), Some(3));
+        v.next_arrival();
+        assert_eq!(v.len_hint(), Some(2));
+
+        // Merge of exact sources is exact (heads in flight included).
+        let m = MergeSource::new(
+            "mm",
+            vec![Box::new(TraceSource::new(&t)), Box::new(TraceSource::new(&t))],
+        );
+        assert_eq!(m.len_hint(), Some(6));
+
+        // Generator sources cannot know their count up front.
+        let p = synthetic_source("s", Rng::new(4), 0.65, 90.0, 40.0, 0.010, 60.0);
+        assert_eq!(p.len_hint(), None);
+    }
+
+    #[test]
+    fn known_len_attaches_exact_count() {
+        let expect = super::super::synthetic_app_dt(
+            "s",
+            &mut Rng::new(4),
+            0.65,
+            90.0,
+            40.0,
+            0.010,
+            60.0,
+        );
+        let src = synthetic_source("s", Rng::new(4), 0.65, 90.0, 40.0, 0.010, 60.0);
+        let mut k = KnownLen::new(Box::new(src), expect.len() as u64);
+        assert_eq!(k.len_hint(), Some(expect.len() as u64));
+        assert_eq!(collect(&mut k), expect.arrivals);
+        assert_eq!(k.len_hint(), Some(0));
+        assert_eq!(k.next_arrival(), None); // exhaustion matches the count
+    }
+
+    #[test]
+    #[should_panic(expected = "short of its declared count")]
+    fn known_len_panics_on_short_stream() {
+        let arr = vec![Arrival { time: 1.0, size: 0.5 }];
+        let mut k = KnownLen::new(Box::new(VecSource::new("v", arr, 2.0)), 2);
+        k.next_arrival();
+        k.next_arrival(); // inner exhausts one short of the declared 2
     }
 }

@@ -1,0 +1,277 @@
+//! Regression pins for the fitting-search rewrite and the sweep profile
+//! cache:
+//!
+//! 1. **Search parity** — the galloping-bisection fit must equal the old
+//!    linear-scan reference (same fitted fleet/headroom AND bit-identical
+//!    winning run) across randomized tie-dense workloads. Feasibility is
+//!    monotone in the candidate (pinned separately by
+//!    `more_headroom_fewer_misses`), so the least feasible candidate the
+//!    bisection finds is the first feasible one the scan found.
+//! 2. **Early-abort soundness** — a bounded pass aborts ⟺ the full pass
+//!    would have been infeasible, and an unaborted bounded pass is
+//!    bit-identical to the unbounded run.
+//! 3. **Profile-cache parity** — `SweepGrid`'s shared-workload-profile
+//!    output is bit-identical to per-cell recomputation (synthesize +
+//!    `run_scheduler` per cell) for every `--jobs` value, and the
+//!    production profile path matches the per-app path.
+
+use spork::config::{PlatformConfig, SchedulerKind, SimConfig};
+use spork::exp::{Cell, SweepCell, SweepGrid, WorkloadSpec};
+use spork::sched::{self, fpga_dynamic, fpga_static};
+use spork::sim::{self, Metrics, RunResult};
+use spork::trace::{synthetic_app, AppTrace};
+use spork::util::rng::Rng;
+
+fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
+    let (ma, mb): (&Metrics, &Metrics) = (&a.metrics, &b.metrics);
+    assert_eq!(ma.requests, mb.requests, "{what}: requests");
+    assert_eq!(ma.deadline_misses, mb.deadline_misses, "{what}: misses");
+    assert_eq!(ma.on_cpu, mb.on_cpu, "{what}: on_cpu");
+    assert_eq!(ma.on_fpga, mb.on_fpga, "{what}: on_fpga");
+    assert_eq!(ma.cpu_spinups, mb.cpu_spinups, "{what}: cpu_spinups");
+    assert_eq!(ma.fpga_spinups, mb.fpga_spinups, "{what}: fpga_spinups");
+    assert_eq!(ma.peak_cpus, mb.peak_cpus, "{what}: peak_cpus");
+    assert_eq!(ma.peak_fpgas, mb.peak_fpgas, "{what}: peak_fpgas");
+    assert_eq!(ma.total_work, mb.total_work, "{what}: total_work");
+    assert_eq!(ma.total_energy(), mb.total_energy(), "{what}: energy");
+    assert_eq!(ma.total_cost(), mb.total_cost(), "{what}: cost");
+}
+
+/// The pre-refactor linear scan for FPGA-dynamic, reimplemented from the
+/// old `for k in 0.. { headroom = k * delta }` loop (uncapped: the old
+/// cap of 8 silently returned an infeasible fit; every workload here
+/// fits well below it anyway, asserted).
+fn linear_fit_dynamic(trace: &AppTrace, cfg: &SimConfig, tol: f64) -> (RunResult, u32) {
+    let oracle = sched::Oracle::from_trace(trace, cfg, sched::Objective::energy());
+    let delta = oracle.max_consecutive_delta().max(1);
+    for k in 0..=64u32 {
+        let mut policy = fpga_dynamic::FpgaDynamic::new(cfg, k * delta);
+        let r = sim::run(trace, cfg.clone(), &cfg.platform, &mut policy);
+        if r.miss_fraction() <= tol {
+            return (r, k);
+        }
+    }
+    panic!("linear reference scan found no feasible headroom <= 64*delta");
+}
+
+/// The pre-refactor linear scan for FPGA-static (least fleet >= oracle
+/// peak, sqrt-staffing step).
+fn linear_fit_static(trace: &AppTrace, cfg: &SimConfig, tol: f64) -> (RunResult, u32) {
+    let oracle = sched::Oracle::from_trace(trace, cfg, sched::Objective::energy());
+    let peak = oracle.peak().max(1);
+    let step = ((peak as f64).sqrt().ceil() as u32).max(1);
+    for j in 0..=64u32 {
+        let fleet = peak + j * step;
+        let mut policy = fpga_static::FpgaStatic::with_fleet(fleet);
+        let r = sim::run(trace, cfg.clone(), &cfg.platform, &mut policy);
+        if r.miss_fraction() <= tol {
+            return (r, fleet);
+        }
+    }
+    panic!("linear reference scan found no feasible fleet <= peak + 64*step");
+}
+
+/// Randomized tie-dense workloads: short bursty traces where many
+/// candidates sit near the feasibility boundary.
+fn workloads() -> Vec<AppTrace> {
+    let mut out = Vec::new();
+    for (seed, b, rate, dur) in [
+        (21u64, 0.55, 120.0, 180.0),
+        (22, 0.65, 200.0, 240.0),
+        (23, 0.70, 300.0, 180.0),
+        (24, 0.60, 80.0, 300.0),
+    ] {
+        let mut rng = Rng::new(seed);
+        out.push(synthetic_app("fp", &mut rng, b, dur, rate, 0.010));
+    }
+    out
+}
+
+#[test]
+fn gallop_bisect_fit_equals_linear_scan_dynamic() {
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    for (i, trace) in workloads().iter().enumerate() {
+        for tol in [0.005, 0.02] {
+            let (lin_run, lin_k) = linear_fit_dynamic(trace, &cfg, tol);
+            let (new_run, new_k) = fpga_dynamic::fit(trace, &cfg, &defaults, tol);
+            assert_eq!(lin_k, new_k, "workload {i} tol {tol}: fitted k diverged");
+            assert_runs_identical(&lin_run, &new_run, &format!("dynamic w{i} tol {tol}"));
+        }
+    }
+}
+
+#[test]
+fn gallop_bisect_fit_equals_linear_scan_static() {
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    for (i, trace) in workloads().iter().enumerate() {
+        for tol in [0.005, 0.02] {
+            let (lin_run, lin_fleet) = linear_fit_static(trace, &cfg, tol);
+            let (new_run, new_fleet) = fpga_static::fit(trace, &cfg, &defaults, tol);
+            assert_eq!(
+                lin_fleet, new_fleet,
+                "workload {i} tol {tol}: fitted fleet diverged"
+            );
+            assert_runs_identical(&lin_run, &new_run, &format!("static w{i} tol {tol}"));
+        }
+    }
+}
+
+#[test]
+fn early_abort_is_sound_for_every_candidate() {
+    // A pass aborts ⟺ the full pass would have been infeasible — probed
+    // across candidates straddling the feasibility boundary.
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let mut rng = Rng::new(31);
+    let trace = synthetic_app("ab", &mut rng, 0.7, 180.0, 250.0, 0.010);
+    for tol in [0.0, 0.005, 0.05] {
+        for headroom in [0u32, 2, 5, 10, 40] {
+            let full = sim::run(
+                &trace,
+                cfg.clone(),
+                &defaults,
+                &mut fpga_dynamic::FpgaDynamic::new(&cfg, headroom),
+            );
+            let bounded = sim::run_source_bounded(
+                Box::new(trace.source()),
+                cfg.clone(),
+                &defaults,
+                &mut fpga_dynamic::FpgaDynamic::new(&cfg, headroom),
+                tol,
+            );
+            let infeasible = full.miss_fraction() > tol;
+            assert_eq!(
+                bounded.aborted, infeasible,
+                "headroom {headroom} tol {tol}: abort ⟺ infeasible violated \
+                 (full miss fraction {})",
+                full.miss_fraction()
+            );
+            if !bounded.aborted {
+                assert_runs_identical(
+                    &full,
+                    &bounded.result,
+                    &format!("headroom {headroom} tol {tol}"),
+                );
+            } else {
+                assert!(
+                    bounded.result.metrics.requests <= full.metrics.requests,
+                    "aborted pass processed more than the full pass"
+                );
+            }
+        }
+    }
+}
+
+/// The old per-cell path: synthesize the trace for (cell, seed) and run
+/// the scheduler on it directly — no shared profiles.
+fn per_cell_reference(cells: &[SweepCell], seeds: u64) -> Vec<Cell> {
+    let defaults = PlatformConfig::paper_default();
+    let mut merged = vec![Cell::default(); cells.len()];
+    for (c, cell) in cells.iter().enumerate() {
+        for s in 0..seeds {
+            let w = &cell.workload;
+            let trace = AppTrace::from_source(&mut spork::trace::synthetic_source(
+                "exp",
+                Rng::for_stream(cell.seed_base, s),
+                w.burstiness,
+                w.duration,
+                w.rate,
+                w.size,
+                60.0,
+            ));
+            let r = sched::run_scheduler(&cell.scheduler, &trace, &cell.cfg, &defaults);
+            merged[c].add_run(&r.metrics, &r.ideal);
+        }
+    }
+    merged.into_iter().map(Cell::finish).collect()
+}
+
+#[test]
+fn sweep_profile_cache_matches_per_cell_recomputation() {
+    // A roster heavy on profile consumers (two fitted kinds, two
+    // oracle-assisted, two single-pass) over shared workloads: the cached
+    // grid must be bit-identical to the uncached reference for every
+    // --jobs value.
+    let cfg = SimConfig::paper_default();
+    let roster = [
+        SchedulerKind::CpuDynamic,
+        SchedulerKind::FpgaStatic,
+        SchedulerKind::FpgaDynamic,
+        SchedulerKind::MarkIdeal,
+        SchedulerKind::spork_e(),
+        SchedulerKind::spork_e_ideal(),
+    ];
+    let mut cells = Vec::new();
+    for &b in &[0.55, 0.7] {
+        for kind in &roster {
+            cells.push(SweepCell {
+                scheduler: kind.clone(),
+                cfg: cfg.clone(),
+                workload: WorkloadSpec {
+                    burstiness: b,
+                    rate: 100.0,
+                    size: 0.010,
+                    duration: 150.0,
+                },
+                seed_base: 77,
+            });
+        }
+    }
+    let seeds = 2;
+    let reference = per_cell_reference(&cells, seeds);
+    for jobs in [1usize, 2, 0] {
+        let mut grid = SweepGrid::with(seeds, jobs);
+        for cell in &cells {
+            grid.push(cell.clone());
+        }
+        let got = grid.run();
+        assert_eq!(
+            got, reference,
+            "profile-cached grid diverged from per-cell recomputation at jobs={jobs}"
+        );
+    }
+}
+
+#[test]
+fn production_profile_path_matches_per_app_path() {
+    use spork::config::SizeBucket;
+    use spork::trace::production::{self, Dataset, ProductionParams};
+    let cfg = SimConfig::paper_default();
+    let params = ProductionParams {
+        dataset: Dataset::AzureFunctions,
+        bucket: SizeBucket::Short,
+        duration: 600.0,
+        scale: 0.2,
+        max_apps: Some(3),
+    };
+    let apps = production::generate(&params, &mut Rng::new(11));
+    for kind in [
+        SchedulerKind::FpgaDynamic,
+        SchedulerKind::MarkIdeal,
+        SchedulerKind::spork_e(),
+    ] {
+        let direct = spork::exp::common::run_production(&kind, &cfg, &apps);
+        let profiles = spork::exp::common::profile_apps(apps.clone(), &cfg);
+        let cached = spork::exp::common::run_production_profiles(&kind, &cfg, &profiles);
+        assert_eq!(direct, cached, "{} diverged on production apps", kind.name());
+    }
+}
+
+#[test]
+fn empty_workload_is_trivially_feasible() {
+    // Zero-request runs must fit at the first candidate with miss
+    // fraction 0.0 (not NaN) — the degenerate case the ratio-metric
+    // guards exist for.
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let trace = AppTrace::new("empty", Vec::new(), 30.0);
+    let (r, k) = fpga_dynamic::fit(&trace, &cfg, &defaults, 0.005);
+    assert_eq!(k, 0, "empty workload must fit at k=0");
+    assert_eq!(r.miss_fraction(), 0.0);
+    assert_eq!(r.metrics.requests, 0);
+    let (r2, fleet) = fpga_static::fit(&trace, &cfg, &defaults, 0.005);
+    assert_eq!(fleet, 1, "fleet is clamped to >= 1");
+    assert_eq!(r2.miss_fraction(), 0.0);
+}
