@@ -151,42 +151,87 @@ fn bench_pool_scaling() {
 }
 
 fn bench_fit_search() {
-    // The §5.1 fitting searches: gallop + bisection with early-abort
-    // infeasible passes. The interesting numbers are the pass counts and
-    // how little of the trace the aborted probes stream — `spork
-    // bench-sim --fit` writes the same accounting to
-    // BENCH_fit_passes.json for CI tracking.
-    use spork::sched::{fpga_dynamic, fpga_static};
-    println!("-- §5.1 fitting searches (gallop+bisect, early abort) --");
+    // The §5.1 fitting searches, lockstep vs serial: the lockstep engine
+    // batches candidates through shared stream traversals (≤ 2
+    // full-trace-equivalent traversals for ordinary fits), the serial
+    // engine pays one traversal per gallop/bisect probe but simulates the
+    // fewest candidates. The interesting comparison is wall time next to
+    // both cost metrics — `spork bench-sim --fit` writes the same
+    // accounting to BENCH_fit_passes.json for CI tracking.
+    use spork::sched::{fpga_dynamic, fpga_static, FitEngine};
+    println!("-- §5.1 fitting searches (lockstep vs serial engines) --");
     let cfg = SimConfig::paper_default();
     let defaults = PlatformConfig::paper_default();
     let mut rng = Rng::new(9);
     let trace = synthetic_app("fit", &mut rng, 0.65, 600.0, 400.0, 0.010);
     let report = |label: &str, s: &spork::sched::FitStats| {
         println!(
-            "{:<48} {} passes, {} aborted, {:.2} full-trace equivalents",
+            "{:<48} {} passes in {} batches, {} aborted, {:.2} stream / {:.2} \
+             simulated full-trace equivalents",
             format!("  {label} cost"),
             s.pass_count(),
+            s.batches.len(),
             s.aborted_passes(),
-            s.full_trace_equivalents()
+            s.full_trace_equivalents(),
+            s.simulated_trace_equivalents(),
         );
     };
 
-    let mut stats = None;
-    common::time_it(&format!("fpga-static fit: {} arrivals", trace.len()), 3, || {
-        stats = Some(
-            fpga_static::fit_source_stats(&|| Box::new(trace.source()), &cfg, &defaults, 0.005).2,
+    let mut fitted = Vec::new();
+    for engine in [FitEngine::Lockstep, FitEngine::Serial] {
+        let tag = match engine {
+            FitEngine::Lockstep => "lockstep",
+            FitEngine::Serial => "serial",
+        };
+        let mut stats = None;
+        common::time_it(
+            &format!("fpga-static fit ({tag}): {} arrivals", trace.len()),
+            3,
+            || {
+                let r = fpga_static::fit_source_stats_with(
+                    engine,
+                    &|| Box::new(trace.source()),
+                    &cfg,
+                    &defaults,
+                    0.005,
+                );
+                fitted.push(("static", r.1));
+                stats = Some(r.2);
+            },
         );
-    });
-    report("fpga-static fit", &stats.expect("timed iteration"));
+        report(&format!("fpga-static ({tag})"), &stats.expect("timed iteration"));
 
-    let mut stats = None;
-    common::time_it(&format!("fpga-dynamic fit: {} arrivals", trace.len()), 3, || {
-        stats = Some(
-            fpga_dynamic::fit_source_stats(&|| Box::new(trace.source()), &cfg, &defaults, 0.005).2,
+        let mut stats = None;
+        common::time_it(
+            &format!("fpga-dynamic fit ({tag}): {} arrivals", trace.len()),
+            3,
+            || {
+                let r = fpga_dynamic::fit_source_stats_with(
+                    engine,
+                    &|| Box::new(trace.source()),
+                    &cfg,
+                    &defaults,
+                    0.005,
+                );
+                fitted.push(("dynamic", r.1));
+                stats = Some(r.2);
+            },
         );
-    });
-    report("fpga-dynamic fit", &stats.expect("timed iteration"));
+        report(&format!("fpga-dynamic ({tag})"), &stats.expect("timed iteration"));
+    }
+    // The engines must agree on the fitted values (pinned properly by
+    // tests/fit_parity.rs; this is a cheap sanity tripwire in the bench).
+    for what in ["static", "dynamic"] {
+        let vals: Vec<u32> = fitted
+            .iter()
+            .filter(|(w, _)| *w == what)
+            .map(|&(_, v)| v)
+            .collect();
+        assert!(
+            vals.windows(2).all(|w| w[0] == w[1]),
+            "fit engines disagree on {what}: {vals:?}"
+        );
+    }
 }
 
 fn bench_predictor() {

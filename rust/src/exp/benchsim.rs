@@ -20,17 +20,21 @@
 //! scan is ~100× from 100 to 10k workers).
 //!
 //! A third axis (`--fit`, [`run_fit_bench`]) measures the §5.1 fitting
-//! searches: passes per search, arrivals simulated per pass (aborted vs
-//! full), and wall time, written to `BENCH_fit_passes.json`.
-//! `--assert-fit-abort F` is the matching tripwire: an aborted
-//! (provably infeasible) pass that streamed more than fraction `F` of
-//! the trace fails the run — early abort has stopped cutting infeasible
-//! passes short.
+//! searches on *both* engines — the lockstep default (candidate batches
+//! share one stream traversal) and the serial gallop+bisect — reporting
+//! batches per search, arrivals simulated per candidate (aborted vs
+//! full), and per-batch wall time to `BENCH_fit_passes.json`. Two
+//! tripwires guard it: `--assert-fit-abort F` fails the run when even
+//! the most cheaply refuted aborted candidate streamed more than
+//! fraction `F` of the trace (early abort stopped cutting infeasible
+//! passes short), and `--assert-fit-passes P` fails when a lockstep
+//! search cost more than `P` full-trace-equivalent stream traversals
+//! (the lockstep batching regressed toward one traversal per probe).
 
 use crate::cli::Args;
 use crate::config::{DispatchPolicy, PlatformConfig, SchedulerKind, SimConfig, WorkerKind};
 use crate::policy::{Action, Observation, Policy, PolicyView, Target};
-use crate::sched::{self, dispatch::Dispatcher, FitStats};
+use crate::sched::{self, dispatch::Dispatcher, FitEngine, FitStats};
 use crate::sim;
 use crate::trace::{synthetic_source, ArrivalSource};
 use crate::util::rng::Rng;
@@ -61,26 +65,46 @@ impl FitBenchReport {
             .searches
             .iter()
             .map(|s| {
-                let passes: Vec<String> = s
+                // One JSON object per stream traversal: wall time lives on
+                // the batch (the traversal is shared), per-candidate
+                // arrival counts on the passes inside it.
+                let batches: Vec<String> = s
                     .stats
-                    .passes
+                    .batches
                     .iter()
-                    .map(|p| {
+                    .map(|b| {
+                        let passes: Vec<String> = b
+                            .passes
+                            .iter()
+                            .map(|p| {
+                                format!(
+                                    "            {{\"candidate\": {}, \"arrivals\": {}, \
+                                     \"aborted\": {}, \"feasible\": {}}}",
+                                    p.candidate, p.arrivals, p.aborted, p.feasible
+                                )
+                            })
+                            .collect();
                         format!(
-                            "        {{\"candidate\": {}, \"arrivals\": {}, \
-                             \"aborted\": {}, \"feasible\": {}, \
-                             \"wall_seconds\": {:.4}}}",
-                            p.candidate, p.arrivals, p.aborted, p.feasible, p.wall_seconds
+                            "        {{\n          \"wall_seconds\": {:.4},\n          \
+                             \"stream_arrivals\": {},\n          \
+                             \"passes\": [\n{}\n          ]\n        }}",
+                            b.wall_seconds,
+                            b.stream_arrivals(),
+                            passes.join(",\n"),
                         )
                     })
                     .collect();
                 format!(
-                    "    {{\n      \"scheduler\": \"{}\",\n      \"fitted\": {},\n      \
+                    "    {{\n      \"scheduler\": \"{}\",\n      \"engine\": \"{}\",\n      \
+                     \"fitted\": {},\n      \
                      \"fitted_candidate\": {},\n      \"feasible\": {},\n      \
                      \"total_arrivals\": {},\n      \"wall_seconds\": {:.3},\n      \
                      \"passes_total\": {},\n      \"passes_aborted\": {},\n      \
-                     \"full_trace_equivalents\": {:.3},\n      \"passes\": [\n{}\n      ]\n    }}",
+                     \"full_trace_equivalents\": {:.3},\n      \
+                     \"simulated_trace_equivalents\": {:.3},\n      \
+                     \"batches\": [\n{}\n      ]\n    }}",
                     s.scheduler,
+                    s.stats.engine,
                     s.fitted,
                     s.stats.fitted_candidate,
                     s.stats.feasible,
@@ -89,7 +113,8 @@ impl FitBenchReport {
                     s.stats.pass_count(),
                     s.stats.aborted_passes(),
                     s.stats.full_trace_equivalents(),
-                    passes.join(",\n"),
+                    s.stats.simulated_trace_equivalents(),
+                    batches.join(",\n"),
                 )
             })
             .collect();
@@ -120,7 +145,10 @@ impl FitBenchReport {
     pub fn assert_abort_fraction(&self, max_fraction: f64) -> Result<(), String> {
         for s in &self.searches {
             let total = s.stats.total_arrivals.max(1);
-            let passes = &s.stats.passes;
+            // Flattened probe order; lockstep batches contribute their
+            // candidates in ascending probe order, so the tail exemption
+            // below still lands on the ceiling rerun.
+            let passes: Vec<_> = s.stats.passes().collect();
             // On ceiling failure the last pass is an intentional
             // unbounded rerun of the infeasible ceiling candidate.
             let exempt_tail = usize::from(!s.stats.feasible);
@@ -169,14 +197,51 @@ impl FitBenchReport {
         }
         Ok(())
     }
+
+    /// The lockstep-economy tripwire: every lockstep-engine search must
+    /// have cost at most `max_traversals` full-trace-equivalent stream
+    /// traversals. The bench workload fits within the first ladder wave,
+    /// so one ladder batch + one bracket batch = ≤ 2 is the expected
+    /// shape; a regression toward one traversal per probe (e.g. the tee
+    /// fan-out silently replaced by per-candidate fresh streams) trips
+    /// here. Serial-engine searches are the comparison baseline and are
+    /// exempt by design.
+    pub fn assert_fit_passes(&self, max_traversals: f64) -> Result<(), String> {
+        let mut checked = 0usize;
+        for s in &self.searches {
+            if s.stats.engine != "lockstep" {
+                continue;
+            }
+            checked += 1;
+            let fte = s.stats.full_trace_equivalents();
+            if fte > max_traversals + 1e-9 {
+                return Err(format!(
+                    "fit-passes regression: {} (lockstep) cost {fte:.2} \
+                     full-trace-equivalent stream traversals (cap {max_traversals}) \
+                     — candidate batching is no longer sharing the stream",
+                    s.scheduler
+                ));
+            }
+        }
+        if checked == 0 {
+            return Err(
+                "fit-passes tripwire is vacuous: no lockstep-engine search in the \
+                 report — the fit bench stopped exercising the lockstep engine"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
 }
 
-/// Measure both §5.1 fitting searches over a shared synthetic workload.
+/// Measure both §5.1 fitting searches, each on both engines (lockstep
+/// and serial), over a shared synthetic workload — four searches total,
+/// so the JSON shows the traversal economy side by side.
 ///
 /// The workload is deliberately *underprovisioned at low candidates*: a
 /// steady stream (b = 0.5) whose initial fleet cannot keep up, so
 /// infeasible probes blow their miss budget within the first simulated
-/// seconds and the gallop has several cheap aborted passes to show. The
+/// seconds and both engines have cheap aborted passes to show. The
 /// searches stream every pass from the `(seed, 0)` RNG via the same
 /// factory the throughput bench uses.
 pub fn run_fit_bench(target_arrivals: u64, rate: f64, seed: u64) -> FitBenchReport {
@@ -196,27 +261,31 @@ pub fn run_fit_bench(target_arrivals: u64, rate: f64, seed: u64) -> FitBenchRepo
         ))
     };
     let mut searches = Vec::new();
-    {
-        let t0 = Instant::now();
-        let (_, fleet, stats) =
-            sched::fpga_static::fit_source_stats(&make, &cfg, &defaults, tolerance);
-        searches.push(FitSearchReport {
-            scheduler: "fpga-static".into(),
-            fitted: fleet,
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            stats,
-        });
-    }
-    {
-        let t0 = Instant::now();
-        let (_, k, stats) =
-            sched::fpga_dynamic::fit_source_stats(&make, &cfg, &defaults, tolerance);
-        searches.push(FitSearchReport {
-            scheduler: "fpga-dynamic".into(),
-            fitted: k,
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            stats,
-        });
+    for engine in [FitEngine::Lockstep, FitEngine::Serial] {
+        {
+            let t0 = Instant::now();
+            let (_, fleet, stats) = sched::fpga_static::fit_source_stats_with(
+                engine, &make, &cfg, &defaults, tolerance,
+            );
+            searches.push(FitSearchReport {
+                scheduler: "fpga-static".into(),
+                fitted: fleet,
+                wall_seconds: t0.elapsed().as_secs_f64(),
+                stats,
+            });
+        }
+        {
+            let t0 = Instant::now();
+            let (_, k, stats) = sched::fpga_dynamic::fit_source_stats_with(
+                engine, &make, &cfg, &defaults, tolerance,
+            );
+            searches.push(FitSearchReport {
+                scheduler: "fpga-dynamic".into(),
+                fitted: k,
+                wall_seconds: t0.elapsed().as_secs_f64(),
+                stats,
+            });
+        }
     }
     FitBenchReport {
         tolerance,
@@ -492,6 +561,16 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
     if assert_fit_abort.is_some() && !fit {
         return Err("--assert-fit-abort requires --fit".into());
     }
+    let assert_fit_passes = match args.get("assert-fit-passes") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| format!("--assert-fit-passes: invalid traversal cap '{v}'"))?,
+        ),
+        None => None,
+    };
+    if assert_fit_passes.is_some() && !fit {
+        return Err("--assert-fit-passes requires --fit".into());
+    }
     eprintln!(
         "replaying ~{arrivals} arrivals at {rate} req/s through {} (streaming)...",
         kind.display()
@@ -548,13 +627,17 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
             .map_err(|e| format!("writing {fit_out}: {e}"))?;
         for s in &fit_report.searches {
             println!(
-                "  fit {:<14} fitted {:>5} in {} passes ({} aborted early, \
-                 {:.2} full-trace equivalents) {:.2}s -> {}",
+                "  fit {:<14} [{:>8}] fitted {:>5} in {} passes / {} batches \
+                 ({} aborted early, {:.2} stream / {:.2} simulated full-trace \
+                 equivalents) {:.2}s -> {}",
                 s.scheduler,
+                s.stats.engine,
                 s.fitted,
                 s.stats.pass_count(),
+                s.stats.batches.len(),
                 s.stats.aborted_passes(),
                 s.stats.full_trace_equivalents(),
+                s.stats.simulated_trace_equivalents(),
                 s.wall_seconds,
                 fit_out
             );
@@ -564,6 +647,13 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
             println!(
                 "  fit abort tripwire: all aborted passes streamed <= {:.0}% of the trace",
                 frac * 100.0
+            );
+        }
+        if let Some(cap) = assert_fit_passes {
+            fit_report.assert_fit_passes(cap)?;
+            println!(
+                "  fit passes tripwire: every lockstep search cost <= {cap} \
+                 full-trace-equivalent stream traversals"
             );
         }
     }
@@ -590,6 +680,7 @@ fn parse_pool_sizes(spec: &str) -> Result<Vec<u32>, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::{FitBatch, FitPass};
 
     #[test]
     fn small_bench_runs_and_reports() {
@@ -640,29 +731,64 @@ mod tests {
     #[test]
     fn fit_bench_reports_and_serializes() {
         let r = run_fit_bench(15_000, 1500.0, 5);
-        assert_eq!(r.searches.len(), 2);
+        // Two schedulers × two engines.
+        assert_eq!(r.searches.len(), 4);
         for s in &r.searches {
             assert!(s.stats.pass_count() >= 1, "{} ran no passes", s.scheduler);
             assert!(s.stats.total_arrivals > 0);
             assert!(s.stats.feasible, "{} bench workload must be fittable", s.scheduler);
             // The winning pass is always full-trace.
-            let last_full = s.stats.passes.iter().filter(|p| !p.aborted).last().unwrap();
+            let last_full = s.stats.passes().filter(|p| !p.aborted).last().unwrap();
             assert_eq!(last_full.arrivals, s.stats.total_arrivals);
         }
+        // The two engines must agree on the fitted value per scheduler —
+        // the bench doubles as a coarse cross-engine parity check.
+        for sched_name in ["fpga-static", "fpga-dynamic"] {
+            let fitted: Vec<u32> = r
+                .searches
+                .iter()
+                .filter(|s| s.scheduler == sched_name)
+                .map(|s| s.fitted)
+                .collect();
+            assert_eq!(fitted.len(), 2);
+            assert_eq!(fitted[0], fitted[1], "{sched_name}: engines disagree");
+        }
+        // Lockstep economy on the bench workload: a fit inside the first
+        // ladder wave takes one ladder batch + at most one bracket batch.
+        for s in r.searches.iter().filter(|s| s.stats.engine == "lockstep") {
+            if s.stats.fitted_candidate <= 16 {
+                assert!(
+                    s.stats.full_trace_equivalents() <= 2.0 + 1e-9,
+                    "{}: {} traversals",
+                    s.scheduler,
+                    s.stats.full_trace_equivalents()
+                );
+            }
+        }
+        assert!(r.assert_fit_passes(2.0).is_ok());
         let j = r.to_json();
         assert!(j.contains("\"full_trace_equivalents\""));
+        assert!(j.contains("\"simulated_trace_equivalents\""));
+        assert!(j.contains("\"engine\": \"lockstep\""));
+        assert!(j.contains("\"engine\": \"serial\""));
+        assert!(j.contains("\"batches\""));
         assert!(crate::util::json::Json::parse(&j).is_ok(), "fit JSON must parse");
+    }
+
+    fn one_pass_batch(p: FitPass) -> FitBatch {
+        FitBatch {
+            passes: vec![p],
+            wall_seconds: 0.0,
+        }
     }
 
     #[test]
     fn fit_abort_tripwire_flags_late_aborts() {
-        use crate::sched::{FitPass, FitStats};
         let pass = |arrivals: u64, aborted: bool| FitPass {
             candidate: 0,
             arrivals,
             aborted,
             feasible: !aborted,
-            wall_seconds: 0.0,
         };
         let report = |abort_at: u64| FitBenchReport {
             tolerance: 0.005,
@@ -672,10 +798,14 @@ mod tests {
                 wall_seconds: 0.0,
                 stats: FitStats {
                     label: "fpga-static".into(),
+                    engine: "serial",
                     fitted_candidate: 1,
                     feasible: true,
                     total_arrivals: 1000,
-                    passes: vec![pass(abort_at, true), pass(1000, false)],
+                    batches: vec![
+                        one_pass_batch(pass(abort_at, true)),
+                        one_pass_batch(pass(1000, false)),
+                    ],
                 },
             }],
         };
@@ -688,7 +818,6 @@ mod tests {
         // A full-length pass that is *infeasible but not aborted* is the
         // signature of a silently disarmed early-abort budget (e.g. a
         // lost len_hint) — the tripwire must not pass vacuously.
-        use crate::sched::{FitPass, FitStats};
         let disarmed = FitBenchReport {
             tolerance: 0.005,
             searches: vec![FitSearchReport {
@@ -697,25 +826,29 @@ mod tests {
                 wall_seconds: 0.0,
                 stats: FitStats {
                     label: "fpga-dynamic".into(),
+                    engine: "lockstep",
                     fitted_candidate: 1,
                     feasible: true,
                     total_arrivals: 1000,
-                    passes: vec![
-                        FitPass {
-                            candidate: 0,
-                            arrivals: 1000, // full trace, never aborted
-                            aborted: false,
-                            feasible: false,
-                            wall_seconds: 0.0,
-                        },
-                        FitPass {
-                            candidate: 1,
-                            arrivals: 1000,
-                            aborted: false,
-                            feasible: true,
-                            wall_seconds: 0.0,
-                        },
-                    ],
+                    // One lockstep batch probing both candidates: the
+                    // infeasible one streamed the whole trace unaborted.
+                    batches: vec![FitBatch {
+                        passes: vec![
+                            FitPass {
+                                candidate: 0,
+                                arrivals: 1000, // full trace, never aborted
+                                aborted: false,
+                                feasible: false,
+                            },
+                            FitPass {
+                                candidate: 1,
+                                arrivals: 1000,
+                                aborted: false,
+                                feasible: true,
+                            },
+                        ],
+                        wall_seconds: 0.0,
+                    }],
                 },
             }],
         };
@@ -724,35 +857,99 @@ mod tests {
         // exempt — it is the only pass allowed to be infeasible AND full.
         let mut failed = disarmed.clone();
         failed.searches[0].stats.feasible = false;
-        failed.searches[0].stats.passes = vec![
-            FitPass {
+        failed.searches[0].stats.batches = vec![
+            one_pass_batch(FitPass {
                 candidate: 4096,
                 arrivals: 80,
                 aborted: true,
                 feasible: false,
-                wall_seconds: 0.0,
-            },
-            FitPass {
+            }),
+            one_pass_batch(FitPass {
                 candidate: 4096,
                 arrivals: 1000,
                 aborted: false,
                 feasible: false,
-                wall_seconds: 0.0,
-            },
+            }),
         ];
         assert!(failed.assert_abort_fraction(0.5).is_ok());
         // All-feasible searches make the gate vacuous — that must fail
         // too (the bench workload is supposed to force aborts).
         let mut vacuous = disarmed.clone();
         vacuous.searches[0].stats.fitted_candidate = 0;
-        vacuous.searches[0].stats.passes = vec![FitPass {
+        vacuous.searches[0].stats.batches = vec![one_pass_batch(FitPass {
             candidate: 0,
             arrivals: 1000,
             aborted: false,
             feasible: true,
-            wall_seconds: 0.0,
-        }];
+        })];
         let err = vacuous.assert_abort_fraction(0.5).unwrap_err();
+        assert!(err.contains("vacuous"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn fit_passes_tripwire_caps_lockstep_traversals() {
+        let full_pass = |candidate: u32| FitPass {
+            candidate,
+            arrivals: 1000,
+            aborted: false,
+            feasible: true,
+        };
+        let search = |engine: &'static str, batches: Vec<FitBatch>| FitSearchReport {
+            scheduler: "fpga-static".into(),
+            fitted: 1,
+            wall_seconds: 0.0,
+            stats: FitStats {
+                label: "fpga-static".into(),
+                engine,
+                fitted_candidate: 1,
+                feasible: true,
+                total_arrivals: 1000,
+                batches,
+            },
+        };
+        // Ladder batch (abort prefix) + full bracket batch = 1.1 traversals.
+        let good = FitBenchReport {
+            tolerance: 0.005,
+            searches: vec![search(
+                "lockstep",
+                vec![
+                    FitBatch {
+                        passes: vec![
+                            FitPass {
+                                candidate: 0,
+                                arrivals: 100,
+                                aborted: true,
+                                feasible: false,
+                            },
+                            full_pass(1),
+                        ],
+                        wall_seconds: 0.0,
+                    },
+                    one_pass_batch(full_pass(1)),
+                ],
+            )],
+        };
+        assert!(good.assert_fit_passes(2.0).is_ok());
+        // One full traversal per probe — the regression the cap exists for.
+        let bad = FitBenchReport {
+            tolerance: 0.005,
+            searches: vec![search(
+                "lockstep",
+                (0..3).map(|c| one_pass_batch(full_pass(c))).collect(),
+            )],
+        };
+        let err = bad.assert_fit_passes(2.0).unwrap_err();
+        assert!(err.contains("fit-passes regression"), "unexpected error: {err}");
+        // Serial searches are exempt — but a report with *only* serial
+        // searches means the lockstep engine is no longer measured.
+        let serial_only = FitBenchReport {
+            tolerance: 0.005,
+            searches: vec![search(
+                "serial",
+                (0..9).map(|c| one_pass_batch(full_pass(c))).collect(),
+            )],
+        };
+        let err = serial_only.assert_fit_passes(2.0).unwrap_err();
         assert!(err.contains("vacuous"), "unexpected error: {err}");
     }
 

@@ -10,7 +10,7 @@ use super::breakeven::{
     breakeven_fpga_seconds, lambda_fpga_seconds, needed_fpgas, Objective,
 };
 use super::dispatch::Dispatcher;
-use super::fit::{self, FitStats};
+use super::fit::{self, FitEngine, FitStats};
 use super::oracle::{Oracle, WorkloadProfile};
 use super::MakeSource;
 use crate::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
@@ -120,17 +120,23 @@ impl Policy for FpgaDynamic {
 /// `cfg.platform`), the headroom, k, and the pass accounting.
 ///
 /// Feasibility is monotone in the headroom (pinned by
-/// `more_headroom_fewer_misses`), so the search gallops to the first
-/// feasible multiple and bisects for the least one — O(log k) full
-/// passes, with every infeasible probe early-aborting at its exact miss
-/// budget (the oracle pass counts the workload's arrivals).
+/// `more_headroom_fewer_misses`), so the search needs O(log k)
+/// feasibility probes, with every infeasible probe early-aborting at its
+/// exact miss budget (the oracle pass counts the workload's arrivals).
+/// The `engine` picks how probes map onto stream traversals:
+/// [`FitEngine::Lockstep`] batches the gallop ladder and the bisect
+/// bracket through shared traversals (≤ 2 full-trace equivalents for
+/// ordinary fits — the default for streaming entry points);
+/// [`FitEngine::Serial`] probes one candidate per traversal (the
+/// materialized-profile path).
 fn search(
     make: &MakeSource<'_>,
     cfg: &SimConfig,
     miss_tolerance: f64,
+    engine: FitEngine,
 ) -> (RunResult, u32, u32, FitStats) {
     let oracle = Oracle::from_source(&mut *make(), cfg, Objective::energy());
-    search_with_oracle(&oracle, make, cfg, miss_tolerance)
+    search_with_oracle(&oracle, make, cfg, miss_tolerance, engine)
 }
 
 /// [`search`] with a precomputed oracle (the profile-cached sweep path).
@@ -139,20 +145,39 @@ fn search_with_oracle(
     make: &MakeSource<'_>,
     cfg: &SimConfig,
     miss_tolerance: f64,
+    engine: FitEngine,
 ) -> (RunResult, u32, u32, FitStats) {
     let delta = oracle.max_consecutive_delta().max(1);
     let total = oracle.total_requests;
-    let (r, k, stats) =
-        fit::fit_least_feasible("fpga-dynamic", total, miss_tolerance, &mut |k, bounded| {
-            let mut policy = FpgaDynamic::new(cfg, k.saturating_mul(delta));
-            fit::run_candidate_pass(make, total, cfg, miss_tolerance, bounded, &mut policy)
-        });
+    let (r, k, stats) = match engine {
+        FitEngine::Serial => {
+            fit::fit_least_feasible("fpga-dynamic", total, miss_tolerance, &mut |k, bounded| {
+                let mut policy = FpgaDynamic::new(cfg, k.saturating_mul(delta));
+                fit::run_candidate_pass(make, total, cfg, miss_tolerance, bounded, &mut policy)
+            })
+        }
+        FitEngine::Lockstep => fit::fit_least_feasible_lockstep(
+            "fpga-dynamic",
+            total,
+            miss_tolerance,
+            &mut |cands, bounded| {
+                fit::run_candidate_batch(make, total, cfg, miss_tolerance, bounded, cands, &|k| {
+                    Box::new(FpgaDynamic::new(cfg, k.saturating_mul(delta)))
+                })
+            },
+        ),
+    };
     (r, k.saturating_mul(delta), k, stats)
 }
 
 /// Least feasible headroom and its multiple k.
 pub fn fit_headroom(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> (u32, u32) {
-    let (_, headroom, k, _stats) = search(&|| Box::new(trace.source()), cfg, miss_tolerance);
+    let (_, headroom, k, _stats) = search(
+        &|| Box::new(trace.source()),
+        cfg,
+        miss_tolerance,
+        FitEngine::Lockstep,
+    );
     (headroom, k)
 }
 
@@ -172,7 +197,7 @@ pub fn fitted_source(
     cfg: &SimConfig,
     miss_tolerance: f64,
 ) -> FpgaDynamic {
-    let (_, headroom, _k, _stats) = search(make, cfg, miss_tolerance);
+    let (_, headroom, _k, _stats) = search(make, cfg, miss_tolerance, FitEngine::Lockstep);
     FpgaDynamic::new(cfg, headroom)
 }
 
@@ -208,15 +233,29 @@ pub fn fit_source_stats(
     defaults: &PlatformConfig,
     miss_tolerance: f64,
 ) -> (RunResult, u32, FitStats) {
-    let (mut r, _headroom, k, stats) = search(make, cfg, miss_tolerance);
+    fit_source_stats_with(FitEngine::Lockstep, make, cfg, defaults, miss_tolerance)
+}
+
+/// [`fit_source_stats`] with an explicit engine choice (parity tests and
+/// the bench's lockstep-vs-serial comparison; production callers take the
+/// default).
+pub fn fit_source_stats_with(
+    engine: FitEngine,
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32, FitStats) {
+    let (mut r, _headroom, k, stats) = search(make, cfg, miss_tolerance, engine);
     r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
     (r, k, stats)
 }
 
 /// [`fit`] against a cached [`WorkloadProfile`]: the oracle derives from
 /// the profile's bins (no arrival streaming) and every pass replays the
-/// shared materialized trace. Bit-identical to [`fit`] on the profile's
-/// trace.
+/// shared materialized trace — re-traversal is a `Vec` iteration, so the
+/// serial engine (fewest simulated candidates) wins here. Bit-identical
+/// to [`fit`] on the profile's trace.
 pub fn fit_profile(
     profile: &WorkloadProfile,
     cfg: &SimConfig,
@@ -229,6 +268,7 @@ pub fn fit_profile(
         &|| Box::new(profile.source()),
         cfg,
         miss_tolerance,
+        FitEngine::Serial,
     );
     r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
     (r, k)

@@ -10,7 +10,7 @@
 //! hands out the fitted policy.
 
 use super::dispatch::Dispatcher;
-use super::fit::{self, FitStats};
+use super::fit::{self, FitEngine, FitStats};
 use super::oracle::{Oracle, WorkloadProfile};
 use super::MakeSource;
 use crate::config::{DispatchPolicy, PlatformConfig, SimConfig, WorkerKind};
@@ -44,21 +44,28 @@ impl FpgaStatic {
 /// (square-root staffing). Returns the winning run (normalized against
 /// `cfg.platform`), the fleet, and the pass accounting.
 ///
-/// Feasibility is monotone in the fleet, so the search gallops to the
-/// first feasible step count and bisects for the least one — O(log j)
-/// full passes, and every infeasible probe early-aborts at its miss
-/// budget (the oracle pass counted the workload's exact arrivals, so the
-/// budget is exact even on generator streams). Every pass streams a
-/// fresh source from `make`, so the search runs in constant memory for
-/// any trace length.
+/// Feasibility is monotone in the fleet, so the search needs O(log j)
+/// feasibility probes, and every infeasible probe early-aborts at its
+/// miss budget (the oracle pass counted the workload's exact arrivals,
+/// so the budget is exact even on generator streams). Every pass streams
+/// a fresh source from `make`, so the search runs in constant memory for
+/// any trace length. The `engine` picks how probes map onto stream
+/// traversals: [`FitEngine::Lockstep`] batches the gallop ladder and the
+/// bisect bracket through shared traversals (≤ 2 full-trace equivalents
+/// for ordinary fits — the default for streaming entry points, where a
+/// traversal re-synthesizes the stream); [`FitEngine::Serial`] probes one
+/// candidate per traversal (the materialized-profile path, where
+/// re-traversal is free and gallop+bisect simulates the fewest
+/// candidates).
 fn search(
     make: &MakeSource<'_>,
     cfg: &SimConfig,
     miss_tolerance: f64,
+    engine: FitEngine,
 ) -> (RunResult, u32, FitStats) {
     let oracle =
         Oracle::from_source(&mut *make(), cfg, super::breakeven::Objective::energy());
-    search_with_oracle(&oracle, make, cfg, miss_tolerance)
+    search_with_oracle(&oracle, make, cfg, miss_tolerance, engine)
 }
 
 /// [`search`] with a precomputed oracle (the profile-cached sweep path).
@@ -67,22 +74,36 @@ fn search_with_oracle(
     make: &MakeSource<'_>,
     cfg: &SimConfig,
     miss_tolerance: f64,
+    engine: FitEngine,
 ) -> (RunResult, u32, FitStats) {
     let peak = oracle.peak().max(1);
     let step = ((peak as f64).sqrt().ceil() as u32).max(1);
     let total = oracle.total_requests;
     let fleet_of = |j: u32| peak.saturating_add(j.saturating_mul(step));
-    let (r, j, stats) =
-        fit::fit_least_feasible("fpga-static", total, miss_tolerance, &mut |j, bounded| {
-            let mut policy = FpgaStatic::with_fleet(fleet_of(j));
-            fit::run_candidate_pass(make, total, cfg, miss_tolerance, bounded, &mut policy)
-        });
+    let (r, j, stats) = match engine {
+        FitEngine::Serial => {
+            fit::fit_least_feasible("fpga-static", total, miss_tolerance, &mut |j, bounded| {
+                let mut policy = FpgaStatic::with_fleet(fleet_of(j));
+                fit::run_candidate_pass(make, total, cfg, miss_tolerance, bounded, &mut policy)
+            })
+        }
+        FitEngine::Lockstep => fit::fit_least_feasible_lockstep(
+            "fpga-static",
+            total,
+            miss_tolerance,
+            &mut |cands, bounded| {
+                fit::run_candidate_batch(make, total, cfg, miss_tolerance, bounded, cands, &|j| {
+                    Box::new(FpgaStatic::with_fleet(fleet_of(j)))
+                })
+            },
+        ),
+    };
     (r, fleet_of(j), stats)
 }
 
 /// Least feasible fleet size.
 pub fn fit_fleet(trace: &AppTrace, cfg: &SimConfig, miss_tolerance: f64) -> u32 {
-    search(&|| Box::new(trace.source()), cfg, miss_tolerance).1
+    search(&|| Box::new(trace.source()), cfg, miss_tolerance, FitEngine::Lockstep).1
 }
 
 /// Best-case static provisioning: the fitted policy for `trace`.
@@ -96,7 +117,7 @@ pub fn fitted_source(
     cfg: &SimConfig,
     miss_tolerance: f64,
 ) -> FpgaStatic {
-    FpgaStatic::with_fleet(search(make, cfg, miss_tolerance).1)
+    FpgaStatic::with_fleet(search(make, cfg, miss_tolerance, FitEngine::Lockstep).1)
 }
 
 /// Fit and run: the search's best run plus the fitted fleet size. The
@@ -130,15 +151,29 @@ pub fn fit_source_stats(
     defaults: &PlatformConfig,
     miss_tolerance: f64,
 ) -> (RunResult, u32, FitStats) {
-    let (mut r, fleet, stats) = search(make, cfg, miss_tolerance);
+    fit_source_stats_with(FitEngine::Lockstep, make, cfg, defaults, miss_tolerance)
+}
+
+/// [`fit_source_stats`] with an explicit engine choice (parity tests and
+/// the bench's lockstep-vs-serial comparison; production callers take the
+/// default).
+pub fn fit_source_stats_with(
+    engine: FitEngine,
+    make: &MakeSource<'_>,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    miss_tolerance: f64,
+) -> (RunResult, u32, FitStats) {
+    let (mut r, fleet, stats) = search(make, cfg, miss_tolerance, engine);
     r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
     (r, fleet, stats)
 }
 
 /// [`fit`] against a cached [`WorkloadProfile`]: the oracle derives from
 /// the profile's bins (no arrival streaming) and every pass replays the
-/// shared materialized trace. Bit-identical to [`fit`] on the profile's
-/// trace.
+/// shared materialized trace — re-traversal is a `Vec` iteration, so the
+/// serial engine (fewest simulated candidates) wins here. Bit-identical
+/// to [`fit`] on the profile's trace.
 pub fn fit_profile(
     profile: &WorkloadProfile,
     cfg: &SimConfig,
@@ -151,6 +186,7 @@ pub fn fit_profile(
         &|| Box::new(profile.source()),
         cfg,
         miss_tolerance,
+        FitEngine::Serial,
     );
     r.ideal = IdealBaseline::for_work(r.metrics.total_work, defaults);
     (r, fleet)

@@ -18,7 +18,7 @@ pub mod oracle;
 pub mod spork;
 
 pub use breakeven::Objective;
-pub use fit::{FitPass, FitStats, FIT_HARD_CEILING};
+pub use fit::{FitBatch, FitEngine, FitPass, FitStats, FIT_HARD_CEILING};
 pub use oracle::{Oracle, WorkloadProfile};
 
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig};

@@ -472,6 +472,22 @@ impl<'a> Driver<'a> {
         self.aborted
     }
 
+    /// Arrivals pulled from the source so far — processed arrivals plus
+    /// the one-arrival look-ahead while the stream is unexhausted. The
+    /// lockstep runner's frontier: drivers of one [`tee`] fan-out stay
+    /// within one pulled arrival of each other so the shared buffer
+    /// holds O(1) arrivals.
+    ///
+    /// [`tee`]: crate::trace::tee
+    pub fn arrivals_pulled(&self) -> u64 {
+        self.pulled_arrivals
+    }
+
+    /// Whether the source has been fully consumed (no look-ahead staged).
+    pub fn source_exhausted(&self) -> bool {
+        self.pending.is_none()
+    }
+
     pub fn now(&self) -> f64 {
         self.sim.now
     }
@@ -846,6 +862,94 @@ pub fn run_source_bounded<'a>(
     }
 }
 
+/// Run N `(source, policy)` pairs through their streams in lockstep,
+/// each with the early-abort miss budget armed for `miss_tolerance` —
+/// the multi-candidate engine behind the §5.1 lockstep fitting searches.
+///
+/// Every driver is the exact [`run_source_bounded`] loop: stepping is
+/// interleaved *across* drivers, but no simulation state is shared, so
+/// each returned [`BoundedRun`] is bit-identical to running that
+/// `(source, policy)` pair serially. The interleaving exists purely to
+/// bound memory when the sources are consumers of one [`tee`] fan-out:
+/// drivers advance to a common arrivals-pulled frontier before any
+/// driver pulls further, so the shared buffer holds O(1) arrivals
+/// (fastest-to-slowest spread ≤ 1 plus one look-ahead each).
+///
+/// A driver that aborts at its miss budget — or whose stream exhausts —
+/// is finalized immediately and its source dropped, releasing its stake
+/// in the tee buffer; the survivors keep streaming. This is what lets
+/// infeasible candidates fall out of a fitting batch mid-pass at the
+/// same abort point they would hit serially.
+///
+/// [`tee`]: crate::trace::tee
+pub fn run_sources_lockstep<'a>(
+    sources: Vec<Box<dyn ArrivalSource + 'a>>,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    policies: &'a mut [Box<dyn Policy>],
+    miss_tolerance: f64,
+) -> Vec<BoundedRun> {
+    assert_eq!(
+        sources.len(),
+        policies.len(),
+        "lockstep needs one policy per source"
+    );
+    let sink = &mut |_: &Effect| {};
+    let mut drivers: Vec<Option<Driver>> = sources
+        .into_iter()
+        .zip(policies.iter_mut())
+        .map(|(src, policy)| {
+            let mut d = Driver::from_source(src, cfg.clone(), policy.as_mut());
+            d.abort_on_excess_misses(miss_tolerance);
+            d.start(sink);
+            Some(d)
+        })
+        .collect();
+    let mut out: Vec<Option<BoundedRun>> = drivers.iter().map(|_| None).collect();
+    loop {
+        // Frontier: the least arrivals-pulled count among drivers still
+        // consuming their stream. A driver whose stream is exhausted no
+        // longer holds a buffer stake — drain it to completion now (its
+        // remaining events are its own).
+        let mut frontier: Option<u64> = None;
+        for slot in 0..drivers.len() {
+            let Some(d) = drivers[slot].as_mut() else { continue };
+            if d.source_exhausted() {
+                while d.step(sink) {}
+                let d = drivers[slot].take().expect("slot emptied mid-drain");
+                out[slot] = Some(BoundedRun {
+                    aborted: d.aborted(),
+                    result: d.finish(defaults),
+                });
+            } else {
+                let p = d.arrivals_pulled();
+                frontier = Some(frontier.map_or(p, |f| f.min(p)));
+            }
+        }
+        let Some(frontier) = frontier else { break };
+        // Advance every at-frontier driver until it pulls past the
+        // frontier, exhausts its stream, or stops (abort). Each step here
+        // is exactly the step a serial run would take next.
+        for slot in 0..drivers.len() {
+            let Some(d) = drivers[slot].as_mut() else { continue };
+            let mut stopped = false;
+            while !stopped && !d.source_exhausted() && d.arrivals_pulled() <= frontier {
+                stopped = !d.step(sink);
+            }
+            if stopped {
+                let d = drivers[slot].take().expect("slot emptied mid-step");
+                out[slot] = Some(BoundedRun {
+                    aborted: d.aborted(),
+                    result: d.finish(defaults),
+                });
+            }
+        }
+    }
+    out.into_iter()
+        .map(|r| r.expect("every lockstep driver is finalized before exit"))
+        .collect()
+}
+
 /// Like [`run_source`], reporting every applied [`Effect`] to `sink`.
 pub fn run_source_with_sink<'a>(
     source: Box<dyn ArrivalSource + 'a>,
@@ -1178,6 +1282,80 @@ mod tests {
             )
         }));
         assert!(result.is_err(), "miscounted len_hint must panic");
+    }
+
+    #[test]
+    fn lockstep_runs_are_bit_identical_to_serial_bounded_runs() {
+        // Three policies over one teed stream — one infeasible at any
+        // tolerance < 1 (single FPGA behind a 10s spin-up), two feasible
+        // (one-CPU-per-request) — must each produce exactly the serial
+        // run_source_bounded result, including the abort.
+        let arrivals: Vec<Arrival> = (0..30)
+            .map(|i| Arrival { time: 0.01 * i as f64, size: 0.010 })
+            .collect();
+        let trace = AppTrace::new("ls", arrivals, 1.0);
+        let cfg = SimConfig::paper_default();
+        let tol = 0.25;
+
+        let serial: Vec<BoundedRun> = vec![
+            run_source_bounded(
+                Box::new(trace.source()),
+                cfg.clone(),
+                &defaults(),
+                &mut OneFpga,
+                tol,
+            ),
+            run_source_bounded(
+                Box::new(trace.source()),
+                cfg.clone(),
+                &defaults(),
+                &mut OnePerRequest,
+                tol,
+            ),
+            run_source_bounded(
+                Box::new(trace.source()),
+                cfg.clone(),
+                &defaults(),
+                &mut OnePerRequest,
+                tol,
+            ),
+        ];
+        assert!(serial[0].aborted, "OneFpga must be infeasible here");
+        assert!(!serial[1].aborted);
+
+        let consumers = crate::trace::tee(Box::new(trace.source()), 3);
+        let sources: Vec<Box<dyn ArrivalSource + '_>> = consumers
+            .into_iter()
+            .map(|c| Box::new(c) as Box<dyn ArrivalSource + '_>)
+            .collect();
+        let mut policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(OneFpga),
+            Box::new(OnePerRequest),
+            Box::new(OnePerRequest),
+        ];
+        let lockstep = run_sources_lockstep(sources, &cfg, &defaults(), &mut policies, tol);
+        assert_eq!(lockstep.len(), 3);
+        for (i, (l, s)) in lockstep.iter().zip(&serial).enumerate() {
+            assert_eq!(l.aborted, s.aborted, "driver {i}: abort flag");
+            assert_eq!(
+                l.result.metrics.requests, s.result.metrics.requests,
+                "driver {i}: requests"
+            );
+            assert_eq!(
+                l.result.metrics.deadline_misses, s.result.metrics.deadline_misses,
+                "driver {i}: misses"
+            );
+            assert_eq!(
+                l.result.metrics.total_energy(),
+                s.result.metrics.total_energy(),
+                "driver {i}: energy"
+            );
+            assert_eq!(
+                l.result.metrics.total_cost(),
+                s.result.metrics.total_cost(),
+                "driver {i}: cost"
+            );
+        }
     }
 
     #[test]

@@ -33,10 +33,12 @@ use super::{bmodel, Arrival, RateTrace};
 use crate::util::ordf64::OrdF64;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
+use std::cell::RefCell;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::io::BufRead;
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 
 /// A pull-based, time-ordered stream of request arrivals.
 ///
@@ -414,6 +416,139 @@ impl ArrivalSource for KnownLen<'_> {
     }
 }
 
+/// State shared by the consumers of one [`tee`] fan-out: the inner
+/// stream, pulled exactly once, plus the window of arrivals some live
+/// consumer still needs. `buf[i]` is arrival `base + i` of the stream;
+/// the front is trimmed as soon as the slowest live consumer moves past
+/// it, so buffering is bounded by the spread between the fastest and
+/// slowest live consumer (O(1) under the sim's lockstep stepping), never
+/// by stream length.
+struct TeeShared<'a> {
+    inner: Box<dyn ArrivalSource + 'a>,
+    buf: VecDeque<Arrival>,
+    /// Absolute stream index of `buf[0]`.
+    base: u64,
+    /// Total arrivals pulled from `inner` so far.
+    pulled: u64,
+    /// Per-consumer next absolute index; `None` once dropped.
+    pos: Vec<Option<u64>>,
+    /// Whether `inner` is exhausted.
+    done: bool,
+}
+
+impl TeeShared<'_> {
+    /// Drop buffered arrivals no live consumer can still request.
+    fn trim(&mut self) {
+        let floor = self.pos.iter().flatten().copied().min().unwrap_or(self.pulled);
+        while self.base < floor {
+            self.buf.pop_front();
+            self.base += 1;
+        }
+    }
+}
+
+/// One consumer of a [`tee`] fan-out. Yields exactly the inner stream —
+/// same order, same count, same per-arrival bits — independent of how
+/// its siblings interleave their pulls (pinned by the source-parity
+/// suite). Dropping a consumer mid-stream releases its stake in the
+/// shared buffer without perturbing siblings, which is how aborted
+/// candidates leave a lockstep fitting batch early.
+pub struct TeeSource<'a> {
+    shared: Rc<RefCell<TeeShared<'a>>>,
+    idx: usize,
+    name: String,
+    duration: f64,
+}
+
+/// Fan a single pull-based stream out to `n` consumers. The inner source
+/// is pulled exactly once per arrival no matter how many consumers read
+/// it — the point of the adapter: one traversal of an expensive stream
+/// (synthesis, CSV parse) feeds a whole lockstep candidate batch.
+pub fn tee(inner: Box<dyn ArrivalSource + '_>, n: usize) -> Vec<TeeSource<'_>> {
+    let name = inner.name().to_string();
+    let duration = inner.duration();
+    let shared = Rc::new(RefCell::new(TeeShared {
+        inner,
+        buf: VecDeque::new(),
+        base: 0,
+        pulled: 0,
+        pos: vec![Some(0); n],
+        done: false,
+    }));
+    (0..n)
+        .map(|idx| TeeSource {
+            shared: Rc::clone(&shared),
+            idx,
+            name: name.clone(),
+            duration,
+        })
+        .collect()
+}
+
+impl ArrivalSource for TeeSource<'_> {
+    fn next_arrival(&mut self) -> Option<Arrival> {
+        let mut s = self.shared.borrow_mut();
+        let my = s.pos[self.idx].expect("tee consumer polled after drop");
+        if my < s.pulled {
+            // Some faster sibling already pulled this arrival.
+            let a = s.buf[(my - s.base) as usize];
+            s.pos[self.idx] = Some(my + 1);
+            if my == s.base {
+                s.trim();
+            }
+            return Some(a);
+        }
+        if s.done {
+            return None;
+        }
+        match s.inner.next_arrival() {
+            Some(a) => {
+                s.buf.push_back(a);
+                s.pulled += 1;
+                s.pos[self.idx] = Some(my + 1);
+                if my == s.base {
+                    s.trim();
+                }
+                Some(a)
+            }
+            None => {
+                s.done = true;
+                None
+            }
+        }
+    }
+
+    fn duration(&self) -> f64 {
+        self.duration
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        // Exact whenever the inner hint is: arrivals already buffered
+        // ahead of this consumer plus whatever the inner source will
+        // still yield. Stays exact after the inner stream exhausts.
+        let s = self.shared.borrow();
+        let my = s.pos[self.idx].expect("tee consumer polled after drop");
+        let ahead = s.pulled - my;
+        if s.done {
+            Some(ahead)
+        } else {
+            s.inner.len_hint().map(|h| h + ahead)
+        }
+    }
+}
+
+impl Drop for TeeSource<'_> {
+    fn drop(&mut self) {
+        let mut s = self.shared.borrow_mut();
+        s.pos[self.idx] = None;
+        s.trim();
+    }
+}
+
 /// Streaming CSV trace reader: replays `time,size` rows (the
 /// [`super::io::save_csv`] format) without ever holding the arrivals in
 /// memory — the path for multi-gigabyte production traces.
@@ -736,5 +871,133 @@ mod tests {
         let mut k = KnownLen::new(Box::new(VecSource::new("v", arr, 2.0)), 2);
         k.next_arrival();
         k.next_arrival(); // inner exhausts one short of the declared 2
+    }
+
+    #[test]
+    fn tee_consumers_each_see_the_serial_stream() {
+        // Three consumers of one Poisson stream, pulled in a skewed
+        // round-robin (0 pulls one, 1 pulls two, 2 pulls three per
+        // round): each must observe exactly the serial sequence.
+        let expect = collect(&mut synthetic_source("t", Rng::new(8), 0.6, 60.0, 80.0, 0.010, 60.0));
+        let inner = synthetic_source("t", Rng::new(8), 0.6, 60.0, 80.0, 0.010, 60.0);
+        let mut cons = tee(Box::new(inner), 3);
+        let mut got: Vec<Vec<Arrival>> = vec![Vec::new(); 3];
+        let mut open = true;
+        while open {
+            open = false;
+            for (i, c) in cons.iter_mut().enumerate() {
+                for _ in 0..=i {
+                    if let Some(a) = c.next_arrival() {
+                        got[i].push(a);
+                        open = true;
+                    }
+                }
+            }
+        }
+        for (i, g) in got.iter().enumerate() {
+            assert_eq!(g, &expect, "tee consumer {i} diverged from the serial stream");
+        }
+        for c in &mut cons {
+            assert_eq!(c.next_arrival(), None, "exhausted consumers stay exhausted");
+        }
+    }
+
+    #[test]
+    fn tee_buffer_is_bounded_by_consumer_spread_and_drop_releases_it() {
+        let t = AppTrace::new(
+            "x",
+            (0..100)
+                .map(|i| Arrival { time: i as f64, size: 0.01 })
+                .collect(),
+            100.0,
+        );
+        let expect = t.arrivals.clone();
+        let mut cons = tee(Box::new(t.into_source()), 3);
+        let (mut fast, mid, mut slow) = {
+            let mut it = cons.into_iter();
+            (it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
+        };
+        // The fast consumer runs 40 ahead; the shared buffer must hold
+        // that whole span for the two stalled siblings.
+        let mut fast_got = Vec::new();
+        for _ in 0..40 {
+            fast_got.push(fast.next_arrival().unwrap());
+        }
+        assert_eq!(fast.shared.borrow().buf.len(), 40);
+        // Dropping both laggards releases the buffered span entirely.
+        drop(mid);
+        drop(slow.next_arrival().unwrap()); // slow consumes one first
+        drop(slow);
+        assert_eq!(fast.shared.borrow().buf.len(), 0, "drop must trim the buffer");
+        // The surviving consumer still sees the exact serial stream.
+        while let Some(a) = fast.next_arrival() {
+            fast_got.push(a);
+        }
+        assert_eq!(fast_got, expect);
+    }
+
+    #[test]
+    fn tee_len_hint_stays_exact_through_interleaving() {
+        let t = AppTrace::new(
+            "x",
+            (0..10)
+                .map(|i| Arrival { time: i as f64, size: 0.01 })
+                .collect(),
+            10.0,
+        );
+        let mut cons = tee(Box::new(KnownLen::new(Box::new(t.into_source()), 10)), 2);
+        assert_eq!(cons[0].len_hint(), Some(10));
+        assert_eq!(cons[1].len_hint(), Some(10));
+        // Consumer 0 pulls 4: its own hint shrinks, its sibling's holds
+        // (buffered-ahead arrivals count toward the sibling's remainder).
+        for _ in 0..4 {
+            cons[0].next_arrival();
+        }
+        assert_eq!(cons[0].len_hint(), Some(6));
+        assert_eq!(cons[1].len_hint(), Some(10));
+        cons[1].next_arrival();
+        assert_eq!(cons[1].len_hint(), Some(9));
+        // Drain consumer 0 past exhaustion: hints stay exact to the end.
+        while cons[0].next_arrival().is_some() {}
+        assert_eq!(cons[0].len_hint(), Some(0));
+        assert_eq!(cons[1].len_hint(), Some(9));
+    }
+
+    #[test]
+    fn tee_over_merge_source_preserves_the_merged_order() {
+        let a = AppTrace::new(
+            "a",
+            vec![
+                Arrival { time: 0.0, size: 0.1 },
+                Arrival { time: 2.0, size: 0.1 },
+            ],
+            3.0,
+        );
+        let b = AppTrace::new(
+            "b",
+            vec![
+                Arrival { time: 0.0, size: 0.2 },
+                Arrival { time: 1.0, size: 0.2 },
+            ],
+            5.0,
+        );
+        let serial = {
+            let mut m = MergeSource::new(
+                "ab",
+                vec![Box::new(TraceSource::new(&a)), Box::new(TraceSource::new(&b))],
+            );
+            collect(&mut m)
+        };
+        let m = MergeSource::new(
+            "ab",
+            vec![Box::new(TraceSource::new(&a)), Box::new(TraceSource::new(&b))],
+        );
+        let mut cons = tee(Box::new(m), 2);
+        // Consumer 0 drains completely before consumer 1 starts — the
+        // worst-case spread (whole stream buffered).
+        let first = collect(&mut cons[0]);
+        let second = collect(&mut cons[1]);
+        assert_eq!(first, serial);
+        assert_eq!(second, serial);
     }
 }

@@ -325,6 +325,105 @@ mod pool_index_props {
     }
 }
 
+/// Tee fan-out invariant (the property that makes lockstep fitting's
+/// abort-dropout bit-identical to serial per-candidate passes): dropping
+/// any subset of consumers at any points mid-stream never perturbs what
+/// the surviving consumers observe — every survivor sees exactly the
+/// full serial stream, in order, bit for bit, and every dropped consumer
+/// saw exactly a prefix of it.
+#[cfg(test)]
+mod tee_props {
+    use super::*;
+    use crate::trace::{tee, Arrival, TeeSource, VecSource};
+
+    struct Consumer {
+        src: TeeSource<'static>,
+        got: Vec<Arrival>,
+        done: bool,
+        drop_after: Option<usize>,
+    }
+
+    #[test]
+    fn sibling_drops_never_perturb_surviving_consumers() {
+        prop_check(40, |case| {
+            // Random nondecreasing trace with frequent time ties.
+            let n_arr = case.len(120);
+            let mut t = 0.0;
+            let arrivals: Vec<Arrival> = (0..n_arr)
+                .map(|_| {
+                    t += 0.25 * case.rng.below(4) as f64;
+                    Arrival {
+                        time: t,
+                        size: 0.001 + case.rng.range_f64(0.0, 0.01),
+                    }
+                })
+                .collect();
+            let n = 2 + case.rng.below(4) as usize;
+            let src = VecSource::new("prop", arrivals.clone(), t + 1.0);
+            let mut consumers: Vec<Option<Consumer>> = tee(Box::new(src), n)
+                .into_iter()
+                .enumerate()
+                .map(|(i, src)| {
+                    // ~half the consumers abort at a random pull count;
+                    // the last consumer always survives.
+                    let drop_after = if i + 1 < n && case.rng.chance(0.5) {
+                        Some(case.rng.below(n_arr as u64 + 1) as usize)
+                    } else {
+                        None
+                    };
+                    Some(Consumer {
+                        src,
+                        got: Vec::new(),
+                        done: false,
+                        drop_after,
+                    })
+                })
+                .collect();
+            loop {
+                let live: Vec<usize> = (0..n)
+                    .filter(|&i| consumers[i].as_ref().is_some_and(|c| !c.done))
+                    .collect();
+                if live.is_empty() {
+                    break;
+                }
+                let i = live[case.rng.below(live.len() as u64) as usize];
+                let c = consumers[i].as_mut().unwrap();
+                if c.drop_after == Some(c.got.len()) {
+                    // Abort mid-pass: the consumer vanishes (Drop trims
+                    // its buffer claim); its prefix must already match.
+                    if c.got[..] != arrivals[..c.got.len()] {
+                        return PropResult::assert(
+                            false,
+                            format!("dropped consumer {i} prefix diverged (seed {})", case.seed),
+                        );
+                    }
+                    consumers[i] = None;
+                    continue;
+                }
+                match c.src.next_arrival() {
+                    Some(a) => c.got.push(a),
+                    None => c.done = true,
+                }
+            }
+            for (i, c) in consumers.into_iter().enumerate() {
+                if let Some(c) = c {
+                    if c.got != arrivals {
+                        return PropResult::assert(
+                            false,
+                            format!(
+                                "surviving consumer {i} diverged from the serial stream \
+                                 (seed {})",
+                                case.seed
+                            ),
+                        );
+                    }
+                }
+            }
+            PropResult::pass()
+        });
+    }
+}
+
 /// Simulator invariants checked through the prop harness: the worker
 /// [`crate::sim::pool::Pool`] must respect the configured `max_cpus` /
 /// `max_fpgas` caps for every scheduler, and aggregate energy/cost must

@@ -1,12 +1,15 @@
 //! Regression pins for the fitting-search rewrite and the sweep profile
 //! cache:
 //!
-//! 1. **Search parity** — the galloping-bisection fit must equal the old
-//!    linear-scan reference (same fitted fleet/headroom AND bit-identical
-//!    winning run) across randomized tie-dense workloads. Feasibility is
-//!    monotone in the candidate (pinned separately by
-//!    `more_headroom_fewer_misses`), so the least feasible candidate the
-//!    bisection finds is the first feasible one the scan found.
+//! 1. **Search parity** — the production fit (lockstep engine) must
+//!    equal the old linear-scan reference (same fitted fleet/headroom
+//!    AND bit-identical winning run) across randomized tie-dense
+//!    workloads, and the lockstep engine must equal the serial
+//!    gallop+bisect engine on fitted candidate, winning run, overall
+//!    feasibility, and per-candidate verdicts wherever the two probe the
+//!    same candidate. Feasibility is monotone in the candidate (pinned
+//!    separately by `more_headroom_fewer_misses`), so the least feasible
+//!    candidate any of the three strategies finds is the same one.
 //! 2. **Early-abort soundness** — a bounded pass aborts ⟺ the full pass
 //!    would have been infeasible, and an unaborted bounded pass is
 //!    bit-identical to the unbounded run.
@@ -17,7 +20,7 @@
 
 use spork::config::{PlatformConfig, SchedulerKind, SimConfig};
 use spork::exp::{Cell, SweepCell, SweepGrid, WorkloadSpec};
-use spork::sched::{self, fpga_dynamic, fpga_static};
+use spork::sched::{self, fpga_dynamic, fpga_static, FitEngine, FitStats, FIT_HARD_CEILING};
 use spork::sim::{self, Metrics, RunResult};
 use spork::trace::{synthetic_app, AppTrace};
 use spork::util::rng::Rng;
@@ -160,6 +163,140 @@ fn early_abort_is_sound_for_every_candidate() {
                     "aborted pass processed more than the full pass"
                 );
             }
+        }
+    }
+}
+
+/// Per-candidate feasibility verdicts where two engines probed the same
+/// candidate must agree (the serial engine bisects, the lockstep engine
+/// sweeps the bracket, but the ladder rungs and the fitted candidate are
+/// common ground).
+fn assert_shared_verdicts_agree(a: &FitStats, b: &FitStats, what: &str) {
+    for pa in a.passes() {
+        for pb in b.passes() {
+            // Skip the unbounded ceiling rerun: its pass is recorded with
+            // the full-trace arrivals and a fresh feasibility evaluation,
+            // but both engines only reach it already knowing the verdict.
+            if pa.candidate == pb.candidate && pa.aborted == pb.aborted {
+                assert_eq!(
+                    pa.feasible, pb.feasible,
+                    "{what}: engines disagree on candidate {}",
+                    pa.candidate
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lockstep_fit_equals_serial_engine() {
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    for (i, trace) in workloads().iter().enumerate() {
+        for tol in [0.005, 0.02] {
+            let (sr, sk, ss) = fpga_dynamic::fit_source_stats_with(
+                FitEngine::Serial,
+                &|| Box::new(trace.source()),
+                &cfg,
+                &defaults,
+                tol,
+            );
+            let (lr, lk, ls) = fpga_dynamic::fit_source_stats_with(
+                FitEngine::Lockstep,
+                &|| Box::new(trace.source()),
+                &cfg,
+                &defaults,
+                tol,
+            );
+            assert_eq!(sk, lk, "dynamic w{i} tol {tol}: fitted k diverged");
+            assert_eq!(ss.feasible, ls.feasible, "dynamic w{i} tol {tol}: feasible");
+            assert_eq!(ss.fitted_candidate, ls.fitted_candidate);
+            assert_eq!(ss.total_arrivals, ls.total_arrivals);
+            assert_runs_identical(&sr, &lr, &format!("dynamic w{i} tol {tol} engines"));
+            assert_shared_verdicts_agree(&ss, &ls, &format!("dynamic w{i} tol {tol}"));
+
+            let (sr, sfleet, ss) = fpga_static::fit_source_stats_with(
+                FitEngine::Serial,
+                &|| Box::new(trace.source()),
+                &cfg,
+                &defaults,
+                tol,
+            );
+            let (lr, lfleet, ls) = fpga_static::fit_source_stats_with(
+                FitEngine::Lockstep,
+                &|| Box::new(trace.source()),
+                &cfg,
+                &defaults,
+                tol,
+            );
+            assert_eq!(sfleet, lfleet, "static w{i} tol {tol}: fitted fleet diverged");
+            assert_eq!(ss.feasible, ls.feasible, "static w{i} tol {tol}: feasible");
+            assert_eq!(ss.fitted_candidate, ls.fitted_candidate);
+            assert_eq!(ss.total_arrivals, ls.total_arrivals);
+            assert_runs_identical(&sr, &lr, &format!("static w{i} tol {tol} engines"));
+            assert_shared_verdicts_agree(&ss, &ls, &format!("static w{i} tol {tol}"));
+        }
+    }
+}
+
+#[test]
+fn infeasible_everywhere_reports_exact_total_arrivals() {
+    // With deadline factor 0 every completion misses, so no candidate is
+    // ever feasible: both engines must hit the hard ceiling, mark the
+    // search infeasible, return a *full* run (not an aborted prefix),
+    // and still report the workload's exact arrival count.
+    let mut cfg = SimConfig::paper_default();
+    cfg.deadline_factor = 0.0;
+    let defaults = PlatformConfig::paper_default();
+    let arrivals = vec![
+        spork::trace::Arrival { time: 0.1, size: 0.010 },
+        spork::trace::Arrival { time: 0.2, size: 0.010 },
+        spork::trace::Arrival { time: 0.3, size: 0.010 },
+    ];
+    let trace = AppTrace::new("doomed", arrivals, 1.0);
+    for engine in [FitEngine::Serial, FitEngine::Lockstep] {
+        for (what, run, cand, stats) in [
+            {
+                let (r, k, s) = fpga_dynamic::fit_source_stats_with(
+                    engine,
+                    &|| Box::new(trace.source()),
+                    &cfg,
+                    &defaults,
+                    0.005,
+                );
+                ("dynamic", r, k, s)
+            },
+            {
+                let (r, fleet, s) = fpga_static::fit_source_stats_with(
+                    engine,
+                    &|| Box::new(trace.source()),
+                    &cfg,
+                    &defaults,
+                    0.005,
+                );
+                ("static", r, fleet, s)
+            },
+        ] {
+            assert!(!stats.feasible, "{what} {engine:?}: must be infeasible");
+            assert_eq!(
+                stats.fitted_candidate, FIT_HARD_CEILING,
+                "{what} {engine:?}: ceiling candidate"
+            );
+            assert!(cand >= FIT_HARD_CEILING, "{what} {engine:?}: fitted value");
+            assert_eq!(
+                stats.total_arrivals, 3,
+                "{what} {engine:?}: exact workload count even on the ceiling path"
+            );
+            assert_eq!(
+                run.metrics.requests, 3,
+                "{what} {engine:?}: returned run covers the whole trace"
+            );
+            assert_eq!(run.metrics.deadline_misses, 3);
+            // The final recorded pass is the unbounded full rerun.
+            let last = stats.passes().last().unwrap();
+            assert!(!last.aborted);
+            assert_eq!(last.arrivals, 3);
+            assert_eq!(last.candidate, FIT_HARD_CEILING);
         }
     }
 }

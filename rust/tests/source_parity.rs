@@ -12,7 +12,7 @@ use spork::config::{PlatformConfig, SchedulerKind, SimConfig, SizeBucket};
 use spork::trace::production::{self, Dataset, ProductionParams};
 use spork::trace::{
     self, poisson, synthetic_source, AppTrace, Arrival, ArrivalSource, MergeSource, RateTrace,
-    TraceSource,
+    TeeSource, TraceSource,
 };
 use spork::util::rng::Rng;
 
@@ -204,4 +204,191 @@ fn streaming_run_equals_materialized_run() {
             assert_eq!(via_trace.metrics.cpu_spinups, via_source.metrics.cpu_spinups);
         }
     }
+}
+
+// ---- tee fan-out properties -------------------------------------------
+//
+// The lockstep fitting engine fans one stream out to N concurrent
+// consumers via `trace::tee`. The property that makes lockstep
+// bit-identical to serial fitting: **every consumer observes exactly the
+// serial stream** — same arrivals, same order, same count, bit for bit —
+// no matter how consumer pulls interleave, and no matter which siblings
+// drop out early (aborted candidates). Replayed here across seeds and
+// seed-derived interleavings for each source family the fitting searches
+// actually stream: PoissonSource (synthetic), MergeSource (multi-app),
+// CsvSource (saved traces).
+
+/// Drive tee consumers with a seed-derived random interleaving, dropping
+/// consumer `i` after `drop_after[i]` pulls (None = let it finish), and
+/// assert every survivor saw exactly `expect` and every dropped consumer
+/// saw exactly the matching prefix.
+fn assert_tee_consumers_match_serial(
+    expect: &[Arrival],
+    consumers: Vec<TeeSource<'_>>,
+    seed: u64,
+    drop_after: &[Option<usize>],
+) {
+    struct Slot<'a> {
+        src: TeeSource<'a>,
+        got: Vec<Arrival>,
+        done: bool,
+    }
+    let n = consumers.len();
+    assert_eq!(drop_after.len(), n);
+    let mut rng = Rng::for_stream(9000, seed);
+    let mut slots: Vec<Option<Slot>> = consumers
+        .into_iter()
+        .map(|src| {
+            Some(Slot {
+                src,
+                got: Vec::new(),
+                done: false,
+            })
+        })
+        .collect();
+    let mut survivors = 0usize;
+    loop {
+        let live: Vec<usize> = (0..n)
+            .filter(|&i| slots[i].as_ref().is_some_and(|s| !s.done))
+            .collect();
+        if live.is_empty() {
+            break;
+        }
+        let i = live[rng.below(live.len() as u64) as usize];
+        let slot = slots[i].as_mut().unwrap();
+        match slot.src.next_arrival() {
+            Some(a) => slot.got.push(a),
+            None => {
+                slot.done = true;
+                // Exhaustion is stable: further pulls keep yielding None.
+                assert!(slot.src.next_arrival().is_none(), "consumer {i} resurrected");
+            }
+        }
+        if !slot.done && drop_after[i] == Some(slot.got.len()) {
+            // Early drop (an aborted lockstep candidate): the prefix seen
+            // so far must already match, and the drop must not perturb
+            // the siblings — checked implicitly by their own asserts.
+            assert_eq!(
+                &slot.got[..],
+                &expect[..slot.got.len()],
+                "dropped consumer {i} (seed {seed}): prefix diverged"
+            );
+            slots[i] = None;
+        }
+    }
+    for (i, slot) in slots.into_iter().enumerate() {
+        if let Some(s) = slot {
+            assert_eq!(
+                s.got, expect,
+                "consumer {i} (seed {seed}) diverged from the serial stream"
+            );
+            survivors += 1;
+        }
+    }
+    assert!(survivors >= 1, "at least one consumer must run to completion");
+}
+
+/// Seed-derived drop plan: on odd seeds, one consumer aborts a third of
+/// the way through the stream (never the designated survivor, consumer
+/// n-1).
+fn drop_plan(seed: u64, n: usize, stream_len: usize) -> Vec<Option<usize>> {
+    let mut plan = vec![None; n];
+    if seed % 2 == 1 && stream_len >= 3 && n >= 2 {
+        plan[(seed as usize) % (n - 1)] = Some((stream_len / 3).max(1));
+    }
+    plan
+}
+
+#[test]
+fn tee_over_poisson_source_matches_serial_across_seeds() {
+    for seed in 0..10u64 {
+        let mut shape_rng = Rng::for_stream(300, seed);
+        let slots = 3 + shape_rng.below(30) as usize;
+        let rates: Vec<f64> = (0..slots)
+            .map(|_| {
+                if shape_rng.chance(0.2) {
+                    0.0
+                } else {
+                    shape_rng.range_f64(0.0, 80.0)
+                }
+            })
+            .collect();
+        let dt = *shape_rng.choose(&[1.0, 5.0]);
+        let rates = RateTrace::new(dt, rates);
+        let make = || {
+            spork::trace::PoissonSource::new(
+                "p",
+                Rng::for_stream(8, seed),
+                rates.clone(),
+                rates.duration(),
+                Box::new(|t| 0.01 + t * 1e-6),
+            )
+        };
+        let expect = drain(&mut make());
+        let n = 2 + (seed as usize) % 3;
+        let consumers = trace::tee(Box::new(make()), n);
+        let plan = drop_plan(seed, n, expect.len());
+        assert_tee_consumers_match_serial(&expect, consumers, seed, &plan);
+    }
+}
+
+#[test]
+fn tee_over_merge_source_matches_serial_across_seeds() {
+    for seed in 0..6u64 {
+        let traces: Vec<AppTrace> = (0..3)
+            .map(|i| {
+                trace::synthetic_app_dt(
+                    &format!("app{i}"),
+                    &mut Rng::for_stream(seed, i),
+                    0.6,
+                    60.0,
+                    15.0 + 10.0 * i as f64,
+                    0.010,
+                    60.0,
+                )
+            })
+            .collect();
+        let make = |traces: &[AppTrace]| {
+            let sources: Vec<Box<dyn ArrivalSource>> = traces
+                .iter()
+                .map(|t| Box::new(t.clone().into_source()) as Box<dyn ArrivalSource>)
+                .collect();
+            MergeSource::new("all", sources)
+        };
+        let expect = drain(&mut make(&traces));
+        let n = 3;
+        let consumers = trace::tee(Box::new(make(&traces)), n);
+        let plan = drop_plan(seed, n, expect.len());
+        assert_tee_consumers_match_serial(&expect, consumers, seed, &plan);
+    }
+}
+
+#[test]
+fn tee_over_csv_source_matches_serial() {
+    let dir = std::env::temp_dir().join(format!("spork-tee-csv-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("teed.csv");
+    for seed in 0..4u64 {
+        let app = trace::synthetic_app(
+            "teed",
+            &mut Rng::for_stream(400, seed),
+            0.6,
+            90.0,
+            25.0,
+            0.010,
+        );
+        spork::trace::io::save_csv(&app, &path).unwrap();
+        // CSV round-trips at {:.6} precision; the serial reference is the
+        // re-parsed stream, so consumers are compared bit-for-bit against
+        // what the file actually yields.
+        let expect = drain(&mut spork::trace::CsvSource::open(&path).unwrap());
+        let n = 2 + (seed as usize) % 2;
+        let consumers = trace::tee(
+            Box::new(spork::trace::CsvSource::open(&path).unwrap()),
+            n,
+        );
+        let plan = drop_plan(seed, n, expect.len());
+        assert_tee_consumers_match_serial(&expect, consumers, seed, &plan);
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
