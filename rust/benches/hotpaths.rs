@@ -32,6 +32,7 @@ fn bench_sweep_engine() {
                         duration: 240.0,
                     },
                     seed_base: 71,
+                    scenario: None,
                 });
             }
         }
@@ -79,7 +80,7 @@ fn state_with_workers(n_fpga: u32, n_cpu: u32) -> SimState {
     cfg.platform.cpu.spin_up = 0.0;
     let mut sim = SimState::new(cfg);
     let mut rng = Rng::new(2);
-    for kind in [WorkerKind::Fpga, WorkerKind::Cpu] {
+    for kind in WorkerKind::EFFICIENT_FIRST {
         let n = if kind == WorkerKind::Fpga { n_fpga } else { n_cpu };
         for _ in 0..n {
             let id = sim.alloc(kind).unwrap();
@@ -115,6 +116,7 @@ fn bench_dispatch() {
             arrival: 0.0,
             size: 0.010,
             deadline: 0.2,
+            attempt: 0,
         };
         for policy in [
             DispatchPolicy::EfficientFirst,
@@ -125,7 +127,7 @@ fn bench_dispatch() {
             common::time_it(
                 &format!("{} @ pool {pool}", policy.name()),
                 20_000,
-                || d.find(&sim, &req, &[WorkerKind::Fpga, WorkerKind::Cpu]),
+                || d.find(&sim, &req, &WorkerKind::EFFICIENT_FIRST),
             );
         }
     }

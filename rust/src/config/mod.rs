@@ -29,6 +29,16 @@ pub enum SchedulerKind {
         /// SporkC-ideal), ignoring spin-up overhead accounting (§5.1).
         ideal: bool,
     },
+    /// Tessera-style greedy spot baseline: run everything on the cheap
+    /// preemptible kind, re-dispatching preempted work back onto it.
+    GreedySpot,
+    /// Tessera-style fallback baseline: prefer the spot kind, but route
+    /// retries (and spot-infeasible requests) to on-demand CPUs.
+    OndemandFallback,
+    /// Spork (energy objective) wrapped with an on-demand retry fallback:
+    /// re-dispatched requests go straight to CPUs instead of re-entering
+    /// Alg-3 dispatch.
+    SporkFallback,
 }
 
 impl SchedulerKind {
@@ -60,6 +70,9 @@ impl SchedulerKind {
             "spork-b" => Self::spork_b(),
             "spork-e-ideal" => Self::spork_e_ideal(),
             "spork-c-ideal" => Self::spork_c_ideal(),
+            "greedy-spot" => SchedulerKind::GreedySpot,
+            "ondemand-fallback" => SchedulerKind::OndemandFallback,
+            "spork-fallback" => SchedulerKind::SporkFallback,
             _ => return None,
         })
     }
@@ -84,6 +97,9 @@ impl SchedulerKind {
                     base.into()
                 }
             }
+            SchedulerKind::GreedySpot => "greedy-spot".into(),
+            SchedulerKind::OndemandFallback => "ondemand-fallback".into(),
+            SchedulerKind::SporkFallback => "spork-fallback".into(),
         }
     }
 
@@ -99,6 +115,9 @@ impl SchedulerKind {
             "spork-b" => "SporkB".into(),
             "spork-e-ideal" => "SporkE-ideal".into(),
             "spork-c-ideal" => "SporkC-ideal".into(),
+            "greedy-spot" => "GreedySpot".into(),
+            "ondemand-fallback" => "OnDemandFallback".into(),
+            "spork-fallback" => "SporkFallback".into(),
             other => other.into(),
         }
     }
@@ -115,6 +134,20 @@ impl SchedulerKind {
             Self::spork_e(),
             Self::spork_c_ideal(),
             Self::spork_e_ideal(),
+        ]
+    }
+
+    /// The roster the scenario experiments compare: the tessera-style
+    /// spot baselines, the fallback-wrapped Spork, and two Table-8
+    /// members for reference. Kept out of [`Self::table8_roster`] so the
+    /// paper tables stay exactly the paper's.
+    pub fn scenario_roster() -> Vec<SchedulerKind> {
+        vec![
+            SchedulerKind::CpuDynamic,
+            Self::spork_e(),
+            SchedulerKind::GreedySpot,
+            SchedulerKind::OndemandFallback,
+            SchedulerKind::SporkFallback,
         ]
     }
 }
@@ -301,11 +334,26 @@ mod tests {
 
     #[test]
     fn scheduler_names_round_trip() {
-        for k in SchedulerKind::table8_roster() {
+        for k in SchedulerKind::table8_roster()
+            .into_iter()
+            .chain(SchedulerKind::scenario_roster())
+        {
             let name = k.name();
             assert_eq!(SchedulerKind::from_name(&name), Some(k.clone()), "{name}");
         }
         assert_eq!(SchedulerKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn scenario_roster_excluded_from_table8() {
+        for k in [
+            SchedulerKind::GreedySpot,
+            SchedulerKind::OndemandFallback,
+            SchedulerKind::SporkFallback,
+        ] {
+            assert!(!SchedulerKind::table8_roster().contains(&k), "{}", k.name());
+            assert!(SchedulerKind::scenario_roster().contains(&k), "{}", k.name());
+        }
     }
 
     #[test]

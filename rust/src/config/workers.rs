@@ -20,10 +20,30 @@ pub enum WorkerKind {
 }
 
 impl WorkerKind {
+    /// The full worker-class roster, in canonical (pool index) order.
+    /// Every "for each kind" loop should iterate this instead of a
+    /// hardcoded array so a third platform lands in one place.
+    pub const ALL: [WorkerKind; 2] = [WorkerKind::Cpu, WorkerKind::Fpga];
+
+    /// The roster in dispatch-preference order (Alg 3 tries the
+    /// energy-efficient kind first). Distinct from [`WorkerKind::ALL`]
+    /// because here the order is semantic, not just an enumeration.
+    pub const EFFICIENT_FIRST: [WorkerKind; 2] = [WorkerKind::Fpga, WorkerKind::Cpu];
+
     pub fn name(&self) -> &'static str {
         match self {
             WorkerKind::Cpu => "cpu",
             WorkerKind::Fpga => "fpga",
+        }
+    }
+
+    /// Index of this kind in [`WorkerKind::ALL`] (stable across the repo:
+    /// per-kind state arrays are `[T; WorkerKind::ALL.len()]`).
+    #[inline]
+    pub fn index(&self) -> usize {
+        match self {
+            WorkerKind::Cpu => 0,
+            WorkerKind::Fpga => 1,
         }
     }
 }
@@ -114,16 +134,37 @@ impl WorkerParams {
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.spin_up >= 0.0, "spin_up must be >= 0");
-        anyhow::ensure!(self.spin_down >= 0.0, "spin_down must be >= 0");
-        anyhow::ensure!(self.speedup > 0.0, "speedup must be > 0");
-        anyhow::ensure!(self.busy_power >= 0.0, "busy_power must be >= 0");
-        anyhow::ensure!(self.idle_power >= 0.0, "idle_power must be >= 0");
+        anyhow::ensure!(
+            self.spin_up.is_finite() && self.spin_up >= 0.0,
+            "spin_up must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.spin_down.is_finite() && self.spin_down >= 0.0,
+            "spin_down must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.speedup.is_finite() && self.speedup > 0.0,
+            "speedup must be finite and > 0"
+        );
+        // Strictly positive: busy_power is the denominator of the energy
+        // advantage and the per-joule efficiency metrics — 0 W "validates"
+        // into an infinite advantage.
+        anyhow::ensure!(
+            self.busy_power.is_finite() && self.busy_power > 0.0,
+            "busy_power must be finite and > 0"
+        );
+        anyhow::ensure!(
+            self.idle_power.is_finite() && self.idle_power >= 0.0,
+            "idle_power must be finite and >= 0"
+        );
         anyhow::ensure!(
             self.idle_power <= self.busy_power,
             "idle_power must not exceed busy_power"
         );
-        anyhow::ensure!(self.cost_per_hour >= 0.0, "cost_per_hour must be >= 0");
+        anyhow::ensure!(
+            self.cost_per_hour.is_finite() && self.cost_per_hour >= 0.0,
+            "cost_per_hour must be finite and >= 0"
+        );
         Ok(())
     }
 }
@@ -152,8 +193,24 @@ impl PlatformConfig {
 
     /// FPGA busy-energy efficiency over CPU for the same work:
     /// (B_c * 1) / (B_f / S). Paper §3.2 defaults: 150/(50/2) = 6x.
+    ///
+    /// Degenerate platforms (zero or non-finite busy power / speedup —
+    /// rejected by [`WorkerParams::validate`], but this is also called on
+    /// hand-built configs) clamp to 1.0 ("no advantage") instead of
+    /// returning an infinite or NaN ratio that would poison downstream
+    /// breakeven math.
     pub fn fpga_energy_advantage(&self) -> f64 {
-        self.cpu.busy_power / (self.fpga.busy_power / self.fpga.speedup)
+        let per_work_fpga = self.fpga.busy_power / self.fpga.speedup;
+        if !per_work_fpga.is_finite() || per_work_fpga <= 0.0 || !self.cpu.busy_power.is_finite()
+        {
+            return 1.0;
+        }
+        let adv = self.cpu.busy_power / per_work_fpga;
+        if adv.is_finite() {
+            adv
+        } else {
+            1.0
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -210,6 +267,52 @@ mod tests {
         let mut p = WorkerParams::cpu_default();
         p.idle_power = 200.0; // > busy
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_and_nonfinite_power() {
+        // busy_power: 0.0 used to validate and yield an infinite
+        // energy advantage.
+        let mut p = WorkerParams::fpga_default();
+        p.busy_power = 0.0;
+        p.idle_power = 0.0;
+        assert!(p.validate().is_err());
+        for bad in [f64::NAN, f64::INFINITY, -1.0] {
+            let mut p = WorkerParams::fpga_default();
+            p.busy_power = bad;
+            assert!(p.validate().is_err(), "busy_power {bad}");
+            let mut p = WorkerParams::cpu_default();
+            p.spin_up = bad;
+            assert!(p.validate().is_err(), "spin_up {bad}");
+            let mut p = WorkerParams::cpu_default();
+            p.cost_per_hour = bad;
+            assert!(p.validate().is_err(), "cost_per_hour {bad}");
+        }
+    }
+
+    #[test]
+    fn energy_advantage_guards_degenerate_platforms() {
+        let mut p = PlatformConfig::paper_default();
+        p.fpga.busy_power = 0.0;
+        assert_eq!(p.fpga_energy_advantage(), 1.0);
+        let mut p = PlatformConfig::paper_default();
+        p.fpga.busy_power = f64::NAN;
+        assert_eq!(p.fpga_energy_advantage(), 1.0);
+        let mut p = PlatformConfig::paper_default();
+        p.cpu.busy_power = f64::INFINITY;
+        assert_eq!(p.fpga_energy_advantage(), 1.0);
+        // Sane platforms are untouched.
+        let p = PlatformConfig::paper_default();
+        assert!((p.fpga_energy_advantage() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roster_consts_cover_both_kinds() {
+        assert_eq!(WorkerKind::ALL.len(), WorkerKind::EFFICIENT_FIRST.len());
+        for kind in WorkerKind::ALL {
+            assert!(WorkerKind::EFFICIENT_FIRST.contains(&kind));
+            assert_eq!(WorkerKind::ALL[kind.index()], kind);
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@
 use crate::cli::Args;
 use crate::config::{DispatchPolicy, PlatformConfig, SchedulerKind, SimConfig, WorkerKind};
 use crate::policy::{Action, Observation, Policy, PolicyView, Target};
+use crate::scenario::{FaultPlan, ScenarioConfig};
 use crate::sched::{self, dispatch::Dispatcher, FitEngine, FitStats};
 use crate::sim;
 use crate::trace::{synthetic_source, ArrivalSource};
@@ -417,6 +418,165 @@ pub fn run_bench_sim(
     }
 }
 
+/// The `spork bench-sim --scenario` axis: one streaming replay under a
+/// fault pack, with the planned fault composition (for the Python logic
+/// oracle to cross-validate against `tools/scenario_oracle.py`) and the
+/// runtime adversity tallies, written to `BENCH_scenario.json`.
+#[derive(Debug, Clone)]
+pub struct ScenarioBenchReport {
+    pub scheduler: String,
+    pub scenario: String,
+    pub seed_base: u64,
+    pub seed: u64,
+    pub sim_seconds: f64,
+    pub arrivals: u64,
+    pub completions: u64,
+    pub abandoned: u64,
+    pub preemptions: u64,
+    pub worker_failures: u64,
+    pub redispatches: u64,
+    pub work_lost_seconds: f64,
+    pub deadline_misses: u64,
+    /// Planned (pre-run) fault composition — a pure function of
+    /// `(scenario, seed_base, seed, sim_seconds)`.
+    pub plan_price_ticks: u64,
+    pub plan_preemptions: u64,
+    pub plan_failures: u64,
+    /// Order-sensitive digest of the full plan (hex), the value the
+    /// Python oracle recomputes from scratch.
+    pub plan_digest: u64,
+    pub wall_seconds: f64,
+    pub arrivals_per_sec: f64,
+}
+
+impl ScenarioBenchReport {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"scheduler\": \"{}\",\n  \"scenario\": \"{}\",\n  \
+             \"seed_base\": {},\n  \"seed\": {},\n  \"sim_seconds\": {},\n  \
+             \"arrivals\": {},\n  \"completions\": {},\n  \"abandoned\": {},\n  \
+             \"preemptions\": {},\n  \"worker_failures\": {},\n  \
+             \"redispatches\": {},\n  \"work_lost_seconds\": {:.6},\n  \
+             \"deadline_misses\": {},\n  \"plan_price_ticks\": {},\n  \
+             \"plan_preemptions\": {},\n  \"plan_failures\": {},\n  \
+             \"plan_digest\": \"{:#018x}\",\n  \"wall_seconds\": {:.3},\n  \
+             \"arrivals_per_sec\": {:.1}\n}}\n",
+            self.scheduler,
+            self.scenario,
+            self.seed_base,
+            self.seed,
+            self.sim_seconds,
+            self.arrivals,
+            self.completions,
+            self.abandoned,
+            self.preemptions,
+            self.worker_failures,
+            self.redispatches,
+            self.work_lost_seconds,
+            self.deadline_misses,
+            self.plan_price_ticks,
+            self.plan_preemptions,
+            self.plan_failures,
+            self.plan_digest,
+            self.wall_seconds,
+            self.arrivals_per_sec,
+        )
+    }
+
+    /// Arrival conservation: every arrival either completed or was
+    /// abandoned. A leak here means kills are dropping in-flight requests
+    /// on the floor (or re-dispatch double-counts).
+    pub fn assert_conservation(&self) -> Result<(), String> {
+        if self.arrivals != self.completions + self.abandoned {
+            return Err(format!(
+                "scenario conservation violated: {} arrivals != {} completions \
+                 + {} abandoned — kills are leaking in-flight requests",
+                self.arrivals, self.completions, self.abandoned
+            ));
+        }
+        Ok(())
+    }
+
+    /// Vacuity tripwire for adverse packs: a severe run that injects zero
+    /// preemptions/failures is measuring nothing — fail loudly so the
+    /// pack (or the smoke window) gets retuned.
+    pub fn assert_adversity(&self) -> Result<(), String> {
+        if self.preemptions + self.worker_failures == 0 {
+            return Err(format!(
+                "scenario tripwire is vacuous: pack '{}' injected no preemptions \
+                 or failures over {:.0}s ({} planned strikes, {} planned \
+                 failures) — retune the pack or widen the window",
+                self.scenario, self.sim_seconds, self.plan_preemptions, self.plan_failures
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Replay `target_arrivals` synthetic arrivals through `kind` under
+/// `scenario` (same workload shape as [`run_bench_sim`]); fitting stays
+/// fault-free and outside the timer.
+pub fn run_bench_sim_scenario(
+    kind: &SchedulerKind,
+    target_arrivals: u64,
+    rate: f64,
+    seed: u64,
+    scenario: &ScenarioConfig,
+) -> ScenarioBenchReport {
+    let duration = target_arrivals as f64 / rate;
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let make = move || -> Box<dyn ArrivalSource> {
+        Box::new(synthetic_source(
+            "bench",
+            Rng::for_stream(seed, 0),
+            0.65,
+            duration,
+            rate,
+            0.010,
+            60.0,
+        ))
+    };
+    let mut policy = sched::build_source(kind, &cfg, &make);
+    // The driver derives the identical plan internally (pure function);
+    // this copy only feeds the report's planned-composition fields.
+    let plan = FaultPlan::build(scenario, seed, 0, duration);
+    let counts = plan.counts();
+    let t0 = Instant::now();
+    let r = sim::run_source_scenario(
+        make(),
+        cfg.clone(),
+        &defaults,
+        policy.as_mut(),
+        scenario,
+        seed,
+        0,
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    let m = &r.metrics;
+    ScenarioBenchReport {
+        scheduler: r.scheduler.clone(),
+        scenario: scenario.name.clone(),
+        seed_base: seed,
+        seed: 0,
+        sim_seconds: duration,
+        arrivals: m.requests,
+        completions: m.completions,
+        abandoned: m.abandoned,
+        preemptions: m.preemptions,
+        worker_failures: m.worker_failures,
+        redispatches: m.redispatches,
+        work_lost_seconds: m.work_lost,
+        deadline_misses: m.deadline_misses,
+        plan_price_ticks: counts.price_ticks,
+        plan_preemptions: counts.preemptions,
+        plan_failures: counts.failures,
+        plan_digest: plan.digest(),
+        wall_seconds: wall,
+        arrivals_per_sec: m.requests as f64 / wall.max(1e-9),
+    }
+}
+
 /// A statically provisioned fleet that exists only to measure dispatch:
 /// pre-warms `cpus + fpgas` workers at t = 0, keeps them alive while the
 /// trace is live, and routes every arrival through [`Dispatcher::find`]
@@ -448,7 +608,7 @@ impl Policy for PinnedFleet {
     }
 
     fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
-        const KINDS: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
+        const KINDS: &[WorkerKind] = &WorkerKind::EFFICIENT_FIRST;
         match obs {
             Observation::Start => {
                 out.push(Action::Alloc {
@@ -571,6 +731,15 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
     if assert_fit_passes.is_some() && !fit {
         return Err("--assert-fit-passes requires --fit".into());
     }
+    let scenario = match args.get("scenario") {
+        Some(name) => Some(
+            ScenarioConfig::from_name(&name)
+                .ok_or(format!("unknown scenario pack '{name}' (fault-free|mild|severe)"))?,
+        ),
+        None => None,
+    };
+    let scenario_out = args.str_or("scenario-out", "BENCH_scenario.json");
+    let scenario_arrivals = args.u64_or("scenario-arrivals", arrivals.min(200_000))?;
     eprintln!(
         "replaying ~{arrivals} arrivals at {rate} req/s through {} (streaming)...",
         kind.display()
@@ -655,6 +824,41 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
                 "  fit passes tripwire: every lockstep search cost <= {cap} \
                  full-trace-equivalent stream traversals"
             );
+        }
+    }
+    if let Some(scen) = scenario {
+        eprintln!(
+            "scenario axis: ~{scenario_arrivals} arrivals through {} under pack '{}'...",
+            kind.display(),
+            scen.name
+        );
+        let s = run_bench_sim_scenario(&kind, scenario_arrivals, rate, seed, &scen);
+        std::fs::write(&scenario_out, s.to_json())
+            .map_err(|e| format!("writing {scenario_out}: {e}"))?;
+        println!(
+            "  scenario '{}': {} arrivals = {} completed + {} abandoned; \
+             {} preemptions, {} failures, {} re-dispatches, {:.2}s work lost \
+             (plan: {} strikes / {} failures / {} ticks, digest {:#018x}) -> {}",
+            s.scenario,
+            s.arrivals,
+            s.completions,
+            s.abandoned,
+            s.preemptions,
+            s.worker_failures,
+            s.redispatches,
+            s.work_lost_seconds,
+            s.plan_preemptions,
+            s.plan_failures,
+            s.plan_price_ticks,
+            s.plan_digest,
+            scenario_out
+        );
+        // Conservation always holds; adversity only gates adverse packs
+        // (fault-free is legitimately quiet).
+        s.assert_conservation()?;
+        if scen.is_adverse() {
+            s.assert_adversity()?;
+            println!("  scenario tripwire: pack injected real adversity (non-vacuous)");
         }
     }
     Ok(())
@@ -951,6 +1155,52 @@ mod tests {
         };
         let err = serial_only.assert_fit_passes(2.0).unwrap_err();
         assert!(err.contains("vacuous"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn scenario_bench_severe_is_nonvacuous_and_conserves() {
+        // 30k arrivals at 500/s = a 60 s window: Spork allocates its first
+        // FPGAs at the t=10 interval tick, and the severe pack's strikes
+        // after that (t=13.3 on at this seed) land on live victims — a
+        // shorter window would strike before any FPGA exists.
+        let s = run_bench_sim_scenario(
+            &SchedulerKind::spork_e(),
+            30_000,
+            500.0,
+            7,
+            &ScenarioConfig::severe(),
+        );
+        assert!(s.assert_conservation().is_ok());
+        assert!(
+            s.assert_adversity().is_ok(),
+            "severe smoke injected nothing: plan {} strikes / {} failures",
+            s.plan_preemptions,
+            s.plan_failures
+        );
+        assert_eq!(s.scenario, "severe");
+        let j = s.to_json();
+        assert!(j.contains("\"plan_digest\""));
+        assert!(crate::util::json::Json::parse(&j).is_ok(), "scenario JSON must parse");
+    }
+
+    #[test]
+    fn scenario_bench_fault_free_matches_plain_bench() {
+        let plain = run_bench_sim(&SchedulerKind::spork_e(), 3_000, 500.0, 9);
+        let s = run_bench_sim_scenario(
+            &SchedulerKind::spork_e(),
+            3_000,
+            500.0,
+            9,
+            &ScenarioConfig::fault_free(),
+        );
+        assert_eq!(s.arrivals, plain.arrivals);
+        assert_eq!(s.deadline_misses, plain.deadline_misses);
+        assert_eq!(s.preemptions + s.worker_failures + s.abandoned, 0);
+        assert_eq!(s.plan_digest, 0);
+        assert!(s.assert_conservation().is_ok());
+        // A fault-free pack claiming adversity would be a lie; the
+        // tripwire is only armed for adverse packs.
+        assert!(s.assert_adversity().is_err());
     }
 
     #[test]

@@ -58,6 +58,15 @@ pub struct Cell {
     pub cpu_req_frac: f64,
     pub fpga_spinups: f64,
     pub peak_fpgas: f64,
+    /// Scenario adversity tallies (all 0.0 on fault-free runs): spot
+    /// preemptions, independent worker failures, re-dispatched in-flight
+    /// requests, requests abandoned (budget or deadline), and the
+    /// partially-executed seconds of work lost to kills.
+    pub preemptions: f64,
+    pub worker_failures: f64,
+    pub redispatches: f64,
+    pub abandoned: f64,
+    pub work_lost: f64,
     pub runs: u32,
 }
 
@@ -75,6 +84,11 @@ impl Cell {
             cpu_req_frac: metrics.cpu_request_fraction(),
             fpga_spinups: metrics.fpga_spinups as f64,
             peak_fpgas: metrics.peak_fpgas as f64,
+            preemptions: metrics.preemptions as f64,
+            worker_failures: metrics.worker_failures as f64,
+            redispatches: metrics.redispatches as f64,
+            abandoned: metrics.abandoned as f64,
+            work_lost: metrics.work_lost,
             runs: 1,
         }
     }
@@ -89,6 +103,11 @@ impl Cell {
         self.cpu_req_frac += other.cpu_req_frac;
         self.fpga_spinups += other.fpga_spinups;
         self.peak_fpgas += other.peak_fpgas;
+        self.preemptions += other.preemptions;
+        self.worker_failures += other.worker_failures;
+        self.redispatches += other.redispatches;
+        self.abandoned += other.abandoned;
+        self.work_lost += other.work_lost;
         self.runs += other.runs;
     }
 
@@ -107,6 +126,11 @@ impl Cell {
         self.cpu_req_frac /= n;
         self.fpga_spinups /= n;
         self.peak_fpgas /= n;
+        self.preemptions /= n;
+        self.worker_failures /= n;
+        self.redispatches /= n;
+        self.abandoned /= n;
+        self.work_lost /= n;
         self
     }
 }
@@ -136,6 +160,7 @@ pub fn run_synthetic(
             duration,
         },
         seed_base,
+        scenario: None,
     });
     grid.run().pop().expect("single-cell grid")
 }

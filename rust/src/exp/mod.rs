@@ -7,12 +7,13 @@ pub mod benchsim;
 pub mod common;
 pub mod offline;
 pub mod production_exp;
+pub mod scenario;
 pub mod sensitivity;
 pub mod sweep;
 
 pub use benchsim::{
-    cmd_bench_sim, run_bench_sim, run_fit_bench, run_pool_scaling, BenchSimReport,
-    FitBenchReport, FitSearchReport, PoolScalePoint,
+    cmd_bench_sim, run_bench_sim, run_bench_sim_scenario, run_fit_bench, run_pool_scaling,
+    BenchSimReport, FitBenchReport, FitSearchReport, PoolScalePoint, ScenarioBenchReport,
 };
 pub use common::{Cell, ExpCtx};
 pub use sweep::{SweepCell, SweepGrid, WorkloadSpec};
@@ -37,6 +38,7 @@ pub fn registry() -> Vec<(&'static str, Runner, &'static str)> {
         ("fig6", sensitivity::fig6, "speedup x busy-power sensitivity"),
         ("fig7", sensitivity::fig7, "request-size sensitivity"),
         ("ablation", ablation::ablation, "design-choice ablations (predictor, idle timeout, deadline-aware)"),
+        ("scenario", scenario::scenario, "schedulers under spot preemption and worker failure"),
     ]
 }
 
@@ -53,7 +55,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>, String> {
     };
     if selected.is_empty() {
         return Err(format!(
-            "unknown experiment '{id}' (try: fig2 fig3 fig4 fig5 fig6 fig7 table8 table9 ablation all)"
+            "unknown experiment '{id}' (try: fig2 fig3 fig4 fig5 fig6 fig7 table8 table9 ablation scenario all)"
         ));
     }
     let mut all_tables = Vec::new();

@@ -1,0 +1,80 @@
+//! Scenario experiment: the scheduler roster under preemptible spot
+//! workers and fault injection (DESIGN.md §12).
+//!
+//! One row per (fault pack × scheduler): the fault-free pack pins the
+//! no-adversity baseline (bit-identical to the plain path), mild models a
+//! well-behaved spot market, severe a volatile one with short MTTFs. All
+//! cells share workload synthesis through the sweep engine; each seed
+//! replicate derives its own fault plan from `(seed_base, seed)`, so the
+//! whole grid is bit-identical for every `--jobs` value.
+
+use super::common::ExpCtx;
+use super::sweep::{SweepCell, SweepGrid, WorkloadSpec};
+use crate::config::{SchedulerKind, SimConfig};
+use crate::scenario::ScenarioConfig;
+use crate::util::table::{pct, ratio, sig3, Table};
+
+/// Seed root of the scenario grid (distinct from every other experiment
+/// so no workload stream is shared across experiments by accident).
+const SEED_BASE: u64 = 81;
+
+/// The scenario table: fault packs × the spot-aware scheduler roster.
+pub fn scenario(ctx: &ExpCtx) -> Vec<Table> {
+    let cfg = SimConfig::paper_default();
+    let roster = SchedulerKind::scenario_roster();
+    let packs = ScenarioConfig::packs();
+    let mut grid = SweepGrid::from_ctx(ctx);
+    for pack in &packs {
+        for kind in &roster {
+            grid.push(SweepCell {
+                scheduler: kind.clone(),
+                cfg: cfg.clone(),
+                workload: WorkloadSpec {
+                    burstiness: 0.65,
+                    rate: ctx.synthetic_rate(),
+                    size: 0.010,
+                    duration: ctx.synthetic_duration(),
+                },
+                seed_base: SEED_BASE,
+                scenario: Some(pack.clone()),
+            });
+        }
+    }
+    let cells = grid.run();
+
+    let mut t = Table::new(
+        "Scenario: schedulers under spot preemption and worker failure \
+         (b=0.65; per-seed fault plans)",
+        &[
+            "pack",
+            "Scheduler",
+            "Energy Eff.",
+            "Rel. Cost",
+            "Miss %",
+            "Preempt",
+            "Fail",
+            "Redisp",
+            "Abandon",
+            "Work lost (s)",
+        ],
+    );
+    let mut it = cells.iter();
+    for pack in &packs {
+        for kind in &roster {
+            let c = it.next().expect("grid/table mismatch");
+            t.row(vec![
+                pack.name.clone(),
+                kind.display(),
+                pct(c.energy_eff),
+                ratio(c.rel_cost),
+                pct(c.miss_frac),
+                sig3(c.preemptions),
+                sig3(c.worker_failures),
+                sig3(c.redispatches),
+                sig3(c.abandoned),
+                sig3(c.work_lost),
+            ]);
+        }
+    }
+    vec![t]
+}

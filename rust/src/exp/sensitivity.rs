@@ -39,6 +39,7 @@ fn cell(
             duration: ctx.synthetic_duration(),
         },
         seed_base,
+        scenario: None,
     }
 }
 

@@ -23,6 +23,7 @@
 
 use super::common::{Cell, ExpCtx};
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
+use crate::scenario::ScenarioConfig;
 use crate::sched::{self, WorkloadProfile};
 use crate::trace::AppTrace;
 use crate::util::rng::Rng;
@@ -52,6 +53,13 @@ pub struct SweepCell {
     /// Root of this cell's RNG streams; replicate `s` uses
     /// `Rng::for_stream(seed_base, s)`.
     pub seed_base: u64,
+    /// Fault scenario the cell's evaluation runs replay under (`None` =
+    /// the plain fault-free path). Fitting and oracle construction stay
+    /// fault-free either way (§5.1); the scenario only shapes the final
+    /// evaluation run, with its fault plan derived per replicate from
+    /// `(seed_base, seed)` — workload-profile sharing is unaffected
+    /// because the synthesized arrivals are scenario-independent.
+    pub scenario: Option<ScenarioConfig>,
 }
 
 /// A declarative grid of sweep cells with an execution policy.
@@ -160,8 +168,42 @@ impl SweepGrid {
 
         let runs = parallel_map(&units, self.jobs, |u, &(c, s)| {
             let cell = &self.cells[c];
-            let r = match &shared[unit_key[u]] {
-                Some(profile) => sched::run_scheduler_profile(
+            let w = &cell.workload;
+            let synth = || {
+                crate::trace::synthetic_source(
+                    "exp",
+                    Rng::for_stream(cell.seed_base, s),
+                    w.burstiness,
+                    w.duration,
+                    w.rate,
+                    w.size,
+                    60.0,
+                )
+            };
+            let r = match (&cell.scenario, &shared[unit_key[u]]) {
+                // Scenario cell: fit/build fault-free, then replay the
+                // evaluation run under the cell's fault plan (derived
+                // per replicate from `(seed_base, s)`). The profile, when
+                // shared, still supplies the arrivals.
+                (Some(scen), Some(profile)) => sched::run_scheduler_scenario(
+                    &cell.scheduler,
+                    &cell.cfg,
+                    &defaults,
+                    &|| Box::new(profile.source()),
+                    scen,
+                    cell.seed_base,
+                    s,
+                ),
+                (Some(scen), None) => sched::run_scheduler_scenario(
+                    &cell.scheduler,
+                    &cell.cfg,
+                    &defaults,
+                    &|| Box::new(synth()),
+                    scen,
+                    cell.seed_base,
+                    s,
+                ),
+                (None, Some(profile)) => sched::run_scheduler_profile(
                     &cell.scheduler,
                     profile,
                     &cell.cfg,
@@ -171,42 +213,30 @@ impl SweepGrid {
                 // kinds stream the lazy synthesis (constant memory);
                 // multi-pass kinds build a transient profile dropped at
                 // the end of the unit.
-                None => {
-                    let w = &cell.workload;
-                    let source = || {
-                        crate::trace::synthetic_source(
-                            "exp",
-                            Rng::for_stream(cell.seed_base, s),
-                            w.burstiness,
-                            w.duration,
-                            w.rate,
-                            w.size,
-                            60.0,
+                (None, None) => match &cell.scheduler {
+                    SchedulerKind::CpuDynamic
+                    | SchedulerKind::GreedySpot
+                    | SchedulerKind::OndemandFallback
+                    | SchedulerKind::SporkFallback
+                    | SchedulerKind::Spork { ideal: false, .. } => {
+                        sched::run_scheduler_source(
+                            &cell.scheduler,
+                            &cell.cfg,
+                            &defaults,
+                            &|| Box::new(synth()),
                         )
-                    };
-                    match &cell.scheduler {
-                        SchedulerKind::CpuDynamic
-                        | SchedulerKind::Spork { ideal: false, .. } => {
-                            sched::run_scheduler_source(
-                                &cell.scheduler,
-                                &cell.cfg,
-                                &defaults,
-                                &|| Box::new(source()),
-                            )
-                        }
-                        _ => {
-                            let trace = AppTrace::from_source(&mut source());
-                            let profile =
-                                WorkloadProfile::from_trace(trace, cell.cfg.interval);
-                            sched::run_scheduler_profile(
-                                &cell.scheduler,
-                                &profile,
-                                &cell.cfg,
-                                &defaults,
-                            )
-                        }
                     }
-                }
+                    _ => {
+                        let trace = AppTrace::from_source(&mut synth());
+                        let profile = WorkloadProfile::from_trace(trace, cell.cfg.interval);
+                        sched::run_scheduler_profile(
+                            &cell.scheduler,
+                            &profile,
+                            &cell.cfg,
+                            &defaults,
+                        )
+                    }
+                },
             };
             Cell::from_run(&r.metrics, &r.ideal)
         });
@@ -227,7 +257,11 @@ impl SweepGrid {
 fn needs_profile(kind: &SchedulerKind) -> bool {
     !matches!(
         kind,
-        SchedulerKind::CpuDynamic | SchedulerKind::Spork { ideal: false, .. }
+        SchedulerKind::CpuDynamic
+            | SchedulerKind::GreedySpot
+            | SchedulerKind::OndemandFallback
+            | SchedulerKind::SporkFallback
+            | SchedulerKind::Spork { ideal: false, .. }
     )
 }
 
@@ -390,6 +424,7 @@ mod tests {
                 cfg: SimConfig::paper_default(),
                 workload: w.clone(),
                 seed_base: 9,
+                scenario: None,
             });
         }
         let shared = grid.run();
@@ -400,6 +435,7 @@ mod tests {
                 cfg: SimConfig::paper_default(),
                 workload: w.clone(),
                 seed_base: 9,
+                scenario: None,
             });
             assert_eq!(&solo.run()[0], cell, "{} diverged", kind.name());
         }
@@ -425,6 +461,7 @@ mod tests {
                 cfg: SimConfig::paper_default(),
                 workload: w.clone(),
                 seed_base: 13,
+                scenario: None,
             });
         }
         let shared = grid.run();
@@ -435,6 +472,7 @@ mod tests {
                 cfg: SimConfig::paper_default(),
                 workload: w.clone(),
                 seed_base: 13,
+                scenario: None,
             });
             assert_eq!(&solo.run()[0], cell, "{} diverged", kind.name());
         }
@@ -456,6 +494,7 @@ mod tests {
                     duration: 60.0,
                 },
                 seed_base: 5,
+                scenario: None,
             });
         }
         let cells = grid.run();

@@ -21,6 +21,7 @@ pub mod opt;
 pub mod policy;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod serve;
 pub mod sim;

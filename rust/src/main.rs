@@ -16,7 +16,8 @@ fn specs() -> Vec<Spec> {
             name: "simulate",
             about: "run one scheduler over one synthetic trace and report metrics",
             opts: vec![
-                ("scheduler", true, "cpu-dynamic|fpga-static|fpga-dynamic|mark-ideal|spork-{e,c,b}[-ideal] (default spork-e)"),
+                ("scheduler", true, "cpu-dynamic|fpga-static|fpga-dynamic|mark-ideal|spork-{e,c,b}[-ideal]|greedy-spot|ondemand-fallback|spork-fallback (default spork-e)"),
+                ("scenario", true, "fault pack: fault-free|mild|severe (default fault-free)"),
                 ("burstiness", true, "b-model bias in [0.5,0.75] (default 0.6)"),
                 ("rate", true, "mean request rate per second (default 1000)"),
                 ("size", true, "request size in seconds (default 0.010)"),
@@ -59,7 +60,7 @@ fn specs() -> Vec<Spec> {
         },
         Spec {
             name: "experiment",
-            about: "regenerate a paper table/figure: fig2 fig3 fig4 fig5 fig6 fig7 table8 table9 all",
+            about: "regenerate a paper table/figure: fig2 fig3 fig4 fig5 fig6 fig7 table8 table9 ablation scenario all",
             opts: vec![
                 ("out", true, "results directory (default results/)"),
                 ("seeds", true, "trace repetitions (default 10 synthetic, 1 production)"),
@@ -84,6 +85,10 @@ fn specs() -> Vec<Spec> {
                 ("fit-arrivals", true, "arrivals for the fit axis workload (default 200000)"),
                 ("fit-out", true, "fit axis output JSON (default BENCH_fit_passes.json)"),
                 ("assert-fit-abort", true, "max trace fraction an aborted fitting pass may stream (e.g. 0.5)"),
+                ("assert-fit-passes", true, "max full-trace-equivalent stream traversals per lockstep search (e.g. 2)"),
+                ("scenario", true, "also replay under a fault pack: fault-free|mild|severe"),
+                ("scenario-arrivals", true, "arrivals for the scenario axis (default min(arrivals, 200000))"),
+                ("scenario-out", true, "scenario axis output JSON (default BENCH_scenario.json)"),
             ],
         },
         Spec {
@@ -194,7 +199,23 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     let kind = SchedulerKind::from_name(&name).ok_or(format!("unknown scheduler '{name}'"))?;
     let trace = synth_trace(args)?;
     let defaults = PlatformConfig::paper_default();
-    let r = sched::run_scheduler(&kind, &trace, &cfg, &defaults);
+    let scen_name = args.str_or("scenario", "fault-free");
+    let scen = spork::scenario::ScenarioConfig::from_name(&scen_name)
+        .ok_or(format!("unknown scenario pack '{scen_name}' (fault-free|mild|severe)"))?;
+    let r = if scen.is_adverse() {
+        let seed = args.u64_or("seed", 1)?;
+        sched::run_scheduler_scenario(
+            &kind,
+            &cfg,
+            &defaults,
+            &|| Box::new(trace.source()),
+            &scen,
+            seed,
+            0,
+        )
+    } else {
+        sched::run_scheduler(&kind, &trace, &cfg, &defaults)
+    };
     if args.has_flag("json") {
         println!("{}", spork::report::run_to_json(&r));
     } else {

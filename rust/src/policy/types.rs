@@ -29,6 +29,10 @@ pub struct Request {
     /// Service time on a CPU worker, seconds.
     pub size: f64,
     pub deadline: f64,
+    /// Dispatch attempt: 0 for a fresh arrival, incremented each time the
+    /// request is re-offered after its worker was preempted or failed.
+    /// Policies may route retries differently (on-demand fallback).
+    pub attempt: u32,
 }
 
 /// Read-only per-worker snapshot a policy sees through
@@ -96,6 +100,21 @@ pub enum Observation {
         lifetime: f64,
         peers_at_alloc: u32,
     },
+    /// Scenario fault: `worker` was killed (spot preemption, or a hardware
+    /// failure when `failure`). Its `lost` in-flight requests are re-offered
+    /// to the policy as `Arrival` observations (attempt incremented) right
+    /// after this observation, unless their retry budget or deadline is
+    /// exhausted — then the driver records them as abandoned misses.
+    Preempted {
+        worker: WorkerId,
+        kind: WorkerKind,
+        failure: bool,
+        lost: u32,
+    },
+    /// Scenario fault plan: the spot price of `kind` stepped to `price`
+    /// (a multiplier on the kind's on-demand cost rate). Also readable any
+    /// time via [`super::PolicyView::spot_price`].
+    PriceTick { kind: WorkerKind, price: f64 },
 }
 
 /// Where a dispatch should land.
@@ -130,6 +149,11 @@ pub enum Action {
     /// Hold the idle worker for another timeout window. Only meaningful in
     /// response to [`Observation::IdleExpired`].
     KeepAlive { worker: WorkerId },
+    /// Dispatch a retried request (`req.attempt > 0`) after a preemption or
+    /// failure. Applied exactly like [`Action::Dispatch`] — retries are
+    /// never double-counted in the arrival metrics either way — but the
+    /// explicit variant keeps the fallback policies' audit trail honest.
+    Redispatch { req: Request, to: Target },
 }
 
 /// A resolved side effect a driver applied — the audit stream both drivers
@@ -156,5 +180,13 @@ pub enum Effect {
     },
     KeptAlive {
         worker: WorkerId,
+    },
+    /// Scenario fault applied by the driver (not by a policy action): the
+    /// worker was removed immediately, its in-flight work drained. Serving
+    /// runtimes park the physical slot when they see this.
+    Killed {
+        worker: WorkerId,
+        kind: WorkerKind,
+        failure: bool,
     },
 }

@@ -162,6 +162,19 @@ pub trait PolicyView {
         });
         best
     }
+
+    /// Current spot price of `kind` as a multiplier on its on-demand cost
+    /// rate. 1.0 outside a scenario (and for non-spot kinds the multiplier
+    /// is informational only — they bill at the on-demand rate).
+    fn spot_price(&self, _kind: WorkerKind) -> f64 {
+        1.0
+    }
+
+    /// Whether `kind` is spot-billed (and preemptible) under the attached
+    /// scenario. Always `false` outside a scenario.
+    fn is_spot(&self, _kind: WorkerKind) -> bool {
+        false
+    }
 }
 
 /// Earliest-finishing accepting worker of `kind` — the best-effort

@@ -53,6 +53,12 @@ pub fn run_to_text(r: &RunResult, trace: &AppTrace) -> String {
         "spin-ups         : {} cpu, {} fpga | peak {} cpu, {} fpga\n",
         m.cpu_spinups, m.fpga_spinups, m.peak_cpus, m.peak_fpgas
     ));
+    if m.preemptions + m.worker_failures + m.redispatches + m.abandoned > 0 {
+        out.push_str(&format!(
+            "faults           : {} preempted, {} failed | {} re-dispatched, {} abandoned, {:.1}s work lost\n",
+            m.preemptions, m.worker_failures, m.redispatches, m.abandoned, m.work_lost
+        ));
+    }
     out
 }
 
@@ -84,6 +90,11 @@ pub fn run_to_json(r: &RunResult) -> Json {
         ("peak_cpus", Json::Num(m.peak_cpus as f64)),
         ("peak_fpgas", Json::Num(m.peak_fpgas as f64)),
         ("total_work", Json::Num(m.total_work)),
+        ("preemptions", Json::Num(m.preemptions as f64)),
+        ("worker_failures", Json::Num(m.worker_failures as f64)),
+        ("redispatches", Json::Num(m.redispatches as f64)),
+        ("abandoned", Json::Num(m.abandoned as f64)),
+        ("work_lost", Json::Num(m.work_lost)),
     ])
 }
 

@@ -1,0 +1,202 @@
+//! Scenario subsystem: deterministic, seed-derived adversity for the
+//! simulator — preemptible spot workers whose price follows a mean-
+//! reverting (Ornstein–Uhlenbeck) process with daily periodicity, a
+//! preemption hazard inversely correlated with that price (strikes
+//! cluster when capacity is cheap and contended), and an independent
+//! per-kind hardware-failure (MTTF) process.
+//!
+//! Everything a scenario will do to a run is materialized up front as a
+//! [`FaultPlan`]: a time-sorted list of price ticks, preemption strikes,
+//! and failures that is a *pure function* of `(config, seed_base, seed,
+//! duration)`. The same cell therefore replays the identical fault
+//! sequence regardless of which policy is being evaluated, how runs are
+//! batched across `--jobs` threads, or what the policy does in response
+//! — which is what makes scheduler comparisons under faults apples-to-
+//! apples, and what the Python logic oracle (`tools/scenario_oracle.py`)
+//! cross-validates bit-for-bit.
+//!
+//! The sim driver applies the plan (`Driver::attach_plan`): strikes kill
+//! a live worker picked by the plan's uniform draw, drain its in-flight
+//! requests, and re-offer them to the policy within a per-request retry
+//! budget; spot-billed kinds pay their on-demand rate scaled by the
+//! price-path integral. The §5.1 fitting searches stay fault-free — only
+//! final evaluation runs see the plan — so fitted parameters measure the
+//! policy, not the adversity.
+
+mod plan;
+mod price;
+
+pub use plan::{Fault, FaultPlan, PlannedFault};
+pub use price::OuParams;
+
+use crate::config::WorkerKind;
+
+/// Scenario knobs for one worker kind.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KindScenario {
+    /// Spot-billed (and preemptible): cost accrues as on-demand rate ×
+    /// ∫ price(t) dt, and the preemption hazard below applies.
+    pub spot: bool,
+    /// Price process parameters (only sampled when `spot`).
+    pub price: OuParams,
+    /// Baseline preemption hazard in strikes/second at price == mu.
+    pub preempt_rate: f64,
+    /// Hazard exponent: actual hazard = `preempt_rate * (mu/price)^gamma`
+    /// — low price ⇒ high reclaim pressure, like real spot markets.
+    pub hazard_gamma: f64,
+    /// Mean time to (independent hardware) failure, seconds. `INFINITY`
+    /// disables the failure process.
+    pub mttf: f64,
+}
+
+impl KindScenario {
+    /// A kind the scenario leaves alone entirely.
+    pub fn benign() -> Self {
+        KindScenario {
+            spot: false,
+            price: OuParams::flat(),
+            preempt_rate: 0.0,
+            hazard_gamma: 0.0,
+            mttf: f64::INFINITY,
+        }
+    }
+}
+
+/// A named adversity pack: per-kind spot/fault processes plus the retry
+/// policy the driver enforces when a kill orphans in-flight requests.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioConfig {
+    pub name: String,
+    /// Per-kind knobs, indexed by [`WorkerKind::index`].
+    pub kinds: [KindScenario; 2],
+    /// Max re-dispatches per request: a request killed with `attempt ==
+    /// retry_budget` is abandoned (counted as a deadline miss).
+    pub retry_budget: u32,
+    /// Price-process step, seconds (one OU step and one hazard window).
+    pub price_dt: f64,
+    /// Extra salt folded into the plan's seed root, so embedders can
+    /// decorrelate plans from everything else derived from a seed pair.
+    pub seed_salt: u64,
+}
+
+impl ScenarioConfig {
+    /// No spot billing, no faults: plans are empty and runs are
+    /// bit-identical to the pre-scenario engine (the parity pack).
+    pub fn fault_free() -> Self {
+        ScenarioConfig {
+            name: "fault-free".into(),
+            kinds: [KindScenario::benign(), KindScenario::benign()],
+            retry_budget: 3,
+            price_dt: 1.0,
+            seed_salt: 0,
+        }
+    }
+
+    /// Spot FPGAs with gentle price motion, sparse preemptions (one per
+    /// ~10 min at the mean price), and a 1-day FPGA MTTF.
+    pub fn mild() -> Self {
+        let mut fpga = KindScenario::benign();
+        fpga.spot = true;
+        fpga.price = OuParams {
+            mu: 0.35,
+            theta: 1.0 / 600.0,
+            sigma: 0.006,
+            daily_amp: 0.25,
+            period: 86_400.0,
+            floor: 0.05,
+            init: 0.35,
+        };
+        fpga.preempt_rate = 1.0 / 600.0;
+        fpga.hazard_gamma = 2.0;
+        fpga.mttf = 86_400.0;
+        ScenarioConfig {
+            name: "mild".into(),
+            kinds: [KindScenario::benign(), fpga],
+            retry_budget: 3,
+            price_dt: 1.0,
+            seed_salt: 0,
+        }
+    }
+
+    /// Volatile cheap spot FPGAs under heavy reclaim pressure (≈ one
+    /// strike per 10 s at the mean price, more when the price dips), a
+    /// 1-hour FPGA MTTF, and CPUs that also fail (2-hour MTTF).
+    pub fn severe() -> Self {
+        let mut fpga = KindScenario::benign();
+        fpga.spot = true;
+        fpga.price = OuParams {
+            mu: 0.30,
+            theta: 1.0 / 300.0,
+            sigma: 0.012,
+            daily_amp: 0.35,
+            period: 86_400.0,
+            floor: 0.05,
+            init: 0.30,
+        };
+        fpga.preempt_rate = 0.1;
+        fpga.hazard_gamma = 3.0;
+        fpga.mttf = 3_600.0;
+        let mut cpu = KindScenario::benign();
+        cpu.mttf = 7_200.0;
+        ScenarioConfig {
+            name: "severe".into(),
+            kinds: [cpu, fpga],
+            retry_budget: 3,
+            price_dt: 1.0,
+            seed_salt: 0,
+        }
+    }
+
+    /// Parse a pack name (CLI `--scenario` / sweep axis vocabulary).
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "fault-free" | "none" => Some(Self::fault_free()),
+            "mild" => Some(Self::mild()),
+            "severe" => Some(Self::severe()),
+            _ => None,
+        }
+    }
+
+    /// The scenario packs experiments sweep over, mildest first.
+    pub fn packs() -> Vec<ScenarioConfig> {
+        vec![Self::fault_free(), Self::mild(), Self::severe()]
+    }
+
+    /// Whether any kind can produce a fault or a spot bill (false only
+    /// for the parity pack).
+    pub fn is_adverse(&self) -> bool {
+        self.kinds.iter().any(|k| {
+            k.spot || k.preempt_rate > 0.0 || (k.mttf.is_finite() && k.mttf > 0.0)
+        })
+    }
+
+    /// The scenario knobs for `kind`.
+    pub fn kind(&self, kind: WorkerKind) -> &KindScenario {
+        &self.kinds[kind.index()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_names_round_trip() {
+        for pack in ScenarioConfig::packs() {
+            let parsed = ScenarioConfig::from_name(&pack.name).expect("pack parses");
+            assert_eq!(parsed, pack);
+        }
+        assert_eq!(
+            ScenarioConfig::from_name("none"),
+            Some(ScenarioConfig::fault_free())
+        );
+        assert_eq!(ScenarioConfig::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn adversity_classification() {
+        assert!(!ScenarioConfig::fault_free().is_adverse());
+        assert!(ScenarioConfig::mild().is_adverse());
+        assert!(ScenarioConfig::severe().is_adverse());
+    }
+}

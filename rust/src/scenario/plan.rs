@@ -1,0 +1,248 @@
+//! Fault plans: the materialized, replayable fault sequence of one
+//! `(scenario, seed_base, seed, duration)` cell.
+//!
+//! # Determinism contract
+//!
+//! [`FaultPlan::build`] is a pure function. Each `(kind, channel)` pair
+//! draws from its own [`Rng::for_stream`] stream, so the price walk, the
+//! strike process, and the failure process never share a generator — and
+//! adding draws to one can never shift another. The derivation (mirrored
+//! exactly by `tools/scenario_oracle.py`, which re-implements the RNG in
+//! Python and must agree bit-for-bit):
+//!
+//! ```text
+//! root   = seed_base ^ SCENARIO_SALT ^ cfg.seed_salt
+//! stream = seed·8 + kind_index·3 + channel     (all wrapping)
+//! rng    = Rng::for_stream(root, stream)
+//! channel 0 = price walk, 1 = preemption strikes, 2 = failures
+//! ```
+//!
+//! Per price step `[t, t+dt)` for a spot kind: first the OU update (one
+//! `normal` draw; skipped at t=0, where the price is `init`), then the
+//! hazard Bernoulli (one `f64` draw via `chance`, *always* consumed);
+//! on a strike, two more `f64` draws (offset within the step, victim).
+//! Failures are an independent exponential-gap process: alternating
+//! `exp(1/mttf)` and `f64` (victim) draws while within the duration.
+
+use super::price::OuParams;
+use super::ScenarioConfig;
+use crate::config::WorkerKind;
+use crate::util::rng::Rng;
+
+/// Salt decorrelating scenario streams from every other consumer of the
+/// same `(seed_base, seed)` pair (sweep cells, synthetic traces).
+pub const SCENARIO_SALT: u64 = 0x5CE7_A210_FA57_0B1E;
+
+/// One planned fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// The spot price of `kind` steps to `price`.
+    PriceTick { kind: WorkerKind, price: f64 },
+    /// A spot preemption strike against `kind`; the driver picks victim
+    /// `floor(victim_draw · n)` over the kind's live accepting workers.
+    Preemption { kind: WorkerKind, victim_draw: f64 },
+    /// An independent hardware failure of one worker of `kind`.
+    Failure { kind: WorkerKind, victim_draw: f64 },
+}
+
+/// A fault with its injection time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlannedFault {
+    pub time: f64,
+    pub fault: Fault,
+}
+
+/// The full, time-sorted fault sequence of one scenario cell.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<PlannedFault>,
+}
+
+/// `(price_ticks, preemptions, failures)`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub price_ticks: u64,
+    pub preemptions: u64,
+    pub failures: u64,
+}
+
+impl FaultPlan {
+    /// Build the plan for one cell. Pure: same inputs ⇒ identical plan,
+    /// independent of policy, thread count, or call site.
+    pub fn build(cfg: &ScenarioConfig, seed_base: u64, seed: u64, duration: f64) -> FaultPlan {
+        let mut faults = Vec::new();
+        if !duration.is_finite() || duration <= 0.0 {
+            return FaultPlan { faults };
+        }
+        let root = seed_base ^ SCENARIO_SALT ^ cfg.seed_salt;
+        let stream = |k: usize, ch: u64| {
+            seed.wrapping_mul(8)
+                .wrapping_add((k as u64).wrapping_mul(3))
+                .wrapping_add(ch)
+        };
+        for (k, ks) in cfg.kinds.iter().enumerate() {
+            let kind = WorkerKind::ALL[k];
+            if ks.spot {
+                let mut price_rng = Rng::for_stream(root, stream(k, 0));
+                let mut strike_rng = Rng::for_stream(root, stream(k, 1));
+                let dt = cfg.price_dt;
+                let mut x = ks.price.init.max(ks.price.floor);
+                let mut i: u64 = 0;
+                loop {
+                    let t = i as f64 * dt;
+                    if t >= duration {
+                        break;
+                    }
+                    if i > 0 {
+                        // OU update lands the price for [t, t+dt); the
+                        // initial price is set by the driver at attach.
+                        x = ks.price.step(x, t, dt, price_rng.normal(0.0, 1.0));
+                        faults.push(PlannedFault {
+                            time: t,
+                            fault: Fault::PriceTick { kind, price: x },
+                        });
+                    }
+                    if ks.preempt_rate > 0.0 {
+                        let hazard = ks.preempt_rate * (ks.price.mu / x).powf(ks.hazard_gamma);
+                        let p = (hazard * dt).min(1.0);
+                        // `chance` always consumes one draw, so the strike
+                        // stream is step-aligned regardless of outcomes.
+                        if strike_rng.chance(p) {
+                            let offset = strike_rng.f64();
+                            let victim_draw = strike_rng.f64();
+                            faults.push(PlannedFault {
+                                time: t + offset * dt,
+                                fault: Fault::Preemption { kind, victim_draw },
+                            });
+                        }
+                    }
+                    i += 1;
+                }
+            }
+            if ks.mttf.is_finite() && ks.mttf > 0.0 {
+                let mut fail_rng = Rng::for_stream(root, stream(k, 2));
+                let mut t = fail_rng.exp(1.0 / ks.mttf);
+                while t < duration {
+                    let victim_draw = fail_rng.f64();
+                    faults.push(PlannedFault {
+                        time: t,
+                        fault: Fault::Failure { kind, victim_draw },
+                    });
+                    t += fail_rng.exp(1.0 / ks.mttf);
+                }
+            }
+        }
+        // Stable sort: equal-time faults keep kind-major generation order.
+        faults.sort_by(|a, b| a.time.total_cmp(&b.time));
+        FaultPlan { faults }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn counts(&self) -> FaultCounts {
+        let mut c = FaultCounts::default();
+        for pf in &self.faults {
+            match pf.fault {
+                Fault::PriceTick { .. } => c.price_ticks += 1,
+                Fault::Preemption { .. } => c.preemptions += 1,
+                Fault::Failure { .. } => c.failures += 1,
+            }
+        }
+        c
+    }
+
+    /// Order-sensitive content digest — the value the Python oracle
+    /// recomputes from scratch to cross-validate the generator. Mix:
+    /// `h = (rotl(h,7) ^ v) * 0x9E3779B97F4A7C15` folded over, per fault,
+    /// the time bits, the `tag·4 + kind_index` discriminant (tag 1/2/3 =
+    /// tick/preemption/failure), and the payload bits.
+    pub fn digest(&self) -> u64 {
+        fn mix(h: u64, v: u64) -> u64 {
+            (h.rotate_left(7) ^ v).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        }
+        let mut h = 0u64;
+        for pf in &self.faults {
+            let (tag, kind, payload) = match pf.fault {
+                Fault::PriceTick { kind, price } => (1u64, kind, price),
+                Fault::Preemption { kind, victim_draw } => (2, kind, victim_draw),
+                Fault::Failure { kind, victim_draw } => (3, kind, victim_draw),
+            };
+            h = mix(h, pf.time.to_bits());
+            h = mix(h, tag * 4 + kind.index() as u64);
+            h = mix(h, payload.to_bits());
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ScenarioConfig;
+
+    #[test]
+    fn fault_free_plans_nothing() {
+        let plan = FaultPlan::build(&ScenarioConfig::fault_free(), 1, 0, 3600.0);
+        assert!(plan.is_empty());
+        assert_eq!(plan.digest(), 0);
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_seed_sensitive() {
+        let cfg = ScenarioConfig::severe();
+        let a = FaultPlan::build(&cfg, 1, 0, 600.0);
+        let b = FaultPlan::build(&cfg, 1, 0, 600.0);
+        assert_eq!(a, b, "same cell ⇒ identical plan");
+        let c = FaultPlan::build(&cfg, 1, 1, 600.0);
+        assert_ne!(a.digest(), c.digest(), "seed must move the plan");
+        let d = FaultPlan::build(&cfg, 2, 0, 600.0);
+        assert_ne!(a.digest(), d.digest(), "seed_base must move the plan");
+    }
+
+    #[test]
+    fn plans_are_sorted_and_floored() {
+        let cfg = ScenarioConfig::severe();
+        let plan = FaultPlan::build(&cfg, 1, 0, 600.0);
+        let floor = cfg.kinds[1].price.floor;
+        for w in plan.faults.windows(2) {
+            assert!(w[0].time <= w[1].time, "plan must be time-sorted");
+        }
+        for pf in &plan.faults {
+            assert!(pf.time >= 0.0 && pf.time.is_finite());
+            if let Fault::PriceTick { price, .. } = pf.fault {
+                assert!(price >= floor, "price {price} under floor {floor}");
+            }
+        }
+    }
+
+    #[test]
+    fn severe_pack_actually_strikes() {
+        // The vacuity tripwire's static counterpart: over a CI-smoke-sized
+        // window the severe pack must plan preemptions and price motion.
+        let plan = FaultPlan::build(&ScenarioConfig::severe(), 1, 0, 50.0);
+        let c = plan.counts();
+        assert!(c.preemptions > 0, "severe/50s planned no strikes: {c:?}");
+        assert_eq!(c.price_ticks, 49, "one tick per dt after t=0");
+    }
+
+    #[test]
+    fn mild_pack_is_sparser_than_severe() {
+        let mild = FaultPlan::build(&ScenarioConfig::mild(), 1, 0, 3600.0).counts();
+        let severe = FaultPlan::build(&ScenarioConfig::severe(), 1, 0, 3600.0).counts();
+        assert!(
+            severe.preemptions > mild.preemptions,
+            "severe {severe:?} vs mild {mild:?}"
+        );
+    }
+
+    #[test]
+    fn degenerate_durations_plan_nothing() {
+        let cfg = ScenarioConfig::severe();
+        assert!(FaultPlan::build(&cfg, 1, 0, 0.0).is_empty());
+        assert!(FaultPlan::build(&cfg, 1, 0, -5.0).is_empty());
+        assert!(FaultPlan::build(&cfg, 1, 0, f64::NAN).is_empty());
+        assert!(FaultPlan::build(&cfg, 1, 0, f64::INFINITY).is_empty());
+    }
+}

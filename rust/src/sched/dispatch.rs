@@ -238,10 +238,11 @@ mod tests {
             arrival: 0.0,
             size,
             deadline,
+            attempt: 0,
         }
     }
 
-    const BOTH: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
+    const BOTH: &[WorkerKind] = &WorkerKind::EFFICIENT_FIRST;
 
     #[test]
     fn efficient_first_prefers_fpga_over_idle_cpu() {

@@ -49,7 +49,7 @@ impl Policy for MarkIdeal {
     }
 
     fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
-        const KINDS: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
+        const KINDS: &[WorkerKind] = &WorkerKind::EFFICIENT_FIRST;
         match obs {
             Observation::Start => {
                 // Perfect predictions: the first interval's fleet is warm

@@ -16,6 +16,7 @@ pub mod fpga_static;
 pub mod mark;
 pub mod oracle;
 pub mod spork;
+pub mod spot;
 
 pub use breakeven::Objective;
 pub use fit::{FitBatch, FitEngine, FitPass, FitStats, FIT_HARD_CEILING};
@@ -23,6 +24,7 @@ pub use oracle::{Oracle, WorkloadProfile};
 
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
 use crate::policy::Policy;
+use crate::scenario::ScenarioConfig;
 use crate::sim::{self, RunResult};
 use crate::trace::{AppTrace, ArrivalSource};
 
@@ -76,6 +78,9 @@ fn build_unfitted(
 ) -> Box<dyn Policy> {
     match kind {
         SchedulerKind::CpuDynamic => Box::new(cpu_dynamic::CpuDynamic::new()),
+        SchedulerKind::GreedySpot => Box::new(spot::GreedySpot::new()),
+        SchedulerKind::OndemandFallback => Box::new(spot::OndemandFallback::new()),
+        SchedulerKind::SporkFallback => Box::new(spot::SporkFallback::new(cfg)),
         SchedulerKind::MarkIdeal => {
             Box::new(mark::MarkIdeal::new(cfg, oracle_of(Objective::cost())))
         }
@@ -167,6 +172,34 @@ pub fn run_scheduler_profile(
     }
 }
 
+/// [`run_scheduler_source`] under a fault scenario. Fitting (and oracle
+/// construction) stays **fault-free** — the paper's §5.1 searches size
+/// fleets against the workload, not against adversity — and only the
+/// final evaluation run replays the workload with the scenario's
+/// [`FaultPlan`](crate::scenario::FaultPlan) attached. With a fault-free
+/// scenario this is byte-identical to building the policy and running it
+/// plain (pinned by `rust/tests/scenario.rs`).
+pub fn run_scheduler_scenario(
+    kind: &SchedulerKind,
+    cfg: &SimConfig,
+    defaults: &PlatformConfig,
+    make: &MakeSource<'_>,
+    scenario: &ScenarioConfig,
+    seed_base: u64,
+    seed: u64,
+) -> RunResult {
+    let mut policy = build_source(kind, cfg, make);
+    sim::run_source_scenario(
+        make(),
+        cfg.clone(),
+        defaults,
+        policy.as_mut(),
+        scenario,
+        seed_base,
+        seed,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +212,17 @@ mod tests {
         let trace = synthetic_app("t", &mut rng, 0.6, 60.0, 50.0, 0.010);
         let cfg = SimConfig::paper_default();
         for kind in SchedulerKind::table8_roster() {
+            let s = build(&kind, &cfg, &trace);
+            assert_eq!(s.name(), kind.name(), "factory/name mismatch");
+        }
+    }
+
+    #[test]
+    fn factory_builds_the_scenario_roster() {
+        let mut rng = Rng::new(1);
+        let trace = synthetic_app("t", &mut rng, 0.6, 60.0, 50.0, 0.010);
+        let cfg = SimConfig::paper_default();
+        for kind in SchedulerKind::scenario_roster() {
             let s = build(&kind, &cfg, &trace);
             assert_eq!(s.name(), kind.name(), "factory/name mismatch");
         }

@@ -101,7 +101,7 @@ impl Policy for Spork {
     }
 
     fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
-        const KINDS: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
+        const KINDS: &[WorkerKind] = &WorkerKind::EFFICIENT_FIRST;
         match obs {
             Observation::Start => {
                 // Cold start (§5.1: no warm-up). The ideal variants may

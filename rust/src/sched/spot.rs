@@ -1,0 +1,272 @@
+//! Spot-market baselines and the Spork fallback wrapper — the policies
+//! the scenario experiments compare under preemptible (spot) capacity.
+//!
+//! * **GreedySpot** — tessera-style: chase the cheap kind unconditionally.
+//!   Every request (fresh or retried) goes to the spot FPGA pool; the
+//!   policy never hedges, so it pays the full preemption churn.
+//! * **OndemandFallback** — prefer spot for fresh arrivals (efficient-
+//!   first over FPGA then CPU, allocating a fresh spot FPGA when no live
+//!   worker is feasible) but route *retries* — requests whose worker was
+//!   preempted or failed — to on-demand CPU capacity, trading money for
+//!   a stop to the kill-retry loop.
+//! * **SporkFallback** — Spork's full energy-objective machinery for
+//!   everything, except retries which go straight to on-demand CPUs, as
+//!   OndemandFallback does. Shows how much of Spork's advantage survives
+//!   adversity when paired with the obvious hedge.
+//!
+//! All three see faults exactly the way every other policy does — through
+//! [`Observation::Preempted`] and re-offered arrivals with `attempt > 0`
+//! — so scenario comparisons measure routing decisions, not privileged
+//! information.
+
+use super::breakeven::Objective;
+use super::dispatch::Dispatcher;
+use super::spork::Spork;
+use crate::config::{DispatchPolicy, SimConfig, WorkerKind};
+use crate::policy::{Action, Observation, Policy, PolicyView, Request, Target};
+
+/// Where retries land under the fallback policies: the on-demand
+/// (non-spot, fast-spin-up) CPU pool.
+const FALLBACK: WorkerKind = WorkerKind::Cpu;
+
+fn dispatch_to(
+    dispatcher: &mut Dispatcher,
+    view: &dyn PolicyView,
+    req: Request,
+    kinds: &[WorkerKind],
+    fresh: WorkerKind,
+) -> Target {
+    match dispatcher.find(view, &req, kinds) {
+        Some(id) => Target::Worker(id),
+        None => Target::Fresh(fresh),
+    }
+}
+
+/// Tessera-style greedy spot chaser: everything onto the spot FPGAs.
+pub struct GreedySpot {
+    dispatcher: Dispatcher,
+}
+
+impl GreedySpot {
+    pub fn new() -> Self {
+        Self {
+            dispatcher: Dispatcher::new(DispatchPolicy::EfficientFirst),
+        }
+    }
+}
+
+impl Default for GreedySpot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for GreedySpot {
+    fn name(&self) -> String {
+        "greedy-spot".into()
+    }
+
+    fn interval(&self) -> f64 {
+        f64::INFINITY
+    }
+
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+        if let Observation::Arrival { req } = obs {
+            let to = dispatch_to(
+                &mut self.dispatcher,
+                view,
+                req,
+                &[WorkerKind::Fpga],
+                WorkerKind::Fpga,
+            );
+            // Greedy even on retries: the same spot pool, the same risk.
+            if req.attempt > 0 {
+                out.push(Action::Redispatch { req, to });
+            } else {
+                out.push(Action::Dispatch { req, to });
+            }
+        }
+    }
+}
+
+/// Prefer spot, but retries go to on-demand CPUs.
+pub struct OndemandFallback {
+    dispatcher: Dispatcher,
+}
+
+impl OndemandFallback {
+    pub fn new() -> Self {
+        Self {
+            dispatcher: Dispatcher::new(DispatchPolicy::EfficientFirst),
+        }
+    }
+}
+
+impl Default for OndemandFallback {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for OndemandFallback {
+    fn name(&self) -> String {
+        "ondemand-fallback".into()
+    }
+
+    fn interval(&self) -> f64 {
+        f64::INFINITY
+    }
+
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+        if let Observation::Arrival { req } = obs {
+            if req.attempt > 0 {
+                // Already burned once — pay for reliable capacity.
+                let to = dispatch_to(&mut self.dispatcher, view, req, &[FALLBACK], FALLBACK);
+                out.push(Action::Redispatch { req, to });
+            } else {
+                // Fresh arrivals chase the cheap capacity: reuse any
+                // feasible worker (FPGA first), else grow the spot pool.
+                let to = dispatch_to(
+                    &mut self.dispatcher,
+                    view,
+                    req,
+                    &WorkerKind::EFFICIENT_FIRST,
+                    WorkerKind::Fpga,
+                );
+                out.push(Action::Dispatch { req, to });
+            }
+        }
+    }
+}
+
+/// Spork (energy objective) with the on-demand retry hedge bolted on:
+/// fresh arrivals and all allocation decisions are Spork's own; retries
+/// bypass it and land on on-demand CPUs.
+pub struct SporkFallback {
+    inner: Spork,
+    fallback: Dispatcher,
+}
+
+impl SporkFallback {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Self {
+            inner: Spork::new(cfg, Objective::energy()),
+            fallback: Dispatcher::new(DispatchPolicy::EfficientFirst),
+        }
+    }
+}
+
+impl Policy for SporkFallback {
+    fn name(&self) -> String {
+        "spork-fallback".into()
+    }
+
+    fn interval(&self) -> f64 {
+        self.inner.interval()
+    }
+
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+        match obs {
+            Observation::Arrival { req } if req.attempt > 0 => {
+                let to = dispatch_to(&mut self.fallback, view, req, &[FALLBACK], FALLBACK);
+                out.push(Action::Redispatch { req, to });
+            }
+            _ => self.inner.observe(obs, view, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PlatformConfig, SimConfig};
+    use crate::scenario::ScenarioConfig;
+    use crate::sim;
+    use crate::trace::synthetic_app;
+    use crate::util::rng::Rng;
+
+    fn workload() -> crate::trace::AppTrace {
+        let mut rng = Rng::new(11);
+        synthetic_app("spot", &mut rng, 0.6, 60.0, 40.0, 0.010)
+    }
+
+    #[test]
+    fn policies_serve_fault_free_runs_completely() {
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        let trace = workload();
+        let mut policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(GreedySpot::new()),
+            Box::new(OndemandFallback::new()),
+            Box::new(SporkFallback::new(&cfg)),
+        ];
+        for p in policies.iter_mut() {
+            let r = sim::run(&trace, cfg.clone(), &defaults, p.as_mut());
+            assert_eq!(
+                r.metrics.requests as usize,
+                trace.len(),
+                "{} dropped requests",
+                p.name()
+            );
+            assert_eq!(r.metrics.requests, r.metrics.completions, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn fallback_routes_retries_to_cpu_under_severe_faults() {
+        // Under the severe pack, OndemandFallback must land every retried
+        // request on CPUs (visible as on-going CPU work even though fresh
+        // arrivals prefer FPGAs), and conservation must hold.
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        let trace = workload();
+        let scen = ScenarioConfig::severe();
+        let mut policy = OndemandFallback::new();
+        let r = sim::run_source_scenario(
+            Box::new(trace.source()),
+            cfg,
+            &defaults,
+            &mut policy,
+            &scen,
+            1,
+            0,
+        );
+        let m = &r.metrics;
+        assert!(m.preemptions > 0, "severe pack must preempt this workload");
+        assert_eq!(
+            m.requests,
+            m.completions + m.abandoned,
+            "arrival conservation under faults"
+        );
+        assert!(
+            m.redispatches > 0 || m.abandoned > 0,
+            "kills must orphan some in-flight work"
+        );
+    }
+
+    #[test]
+    fn greedy_spot_keeps_retries_on_spot() {
+        // GreedySpot never touches CPUs: all work (fresh and retried)
+        // stays on the FPGA pool.
+        let cfg = SimConfig::paper_default();
+        let defaults = PlatformConfig::paper_default();
+        let trace = workload();
+        let scen = ScenarioConfig::severe();
+        let mut policy = GreedySpot::new();
+        let r = sim::run_source_scenario(
+            Box::new(trace.source()),
+            cfg,
+            &defaults,
+            &mut policy,
+            &scen,
+            1,
+            0,
+        );
+        assert_eq!(r.metrics.on_cpu, 0);
+        assert_eq!(r.metrics.cpu_spinups, 0);
+        assert_eq!(
+            r.metrics.requests,
+            r.metrics.completions + r.metrics.abandoned
+        );
+    }
+}

@@ -354,7 +354,10 @@ pub fn run_serve_source<'a>(
                             }));
                         }
                     }
-                    Effect::Retired { worker, kind } => {
+                    Effect::Retired { worker, kind } | Effect::Killed { worker, kind, .. } => {
+                        // A kill is a retirement from the physical pool's
+                        // point of view: the slot parks and can be re-bound
+                        // by a later allocation (the replacement worker).
                         if let Some(slot) = bind.remove(&worker) {
                             let _ = phys[slot].1.send(WorkerMsg::Park);
                             match kind {

@@ -14,10 +14,23 @@ use super::pool::Pool;
 use super::worker::{Worker, WorkerId, WorkerState};
 use crate::config::{PlatformConfig, SimConfig, WorkerKind};
 use crate::policy::{Action, Effect, Observation, Policy, PolicyView, Request, Target, WorkerObs};
+use crate::scenario::{Fault, FaultPlan, ScenarioConfig};
 use crate::trace::{AppTrace, Arrival, ArrivalSource};
 
 /// Latency subsampling factor (1/N of completions recorded).
 const LATENCY_SAMPLE: u64 = 61;
+
+/// Live scenario state: the current spot-price multiplier per kind and its
+/// running time integral, which is what spot-billed workers are charged
+/// against (cost = on-demand rate × ∫ price(t) dt over the lifetime).
+struct ScenarioState {
+    cfg: ScenarioConfig,
+    /// Current price multiplier per kind (by [`WorkerKind::index`]).
+    price: [f64; 2],
+    /// ∫ price dt accumulated up to `last_t`, per kind.
+    integral: [f64; 2],
+    last_t: [f64; 2],
+}
 
 /// Simulation state owned by the driver. All allocation, dispatch, and
 /// retirement flows through this API so energy/cost accounting stays
@@ -35,6 +48,10 @@ pub struct SimState {
     completions_seen: u64,
     /// End of the arrival window (trace duration).
     trace_end: f64,
+    /// Attached scenario (spot prices + fault plan), if any. `None` keeps
+    /// every fault-path branch dead and the run bit-identical to the
+    /// pre-scenario engine.
+    scenario: Option<ScenarioState>,
 }
 
 impl SimState {
@@ -49,6 +66,33 @@ impl SimState {
             interval_work_fpga: 0.0,
             completions_seen: 0,
             trace_end: f64::INFINITY,
+            scenario: None,
+        }
+    }
+
+    /// Whether `kind` is spot-billed under the attached scenario.
+    pub fn kind_is_spot(&self, kind: WorkerKind) -> bool {
+        self.scenario
+            .as_ref()
+            .map_or(false, |s| s.cfg.kinds[kind.index()].spot)
+    }
+
+    /// Current spot-price multiplier of `kind` (1.0 outside a scenario).
+    pub fn kind_spot_price(&self, kind: WorkerKind) -> f64 {
+        self.scenario
+            .as_ref()
+            .map_or(1.0, |s| s.price[kind.index()])
+    }
+
+    /// ∫ price(t) dt from t=0 to now for `kind` — the billing clock of
+    /// spot workers (a worker pays rate × (C(dealloc) − C(alloc))).
+    fn price_integral_now(&self, kind: WorkerKind) -> f64 {
+        match &self.scenario {
+            Some(s) => {
+                let k = kind.index();
+                s.integral[k] + s.price[k] * (self.now - s.last_t[k])
+            }
+            None => 0.0,
         }
     }
 
@@ -92,15 +136,26 @@ impl SimState {
         }
         let params = *self.cfg.platform.params(kind);
         let now = self.now;
-        let id = self
-            .pool
-            .insert(|id| Worker::new(id, kind, now, params.spin_up, current));
+        // Spot workers bill against the price-path integral; snapshot the
+        // billing clock at allocation (0.0 outside a scenario).
+        let basis = if self.kind_is_spot(kind) {
+            self.price_integral_now(kind)
+        } else {
+            0.0
+        };
+        let id = self.pool.insert(|id| {
+            let mut w = Worker::new(id, kind, now, params.spin_up, current);
+            w.cost_basis = basis;
+            w
+        });
+        let uid = self.pool.get(id).expect("just inserted").uid;
         // Warm allocs go Active immediately (the caller flips the state in
         // this same transaction group), so their SpinUpDone would be a
         // guaranteed no-op — skip it instead of bloating the event heap by
         // one dead entry per worker of a large pre-warmed fleet.
         if !warm {
-            self.events.push(now + params.spin_up, Event::SpinUpDone { worker: id });
+            self.events
+                .push(now + params.spin_up, Event::SpinUpDone { worker: id, uid });
         }
         self.metrics.energy_mut(kind).alloc += params.spin_up_energy();
         // Peak tracks *allocated* workers (spinning-up + active), matching
@@ -148,60 +203,119 @@ impl SimState {
     }
 
     /// Dispatch a request to a specific worker; returns the completion
-    /// time. Busy energy is attributed at dispatch (work conservation: all
-    /// dispatched work runs to completion).
+    /// time. Busy energy is attributed at dispatch; a scenario kill
+    /// refunds the unexecuted remainder, so the invariant "charged busy
+    /// energy == executed service time × busy power" holds either way.
+    ///
+    /// Retries (`req.attempt > 0`) are re-dispatches of work already
+    /// counted at first dispatch: they charge energy and interval work
+    /// (real compute) but not the arrival-side counters (`requests`,
+    /// `on_cpu`/`on_fpga`, `total_work`), so arrival conservation
+    /// (`requests == completions + abandoned`) holds under faults.
     pub fn dispatch(&mut self, req: Request, worker: WorkerId) -> f64 {
         let now = self.now;
         // One slab transaction on the per-request hot path: kind read,
         // service-time lookup, and assignment in a single with_mut.
-        let (kind, svc, finish) = self.pool.with_mut(worker, |w| {
+        let (kind, svc, finish, uid) = self.pool.with_mut(worker, |w| {
             debug_assert!(w.accepting(), "dispatch to spinning-down worker");
             let svc = self.cfg.platform.params(w.kind).service_time(req.size);
-            (w.kind, svc, w.assign(now, svc))
+            let finish = w.assign(now, svc);
+            w.inflight.push_back(req);
+            (w.kind, svc, finish, w.uid)
         });
         self.events.push(
             finish,
             Event::Completion {
                 worker,
+                uid,
                 arrival: req.arrival,
                 deadline: req.deadline,
             },
         );
         let params = self.cfg.platform.params(kind);
         self.metrics.energy_mut(kind).busy += svc * params.busy_power;
-        self.metrics.requests += 1;
-        self.metrics.total_work += req.size;
-        match kind {
-            WorkerKind::Cpu => {
-                self.metrics.on_cpu += 1;
-                self.interval_work_cpu += svc;
-            }
-            WorkerKind::Fpga => {
-                self.metrics.on_fpga += 1;
-                self.interval_work_fpga += svc;
+        if req.attempt == 0 {
+            self.metrics.requests += 1;
+            self.metrics.total_work += req.size;
+            match kind {
+                WorkerKind::Cpu => self.metrics.on_cpu += 1,
+                WorkerKind::Fpga => self.metrics.on_fpga += 1,
             }
         }
+        match kind {
+            WorkerKind::Cpu => self.interval_work_cpu += svc,
+            WorkerKind::Fpga => self.interval_work_fpga += svc,
+        }
         finish
+    }
+
+    /// Scenario kill: remove a live accepting worker *now*, without a
+    /// spin-down window, and return its drained in-flight requests (FIFO).
+    ///
+    /// Accounting: idle energy accrued to the kill instant is charged (as
+    /// retirement would); busy energy charged at dispatch for the
+    /// *unexecuted* remainder is refunded; executed-but-never-completed
+    /// service time is tallied as `work_lost`. Cost is the price-path
+    /// integral for spot-billed kinds, plain lifetime × rate otherwise.
+    /// No spin-down energy is charged — preemption reclaims the worker
+    /// instantly.
+    pub fn kill(&mut self, worker: WorkerId) -> Vec<Request> {
+        let now = self.now;
+        let mut w = self.pool.remove(worker);
+        debug_assert!(w.accepting(), "scenario kill of spinning-down worker");
+        let params = self.cfg.platform.params(w.kind);
+        // Queued-but-unexecuted service time at the kill instant.
+        let remaining = (w.busy_until - now.max(w.ready_at)).max(0.0);
+        let executed = (w.busy_seconds - remaining).max(0.0);
+        let idle_secs = (w.active_seconds(now) - executed).max(0.0);
+        self.metrics.energy_mut(w.kind).idle += idle_secs * params.idle_power;
+        self.metrics.energy_mut(w.kind).busy -= remaining * params.busy_power;
+        self.metrics.work_lost += (executed - w.completed_seconds).max(0.0);
+        let cost = if self.kind_is_spot(w.kind) {
+            params.cost_per_sec() * (self.price_integral_now(w.kind) - w.cost_basis)
+        } else {
+            (now - w.alloc_time) * params.cost_per_sec()
+        };
+        match w.kind {
+            WorkerKind::Cpu => self.metrics.cpu_cost += cost,
+            WorkerKind::Fpga => self.metrics.fpga_cost += cost,
+        }
+        std::mem::take(&mut w.inflight).into()
+    }
+
+    /// Book one completion on `worker`: pop its oldest in-flight request,
+    /// credit the executed service time, and return whether the worker
+    /// went idle.
+    fn complete_request(&mut self, worker: WorkerId) -> bool {
+        let now = self.now;
+        let went_idle = self.pool.with_mut(worker, |w| {
+            let req = w.inflight.pop_front().expect("completion on empty inflight queue");
+            let svc = self.cfg.platform.params(w.kind).service_time(req.size);
+            w.completed_seconds += svc;
+            w.complete_one(now)
+        });
+        self.metrics.completions += 1;
+        went_idle
     }
 
     /// Begin spin-down of an idle or never-used worker. Accounts idle
     /// energy accrued over its active window and the spin-down energy.
     pub fn retire(&mut self, worker: WorkerId) {
         let now = self.now;
-        let (kind, idle_secs) = self.pool.with_mut(worker, |w| {
+        let (kind, idle_secs, uid) = self.pool.with_mut(worker, |w| {
             debug_assert!(
                 w.state == WorkerState::Active && w.queued == 0,
                 "retire requires an idle worker"
             );
             let idle_secs = w.idle_seconds(now);
             w.state = WorkerState::SpinningDown;
-            (w.kind, idle_secs)
+            (w.kind, idle_secs, w.uid)
         });
         let params = self.cfg.platform.params(kind);
         self.metrics.energy_mut(kind).idle += idle_secs * params.idle_power;
         self.metrics.energy_mut(kind).dealloc += params.spin_down_energy();
         self.events
-            .push(now + params.spin_down, Event::SpinDownDone { worker });
+            .push(now + params.spin_down, Event::SpinDownDone { worker, uid });
     }
 
     /// Retire up to `n` idle workers of `kind`, longest-idle first —
@@ -233,6 +347,7 @@ impl SimState {
             self.now + timeout,
             Event::IdleTimeout {
                 worker,
+                uid: w.uid,
                 generation: w.generation,
             },
         );
@@ -329,6 +444,14 @@ impl PolicyView for SimState {
 
     fn earliest_ready(&self, kind: WorkerKind) -> Option<(f64, WorkerId)> {
         self.pool.earliest_ready(kind)
+    }
+
+    fn spot_price(&self, kind: WorkerKind) -> f64 {
+        self.kind_spot_price(kind)
+    }
+
+    fn is_spot(&self, kind: WorkerKind) -> bool {
+        self.kind_is_spot(kind)
     }
 }
 
@@ -472,6 +595,48 @@ impl<'a> Driver<'a> {
         self.aborted
     }
 
+    /// Attach a scenario with a pre-built fault plan: push every planned
+    /// fault into the event heap and arm the spot-price state. Must be
+    /// called before stepping. An empty plan with no spot kinds (the
+    /// fault-free pack) leaves the run bit-identical to no attach at all.
+    pub fn attach_plan(&mut self, cfg: &ScenarioConfig, plan: &FaultPlan) {
+        let mut price = [1.0f64; 2];
+        for (k, ks) in cfg.kinds.iter().enumerate() {
+            if ks.spot {
+                price[k] = ks.price.init.max(ks.price.floor);
+            }
+        }
+        for pf in &plan.faults {
+            let event = match pf.fault {
+                Fault::PriceTick { kind, price } => Event::PriceTick { kind, price },
+                Fault::Preemption { kind, victim_draw } => {
+                    Event::Preempted { kind, victim_draw }
+                }
+                Fault::Failure { kind, victim_draw } => {
+                    Event::WorkerFailed { kind, victim_draw }
+                }
+            };
+            self.sim.events.push(pf.time, event);
+        }
+        self.sim.scenario = Some(ScenarioState {
+            cfg: cfg.clone(),
+            price,
+            integral: [0.0; 2],
+            last_t: [0.0; 2],
+        });
+    }
+
+    /// Attach a scenario, deriving its fault plan from `(seed_base, seed)`
+    /// over this run's arrival window — the plan is a pure function of
+    /// those seeds and the scenario config, independent of the policy and
+    /// of how runs are batched across threads. Returns the plan so callers
+    /// can report its composition.
+    pub fn attach_scenario(&mut self, cfg: &ScenarioConfig, seed_base: u64, seed: u64) -> FaultPlan {
+        let plan = FaultPlan::build(cfg, seed_base, seed, self.sim.trace_end);
+        self.attach_plan(cfg, &plan);
+        plan
+    }
+
     /// Arrivals pulled from the source so far — processed arrivals plus
     /// the one-arrival look-ahead while the stream is unexhausted. The
     /// lockstep runner's frontier: drivers of one [`tee`] fan-out stay
@@ -572,6 +737,7 @@ impl<'a> Driver<'a> {
             arrival: a.time,
             size: a.size,
             deadline: a.time + self.deadline_factor * a.size,
+            attempt: 0,
         };
         self.observe(Observation::Arrival { req }, sink);
         true
@@ -624,7 +790,7 @@ impl<'a> Driver<'a> {
                         }
                     }
                 }
-                Action::Dispatch { req, to } => {
+                Action::Dispatch { req, to } | Action::Redispatch { req, to } => {
                     let worker = match to {
                         Target::Worker(w) => w,
                         Target::Fresh(kind) => match self.sim.alloc(kind) {
@@ -677,9 +843,11 @@ impl<'a> Driver<'a> {
 
     fn handle_event(&mut self, event: Event, sink: &mut dyn FnMut(&Effect)) {
         match event {
-            Event::SpinUpDone { worker } => {
+            Event::SpinUpDone { worker, uid } => {
                 match self.sim.pool.get(worker) {
-                    None => return, // pre-warmed worker already retired
+                    None => return, // retired or killed before maturity
+                    // Killed and the slot reused by a different worker.
+                    Some(w) if w.uid != uid => return,
                     // Pre-warmed via alloc_warm; nothing to do.
                     Some(w) if w.state != WorkerState::SpinningUp => return,
                     Some(_) => {}
@@ -701,9 +869,17 @@ impl<'a> Driver<'a> {
             }
             Event::Completion {
                 worker,
+                uid,
                 arrival,
                 deadline,
             } => {
+                // A kill between dispatch and completion leaves this event
+                // stale: the request was drained and re-offered (or
+                // abandoned), so the completion must not double-book.
+                match self.sim.pool.get(worker) {
+                    Some(w) if w.uid == uid => {}
+                    _ => return,
+                }
                 let now = self.sim.now;
                 if now > deadline + 1e-9 {
                     self.sim.metrics.deadline_misses += 1;
@@ -712,17 +888,22 @@ impl<'a> Driver<'a> {
                 if self.sim.completions_seen % LATENCY_SAMPLE == 0 {
                     self.sim.metrics.latency.add(now - arrival);
                 }
-                let went_idle = self.sim.pool.with_mut(worker, |w| w.complete_one(now));
+                let went_idle = self.sim.complete_request(worker);
                 if went_idle {
                     self.sim.schedule_idle_timeout(worker);
                 }
                 self.observe(Observation::Completion { worker }, sink);
             }
-            Event::IdleTimeout { worker, generation } => {
+            Event::IdleTimeout {
+                worker,
+                uid,
+                generation,
+            } => {
                 let now = self.sim.now;
                 let mature = match self.sim.pool.get(worker) {
                     Some(w) => {
-                        w.state == WorkerState::Active
+                        w.uid == uid
+                            && w.state == WorkerState::Active
                             && w.queued == 0
                             && w.generation == generation
                             && w.busy_until <= now
@@ -762,18 +943,27 @@ impl<'a> Driver<'a> {
                     }
                 }
             }
-            Event::SpinDownDone { worker } => {
+            Event::SpinDownDone { worker, uid } => {
+                // Scenario kills can't target spinning-down workers, so a
+                // mismatch can only mean slot reuse after a kill elsewhere
+                // in the lifecycle — drop the stale event.
+                match self.sim.pool.get(worker) {
+                    Some(w) if w.uid == uid => {}
+                    _ => return,
+                }
                 let w = self.sim.pool.remove(worker);
                 debug_assert_eq!(w.state, WorkerState::SpinningDown);
                 let params = self.sim.cfg.platform.params(w.kind);
                 let lifetime = self.sim.now - w.alloc_time;
+                let cost = if self.sim.kind_is_spot(w.kind) {
+                    params.cost_per_sec()
+                        * (self.sim.price_integral_now(w.kind) - w.cost_basis)
+                } else {
+                    lifetime * params.cost_per_sec()
+                };
                 match w.kind {
-                    WorkerKind::Cpu => {
-                        self.sim.metrics.cpu_cost += lifetime * params.cost_per_sec()
-                    }
-                    WorkerKind::Fpga => {
-                        self.sim.metrics.fpga_cost += lifetime * params.cost_per_sec()
-                    }
+                    WorkerKind::Cpu => self.sim.metrics.cpu_cost += cost,
+                    WorkerKind::Fpga => self.sim.metrics.fpga_cost += cost,
                 }
                 self.observe(
                     Observation::Dealloc {
@@ -783,6 +973,92 @@ impl<'a> Driver<'a> {
                     },
                     sink,
                 );
+            }
+            Event::PriceTick { kind, price } => {
+                let now = self.sim.now;
+                if let Some(sc) = self.sim.scenario.as_mut() {
+                    let k = kind.index();
+                    sc.integral[k] += sc.price[k] * (now - sc.last_t[k]);
+                    sc.last_t[k] = now;
+                    sc.price[k] = price;
+                }
+                self.observe(Observation::PriceTick { kind, price }, sink);
+            }
+            Event::Preempted { kind, victim_draw } => {
+                self.apply_fault(kind, victim_draw, false, sink);
+            }
+            Event::WorkerFailed { kind, victim_draw } => {
+                self.apply_fault(kind, victim_draw, true, sink);
+            }
+        }
+    }
+
+    /// Apply one planned fault: pick the victim over the kind's live
+    /// accepting workers (no-op when none exist — a planned strike against
+    /// an empty pool hits nothing), kill it, and route every drained
+    /// in-flight request: re-offer it to the policy as an `Arrival` with
+    /// `attempt` incremented, unless its retry budget or deadline is
+    /// already exhausted — then record it as an abandoned deadline miss.
+    fn apply_fault(
+        &mut self,
+        kind: WorkerKind,
+        victim_draw: f64,
+        failure: bool,
+        sink: &mut dyn FnMut(&Effect),
+    ) {
+        let victims: Vec<WorkerId> = self
+            .sim
+            .pool
+            .iter_kind(kind)
+            .filter(|w| w.accepting())
+            .map(|w| w.id)
+            .collect();
+        if victims.is_empty() {
+            return;
+        }
+        let idx = ((victim_draw * victims.len() as f64) as usize).min(victims.len() - 1);
+        let victim = victims[idx];
+        let lost = self.sim.kill(victim);
+        if failure {
+            self.sim.metrics.worker_failures += 1;
+        } else {
+            self.sim.metrics.preemptions += 1;
+        }
+        sink(&Effect::Killed {
+            worker: victim,
+            kind,
+            failure,
+        });
+        self.observe(
+            Observation::Preempted {
+                worker: victim,
+                kind,
+                failure,
+                lost: lost.len() as u32,
+            },
+            sink,
+        );
+        let budget = self
+            .sim
+            .scenario
+            .as_ref()
+            .map_or(0, |s| s.cfg.retry_budget);
+        for mut req in lost {
+            let now = self.sim.now;
+            // Deadline-aware abandonment: if even an immediate dispatch
+            // onto the fastest kind can't finish in time, don't waste the
+            // retry on a guaranteed miss.
+            let min_svc = WorkerKind::ALL
+                .iter()
+                .map(|&k| self.sim.service_time(k, req.size))
+                .fold(f64::INFINITY, f64::min);
+            if req.attempt >= budget || now + min_svc > req.deadline {
+                self.sim.metrics.abandoned += 1;
+                self.sim.metrics.deadline_misses += 1;
+            } else {
+                req.attempt += 1;
+                self.sim.metrics.redispatches += 1;
+                self.observe(Observation::Arrival { req }, sink);
             }
         }
     }
@@ -822,6 +1098,29 @@ pub fn run_source(
     policy: &mut dyn Policy,
 ) -> RunResult {
     run_source_with_sink(source, cfg, defaults, policy, &mut |_| {})
+}
+
+/// Run `policy` over a streaming source with `scenario` attached: the
+/// fault plan derived from `(seed_base, seed)` is replayed against the
+/// run, spot kinds bill against their price path, and killed in-flight
+/// requests are re-dispatched or abandoned per the scenario's retry
+/// budget. With the fault-free pack this is bit-identical to
+/// [`run_source`].
+pub fn run_source_scenario<'a>(
+    source: Box<dyn ArrivalSource + 'a>,
+    cfg: SimConfig,
+    defaults: &PlatformConfig,
+    policy: &'a mut dyn Policy,
+    scenario: &ScenarioConfig,
+    seed_base: u64,
+    seed: u64,
+) -> RunResult {
+    let mut driver = Driver::from_source(source, cfg, policy);
+    driver.attach_scenario(scenario, seed_base, seed);
+    let sink = &mut |_: &Effect| {};
+    driver.start(sink);
+    while driver.step(sink) {}
+    driver.finish(defaults)
 }
 
 /// A run that may have stopped at its miss budget (see
@@ -1374,10 +1673,240 @@ mod tests {
                 Effect::Allocated { .. } => allocated += 1,
                 Effect::Retired { .. } => retired += 1,
                 Effect::KeptAlive { .. } => {}
+                Effect::Killed { .. } => panic!("no scenario attached"),
             },
         );
         assert_eq!(dispatched, 10);
         assert_eq!(allocated, 10);
         assert_eq!(retired, 10, "every worker must retire by drain");
+    }
+
+    // ---- scenario-path units: kill, retry, abandonment, spot billing ----
+
+    use crate::scenario::{Fault, FaultPlan, PlannedFault, ScenarioConfig};
+
+    /// One preemption strike against the FPGA pool at `t`.
+    fn strike_plan(t: f64) -> FaultPlan {
+        FaultPlan {
+            faults: vec![PlannedFault {
+                time: t,
+                fault: Fault::Preemption {
+                    kind: WorkerKind::Fpga,
+                    victim_draw: 0.0,
+                },
+            }],
+        }
+    }
+
+    fn scenario_run(
+        trace: &AppTrace,
+        cfg: SimConfig,
+        scen: &ScenarioConfig,
+        plan: &FaultPlan,
+        policy: &mut dyn Policy,
+    ) -> (RunResult, u32) {
+        let mut driver = Driver::from_source(Box::new(trace.source()), cfg, policy);
+        driver.attach_plan(scen, plan);
+        let mut killed = 0u32;
+        let sink = &mut |e: &Effect| {
+            if matches!(e, Effect::Killed { .. }) {
+                killed += 1;
+            }
+        };
+        driver.start(sink);
+        while driver.step(sink) {}
+        (driver.finish(&defaults()), killed)
+    }
+
+    /// Zero spin-up/spin-down so kill/retry timing is easy to reason about.
+    fn instant_cfg() -> SimConfig {
+        let mut cfg = SimConfig::paper_default();
+        cfg.platform.fpga.spin_up = 0.0;
+        cfg.platform.fpga.spin_down = 0.0;
+        cfg.platform.cpu.spin_up = 0.0;
+        cfg.platform.cpu.spin_down = 0.0;
+        cfg
+    }
+
+    /// Dispatches every arrival (fresh or retried) to an FPGA: reuse the
+    /// first accepting one, else allocate fresh.
+    struct ReuseFpga;
+    impl Policy for ReuseFpga {
+        fn name(&self) -> String {
+            "reuse-fpga".into()
+        }
+        fn interval(&self) -> f64 {
+            f64::INFINITY
+        }
+        fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+            if let Observation::Arrival { req } = obs {
+                let alive = view
+                    .live_ids(WorkerKind::Fpga)
+                    .into_iter()
+                    .find(|&id| view.worker(id).map_or(false, |w| w.accepting()));
+                let to = match alive {
+                    Some(id) => Target::Worker(id),
+                    None => Target::Fresh(WorkerKind::Fpga),
+                };
+                out.push(Action::Dispatch { req, to });
+            }
+        }
+    }
+
+    #[test]
+    fn kill_redispatches_inflight_within_budget() {
+        // One 1s request at t=0 on an instant FPGA; preemption at t=0.2
+        // kills it mid-flight. The retry (attempt 1) lands on a fresh FPGA
+        // and completes at 0.2 + 0.5 (2x speedup service restarts).
+        let trace = AppTrace::new(
+            "one",
+            vec![Arrival { time: 0.0, size: 1.0 }],
+            50.0, // window long enough for the strike to land pre-drain
+        );
+        let scen = ScenarioConfig::mild();
+        let (r, killed) = scenario_run(
+            &trace,
+            instant_cfg(),
+            &scen,
+            &strike_plan(0.2),
+            &mut ReuseFpga,
+        );
+        let m = &r.metrics;
+        assert_eq!(killed, 1);
+        assert_eq!(m.preemptions, 1);
+        assert_eq!(m.worker_failures, 0);
+        assert_eq!(m.redispatches, 1);
+        assert_eq!(m.abandoned, 0);
+        assert_eq!(m.requests, 1, "retry must not recount the arrival");
+        assert_eq!(m.completions, 1);
+        assert_eq!(m.on_fpga, 1);
+        // 0.2s executed on the killed worker and thrown away.
+        assert!((m.work_lost - 0.2).abs() < 1e-9, "work_lost = {}", m.work_lost);
+        // Busy energy = (0.2 wasted + 0.5 full retry) × 50 W: the kill
+        // refunded the unexecuted 0.3s of the first dispatch.
+        assert!((m.fpga_energy.busy - 0.7 * 50.0).abs() < 1e-9);
+        assert_eq!(m.deadline_misses, 0, "deadline 10s is easily met");
+    }
+
+    #[test]
+    fn kill_abandons_when_budget_exhausted() {
+        let trace = AppTrace::new("one", vec![Arrival { time: 0.0, size: 1.0 }], 50.0);
+        let mut scen = ScenarioConfig::mild();
+        scen.retry_budget = 0;
+        let (r, killed) = scenario_run(
+            &trace,
+            instant_cfg(),
+            &scen,
+            &strike_plan(0.2),
+            &mut ReuseFpga,
+        );
+        let m = &r.metrics;
+        assert_eq!(killed, 1);
+        assert_eq!(m.abandoned, 1);
+        assert_eq!(m.redispatches, 0);
+        assert_eq!(m.completions, 0);
+        assert_eq!(m.deadline_misses, 1, "an abandoned request is a miss");
+        assert_eq!(
+            m.requests,
+            m.completions + m.abandoned,
+            "arrival conservation"
+        );
+    }
+
+    #[test]
+    fn kill_abandons_unmeetable_deadlines_early() {
+        // Deadline 0.4 (factor-scaled): after a kill at t=0.35 even an
+        // immediate retry (min service 0.5 on the FPGA, 1.0 on CPU) can't
+        // finish by 0.4 — the driver must abandon instead of burning the
+        // retry on a guaranteed miss.
+        let mut cfg = instant_cfg();
+        cfg.deadline_factor = 0.4;
+        let trace = AppTrace::new("one", vec![Arrival { time: 0.0, size: 1.0 }], 50.0);
+        let scen = ScenarioConfig::mild(); // budget 3: only the deadline gates
+        let (r, _) = scenario_run(&trace, cfg, &scen, &strike_plan(0.35), &mut ReuseFpga);
+        let m = &r.metrics;
+        assert_eq!(m.abandoned, 1);
+        assert_eq!(m.redispatches, 0);
+        assert_eq!(m.deadline_misses, 1);
+    }
+
+    #[test]
+    fn strike_against_empty_pool_is_noop() {
+        let trace = AppTrace::new("one", vec![Arrival { time: 1.0, size: 0.010 }], 50.0);
+        let scen = ScenarioConfig::mild();
+        // Strike at t=0.5: nothing allocated yet.
+        let (r, killed) = scenario_run(
+            &trace,
+            instant_cfg(),
+            &scen,
+            &strike_plan(0.5),
+            &mut ReuseFpga,
+        );
+        assert_eq!(killed, 0);
+        assert_eq!(r.metrics.preemptions, 0);
+        assert_eq!(r.metrics.completions, 1);
+    }
+
+    #[test]
+    fn spot_billing_integrates_price_path() {
+        // Constant price 2.0 from t=0 (one tick) on a spot FPGA: cost must
+        // be exactly 2× the on-demand run.
+        let trace = AppTrace::new("one", vec![Arrival { time: 0.0, size: 1.0 }], 50.0);
+        let mut scen = ScenarioConfig::mild();
+        scen.kinds[WorkerKind::Fpga.index()].spot = true;
+        let plan = FaultPlan {
+            faults: vec![PlannedFault {
+                time: 0.0,
+                fault: Fault::PriceTick {
+                    kind: WorkerKind::Fpga,
+                    price: 2.0,
+                },
+            }],
+        };
+        let (r, _) = scenario_run(&trace, instant_cfg(), &scen, &plan, &mut ReuseFpga);
+        let plain = run(
+            &AppTrace::new("one", vec![Arrival { time: 0.0, size: 1.0 }], 50.0),
+            instant_cfg(),
+            &defaults(),
+            &mut ReuseFpga,
+        );
+        assert!(
+            (r.metrics.fpga_cost - 2.0 * plain.metrics.fpga_cost).abs() < 1e-9,
+            "spot {} vs 2x on-demand {}",
+            r.metrics.fpga_cost,
+            2.0 * plain.metrics.fpga_cost
+        );
+        // Energy is price-independent.
+        assert_eq!(r.metrics.total_energy(), plain.metrics.total_energy());
+    }
+
+    #[test]
+    fn fault_free_attach_is_bit_identical() {
+        // The fault-free pack (empty plan, no spot kinds) must leave every
+        // metric bit-identical to a plain run — the zero-fault parity
+        // contract the integration suite extends to the full roster.
+        let trace = mini_trace(20, 0.5, 0.010);
+        let plain = run(
+            &trace,
+            SimConfig::paper_default(),
+            &defaults(),
+            &mut OnePerRequest,
+        );
+        let scen = ScenarioConfig::fault_free();
+        let plan = FaultPlan::build(&scen, 1, 0, 10.0);
+        assert!(plan.faults.is_empty(), "fault-free pack must plan nothing");
+        let (r, killed) = scenario_run(
+            &trace,
+            SimConfig::paper_default(),
+            &scen,
+            &plan,
+            &mut OnePerRequest,
+        );
+        assert_eq!(killed, 0);
+        assert_eq!(r.metrics.total_energy(), plain.metrics.total_energy());
+        assert_eq!(r.metrics.total_cost(), plain.metrics.total_cost());
+        assert_eq!(r.metrics.requests, plain.metrics.requests);
+        assert_eq!(r.metrics.completions, plain.metrics.completions);
+        assert_eq!(r.metrics.deadline_misses, plain.metrics.deadline_misses);
     }
 }

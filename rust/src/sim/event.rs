@@ -6,25 +6,44 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::worker::WorkerId;
+use crate::config::WorkerKind;
 
 /// Simulator events. Request arrivals are NOT events — the engine merges
 /// the (already sorted) arrival array with this queue, which keeps the heap
 /// small (its size tracks in-flight work, not total trace length).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Event {
-    /// A worker finished its spin-up and becomes available.
-    SpinUpDone { worker: WorkerId },
+    /// A worker finished its spin-up and becomes available. `uid` is the
+    /// worker's never-reused pool uid: scenario kills can free a slab slot
+    /// with events still in flight, and the slot may be reused — a uid
+    /// mismatch marks the event stale and it is dropped.
+    SpinUpDone { worker: WorkerId, uid: u64 },
     /// A dispatched request finishes on `worker`.
     Completion {
         worker: WorkerId,
+        uid: u64,
         arrival: f64,
         deadline: f64,
     },
     /// An idle timeout matures; `generation` guards against staleness (the
-    /// worker may have received work since the timeout was scheduled).
-    IdleTimeout { worker: WorkerId, generation: u32 },
+    /// worker may have received work since the timeout was scheduled) and
+    /// `uid` against slot reuse after a scenario kill.
+    IdleTimeout {
+        worker: WorkerId,
+        uid: u64,
+        generation: u32,
+    },
     /// A worker finished spinning down and leaves the pool.
-    SpinDownDone { worker: WorkerId },
+    SpinDownDone { worker: WorkerId, uid: u64 },
+    /// Scenario fault plan: a spot-preemption strike against `kind`. The
+    /// victim is picked at execution time as `floor(victim_draw * n)` over
+    /// the kind's live accepting workers (no-op when none exist).
+    Preempted { kind: WorkerKind, victim_draw: f64 },
+    /// Scenario fault plan: an independent (MTTF) hardware failure of one
+    /// worker of `kind`; victim selection as in [`Event::Preempted`].
+    WorkerFailed { kind: WorkerKind, victim_draw: f64 },
+    /// Scenario fault plan: the spot price of `kind` stepped to `price`.
+    PriceTick { kind: WorkerKind, price: f64 },
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -109,6 +128,7 @@ mod tests {
     fn ev(w: u32) -> Event {
         Event::SpinUpDone {
             worker: WorkerId(w),
+            uid: w as u64,
         }
     }
 
@@ -130,7 +150,7 @@ mod tests {
         q.push(5.0, ev(30));
         let ids: Vec<u32> = std::iter::from_fn(|| {
             q.pop().map(|(_, e)| match e {
-                Event::SpinUpDone { worker } => worker.0,
+                Event::SpinUpDone { worker, .. } => worker.0,
                 _ => unreachable!(),
             })
         })

@@ -41,6 +41,22 @@ pub struct Metrics {
     /// Peak concurrently allocated workers.
     pub peak_cpus: u32,
     pub peak_fpgas: u32,
+    /// Requests that actually completed (≤ `requests` under faults; equal
+    /// outside a scenario). Conservation under a scenario:
+    /// `requests == completions + abandoned` once the run drains.
+    pub completions: u64,
+    /// Scenario faults: spot preemptions applied (a live worker existed).
+    pub preemptions: u64,
+    /// Scenario faults: independent hardware failures applied.
+    pub worker_failures: u64,
+    /// Lost in-flight requests re-offered to the policy after a kill.
+    pub redispatches: u64,
+    /// Lost in-flight requests dropped — retry budget or deadline
+    /// exhausted. Each is also counted as a deadline miss.
+    pub abandoned: u64,
+    /// Executed-but-wasted worker-seconds destroyed by kills (service time
+    /// already run on killed workers for requests that never completed).
+    pub work_lost: f64,
 }
 
 impl Metrics {
@@ -97,6 +113,12 @@ impl Metrics {
         self.total_work += o.total_work;
         self.peak_cpus += o.peak_cpus; // pools are per-app → peaks add
         self.peak_fpgas += o.peak_fpgas;
+        self.completions += o.completions;
+        self.preemptions += o.preemptions;
+        self.worker_failures += o.worker_failures;
+        self.redispatches += o.redispatches;
+        self.abandoned += o.abandoned;
+        self.work_lost += o.work_lost;
     }
 }
 

@@ -19,8 +19,8 @@ pub mod pool;
 pub mod worker;
 
 pub use engine::{
-    run, run_source, run_source_bounded, run_source_with_sink, run_sources_lockstep,
-    run_with_sink, BoundedRun, Driver, SimState,
+    run, run_source, run_source_bounded, run_source_scenario, run_source_with_sink,
+    run_sources_lockstep, run_with_sink, BoundedRun, Driver, SimState,
 };
 pub use metrics::{feasible_miss_budget, EnergyBreakdown, IdealBaseline, Metrics, RunResult};
 pub use worker::{Worker, WorkerId, WorkerState};

@@ -69,6 +69,10 @@ pub struct Pool {
     /// Live workers excluding spinning-down, per kind (the "allocated"
     /// count schedulers reason about), maintained O(1).
     allocated: [u32; 2],
+    /// Monotonic uid counter: slab slots (and ids) are recycled, uids never
+    /// are. Stamped onto every inserted worker so in-flight events can
+    /// detect that "their" slot was killed and reused (scenario faults).
+    next_uid: u64,
 }
 
 /// The queued-load key of a spinning-up worker (work packed onto the
@@ -138,8 +142,10 @@ impl Pool {
             }
         };
         let id = WorkerId(idx);
-        let w = make(id);
+        let mut w = make(id);
         debug_assert_eq!(w.id, id, "worker id must match its slot");
+        w.uid = self.next_uid;
+        self.next_uid += 1;
         self.live[ix(w.kind)].insert(id);
         self.index_state(&w);
         self.slots[idx as usize] = Some(w);
@@ -341,7 +347,7 @@ impl Pool {
     /// slab. O(n log n) — test scaffolding for the index-coherence
     /// property suite (`util::prop`), not a hot-path check.
     pub fn check_coherence(&self) {
-        for kind in [WorkerKind::Cpu, WorkerKind::Fpga] {
+        for kind in WorkerKind::ALL {
             let k = ix(kind);
             let mut live = BTreeSet::new();
             let mut idle = BTreeSet::new();
@@ -407,6 +413,17 @@ mod tests {
         let c = mk(&mut p, WorkerKind::Cpu);
         assert_eq!(c, a, "slot should be reused");
         assert!(p.get(b).is_some());
+    }
+
+    #[test]
+    fn uids_survive_slot_reuse() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Cpu);
+        let uid_a = p.get(a).unwrap().uid;
+        p.remove(a);
+        let b = mk(&mut p, WorkerKind::Cpu);
+        assert_eq!(b, a, "slot should be reused");
+        assert_ne!(p.get(b).unwrap().uid, uid_a, "uid must never be reused");
     }
 
     #[test]

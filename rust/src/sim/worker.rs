@@ -6,6 +6,8 @@
 //! during spin up and spin down (§5.1).
 
 use crate::config::WorkerKind;
+use crate::policy::Request;
+use std::collections::VecDeque;
 
 // Worker identity and lifecycle are part of the transport-agnostic policy
 // vocabulary; re-exported here so `sim::worker::{WorkerId, WorkerState}`
@@ -15,6 +17,10 @@ pub use crate::policy::{WorkerId, WorkerState};
 #[derive(Clone, Debug)]
 pub struct Worker {
     pub id: WorkerId,
+    /// Never-reused identity stamped by the pool at insertion. Slab slots
+    /// (and thus `id`) are recycled; events in flight across a scenario
+    /// kill compare uids to detect staleness.
+    pub uid: u64,
     pub kind: WorkerKind,
     pub state: WorkerState,
     /// When spin-up started (allocation instant).
@@ -28,6 +34,17 @@ pub struct Worker {
     pub queued: u32,
     /// Cumulative seconds of service dispatched to this worker.
     pub busy_seconds: f64,
+    /// Service seconds actually completed on this worker. The gap
+    /// `busy_seconds - completed_seconds - remaining` is the executed-but-
+    /// wasted work a scenario kill loses.
+    pub completed_seconds: f64,
+    /// Requests dispatched here and not yet completed, in completion
+    /// (FIFO) order — service is serial, so completions pop the front.
+    /// Drained and re-offered to the policy when the worker is killed.
+    pub inflight: VecDeque<Request>,
+    /// Spot-billing basis: the scenario price integral C(t) at allocation
+    /// (0 when no scenario is attached or the kind is not spot-billed).
+    pub cost_basis: f64,
     /// Time the worker last became idle (valid when idle).
     pub idle_since: f64,
     /// Bumped on every dispatch; stale idle timeouts carry the old value.
@@ -47,6 +64,9 @@ impl Worker {
     ) -> Self {
         Self {
             id,
+            // Stamped by the pool at insertion; 0 is a valid placeholder
+            // for workers constructed outside a pool (unit tests).
+            uid: 0,
             kind,
             state: WorkerState::SpinningUp,
             alloc_time: now,
@@ -54,6 +74,9 @@ impl Worker {
             busy_until: now + spin_up,
             queued: 0,
             busy_seconds: 0.0,
+            completed_seconds: 0.0,
+            inflight: VecDeque::new(),
+            cost_basis: 0.0,
             idle_since: now + spin_up,
             generation: 0,
             peers_at_alloc,

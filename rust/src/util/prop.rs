@@ -236,7 +236,7 @@ mod pool_index_props {
 
     #[test]
     fn pool_indexes_stay_coherent_under_random_transitions() {
-        let kinds = [WorkerKind::Cpu, WorkerKind::Fpga];
+        let kinds = WorkerKind::ALL;
         prop_check(60, |case| {
             let mut pool = Pool::new();
             let mut ids: Vec<WorkerId> = Vec::new();

@@ -22,6 +22,7 @@ fn sensitivity_grid(jobs: usize) -> Vec<Cell> {
                     duration: 180.0,
                 },
                 seed_base: 31,
+                scenario: None,
             });
         }
     }

@@ -221,6 +221,7 @@ fn random_request(case: &mut Case) -> Request {
         arrival: 0.0,
         size,
         deadline: size * factor,
+        attempt: 0,
     }
 }
 
@@ -301,7 +302,7 @@ fn round_robin_sequences_equal_reference_rotation() {
             // Churn between arrivals: the rotation must stay aligned when
             // workers leave or flip class — including the cursor itself.
             if case.rng.chance(0.4) {
-                let live: Vec<WorkerId> = [WorkerKind::Cpu, WorkerKind::Fpga]
+                let live: Vec<WorkerId> = WorkerKind::ALL
                     .iter()
                     .flat_map(|&k| sim.pool.live_ids(k))
                     .collect();
@@ -340,7 +341,7 @@ struct FleetPolicy<'a> {
     find: Box<dyn FnMut(&dyn PolicyView, &Request) -> Option<WorkerId> + 'a>,
 }
 
-const BOTH: &[WorkerKind] = &[WorkerKind::Fpga, WorkerKind::Cpu];
+const BOTH: &[WorkerKind] = &WorkerKind::EFFICIENT_FIRST;
 
 impl Policy for FleetPolicy<'_> {
     fn name(&self) -> String {

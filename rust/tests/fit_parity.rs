@@ -353,6 +353,7 @@ fn sweep_profile_cache_matches_per_cell_recomputation() {
                     duration: 150.0,
                 },
                 seed_base: 77,
+                scenario: None,
             });
         }
     }

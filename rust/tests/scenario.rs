@@ -1,0 +1,246 @@
+//! Scenario subsystem acceptance: (1) the fault-free pack is a true
+//! no-op — `run_scheduler_scenario` with it is bit-identical to the
+//! pre-scenario path for the full Table-8 roster; (2) scenario sweep
+//! grids are bit-deterministic in `--jobs` (fault plans are pure
+//! functions of `(seed_base, seed)`, never of thread schedule); (3)
+//! under the severe pack every orphaned request is conserved —
+//! re-dispatched within its retry budget or recorded as an abandoned
+//! deadline miss — and the adversity is non-vacuous.
+
+use spork::config::{PlatformConfig, SchedulerKind, SimConfig};
+use spork::exp::{Cell, SweepCell, SweepGrid, WorkloadSpec};
+use spork::scenario::ScenarioConfig;
+use spork::sched;
+use spork::sim::Metrics;
+use spork::trace::{synthetic_app, AppTrace};
+use spork::util::rng::Rng;
+
+fn workload(seed: u64) -> AppTrace {
+    let mut rng = Rng::new(seed);
+    synthetic_app("scenario-test", &mut rng, 0.65, 60.0, 60.0, 0.010)
+}
+
+/// Every metric the engine accounts, as exact bit patterns — "equal"
+/// below means bit-identical, not approximately equal.
+fn fingerprint(m: &Metrics) -> Vec<u64> {
+    let e = |b: &spork::sim::EnergyBreakdown| {
+        [
+            b.alloc.to_bits(),
+            b.busy.to_bits(),
+            b.idle.to_bits(),
+            b.dealloc.to_bits(),
+        ]
+    };
+    let mut v = Vec::new();
+    v.extend(e(&m.cpu_energy));
+    v.extend(e(&m.fpga_energy));
+    v.extend([
+        m.cpu_cost.to_bits(),
+        m.fpga_cost.to_bits(),
+        m.requests,
+        m.on_cpu,
+        m.on_fpga,
+        m.deadline_misses,
+        m.cpu_spinups,
+        m.fpga_spinups,
+        m.total_work.to_bits(),
+        m.peak_cpus as u64,
+        m.peak_fpgas as u64,
+        m.completions,
+        m.preemptions,
+        m.worker_failures,
+        m.redispatches,
+        m.abandoned,
+        m.work_lost.to_bits(),
+    ]);
+    v
+}
+
+#[test]
+fn fault_free_pack_is_bit_identical_to_plain_path() {
+    // The parity pack plans nothing, so attaching it must change no bit
+    // of any metric for any scheduler kind — including the fitted
+    // baselines, whose §5.1 searches run fault-free in both paths.
+    let trace = workload(3);
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let pack = ScenarioConfig::fault_free();
+    for kind in SchedulerKind::table8_roster() {
+        let plain = sched::run_scheduler(&kind, &trace, &cfg, &defaults);
+        let scen = sched::run_scheduler_scenario(
+            &kind,
+            &cfg,
+            &defaults,
+            &|| Box::new(trace.source()),
+            &pack,
+            42,
+            7,
+        );
+        assert_eq!(
+            fingerprint(&plain.metrics),
+            fingerprint(&scen.metrics),
+            "{}: fault-free scenario diverged from the plain path",
+            kind.name()
+        );
+        assert_eq!(plain.metrics.requests, plain.metrics.completions);
+        assert_eq!(scen.metrics.preemptions, 0);
+        assert_eq!(scen.metrics.worker_failures, 0);
+        assert_eq!(scen.metrics.abandoned, 0);
+    }
+}
+
+#[test]
+fn scenario_runs_are_reproducible() {
+    // Same (pack, seed_base, seed) twice ⇒ identical bits: the fault
+    // plan and everything downstream is a pure function of the cell.
+    let trace = workload(5);
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let pack = ScenarioConfig::severe();
+    for kind in [SchedulerKind::spork_e(), SchedulerKind::SporkFallback] {
+        let run = |seed: u64| {
+            sched::run_scheduler_scenario(
+                &kind,
+                &cfg,
+                &defaults,
+                &|| Box::new(trace.source()),
+                &pack,
+                11,
+                seed,
+            )
+        };
+        let a = run(0);
+        let b = run(0);
+        assert_eq!(
+            fingerprint(&a.metrics),
+            fingerprint(&b.metrics),
+            "{}: same cell must replay identically",
+            kind.name()
+        );
+        let c = run(1);
+        assert_ne!(
+            fingerprint(&a.metrics),
+            fingerprint(&c.metrics),
+            "{}: the replicate seed must move the fault plan",
+            kind.name()
+        );
+    }
+}
+
+fn scenario_grid(jobs: usize) -> Vec<Cell> {
+    let roster = [
+        SchedulerKind::CpuDynamic,
+        SchedulerKind::spork_e(),
+        SchedulerKind::GreedySpot,
+        SchedulerKind::SporkFallback,
+    ];
+    let mut grid = SweepGrid::with(2, jobs);
+    for pack in [ScenarioConfig::mild(), ScenarioConfig::severe()] {
+        for kind in &roster {
+            grid.push(SweepCell {
+                scheduler: kind.clone(),
+                cfg: SimConfig::paper_default(),
+                workload: WorkloadSpec {
+                    burstiness: 0.65,
+                    rate: 80.0,
+                    size: 0.010,
+                    duration: 120.0,
+                },
+                seed_base: 81,
+                scenario: Some(pack.clone()),
+            });
+        }
+    }
+    grid.run()
+}
+
+#[test]
+fn scenario_grids_are_bit_deterministic_in_jobs() {
+    // The sweep determinism contract must survive fault injection: plans
+    // derive from `(seed_base, seed)`, never from which worker thread
+    // runs the replicate.
+    let serial = scenario_grid(1);
+    for jobs in [2, 0] {
+        assert_eq!(
+            serial,
+            scenario_grid(jobs),
+            "jobs={jobs} diverged under faults"
+        );
+    }
+}
+
+#[test]
+fn severe_faults_conserve_every_request() {
+    // Kill accounting closes: arrivals == completions + abandoned, every
+    // abandonment is a deadline miss, and the pack actually bites.
+    let trace = workload(9);
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let pack = ScenarioConfig::severe();
+    let mut total_faults = 0u64;
+    for kind in SchedulerKind::scenario_roster() {
+        let r = sched::run_scheduler_scenario(
+            &kind,
+            &cfg,
+            &defaults,
+            &|| Box::new(trace.source()),
+            &pack,
+            1,
+            0,
+        );
+        let m = &r.metrics;
+        assert_eq!(m.requests as usize, trace.len(), "{}: lost arrivals", kind.name());
+        assert_eq!(
+            m.requests,
+            m.completions + m.abandoned,
+            "{}: conservation violated",
+            kind.name()
+        );
+        assert!(
+            m.abandoned <= m.deadline_misses,
+            "{}: every abandonment must count as a miss",
+            kind.name()
+        );
+        assert!(m.work_lost >= 0.0 && m.work_lost.is_finite());
+        if m.preemptions + m.worker_failures == 0 {
+            assert_eq!(
+                m.redispatches + m.abandoned,
+                0,
+                "{}: retries without a kill",
+                kind.name()
+            );
+            assert!((m.work_lost - 0.0).abs() < 1e-12);
+        }
+        total_faults += m.preemptions + m.worker_failures;
+    }
+    assert!(
+        total_faults > 0,
+        "severe pack injected nothing across the whole roster (vacuous)"
+    );
+}
+
+#[test]
+fn greedy_spot_takes_real_preemptions_under_severe() {
+    // The all-spot baseline keeps FPGAs alive for the whole run, so the
+    // severe pack's strike process must land on live victims.
+    let trace = workload(13);
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let r = sched::run_scheduler_scenario(
+        &SchedulerKind::GreedySpot,
+        &cfg,
+        &defaults,
+        &|| Box::new(trace.source()),
+        &ScenarioConfig::severe(),
+        1,
+        0,
+    );
+    let m = &r.metrics;
+    assert!(m.preemptions > 0, "no strikes landed: {m:?}");
+    assert!(
+        m.redispatches + m.abandoned > 0,
+        "strikes landed but nothing was re-offered or abandoned: {m:?}"
+    );
+    assert_eq!(m.requests, m.completions + m.abandoned);
+    assert!(m.fpga_cost > 0.0, "spot billing must accrue cost");
+}

@@ -1,0 +1,326 @@
+#!/usr/bin/env python3
+"""Logic oracle for the scenario fault-plan generator.
+
+Re-implements, from scratch and in Python, the exact deterministic
+pipeline `rust/src/scenario/plan.rs` uses to materialize a FaultPlan:
+
+    SplitMix64 -> xoshiro256++ -> Rng::for_stream -> per-(kind, channel)
+    streams -> OU price walk + hazard Bernoulli strikes + exponential-gap
+    failures -> stable time sort -> order-sensitive digest
+
+and checks that the two implementations agree bit-for-bit. Integer and
+RNG state arithmetic is exact by construction (64-bit wrapping); float
+arithmetic matches because both sides do the same IEEE-754 double
+operations in the same order (transcendentals resolve to the platform
+libm in both runtimes).
+
+Usage:
+    tools/scenario_oracle.py pinned
+        Re-derive the constants the Rust unit tests pin (plan counts for
+        the packs at fixed seeds) and print them; fails if the severe
+        pack is vacuous over the CI smoke window.
+
+    tools/scenario_oracle.py verify BENCH_scenario.json
+        Recompute the fault plan declared by a `spork bench-sim
+        --scenario` report and compare planned counts AND the full plan
+        digest against what the Rust generator produced. Any diverging
+        bit fails the run.
+"""
+
+import json
+import math
+import struct
+import sys
+
+MASK = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+SCENARIO_SALT = 0x5CE7A210FA570B1E
+
+
+# ---------------------------------------------------------------- RNG --
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & MASK
+
+    def next_u64(self):
+        self.state = (self.state + GOLDEN) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Xoshiro256pp:
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+
+class Rng:
+    """Mirror of `spork::util::rng::Rng` (only the draws the plan uses)."""
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    @staticmethod
+    def for_stream(seed, stream):
+        sm = SplitMix64(seed)
+        base = sm.next_u64()
+        sm = SplitMix64(base ^ ((stream * GOLDEN) & MASK))
+        return Rng(Xoshiro256pp(sm.next_u64()))
+
+    def f64(self):
+        return (self.inner.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def chance(self, p):
+        return self.f64() < p
+
+    def exp(self, rate):
+        return -math.log(1.0 - self.f64()) / rate
+
+    def normal(self, mu, sigma):
+        u1 = 1.0 - self.f64()
+        u2 = self.f64()
+        mag = math.sqrt(-2.0 * math.log(u1))
+        return mu + sigma * mag * math.cos(2.0 * math.pi * u2)
+
+
+# ------------------------------------------------------- scenario packs --
+
+class Ou:
+    def __init__(self, mu, theta, sigma, daily_amp, period, floor, init):
+        self.mu = mu
+        self.theta = theta
+        self.sigma = sigma
+        self.daily_amp = daily_amp
+        self.period = period
+        self.floor = floor
+        self.init = init
+
+    def mean_at(self, t):
+        return self.mu * (1.0 + self.daily_amp * math.sin(2.0 * math.pi * t / self.period))
+
+    def step(self, x, t, dt, z):
+        nxt = x + self.theta * (self.mean_at(t) - x) * dt + self.sigma * math.sqrt(dt) * z
+        return max(nxt, self.floor)
+
+
+class KindScenario:
+    def __init__(self, spot=False, price=None, preempt_rate=0.0,
+                 hazard_gamma=0.0, mttf=math.inf):
+        self.spot = spot
+        self.price = price or Ou(1.0, 0.0, 0.0, 0.0, 86400.0, 1.0, 1.0)
+        self.preempt_rate = preempt_rate
+        self.hazard_gamma = hazard_gamma
+        self.mttf = mttf
+
+
+# kinds are indexed by WorkerKind::index(): 0 = Cpu, 1 = Fpga.
+PACKS = {
+    "fault-free": ([KindScenario(), KindScenario()], 1.0, 0),
+    "mild": (
+        [
+            KindScenario(),
+            KindScenario(
+                spot=True,
+                price=Ou(0.35, 1.0 / 600.0, 0.006, 0.25, 86400.0, 0.05, 0.35),
+                preempt_rate=1.0 / 600.0,
+                hazard_gamma=2.0,
+                mttf=86400.0,
+            ),
+        ],
+        1.0,
+        0,
+    ),
+    "severe": (
+        [
+            KindScenario(mttf=7200.0),
+            KindScenario(
+                spot=True,
+                price=Ou(0.30, 1.0 / 300.0, 0.012, 0.35, 86400.0, 0.05, 0.30),
+                preempt_rate=0.1,
+                hazard_gamma=3.0,
+                mttf=3600.0,
+            ),
+        ],
+        1.0,
+        0,
+    ),
+}
+
+
+# ------------------------------------------------------------ the plan --
+
+TAG_TICK, TAG_PREEMPTION, TAG_FAILURE = 1, 2, 3
+
+
+def build_plan(pack_name, seed_base, seed, duration):
+    """Returns [(time, tag, kind_index, payload)] sorted like plan.rs."""
+    kinds, price_dt, seed_salt = PACKS[pack_name]
+    faults = []
+    if not math.isfinite(duration) or duration <= 0.0:
+        return faults
+    root = (seed_base ^ SCENARIO_SALT ^ seed_salt) & MASK
+
+    def stream(k, ch):
+        return ((seed * 8) + (k * 3) + ch) & MASK
+
+    for k, ks in enumerate(kinds):
+        if ks.spot:
+            price_rng = Rng.for_stream(root, stream(k, 0))
+            strike_rng = Rng.for_stream(root, stream(k, 1))
+            dt = price_dt
+            x = max(ks.price.init, ks.price.floor)
+            i = 0
+            while True:
+                t = float(i) * dt
+                if t >= duration:
+                    break
+                if i > 0:
+                    x = ks.price.step(x, t, dt, price_rng.normal(0.0, 1.0))
+                    faults.append((t, TAG_TICK, k, x))
+                if ks.preempt_rate > 0.0:
+                    hazard = ks.preempt_rate * math.pow(ks.price.mu / x, ks.hazard_gamma)
+                    p = min(hazard * dt, 1.0)
+                    if strike_rng.chance(p):
+                        offset = strike_rng.f64()
+                        victim_draw = strike_rng.f64()
+                        faults.append((t + offset * dt, TAG_PREEMPTION, k, victim_draw))
+                i += 1
+        if math.isfinite(ks.mttf) and ks.mttf > 0.0:
+            fail_rng = Rng.for_stream(root, stream(k, 2))
+            t = fail_rng.exp(1.0 / ks.mttf)
+            while t < duration:
+                victim_draw = fail_rng.f64()
+                faults.append((t, TAG_FAILURE, k, victim_draw))
+                t += fail_rng.exp(1.0 / ks.mttf)
+    faults.sort(key=lambda f: f[0])  # stable, same as Rust's sort_by total_cmp
+    return faults
+
+
+def f64_bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def digest(faults):
+    h = 0
+    for time, tag, kind, payload in faults:
+        for v in (f64_bits(time), tag * 4 + kind, f64_bits(payload)):
+            h = ((_rotl(h, 7) ^ v) * GOLDEN) & MASK
+    return h
+
+
+def counts(faults):
+    ticks = sum(1 for f in faults if f[1] == TAG_TICK)
+    preempts = sum(1 for f in faults if f[1] == TAG_PREEMPTION)
+    fails = sum(1 for f in faults if f[1] == TAG_FAILURE)
+    return ticks, preempts, fails
+
+
+# ---------------------------------------------------------------- modes --
+
+def cmd_pinned():
+    """Mirror the constants rust unit tests pin; fail on vacuity."""
+    ok = True
+
+    plan = build_plan("fault-free", 1, 0, 3600.0)
+    print(f"fault-free (1,0,3600s): {len(plan)} faults, digest {digest(plan):#018x}")
+    if plan or digest(plan) != 0:
+        print("FAIL: fault-free pack must plan nothing (digest 0)")
+        ok = False
+
+    plan = build_plan("severe", 1, 0, 50.0)
+    ticks, preempts, fails = counts(plan)
+    print(f"severe (1,0,50s): ticks={ticks} preemptions={preempts} failures={fails} "
+          f"digest={digest(plan):#018x}")
+    if ticks != 49:
+        print("FAIL: severe/50s must tick once per dt after t=0 (expected 49)")
+        ok = False
+    if preempts == 0:
+        print("FAIL: severe/50s planned no strikes (vacuous smoke window)")
+        ok = False
+
+    a = build_plan("severe", 1, 0, 600.0)
+    b = build_plan("severe", 1, 0, 600.0)
+    if digest(a) != digest(b):
+        print("FAIL: same cell must produce an identical plan")
+        ok = False
+    if digest(a) == digest(build_plan("severe", 1, 1, 600.0)):
+        print("FAIL: the seed must move the plan")
+        ok = False
+
+    mild = counts(build_plan("mild", 1, 0, 3600.0))
+    severe = counts(build_plan("severe", 1, 0, 3600.0))
+    print(f"mild (1,0,3600s): ticks={mild[0]} preemptions={mild[1]} failures={mild[2]}")
+    print(f"severe (1,0,3600s): ticks={severe[0]} preemptions={severe[1]} failures={severe[2]}")
+    if severe[1] <= mild[1]:
+        print("FAIL: severe must strike more than mild")
+        ok = False
+
+    print("pinned-constant check:", "OK" if ok else "FAILED")
+    return 0 if ok else 1
+
+
+def cmd_verify(path):
+    with open(path) as f:
+        report = json.load(f)
+    pack = report["scenario"]
+    if pack not in PACKS:
+        print(f"FAIL: unknown scenario pack {pack!r} in {path}")
+        return 1
+    plan = build_plan(pack, report["seed_base"], report["seed"],
+                      float(report["sim_seconds"]))
+    ticks, preempts, fails = counts(plan)
+    d = digest(plan)
+    want = (report["plan_price_ticks"], report["plan_preemptions"],
+            report["plan_failures"], int(report["plan_digest"], 16))
+    got = (ticks, preempts, fails, d)
+    print(f"pack={pack} seed_base={report['seed_base']} seed={report['seed']} "
+          f"duration={report['sim_seconds']}s")
+    print(f"  rust:   ticks={want[0]} preemptions={want[1]} failures={want[2]} "
+          f"digest={want[3]:#018x}")
+    print(f"  python: ticks={got[0]} preemptions={got[1]} failures={got[2]} "
+          f"digest={got[3]:#018x}")
+    if got != want:
+        print("FAIL: the Python oracle and the Rust generator disagree")
+        return 1
+    if pack != "fault-free":
+        applied = report["preemptions"] + report["worker_failures"]
+        if applied == 0:
+            print("FAIL: adverse pack applied zero faults at runtime (vacuous)")
+            return 1
+        if report["arrivals"] != report["completions"] + report["abandoned"]:
+            print("FAIL: arrival conservation violated in the report")
+            return 1
+    print("scenario oracle: OK (plan counts and digest match bit-for-bit)")
+    return 0
+
+
+def main(argv):
+    if len(argv) >= 2 and argv[1] == "pinned":
+        return cmd_pinned()
+    if len(argv) >= 3 and argv[1] == "verify":
+        return cmd_verify(argv[2])
+    print(__doc__)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
