@@ -1,0 +1,467 @@
+//! `spork bench-serve`: the serve-path line-rate harness.
+//!
+//! Replays a production-style workload (the Table 7 generator) through
+//! the **sharded real-time router** (`serve::run_serve_sharded`,
+//! [`Compute::Paced`]: full pacing loop, no PJRT) at one or more
+//! time-scale compressions and reports, per scale: requests served,
+//! requests/second of wall time, shed count and fraction, worst replay
+//! lag, and latency percentiles to p999 — to `BENCH_serve.json`,
+//! mirroring `bench-sim`'s role for the simulator.
+//!
+//! The CI tripwires are `--assert-max-lag L` (the router must never wake
+//! more than `L` wall seconds behind its absolute pacing deadline — the
+//! batched-admission and drift-free-pacing guarantees, measured) and
+//! `--assert-shed F` (in an unsaturated configuration an *armed* queue
+//! cap must shed at most fraction `F`; `--assert-shed 0` with a nonzero
+//! `--queue-cap` proves backpressure stays quiet exactly when it should).
+//!
+//! Every model input is a pure function of `(params, seed, app index)`
+//! — each run regenerates its sources from scratch, so points at
+//! different time scales serve bit-identical workloads and any request
+//! count disagreement across scales is a pacing bug, not noise.
+
+use crate::cli::Args;
+use crate::config::{SchedulerKind, SizeBucket};
+use crate::exp::benchsim::peak_rss_kb;
+use crate::serve::{derive_pools, run_serve_sharded, AppFactory, AppServe, Compute, ServeConfig};
+use crate::trace::production::{app_sources, Dataset, ProductionParams};
+use crate::trace::AppTrace;
+use crate::util::rng::Rng;
+
+/// Inputs of one bench-serve run (every field feeds the JSON header).
+#[derive(Clone, Debug)]
+pub struct BenchServeSpec {
+    pub dataset: Dataset,
+    pub bucket: SizeBucket,
+    /// Number of heavy-demand apps to replay (caps the Table 7 count).
+    pub apps: usize,
+    /// Demand scale factor (1.0 = paper-scale; CI uses a small fraction).
+    pub demand_scale: f64,
+    /// Simulated window length, seconds.
+    pub duration: f64,
+    /// Time-scale compressions to measure (sim seconds per wall second).
+    pub scales: Vec<f64>,
+    pub scheduler: SchedulerKind,
+    /// Router shards (apps are partitioned round-robin across them).
+    pub shards: usize,
+    /// Per-run admission cap (0 = unbounded; CI arms it and asserts
+    /// zero shed).
+    pub queue_cap: usize,
+    pub seed: u64,
+}
+
+/// One measured time-scale point.
+#[derive(Clone, Debug)]
+pub struct BenchServePoint {
+    pub time_scale: f64,
+    pub requests: u64,
+    pub shed: u64,
+    pub misses: u64,
+    pub wall_seconds: f64,
+    /// Served request throughput against the wall clock.
+    pub req_per_sec_wall: f64,
+    /// Worst wakeup lag behind the absolute pacing schedule, wall seconds.
+    pub max_lag_wall: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+}
+
+impl BenchServePoint {
+    pub fn shed_fraction(&self) -> f64 {
+        self.shed as f64 / self.requests.max(1) as f64
+    }
+}
+
+/// The `spork bench-serve` report, written to `BENCH_serve.json`.
+#[derive(Clone, Debug)]
+pub struct BenchServeReport {
+    pub scheduler: String,
+    pub dataset: String,
+    pub bucket: String,
+    pub apps: usize,
+    pub shards: usize,
+    pub queue_cap: usize,
+    pub sim_seconds: f64,
+    pub peak_rss_kb: u64,
+    pub points: Vec<BenchServePoint>,
+}
+
+impl BenchServeReport {
+    pub fn to_json(&self) -> String {
+        let points: Vec<String> = self
+            .points
+            .iter()
+            .map(|p| {
+                format!(
+                    "    {{\"time_scale\": {}, \"requests\": {}, \"shed\": {}, \
+                     \"shed_fraction\": {:.6}, \"misses\": {}, \
+                     \"wall_seconds\": {:.3}, \"req_per_sec_wall\": {:.1}, \
+                     \"max_lag_wall\": {:.4}, \"p50_ms\": {:.3}, \
+                     \"p99_ms\": {:.3}, \"p999_ms\": {:.3}}}",
+                    p.time_scale,
+                    p.requests,
+                    p.shed,
+                    p.shed_fraction(),
+                    p.misses,
+                    p.wall_seconds,
+                    p.req_per_sec_wall,
+                    p.max_lag_wall,
+                    p.p50_ms,
+                    p.p99_ms,
+                    p.p999_ms,
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"scheduler\": \"{}\",\n  \"dataset\": \"{}\",\n  \
+             \"bucket\": \"{}\",\n  \"apps\": {},\n  \"shards\": {},\n  \
+             \"queue_cap\": {},\n  \"sim_seconds\": {},\n  \
+             \"peak_rss_kb\": {},\n  \"points\": [\n{}\n  ]\n}}\n",
+            self.scheduler,
+            self.dataset,
+            self.bucket,
+            self.apps,
+            self.shards,
+            self.queue_cap,
+            self.sim_seconds,
+            self.peak_rss_kb,
+            points.join(",\n"),
+        )
+    }
+
+    /// The replay-fidelity tripwire: every point's worst wakeup lag must
+    /// stay within `cap` wall seconds. Vacuity-guarded: a report with no
+    /// points, or one that served nothing, demonstrates nothing.
+    pub fn assert_max_lag(&self, cap: f64) -> Result<(), String> {
+        if self.points.is_empty() {
+            return Err("max-lag tripwire is vacuous: no time-scale points measured".into());
+        }
+        for p in &self.points {
+            if p.requests == 0 {
+                return Err(format!(
+                    "max-lag tripwire is vacuous: the {}x point served zero \
+                     requests — retune the bench workload",
+                    p.time_scale
+                ));
+            }
+            if p.max_lag_wall > cap {
+                return Err(format!(
+                    "replay lag regression: at {}x the router woke {:.3}s behind \
+                     its pacing schedule (cap {cap}s) — batched admission or \
+                     absolute-deadline pacing is no longer keeping up",
+                    p.time_scale, p.max_lag_wall
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The backpressure tripwire: shed fraction must stay at or below
+    /// `max_fraction` at every point. Only meaningful with an *armed*
+    /// queue cap — with `queue_cap == 0` shedding is impossible and the
+    /// assertion would pass vacuously, so that configuration is rejected.
+    pub fn assert_shed_fraction(&self, max_fraction: f64) -> Result<(), String> {
+        if self.queue_cap == 0 {
+            return Err(
+                "shed tripwire is vacuous: --queue-cap 0 can never shed; arm a \
+                 cap for --assert-shed to demonstrate anything"
+                    .into(),
+            );
+        }
+        if self.points.is_empty() {
+            return Err("shed tripwire is vacuous: no time-scale points measured".into());
+        }
+        for p in &self.points {
+            let f = p.shed_fraction();
+            if f > max_fraction {
+                return Err(format!(
+                    "shed regression: at {}x the router shed {} of {} requests \
+                     ({:.2}%, cap {:.2}%) — the queue cap is biting in a \
+                     configuration provisioned not to shed",
+                    p.time_scale,
+                    p.shed,
+                    p.requests,
+                    f * 100.0,
+                    max_fraction * 100.0
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build the per-app factories for one run. Each factory regenerates the
+/// app population from `(params, seed)` and takes its own app — sources
+/// are not `Send` or `Clone`, and regeneration is cheap (rate grids
+/// only), so determinism costs nothing. Pools are derived per app from
+/// its materialized trace, exactly like `spork serve` derives them.
+fn app_factories(spec: &BenchServeSpec) -> Vec<AppFactory> {
+    let params = ProductionParams {
+        dataset: spec.dataset,
+        bucket: spec.bucket,
+        duration: spec.duration,
+        scale: spec.demand_scale,
+        max_apps: Some(spec.apps),
+    };
+    let seed = spec.seed;
+    // Nominal time scale: factories only use the config for the
+    // platform-derived `sim_config`; the runner's config governs pacing.
+    let cfg = ServeConfig::defaults("unused-artifacts", 1.0);
+    let n_apps = spec.apps.min(spec.dataset.app_count(spec.bucket));
+    (0..n_apps)
+        .map(|i| {
+            let kind = spec.scheduler.clone();
+            let cfg = cfg.clone();
+            Box::new(move || {
+                let mut rng = Rng::new(seed);
+                let mut sources = app_sources(&params, &mut rng);
+                let mut src = sources.swap_remove(i);
+                let trace = AppTrace::from_source(&mut src);
+                let (pool_cpus, pool_fpgas) = derive_pools(&cfg.platform, &trace);
+                let sim_cfg = cfg.sim_config(pool_cpus, pool_fpgas);
+                let policy = crate::sched::build(&kind, &sim_cfg, &trace);
+                AppServe {
+                    source: Box::new(trace.into_source()),
+                    policy,
+                    pool_cpus,
+                    pool_fpgas,
+                }
+            }) as AppFactory
+        })
+        .collect()
+}
+
+/// Run the bench: one sharded paced replay per time scale.
+pub fn run_bench_serve(spec: &BenchServeSpec) -> anyhow::Result<BenchServeReport> {
+    let mut points = Vec::with_capacity(spec.scales.len());
+    for &scale in &spec.scales {
+        let mut cfg = ServeConfig::defaults("unused-artifacts", scale);
+        cfg.queue_cap = spec.queue_cap;
+        let report = run_serve_sharded(&cfg, app_factories(spec), spec.shards, Compute::Paced)?;
+        points.push(BenchServePoint {
+            time_scale: scale,
+            requests: report.requests,
+            shed: report.shed,
+            misses: report.misses,
+            wall_seconds: report.wall_seconds,
+            req_per_sec_wall: report.requests as f64 / report.wall_seconds.max(1e-9),
+            max_lag_wall: report.max_lag_wall,
+            p50_ms: report.latency_ms.percentile(50.0),
+            p99_ms: report.latency_ms.percentile(99.0),
+            p999_ms: report.latency_ms.percentile(99.9),
+        });
+    }
+    Ok(BenchServeReport {
+        scheduler: spec.scheduler.name(),
+        dataset: spec.dataset.name().to_string(),
+        bucket: spec.bucket.name().to_string(),
+        apps: spec.apps,
+        shards: spec.shards,
+        queue_cap: spec.queue_cap,
+        sim_seconds: spec.duration,
+        peak_rss_kb: peak_rss_kb(),
+        points,
+    })
+}
+
+/// Parse the `--scales` comma list ("1,10,100").
+fn parse_scales(spec: &str) -> Result<Vec<f64>, String> {
+    spec.split(',')
+        .map(|t| {
+            let t = t.trim();
+            match t.parse::<f64>() {
+                Ok(s) if s > 0.0 && s.is_finite() => Ok(s),
+                _ => Err(format!("--scales: invalid time scale '{t}'")),
+            }
+        })
+        .collect()
+}
+
+/// `spork bench-serve` CLI entrypoint.
+pub fn cmd_bench_serve(args: &Args) -> Result<(), String> {
+    let dataset_name = args.str_or("dataset", "azure");
+    let dataset = Dataset::from_name(&dataset_name)
+        .ok_or(format!("unknown dataset '{dataset_name}' (azure|alibaba)"))?;
+    let bucket_name = args.str_or("bucket", "short");
+    let bucket = SizeBucket::from_name(&bucket_name)
+        .ok_or(format!("unknown bucket '{bucket_name}' (short|medium|long)"))?;
+    let apps = args.usize_or("apps", 8)?;
+    if apps == 0 {
+        return Err("--apps must be > 0".into());
+    }
+    // The generator caps the population at the dataset's heavy-demand app
+    // count; clamp here so the report's `apps` matches what actually ran.
+    let apps = apps.min(dataset.app_count(bucket));
+    let demand_scale = args.f64_or("demand-scale", 0.05)?;
+    let duration = args.f64_or("duration", 600.0)?;
+    if !(duration > 0.0 && duration.is_finite()) {
+        return Err("--duration must be a finite positive number".into());
+    }
+    let scales = parse_scales(&args.str_or("scales", "1,10,100"))?;
+    let sched_name = args.str_or("scheduler", "spork-e");
+    let scheduler = SchedulerKind::from_name(&sched_name)
+        .ok_or(format!("unknown scheduler '{sched_name}'"))?;
+    let shards = args.usize_or("shards", 4)?.max(1);
+    let queue_cap = args.usize_or("queue-cap", 256)?;
+    let seed = args.u64_or("seed", 1)?;
+    let out = args.str_or("out", "BENCH_serve.json");
+    let assert_max_lag = match args.get("assert-max-lag") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| format!("--assert-max-lag: invalid lag cap '{v}'"))?,
+        ),
+        None => None,
+    };
+    let assert_shed = match args.get("assert-shed") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| format!("--assert-shed: invalid shed fraction '{v}'"))?,
+        ),
+        None => None,
+    };
+
+    let spec = BenchServeSpec {
+        dataset,
+        bucket,
+        apps,
+        demand_scale,
+        duration,
+        scales,
+        scheduler,
+        shards,
+        queue_cap,
+        seed,
+    };
+    eprintln!(
+        "replaying {} {} apps x {:.0} sim-s through {} ({} shards, queue cap {}) \
+         at {:?}x...",
+        spec.dataset.name(),
+        spec.apps,
+        spec.duration,
+        spec.scheduler.display(),
+        spec.shards,
+        spec.queue_cap,
+        spec.scales,
+    );
+    let report = run_bench_serve(&spec).map_err(|e| e.to_string())?;
+    let json = report.to_json();
+    std::fs::write(&out, &json).map_err(|e| format!("writing {out}: {e}"))?;
+    for p in &report.points {
+        println!(
+            "  {:>5}x: {} requests in {:.2} wall-s = {:.0} req/s, {} shed, \
+             max lag {:.3}s, p50/p99/p999 {:.1}/{:.1}/{:.1} ms",
+            p.time_scale,
+            p.requests,
+            p.wall_seconds,
+            p.req_per_sec_wall,
+            p.shed,
+            p.max_lag_wall,
+            p.p50_ms,
+            p.p99_ms,
+            p.p999_ms,
+        );
+    }
+    println!("-> {out} (peak RSS {} kB)", report.peak_rss_kb);
+    if let Some(cap) = assert_max_lag {
+        report.assert_max_lag(cap)?;
+        println!("  lag tripwire: every point woke <= {cap}s behind schedule");
+    }
+    if let Some(frac) = assert_shed {
+        report.assert_shed_fraction(frac)?;
+        println!(
+            "  shed tripwire: shed fraction <= {frac} at every point \
+             (queue cap {} armed)",
+            report.queue_cap
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(scales: Vec<f64>, queue_cap: usize) -> BenchServeSpec {
+        BenchServeSpec {
+            dataset: Dataset::AzureFunctions,
+            bucket: SizeBucket::Short,
+            apps: 3,
+            demand_scale: 0.02,
+            duration: 60.0,
+            scales,
+            scheduler: SchedulerKind::spork_e(),
+            shards: 2,
+            queue_cap,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn bench_serve_reports_and_serializes() {
+        // High compression so the paced replay finishes in well under a
+        // wall second.
+        let r = run_bench_serve(&tiny_spec(vec![1000.0], 256)).unwrap();
+        assert_eq!(r.points.len(), 1);
+        let p = &r.points[0];
+        assert!(p.requests > 0, "bench workload served nothing");
+        assert_eq!(p.shed, 0, "unsaturated config must not shed");
+        assert!(p.req_per_sec_wall > 0.0);
+        assert!(p.p50_ms <= p.p99_ms && p.p99_ms <= p.p999_ms);
+        let j = r.to_json();
+        assert!(j.contains("\"req_per_sec_wall\""));
+        assert!(j.contains("\"max_lag_wall\""));
+        assert!(crate::util::json::Json::parse(&j).is_ok(), "bench JSON must parse");
+    }
+
+    #[test]
+    fn request_counts_agree_across_time_scales() {
+        // Pacing compresses wall time only — the model must serve the
+        // identical workload at any compression.
+        let r = run_bench_serve(&tiny_spec(vec![500.0, 2000.0], 256)).unwrap();
+        assert_eq!(r.points[0].requests, r.points[1].requests);
+        assert_eq!(r.points[0].misses, r.points[1].misses);
+        assert_eq!(r.points[0].shed, r.points[1].shed);
+    }
+
+    #[test]
+    fn tripwires_gate_and_guard_vacuity() {
+        let r = run_bench_serve(&tiny_spec(vec![1000.0], 256)).unwrap();
+        assert!(r.assert_max_lag(1e6).is_ok());
+        assert!(r.assert_max_lag(-1.0).is_err(), "no lag can beat a negative cap");
+        assert!(r.assert_shed_fraction(0.0).is_ok());
+        // An unarmed cap makes the shed assertion meaningless.
+        let unarmed = run_bench_serve(&tiny_spec(vec![1000.0], 0)).unwrap();
+        let err = unarmed.assert_shed_fraction(0.0).unwrap_err();
+        assert!(err.contains("vacuous"), "unexpected error: {err}");
+        // An empty report demonstrates nothing either.
+        let empty = BenchServeReport {
+            points: Vec::new(),
+            ..r.clone()
+        };
+        assert!(empty.assert_max_lag(1.0).is_err());
+        assert!(empty.assert_shed_fraction(0.5).is_err());
+    }
+
+    #[test]
+    fn scales_parse() {
+        assert_eq!(parse_scales("1, 10,100").unwrap(), vec![1.0, 10.0, 100.0]);
+        assert!(parse_scales("10,zoom").is_err());
+        assert!(parse_scales("0").is_err());
+        assert!(parse_scales("-5").is_err());
+    }
+
+    #[test]
+    fn overload_sheds_and_conserves() {
+        // A queue cap of 1 in-flight under a dense workload must shed
+        // (any two overlapping requests trip it); what it sheds must stay
+        // conserved in the request count.
+        let mut spec = tiny_spec(vec![2000.0], 1);
+        spec.demand_scale = 0.5;
+        let r = run_bench_serve(&spec).unwrap();
+        let p = &r.points[0];
+        assert!(p.shed > 0, "cap 1 should shed under this workload");
+        assert!(p.shed < p.requests, "some requests must still be served");
+        assert!(p.shed_fraction() > 0.0 && p.shed_fraction() < 1.0);
+    }
+}

@@ -3,6 +3,7 @@
 //! to stdout and under `results/` as txt/csv/md.
 
 pub mod ablation;
+pub mod benchserve;
 pub mod benchsim;
 pub mod common;
 pub mod offline;
@@ -11,6 +12,9 @@ pub mod scenario;
 pub mod sensitivity;
 pub mod sweep;
 
+pub use benchserve::{
+    cmd_bench_serve, run_bench_serve, BenchServePoint, BenchServeReport, BenchServeSpec,
+};
 pub use benchsim::{
     cmd_bench_sim, run_bench_sim, run_bench_sim_scenario, run_fit_bench, run_pool_scaling,
     BenchSimReport, FitBenchReport, FitSearchReport, PoolScalePoint, ScenarioBenchReport,

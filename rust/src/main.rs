@@ -92,6 +92,25 @@ fn specs() -> Vec<Spec> {
             ],
         },
         Spec {
+            name: "bench-serve",
+            about: "replay a production-style workload through the sharded paced router; writes BENCH_serve.json",
+            opts: vec![
+                ("dataset", true, "azure|alibaba (default azure)"),
+                ("bucket", true, "short|medium|long (default short)"),
+                ("apps", true, "heavy-demand app count (default 8, capped at the dataset population)"),
+                ("demand-scale", true, "production demand scale (default 0.05)"),
+                ("duration", true, "simulated seconds per point (default 600)"),
+                ("scales", true, "comma list of time-scale compressions (default 1,10,100)"),
+                ("scheduler", true, "any Table-8 kind (default spork-e)"),
+                ("shards", true, "router shards (default 4)"),
+                ("queue-cap", true, "admission cap per app, 0 = unbounded (default 256)"),
+                ("seed", true, "rng seed (default 1)"),
+                ("out", true, "output JSON path (default BENCH_serve.json)"),
+                ("assert-max-lag", true, "max wall-seconds of replay lag at any point (CI tripwire)"),
+                ("assert-shed", true, "max shed fraction at any point; requires an armed --queue-cap (CI tripwire)"),
+            ],
+        },
+        Spec {
             name: "serve",
             about: "serve a compiled model through the hybrid runtime (requires artifacts/, or --dry-run)",
             opts: vec![
@@ -103,6 +122,7 @@ fn specs() -> Vec<Spec> {
                 ("time-scale", true, "simulated seconds per wall second (default 5)"),
                 ("pool-cpus", true, "warm CPU pool size (default 0 = derive from trace demand)"),
                 ("pool-fpgas", true, "warm FPGA pool size (default 0 = derive from trace demand)"),
+                ("queue-cap", true, "shed arrivals past this many in-flight requests, 0 = unbounded (default 0)"),
                 ("seed", true, "rng seed (default 1)"),
                 ("dry-run", false, "stub compute: no artifacts, no pacing; model accounting only"),
             ],
@@ -148,6 +168,7 @@ fn main() {
         Some("trace-gen") => cmd_trace_gen(&args),
         Some("experiment") => spork::exp::cmd_experiment(&args),
         Some("bench-sim") => spork::exp::cmd_bench_sim(&args),
+        Some("bench-serve") => spork::exp::cmd_bench_serve(&args),
         Some("serve") => spork::serve::cmd_serve(&args),
         Some("pareto") => spork::opt::cmd_pareto(&args),
         _ => Err("no subcommand given; see --help".to_string()),

@@ -154,6 +154,13 @@ pub enum Action {
     /// never double-counted in the arrival metrics either way — but the
     /// explicit variant keeps the fallback policies' audit trail honest.
     Redispatch { req: Request, to: Target },
+    /// Refuse admission: the request is dropped *now*, never dispatched
+    /// (bounded-queue backpressure — an overloaded router answering fast
+    /// beats one answering never). Counted in `Metrics::shed`, which
+    /// extends arrival conservation to
+    /// `requests == completions + abandoned + shed`. Only meaningful in
+    /// response to [`Observation::Arrival`] for that same request.
+    Shed { req: Request },
 }
 
 /// A resolved side effect a driver applied — the audit stream both drivers
@@ -188,5 +195,14 @@ pub enum Effect {
         worker: WorkerId,
         kind: WorkerKind,
         failure: bool,
+    },
+    /// A request was refused admission ([`Action::Shed`]): dropped without
+    /// dispatch, counted in `Metrics::shed`. Serving runtimes send the
+    /// client a load-shed rejection when they see this.
+    Shed {
+        arrival: f64,
+        size: f64,
+        deadline: f64,
+        attempt: u32,
     },
 }

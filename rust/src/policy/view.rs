@@ -163,6 +163,19 @@ pub trait PolicyView {
         best
     }
 
+    /// Total in-flight (queued + running) requests across every live
+    /// worker of every kind — the admission backlog a bounded-queue
+    /// router sheds against. Reference scan by default; the sim view
+    /// answers O(1) from a counter the pool maintains, so backpressure
+    /// checks never reintroduce a per-arrival fleet scan.
+    fn inflight_requests(&self) -> u64 {
+        let mut total = 0u64;
+        for kind in WorkerKind::ALL {
+            self.for_each_worker(kind, &mut |w| total += w.queued as u64);
+        }
+        total
+    }
+
     /// Current spot price of `kind` as a multiplier on its on-demand cost
     /// rate. 1.0 outside a scenario (and for non-spot kinds the multiplier
     /// is informational only — they bill at the on-demand rate).

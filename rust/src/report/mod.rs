@@ -53,6 +53,12 @@ pub fn run_to_text(r: &RunResult, trace: &AppTrace) -> String {
         "spin-ups         : {} cpu, {} fpga | peak {} cpu, {} fpga\n",
         m.cpu_spinups, m.fpga_spinups, m.peak_cpus, m.peak_fpgas
     ));
+    if m.shed > 0 {
+        out.push_str(&format!(
+            "shed             : {} refused admission (queue cap backpressure)\n",
+            m.shed
+        ));
+    }
     if m.preemptions + m.worker_failures + m.redispatches + m.abandoned > 0 {
         out.push_str(&format!(
             "faults           : {} preempted, {} failed | {} re-dispatched, {} abandoned, {:.1}s work lost\n",
@@ -95,6 +101,7 @@ pub fn run_to_json(r: &RunResult) -> Json {
         ("redispatches", Json::Num(m.redispatches as f64)),
         ("abandoned", Json::Num(m.abandoned as f64)),
         ("work_lost", Json::Num(m.work_lost)),
+        ("shed", Json::Num(m.shed as f64)),
     ])
 }
 

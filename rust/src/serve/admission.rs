@@ -1,0 +1,186 @@
+//! Bounded-admission wrapper: backpressure as a policy combinator.
+//!
+//! [`Backpressure`] wraps any [`Policy`] and refuses fresh arrivals while
+//! the fleet's in-flight backlog is at or above a cap, turning unbounded
+//! admission queues into an explicit, counted `Shed` (DESIGN.md §13). The
+//! check is one O(1) counter read ([`PolicyView::inflight_requests`]
+//! against the pool's maintained total), so arming a cap never
+//! reintroduces a per-arrival fleet scan. With `cap == 0` the wrapper is
+//! inert — it forwards every observation untouched, so a capless wrapped
+//! run is bit-identical to an unwrapped one (pinned by
+//! `rust/tests/serve_line_rate.rs`).
+
+use crate::policy::{Action, Observation, Policy, PolicyView};
+
+/// Admission-bounding decorator around an inner policy. Sheds a fresh
+/// arrival (and retries alike — a re-offered request competes for the same
+/// bounded queue) when `cap > 0` and the in-flight backlog has reached the
+/// cap; everything else forwards verbatim, and the inner policy never sees
+/// the arrivals the wrapper sheds.
+pub struct Backpressure<'a> {
+    inner: &'a mut dyn Policy,
+    cap: u64,
+}
+
+impl<'a> Backpressure<'a> {
+    /// `cap == 0` disables shedding entirely (unbounded admission).
+    pub fn new(inner: &'a mut dyn Policy, cap: u64) -> Self {
+        Backpressure { inner, cap }
+    }
+}
+
+impl Policy for Backpressure<'_> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn interval(&self) -> f64 {
+        self.inner.interval()
+    }
+
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+        if let Observation::Arrival { req } = obs {
+            // The `cap > 0` guard short-circuits before the view query so
+            // a capless wrapper issues no counter reads at all.
+            if self.cap > 0 && view.inflight_requests() >= self.cap {
+                out.push(Action::Shed { req });
+                return;
+            }
+        }
+        self.inner.observe(obs, view, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkerKind;
+    use crate::policy::{Request, Target, WorkerId, WorkerObs};
+
+    /// Inner policy that dispatches every arrival to worker 0 and records
+    /// how many observations it saw.
+    struct CountingInner {
+        seen: usize,
+    }
+
+    impl Policy for CountingInner {
+        fn name(&self) -> String {
+            "counting-inner".into()
+        }
+
+        fn interval(&self) -> f64 {
+            60.0
+        }
+
+        fn observe(&mut self, obs: Observation, _view: &dyn PolicyView, out: &mut Vec<Action>) {
+            self.seen += 1;
+            if let Observation::Arrival { req } = obs {
+                out.push(Action::Dispatch {
+                    req,
+                    to: Target::Worker(WorkerId(0)),
+                });
+            }
+        }
+    }
+
+    /// Minimal view with a fixed in-flight backlog.
+    struct FixedView {
+        inflight: u64,
+    }
+
+    impl PolicyView for FixedView {
+        fn now(&self) -> f64 {
+            0.0
+        }
+        fn trace_live(&self) -> bool {
+            true
+        }
+        fn service_time(&self, _kind: WorkerKind, size: f64) -> f64 {
+            size
+        }
+        fn allocated(&self, _kind: WorkerKind) -> u32 {
+            0
+        }
+        fn live_ids(&self, _kind: WorkerKind) -> Vec<WorkerId> {
+            Vec::new()
+        }
+        fn worker(&self, _id: WorkerId) -> Option<WorkerObs> {
+            None
+        }
+        fn inflight_requests(&self) -> u64 {
+            self.inflight
+        }
+    }
+
+    fn arrival(t: f64) -> Observation {
+        Observation::Arrival {
+            req: Request {
+                arrival: t,
+                size: 1.0,
+                deadline: t + 10.0,
+                attempt: 0,
+            },
+        }
+    }
+
+    #[test]
+    fn sheds_at_cap_and_hides_the_arrival_from_the_inner_policy() {
+        let mut inner = CountingInner { seen: 0 };
+        let mut bp = Backpressure::new(&mut inner, 4);
+        let mut out = Vec::new();
+
+        bp.observe(arrival(1.0), &FixedView { inflight: 3 }, &mut out);
+        assert!(matches!(out.as_slice(), [Action::Dispatch { .. }]));
+        out.clear();
+
+        bp.observe(arrival(2.0), &FixedView { inflight: 4 }, &mut out);
+        assert!(
+            matches!(out.as_slice(), [Action::Shed { req }] if req.arrival == 2.0),
+            "at-cap arrival must shed, got {out:?}"
+        );
+        out.clear();
+
+        bp.observe(arrival(3.0), &FixedView { inflight: 9 }, &mut out);
+        assert!(matches!(out.as_slice(), [Action::Shed { .. }]));
+
+        // The inner policy saw only the admitted arrival.
+        assert_eq!(inner.seen, 1);
+    }
+
+    #[test]
+    fn cap_zero_is_inert_even_under_backlog() {
+        let mut inner = CountingInner { seen: 0 };
+        let mut bp = Backpressure::new(&mut inner, 0);
+        let mut out = Vec::new();
+        bp.observe(arrival(1.0), &FixedView { inflight: u64::MAX }, &mut out);
+        assert!(matches!(out.as_slice(), [Action::Dispatch { .. }]));
+        assert_eq!(inner.seen, 1);
+    }
+
+    #[test]
+    fn non_arrival_observations_always_forward() {
+        let mut inner = CountingInner { seen: 0 };
+        let mut bp = Backpressure::new(&mut inner, 1);
+        let mut out = Vec::new();
+        bp.observe(Observation::Start, &FixedView { inflight: 10 }, &mut out);
+        bp.observe(
+            Observation::Tick {
+                index: 0,
+                cpu_work: 0.0,
+                fpga_work: 0.0,
+            },
+            &FixedView { inflight: 10 },
+            &mut out,
+        );
+        assert!(out.is_empty());
+        assert_eq!(inner.seen, 2);
+    }
+
+    #[test]
+    fn name_and_interval_forward() {
+        let mut inner = CountingInner { seen: 0 };
+        let bp = Backpressure::new(&mut inner, 7);
+        assert_eq!(bp.name(), "counting-inner");
+        assert_eq!(bp.interval(), 60.0);
+    }
+}

@@ -27,8 +27,12 @@
 //! into the modeled dynamics) and cycle between parked and active;
 //! activation pays the scaled Table 6 spin-up before serving.
 
+mod admission;
+mod shard;
 mod worker;
 
+pub use admission::Backpressure;
+pub use shard::{run_serve_sharded, AppFactory, AppServe};
 pub use worker::{spawn_worker, Completion, Job, WorkerMsg};
 
 use crate::cli::Args;
@@ -38,7 +42,7 @@ use crate::sched::breakeven::{breakeven_fpga_seconds, needed_fpgas, Objective};
 use crate::sim::Driver;
 use crate::trace::{synthetic_app_dt, AppTrace, ArrivalSource};
 use crate::util::rng::Rng;
-use crate::util::stats::Sample;
+use crate::util::stats::LogHistogram;
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -53,6 +57,12 @@ pub enum Compute {
     /// as fast as possible and reports the model-side accounting. Used by
     /// `spork serve --dry-run`, CI, and the driver-parity suite.
     Stub,
+    /// Wall-clock pacing with stubbed execution: the router runs its full
+    /// real-time loop — absolute-deadline sleeps, batched admission
+    /// drains, replay-lag accounting — but no worker threads or artifacts.
+    /// This is what `spork bench-serve` measures: router line rate and
+    /// replay fidelity, isolated from PJRT execution.
+    Paced,
 }
 
 #[derive(Clone, Debug)]
@@ -69,6 +79,11 @@ pub struct ServeConfig {
     /// rounding rule (see [`derive_pools`]).
     pub pool_cpus: usize,
     pub pool_fpgas: usize,
+    /// Bounded admission: shed fresh arrivals while the fleet's in-flight
+    /// backlog is at or above this many requests ([`Backpressure`]).
+    /// `0` = unbounded (never shed) — the historical behavior, and
+    /// bit-identical to it.
+    pub queue_cap: usize,
 }
 
 impl ServeConfig {
@@ -81,6 +96,7 @@ impl ServeConfig {
             deadline_factor: 10.0,
             pool_cpus: 0,
             pool_fpgas: 0,
+            queue_cap: 0,
         }
     }
 
@@ -136,13 +152,30 @@ pub struct ServeReport {
     pub on_cpu: u64,
     pub on_fpga: u64,
     pub misses: u64,
+    /// Arrivals refused admission under backpressure (`queue_cap`);
+    /// conserved with the rest: `requests == dispatched + shed`.
+    pub shed: u64,
     pub fpga_spinups: u64,
     pub cpu_spinups: u64,
     pub energy_j: f64,
     pub cost_usd: f64,
-    pub latency_ms: Sample,
+    /// Per-request latencies in a fixed-bin log histogram: memory is
+    /// bounded (≈1.2k bins) at any request count, percentiles to p999
+    /// within the bin growth factor (≤2% relative error).
+    pub latency_ms: LogHistogram,
     pub wall_seconds: f64,
     pub sim_seconds: f64,
+    /// Worst observed replay lag in wall seconds: how far behind its
+    /// absolute pacing deadline the router woke. Small values are OS
+    /// scheduling jitter; sustained growth means the host can't keep this
+    /// time-scale. 0 under [`Compute::Stub`] (no pacing).
+    pub max_lag_wall: f64,
+    /// Completions whose batch's real PJRT execution ran past its scaled
+    /// service budget (see [`Completion::overrun_wall`]); 0 without real
+    /// compute.
+    pub exec_overruns: u64,
+    /// Largest single overrun, wall seconds.
+    pub max_overrun_wall: f64,
     /// Sum of first output elements (sanity: real compute happened;
     /// 0 under stubbed compute).
     pub output_checksum: f64,
@@ -175,10 +208,11 @@ impl ServeReport {
         ));
         if !self.latency_ms.is_empty() {
             s.push_str(&format!(
-                "latency (sim ms) : p50 {:.1}  p95 {:.1}  p99 {:.1}  max {:.1}\n",
+                "latency (sim ms) : p50 {:.1}  p95 {:.1}  p99 {:.1}  p999 {:.1}  max {:.1}\n",
                 self.latency_ms.percentile(50.0),
                 self.latency_ms.percentile(95.0),
                 self.latency_ms.percentile(99.0),
+                self.latency_ms.percentile(99.9),
                 self.latency_ms.max()
             ));
         }
@@ -187,6 +221,26 @@ impl ServeReport {
             self.misses,
             100.0 * self.misses as f64 / self.requests.max(1) as f64
         ));
+        if self.shed > 0 {
+            s.push_str(&format!(
+                "shed             : {} ({:.2}% of arrivals, queue cap backpressure)\n",
+                self.shed,
+                100.0 * self.shed as f64 / self.requests.max(1) as f64
+            ));
+        }
+        if self.max_lag_wall > 0.0 {
+            s.push_str(&format!(
+                "max replay lag   : {:.3} wall-s\n",
+                self.max_lag_wall
+            ));
+        }
+        if self.exec_overruns > 0 {
+            s.push_str(&format!(
+                "exec overruns    : {} batches over budget (worst {:.3} wall-s) — \
+                 time-scale too aggressive for this host\n",
+                self.exec_overruns, self.max_overrun_wall
+            ));
+        }
         s.push_str(&format!(
             "spin-ups         : {} fpga, {} cpu\n",
             self.fpga_spinups, self.cpu_spinups
@@ -267,6 +321,7 @@ pub fn run_serve_source<'a>(
 ) -> anyhow::Result<(ServeReport, Vec<Completion>)> {
     let scale = cfg.time_scale;
     let real = compute == Compute::Real;
+    let paced = compute != Compute::Stub;
     let sim_cfg = cfg.sim_config(pool_cpus, pool_fpgas);
     let platform = sim_cfg.platform.clone();
 
@@ -320,7 +375,12 @@ pub fn run_serve_source<'a>(
     let d_in = 128usize;
     let epoch = Instant::now();
 
-    let mut driver = Driver::from_source(source, sim_cfg, policy);
+    // Bounded admission sits between the driver and the policy; with
+    // `queue_cap == 0` the wrapper is inert (bit-identical observations).
+    let mut policy = Backpressure::new(policy, cfg.queue_cap as u64);
+    let mut driver = Driver::from_source(source, sim_cfg, &mut policy);
+    let mut latency = LogHistogram::latency_ms();
+    let mut max_lag_wall = 0.0f64;
     {
         let mut handle = |e: &Effect| {
             if real {
@@ -367,28 +427,42 @@ pub fn run_serve_source<'a>(
                         }
                     }
                     Effect::KeptAlive { .. } => {}
+                    // Nothing was dispatched — the client gets a fast
+                    // load-shed rejection; no physical slot is involved.
+                    Effect::Shed { .. } => {}
                 }
+            } else if let Effect::Dispatched { arrival, finish, .. } = *e {
+                // Stubbed execution: the model's completion time is the
+                // truth, so every dispatch contributes a latency (full
+                // coverage, unlike the sim metrics' subsample).
+                latency.add((finish - arrival) * 1000.0);
             }
             sink(e);
         };
 
-        let mut behind_warned = false;
         driver.start(&mut handle);
         while let Some(t) = driver.next_time() {
-            if real {
-                let target_wall = t / scale;
-                let elapsed = epoch.elapsed().as_secs_f64();
-                if target_wall > elapsed {
-                    std::thread::sleep(Duration::from_secs_f64(target_wall - elapsed));
-                } else if elapsed - target_wall > 2.0 && !behind_warned {
-                    eprintln!(
-                        "warning: replay {:.1}s behind wall schedule (host overloaded?)",
-                        elapsed - target_wall
-                    );
-                    behind_warned = true;
+            if paced {
+                // Drift-free pacing: sleep to the *absolute* wall deadline
+                // of the next occurrence (epoch-anchored), never by a
+                // relative delta — per-iteration sleep error cannot
+                // accumulate across a long replay.
+                let target = epoch + Duration::from_secs_f64(t / scale);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
                 }
+                let elapsed = epoch.elapsed().as_secs_f64();
+                max_lag_wall = max_lag_wall.max(elapsed - t / scale);
+                // Batched admission: one wakeup drains every occurrence
+                // that became due during this pacing quantum, in exactly
+                // per-step order (the `.max(t)` guarantees progress even
+                // if the sleep undershot by a rounding ulp). Amortizes
+                // clock reads and sleep syscalls over the whole burst.
+                driver.step_until((elapsed * scale).max(t), &mut handle);
+            } else {
+                driver.step(&mut handle);
             }
-            driver.step(&mut handle);
         }
     }
 
@@ -411,12 +485,14 @@ pub fn run_serve_source<'a>(
         requests: m.requests,
         on_cpu: m.on_cpu,
         on_fpga: m.on_fpga,
+        shed: m.shed,
         fpga_spinups: m.fpga_spinups,
         cpu_spinups: m.cpu_spinups,
         energy_j: m.total_energy(),
         cost_usd: m.total_cost(),
         sim_seconds: sim_end,
         wall_seconds: epoch.elapsed().as_secs_f64(),
+        max_lag_wall,
         ..Default::default()
     };
     match compute {
@@ -429,14 +505,17 @@ pub fn run_serve_source<'a>(
                 }
                 report.latency_ms.add((c.finish_sim - c.arrival_sim) * 1000.0);
                 report.output_checksum += c.output0 as f64;
+                if c.overrun_wall > 0.0 {
+                    report.exec_overruns += 1;
+                    report.max_overrun_wall = report.max_overrun_wall.max(c.overrun_wall);
+                }
             }
         }
-        Compute::Stub => {
-            // Model-side accounting (subsampled latencies, in sim time).
+        Compute::Stub | Compute::Paced => {
+            // Model-side accounting; latencies were collected per
+            // dispatch in the effect handler (full coverage).
             report.misses = m.deadline_misses;
-            for &l in m.latency.values() {
-                report.latency_ms.add(l * 1000.0);
-            }
+            report.latency_ms = latency;
         }
     }
     Ok((report, completions))
@@ -465,6 +544,7 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     let mut cfg = ServeConfig::defaults(&artifacts, time_scale);
     cfg.pool_cpus = args.usize_or("pool-cpus", 0)?;
     cfg.pool_fpgas = args.usize_or("pool-fpgas", 0)?;
+    cfg.queue_cap = args.usize_or("queue-cap", 0)?;
 
     let mut rng = Rng::new(seed);
     let trace = synthetic_app_dt("serve", &mut rng, burstiness, duration, rate, 0.010, 60.0);

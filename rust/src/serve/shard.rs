@@ -1,0 +1,295 @@
+//! Sharded router: partition the app set across N independent router
+//! shards, each owning a disjoint slice of arrival sources, policies, and
+//! worker-pool budgets (DESIGN.md §13).
+//!
+//! Apps are the sharding unit because they are the system's natural
+//! isolation boundary — each app has its own pool (FPGAs are
+//! application-specific bitstreams), its own policy instance, and its own
+//! arrival stream, so shards share *nothing* and need no locks. App `i`
+//! goes to shard `i % shards` ([`partition_round_robin`]); per-app results
+//! are merged back in app-index order. Both rules depend only on the app
+//! index, never on timing, so the merged [`ServeReport`] is **bit
+//! identical for any shard count** (pinned by
+//! `rust/tests/serve_line_rate.rs`) — sharding buys wall-clock
+//! parallelism, not different answers.
+//!
+//! Determinism of the inputs is the caller's half of the contract: build
+//! each app's source and policy from the app *index* (e.g. via
+//! `Rng::for_stream(seed, app_index)` or the production generator's
+//! per-app forks), not from anything shard- or thread-dependent.
+
+use super::{Backpressure, Compute, ServeConfig, ServeReport};
+use crate::policy::{Effect, Policy};
+use crate::sim::{Driver, Metrics};
+use crate::trace::{partition_round_robin, ArrivalSource};
+use crate::util::stats::LogHistogram;
+use std::time::{Duration, Instant};
+
+/// One app's serving inputs: its arrival stream, its policy instance, and
+/// its warm-pool budget (per-app pools, like the simulator).
+pub struct AppServe {
+    pub source: Box<dyn ArrivalSource>,
+    pub policy: Box<dyn Policy>,
+    pub pool_cpus: usize,
+    pub pool_fpgas: usize,
+}
+
+/// Deferred app construction: factories cross the shard-thread boundary
+/// (sources and policies are not `Send`), so each shard builds its own
+/// apps. A factory must be a pure function of the app's identity for the
+/// shard-count determinism contract to hold.
+pub type AppFactory = Box<dyn FnOnce() -> AppServe + Send>;
+
+/// Per-app result a shard hands back for the index-ordered merge.
+struct AppOutcome {
+    idx: usize,
+    scheduler: String,
+    metrics: Metrics,
+    latency: LogHistogram,
+    sim_end: f64,
+    max_lag_wall: f64,
+}
+
+/// Run `apps` across `shards` router shards and merge their reports.
+///
+/// Supports [`Compute::Stub`] (as fast as possible) and [`Compute::Paced`]
+/// (each shard paces its own apps against one shared wall-clock epoch);
+/// [`Compute::Real`] is single-router only — the physical worker pool's
+/// slot binding lives in [`super::run_serve_source`].
+pub fn run_serve_sharded(
+    cfg: &ServeConfig,
+    apps: Vec<AppFactory>,
+    shards: usize,
+    compute: Compute,
+) -> anyhow::Result<ServeReport> {
+    if compute == Compute::Real {
+        return Err(anyhow::anyhow!(
+            "sharded serving supports stubbed/paced compute only \
+             (the physical worker pool binds to a single router)"
+        ));
+    }
+    let n_apps = apps.len();
+    let parts = partition_round_robin(apps.into_iter().enumerate().collect(), shards);
+    let epoch = Instant::now();
+
+    let mut outcomes: Vec<AppOutcome> = Vec::with_capacity(n_apps);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = parts
+            .into_iter()
+            .filter(|p| !p.is_empty())
+            .map(|part| s.spawn(move || run_shard(cfg, part, compute, epoch)))
+            .collect();
+        for h in handles {
+            outcomes.extend(h.join().expect("router shard panicked"));
+        }
+    });
+    // Merge in app-index order: metric and histogram sums are f64, so a
+    // fixed fold order is what makes the report shard-count independent.
+    outcomes.sort_by_key(|o| o.idx);
+
+    let mut metrics = Metrics::default();
+    let mut latency = LogHistogram::latency_ms();
+    let mut report = ServeReport::default();
+    for o in &outcomes {
+        metrics.merge(&o.metrics);
+        latency.merge(&o.latency);
+        report.sim_seconds = report.sim_seconds.max(o.sim_end);
+        report.max_lag_wall = report.max_lag_wall.max(o.max_lag_wall);
+    }
+    report.scheduler = outcomes
+        .first()
+        .map(|o| o.scheduler.clone())
+        .unwrap_or_default();
+    report.requests = metrics.requests;
+    report.on_cpu = metrics.on_cpu;
+    report.on_fpga = metrics.on_fpga;
+    report.misses = metrics.deadline_misses;
+    report.shed = metrics.shed;
+    report.fpga_spinups = metrics.fpga_spinups;
+    report.cpu_spinups = metrics.cpu_spinups;
+    report.energy_j = metrics.total_energy();
+    report.cost_usd = metrics.total_cost();
+    report.latency_ms = latency;
+    report.wall_seconds = epoch.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+fn record(lat: &mut LogHistogram, e: &Effect) {
+    if let Effect::Dispatched { arrival, finish, .. } = *e {
+        lat.add((finish - arrival) * 1000.0);
+    }
+}
+
+/// Drive one shard's apps to completion. Each app gets its own driver,
+/// pool, and admission wrapper; under pacing the shard sleeps to the
+/// absolute wall deadline of its earliest pending occurrence, then drains
+/// *every* app up to the elapsed-time horizon in one batched-admission
+/// burst (same per-app step order as unpaced stepping — apps share no
+/// state, so cross-app drain order is immaterial).
+fn run_shard(
+    cfg: &ServeConfig,
+    part: Vec<(usize, AppFactory)>,
+    compute: Compute,
+    epoch: Instant,
+) -> Vec<AppOutcome> {
+    let paced = compute != Compute::Stub;
+    let scale = cfg.time_scale;
+    let platform = cfg.platform.clone();
+    let cap = cfg.queue_cap as u64;
+
+    let mut idxs = Vec::with_capacity(part.len());
+    let mut policies = Vec::with_capacity(part.len());
+    let mut sources = Vec::with_capacity(part.len());
+    let mut pools = Vec::with_capacity(part.len());
+    for (idx, factory) in part {
+        let app = factory();
+        idxs.push(idx);
+        policies.push(app.policy);
+        sources.push(app.source);
+        pools.push((app.pool_cpus, app.pool_fpgas));
+    }
+    let mut wrapped: Vec<Backpressure> = policies
+        .iter_mut()
+        .map(|p| Backpressure::new(p.as_mut(), cap))
+        .collect();
+    let mut drivers: Vec<Driver> = wrapped
+        .iter_mut()
+        .zip(sources)
+        .zip(&pools)
+        .map(|((p, src), &(pc, pf))| {
+            Driver::from_source(src, cfg.sim_config(pc, pf), p as &mut dyn Policy)
+        })
+        .collect();
+    let mut lats: Vec<LogHistogram> = (0..drivers.len())
+        .map(|_| LogHistogram::latency_ms())
+        .collect();
+    let mut max_lag_wall = 0.0f64;
+
+    for i in 0..drivers.len() {
+        let lat = &mut lats[i];
+        drivers[i].start(&mut |e: &Effect| record(lat, e));
+    }
+    if !paced {
+        // Stubbed compute: no clock to share, and the apps are fully
+        // independent — run each to completion in turn.
+        for i in 0..drivers.len() {
+            let lat = &mut lats[i];
+            let mut sink = |e: &Effect| record(lat, e);
+            while drivers[i].step(&mut sink) {}
+        }
+    } else {
+        loop {
+            let mut next = f64::INFINITY;
+            for d in &drivers {
+                if let Some(t) = d.next_time() {
+                    next = next.min(t);
+                }
+            }
+            if !next.is_finite() {
+                break;
+            }
+            // Drift-free pacing, as in `run_serve_source`: one absolute
+            // deadline sleep per quantum for the whole shard.
+            let target = epoch + Duration::from_secs_f64(next / scale);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let elapsed = epoch.elapsed().as_secs_f64();
+            max_lag_wall = max_lag_wall.max(elapsed - next / scale);
+            let horizon = (elapsed * scale).max(next);
+            for i in 0..drivers.len() {
+                let lat = &mut lats[i];
+                let mut sink = |e: &Effect| record(lat, e);
+                drivers[i].step_until(horizon, &mut sink);
+            }
+        }
+    }
+
+    drivers
+        .into_iter()
+        .zip(lats)
+        .zip(idxs)
+        .map(|((d, latency), idx)| {
+            let sim_end = d.now();
+            let result = d.finish(&platform);
+            AppOutcome {
+                idx,
+                scheduler: result.scheduler.clone(),
+                metrics: result.metrics,
+                latency,
+                sim_end,
+                max_lag_wall,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedulerKind;
+    use crate::util::rng::Rng;
+
+    fn app_factory(i: usize) -> AppFactory {
+        Box::new(move || {
+            // Pure function of the app index: the determinism contract.
+            let mut rng = Rng::for_stream(42, i as u64);
+            let trace = crate::trace::synthetic_app(
+                &format!("app{i}"),
+                &mut rng,
+                0.6,
+                120.0,
+                20.0 + 5.0 * i as f64,
+                0.010,
+            );
+            let cfg = super::super::ServeConfig::defaults("unused", 1e9);
+            let sim_cfg = cfg.sim_config(8, 4);
+            let policy = crate::sched::build(&SchedulerKind::spork_e(), &sim_cfg, &trace);
+            AppServe {
+                source: Box::new(trace.into_source()),
+                policy,
+                pool_cpus: 8,
+                pool_fpgas: 4,
+            }
+        })
+    }
+
+    #[test]
+    fn shard_counts_agree_bit_for_bit_under_stub_compute() {
+        let cfg = super::super::ServeConfig::defaults("unused", 1e9);
+        let run = |shards: usize| {
+            let apps = (0..5).map(app_factory).collect();
+            run_serve_sharded(&cfg, apps, shards, Compute::Stub).unwrap()
+        };
+        let one = run(1);
+        assert!(one.requests > 1000, "workload too small to mean anything");
+        assert_eq!(one.shed, 0);
+        for shards in [2, 4, 7] {
+            let many = run(shards);
+            assert_eq!(one.requests, many.requests);
+            assert_eq!(one.on_cpu, many.on_cpu);
+            assert_eq!(one.on_fpga, many.on_fpga);
+            assert_eq!(one.misses, many.misses);
+            assert_eq!(
+                one.energy_j.to_bits(),
+                many.energy_j.to_bits(),
+                "energy must merge identically at {shards} shards"
+            );
+            assert_eq!(one.cost_usd.to_bits(), many.cost_usd.to_bits());
+            assert_eq!(one.sim_seconds.to_bits(), many.sim_seconds.to_bits());
+            assert_eq!(one.latency_ms.count(), many.latency_ms.count());
+            assert_eq!(
+                one.latency_ms.percentile(99.0).to_bits(),
+                many.latency_ms.percentile(99.0).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn real_compute_is_rejected() {
+        let cfg = super::super::ServeConfig::defaults("unused", 1e9);
+        let err = run_serve_sharded(&cfg, vec![app_factory(0)], 1, Compute::Real);
+        assert!(err.is_err());
+    }
+}

@@ -48,6 +48,12 @@ pub struct Completion {
     pub deadline_sim: f64,
     pub finish_sim: f64,
     pub service_sim: f64,
+    /// Wall seconds the real PJRT execution ran *past* the batch's scaled
+    /// service budget (0.0 when it fit). A nonzero overrun means the host
+    /// couldn't keep up with the modeled service rate at this time-scale;
+    /// the router aggregates these into `ServeReport::exec_overruns`
+    /// instead of letting them silently stretch completion timestamps.
+    pub overrun_wall: f64,
     /// First element of the model output (proof of real compute).
     pub output0: f32,
 }
@@ -183,10 +189,13 @@ fn run_batch(
     // counts toward that budget (deducted from the sleep) so the worker's
     // wall-clock capacity matches the model exactly. If real execution
     // exceeds the scaled budget the time-scale is too aggressive for this
-    // host — the router warns when replay falls behind.
+    // host — the overrun is reported on every completion in the batch so
+    // the router can count it instead of it silently stretching finish
+    // timestamps.
     let batch_service: f64 = meta.iter().map(|j| j.size / params.speedup).sum();
     let budget = Duration::from_secs_f64(batch_service / time_scale);
     let spent = exec_start.elapsed();
+    let overrun_wall = spent.saturating_sub(budget).as_secs_f64();
     if budget > spent {
         std::thread::sleep(budget - spent);
     }
@@ -199,6 +208,7 @@ fn run_batch(
             deadline_sim: job.deadline_sim,
             finish_sim: finish,
             service_sim: job.size / params.speedup,
+            overrun_wall,
             output0: out[slot * 128],
         });
     }

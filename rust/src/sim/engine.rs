@@ -446,6 +446,10 @@ impl PolicyView for SimState {
         self.pool.earliest_ready(kind)
     }
 
+    fn inflight_requests(&self) -> u64 {
+        self.pool.inflight_total()
+    }
+
     fn spot_price(&self, kind: WorkerKind) -> f64 {
         self.kind_spot_price(kind)
     }
@@ -743,6 +747,29 @@ impl<'a> Driver<'a> {
         true
     }
 
+    /// Batched admission: process every occurrence due at or before
+    /// `horizon` (sim seconds) in one burst, with no pacing between them.
+    /// Exactly a loop over [`Driver::step`] — same occurrence order, same
+    /// observations, same effects, bit for bit — which is what lets the
+    /// real-time router amortize one wall-clock wakeup over a whole pacing
+    /// quantum without perturbing policy behavior (pinned by
+    /// `rust/tests/serve_line_rate.rs`). Returns the number of occurrences
+    /// processed; stops early if the run completes or the miss budget
+    /// aborts it.
+    pub fn step_until(&mut self, horizon: f64, sink: &mut dyn FnMut(&Effect)) -> u64 {
+        let mut steps = 0;
+        while let Some(t) = self.next_time() {
+            if t > horizon {
+                break;
+            }
+            if !self.step(sink) {
+                break;
+            }
+            steps += 1;
+        }
+        steps
+    }
+
     /// Consume the driver: assert the pool drained and produce the
     /// normalized result. `defaults` parameterizes the idealized FPGA-only
     /// baseline (the paper always normalizes against *default* Table 6
@@ -833,6 +860,24 @@ impl<'a> Driver<'a> {
                     for worker in self.sim.retire_idle(kind, n) {
                         sink(&Effect::Retired { worker, kind });
                     }
+                }
+                Action::Shed { req } => {
+                    // Refused admission: the request leaves the system
+                    // here, never dispatched. A first offer still counts
+                    // into `requests` (it did arrive); a shed retry was
+                    // already counted at its first dispatch. Either way
+                    // `requests == completions + abandoned + shed` holds
+                    // once the run drains.
+                    if req.attempt == 0 {
+                        self.sim.metrics.requests += 1;
+                    }
+                    self.sim.metrics.shed += 1;
+                    sink(&Effect::Shed {
+                        arrival: req.arrival,
+                        size: req.size,
+                        deadline: req.deadline,
+                        attempt: req.attempt,
+                    });
                 }
                 // Only meaningful while answering IdleExpired (handled in
                 // `handle_event`); stray keep-alives are inert.

@@ -41,10 +41,15 @@ pub struct Metrics {
     /// Peak concurrently allocated workers.
     pub peak_cpus: u32,
     pub peak_fpgas: u32,
-    /// Requests that actually completed (≤ `requests` under faults; equal
-    /// outside a scenario). Conservation under a scenario:
-    /// `requests == completions + abandoned` once the run drains.
+    /// Requests that actually completed (≤ `requests` under faults or
+    /// load shedding; equal otherwise). Conservation once the run
+    /// drains: `requests == completions + abandoned + shed`.
     pub completions: u64,
+    /// Requests refused admission by the policy (`Action::Shed` — bounded
+    /// admission queues under overload). Counted in `requests`, never
+    /// dispatched, never completed; not a deadline miss (an explicit
+    /// fast rejection, reported separately).
+    pub shed: u64,
     /// Scenario faults: spot preemptions applied (a live worker existed).
     pub preemptions: u64,
     /// Scenario faults: independent hardware failures applied.
@@ -114,6 +119,7 @@ impl Metrics {
         self.peak_cpus += o.peak_cpus; // pools are per-app → peaks add
         self.peak_fpgas += o.peak_fpgas;
         self.completions += o.completions;
+        self.shed += o.shed;
         self.preemptions += o.preemptions;
         self.worker_failures += o.worker_failures;
         self.redispatches += o.redispatches;

@@ -69,6 +69,10 @@ pub struct Pool {
     /// Live workers excluding spinning-down, per kind (the "allocated"
     /// count schedulers reason about), maintained O(1).
     allocated: [u32; 2],
+    /// In-flight (queued + running) requests over live workers, per kind
+    /// — the admission backlog, maintained O(1) so bounded-queue
+    /// backpressure never scans the fleet per arrival.
+    inflight: [u64; 2],
     /// Monotonic uid counter: slab slots (and ids) are recycled, uids never
     /// are. Stamped onto every inserted worker so in-flight events can
     /// detect that "their" slot was killed and reused (scenario faults).
@@ -89,6 +93,7 @@ impl Pool {
     /// Add `w`'s entries to the state-keyed indexes and allocated count.
     fn index_state(&mut self, w: &Worker) {
         let k = ix(w.kind);
+        self.inflight[k] += w.queued as u64;
         if w.state != WorkerState::SpinningDown {
             self.allocated[k] += 1;
             self.ready[k].insert((OrdF64(w.busy_until), w.id));
@@ -111,6 +116,7 @@ impl Pool {
     /// count (must mirror [`Self::index_state`] for the same snapshot).
     fn unindex_state(&mut self, w: &Worker) {
         let k = ix(w.kind);
+        self.inflight[k] -= w.queued as u64;
         if w.state != WorkerState::SpinningDown {
             self.allocated[k] -= 1;
             let removed = self.ready[k].remove(&(OrdF64(w.busy_until), w.id));
@@ -335,6 +341,18 @@ impl Pool {
         self.allocated[ix(kind)]
     }
 
+    /// In-flight (queued + running) requests over live workers of `kind`.
+    /// O(1).
+    pub fn inflight(&self, kind: WorkerKind) -> u64 {
+        self.inflight[ix(kind)]
+    }
+
+    /// Total in-flight requests over the whole pool — the admission
+    /// backlog bounded-queue backpressure compares against. O(1).
+    pub fn inflight_total(&self) -> u64 {
+        self.inflight.iter().sum()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.live.iter().all(|l| l.is_empty())
     }
@@ -355,8 +373,10 @@ impl Pool {
             let mut busy = BTreeSet::new();
             let mut spinup = BTreeSet::new();
             let mut allocated = 0u32;
+            let mut inflight = 0u64;
             for w in self.slots.iter().flatten().filter(|w| w.kind == kind) {
                 live.insert(w.id);
+                inflight += w.queued as u64;
                 if w.state != WorkerState::SpinningDown {
                     allocated += 1;
                     ready.insert((OrdF64(w.busy_until), w.id));
@@ -380,6 +400,7 @@ impl Pool {
             assert_eq!(self.busy[k], busy, "busy index desync ({kind:?})");
             assert_eq!(self.spinup[k], spinup, "spinup index desync ({kind:?})");
             assert_eq!(self.allocated[k], allocated, "allocated count desync ({kind:?})");
+            assert_eq!(self.inflight[k], inflight, "inflight count desync ({kind:?})");
         }
     }
 }
@@ -435,6 +456,36 @@ mod tests {
         assert_eq!(p.count(WorkerKind::Cpu), 2);
         assert_eq!(p.count(WorkerKind::Fpga), 1);
         assert_eq!(p.iter_all().count(), 3);
+    }
+
+    #[test]
+    fn inflight_counter_tracks_queued_work() {
+        let mut p = Pool::new();
+        let a = mk(&mut p, WorkerKind::Cpu);
+        let b = mk(&mut p, WorkerKind::Fpga);
+        activate(&mut p, a, 0.0);
+        activate(&mut p, b, 0.0);
+        assert_eq!(p.inflight_total(), 0);
+        p.with_mut(a, |w| {
+            w.assign(0.0, 1.0);
+        });
+        p.with_mut(a, |w| {
+            w.assign(0.0, 1.0);
+        });
+        p.with_mut(b, |w| {
+            w.assign(0.0, 2.0);
+        });
+        assert_eq!(p.inflight(WorkerKind::Cpu), 2);
+        assert_eq!(p.inflight(WorkerKind::Fpga), 1);
+        assert_eq!(p.inflight_total(), 3);
+        p.with_mut(a, |w| {
+            w.complete_one(2.0);
+        });
+        assert_eq!(p.inflight(WorkerKind::Cpu), 1);
+        // Removal (retirement end, scenario kill) releases the backlog.
+        p.remove(b);
+        assert_eq!(p.inflight_total(), 1);
+        p.check_coherence();
     }
 
     #[test]

@@ -20,8 +20,8 @@ pub mod production;
 pub mod source;
 
 pub use source::{
-    synthetic_source, tee, ArrivalSource, CsvSource, KnownLen, MergeSource, PoissonSource,
-    TeeSource, TraceSource, VecSource,
+    partition_round_robin, synthetic_source, tee, ArrivalSource, CsvSource, KnownLen,
+    MergeSource, PoissonSource, TeeSource, TraceSource, VecSource,
 };
 
 use crate::util::rng::Rng;

@@ -717,6 +717,22 @@ impl ArrivalSource for CsvSource {
     }
 }
 
+/// Partition an app set across router shards: item `i` goes to shard
+/// `i % shards` (empty shards allowed when `shards > items`). Round-robin
+/// is the sharded router's fixed assignment rule — it depends only on
+/// item index and shard count, never on item contents or timing, which is
+/// half of the shard-count determinism contract (the other half: results
+/// are merged back in item-index order, which round-robin makes a cheap
+/// k-way interleave).
+pub fn partition_round_robin<T>(items: Vec<T>, shards: usize) -> Vec<Vec<T>> {
+    let shards = shards.max(1);
+    let mut parts: Vec<Vec<T>> = (0..shards).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        parts[i % shards].push(item);
+    }
+    parts
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::AppTrace;
@@ -999,5 +1015,30 @@ mod tests {
         let second = collect(&mut cons[1]);
         assert_eq!(first, serial);
         assert_eq!(second, serial);
+    }
+
+    #[test]
+    fn partition_round_robin_covers_and_interleaves() {
+        let parts = partition_round_robin((0..7).collect::<Vec<_>>(), 3);
+        assert_eq!(parts, vec![vec![0, 3, 6], vec![1, 4], vec![2, 5]]);
+        // Degenerate shapes: one shard takes everything; more shards than
+        // items leaves the surplus shards empty; zero shards clamps to 1.
+        assert_eq!(partition_round_robin(vec![9, 8], 1), vec![vec![9, 8]]);
+        assert_eq!(
+            partition_round_robin(vec![1], 3),
+            vec![vec![1], vec![], vec![]]
+        );
+        assert_eq!(partition_round_robin(vec![1, 2], 0), vec![vec![1, 2]]);
+        // Merging partitions back in item-index order is a k-way
+        // interleave — the determinism contract's other half.
+        let parts = partition_round_robin((0..10).collect::<Vec<_>>(), 4);
+        let mut merged = Vec::new();
+        let mut cursors = vec![0usize; parts.len()];
+        for i in 0..10 {
+            let s = i % parts.len();
+            merged.push(parts[s][cursors[s]]);
+            cursors[s] += 1;
+        }
+        assert_eq!(merged, (0..10).collect::<Vec<_>>());
     }
 }

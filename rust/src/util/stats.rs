@@ -156,6 +156,162 @@ impl Sample {
     }
 }
 
+/// Fixed-bin logarithmic histogram: percentiles with bounded relative
+/// error in bounded memory. [`Sample`] stores every value, so a
+/// million-request serve replay would hold a million f64s just to report
+/// p999; this holds a fixed `Vec<u64>` whose size depends only on the
+/// covered range and resolution, never on how many values are added.
+///
+/// Bins are geometric: bin `i` covers `[lo·g^i, lo·g^(i+1))` where `g` is
+/// the per-bin growth factor. A reported percentile is the upper edge of
+/// the bin holding the nearest-rank order statistic, clamped to the exact
+/// observed `[min, max]`, so its relative error is bounded by `g - 1`
+/// for any value in `[lo, hi)`. Values below `lo` land in an underflow
+/// bin (reported as at most `lo` — pick `lo` below the resolution you
+/// care about); values at or above `hi` land in an overflow bin
+/// (reported as the exact observed max).
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    lo: f64,
+    growth: f64,
+    inv_log_growth: f64,
+    /// `counts[0]` underflow, `counts[1..=nbins]` geometric bins,
+    /// `counts[nbins+1]` overflow.
+    counts: Vec<u64>,
+    total: u64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Default for LogHistogram {
+    /// The [`LogHistogram::latency_ms`] layout.
+    fn default() -> Self {
+        Self::latency_ms()
+    }
+}
+
+impl LogHistogram {
+    /// Cover `[lo, hi)` with geometric bins of width factor `growth`.
+    pub fn new(lo: f64, hi: f64, growth: f64) -> Self {
+        assert!(lo > 0.0 && lo.is_finite(), "LogHistogram: lo must be > 0");
+        assert!(hi > lo && hi.is_finite(), "LogHistogram: hi must be > lo");
+        assert!(
+            growth > 1.0 && growth.is_finite(),
+            "LogHistogram: growth must be > 1"
+        );
+        let nbins = ((hi / lo).ln() / growth.ln()).ceil() as usize;
+        Self {
+            lo,
+            growth,
+            inv_log_growth: 1.0 / growth.ln(),
+            counts: vec![0; nbins + 2],
+            total: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+        }
+    }
+
+    /// The serve path's latency histogram: 1 µs to ~2.8 h in
+    /// milliseconds at ≤ 2% relative percentile error (~1.2k bins).
+    pub fn latency_ms() -> Self {
+        Self::new(1e-3, 1e7, 1.02)
+    }
+
+    fn nbins(&self) -> usize {
+        self.counts.len() - 2
+    }
+
+    pub fn add(&mut self, x: f64) {
+        assert!(x.is_finite() && x >= 0.0, "LogHistogram: bad value {x}");
+        let slot = if x < self.lo {
+            0
+        } else {
+            let i = ((x / self.lo).ln() * self.inv_log_growth).floor().max(0.0) as usize;
+            (i + 1).min(self.counts.len() - 1)
+        };
+        self.counts[slot] += 1;
+        self.total += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Nearest-rank percentile, `p` in [0, 100]. NaN when empty. The
+    /// returned value is within a factor `growth` of the exact order
+    /// statistic for values in `[lo, hi)` (see the type docs for the
+    /// under/overflow edges).
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p / 100.0 * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (slot, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let v = if slot == 0 {
+                    self.lo
+                } else if slot == self.counts.len() - 1 {
+                    self.max
+                } else {
+                    // Upper edge of geometric bin `slot - 1`.
+                    self.lo * self.growth.powi(slot as i32)
+                };
+                return v.clamp(self.min, self.max);
+            }
+        }
+        unreachable!("histogram total/count desync");
+    }
+
+    /// Merge another histogram with the identical bin layout.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert!(
+            self.lo == other.lo
+                && self.growth == other.growth
+                && self.counts.len() == other.counts.len(),
+            "LogHistogram merge: mismatched bin layouts"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
 /// Integer-binned histogram with occurrence counts — the building block of
 /// Spork's conditional worker-count distribution ℍ (Alg 2).
 #[derive(Clone, Debug, Default)]
@@ -321,5 +477,133 @@ mod tests {
     fn geomean_known() {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert!((geomean(&[3.32, 1.88]) - 2.498).abs() < 0.01); // paper's 6.25x ~= 3.32*1.88
+    }
+
+    /// Exact nearest-rank percentile over a sorted slice (the reference
+    /// the log histogram's error bound is stated against).
+    fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+        let rank = ((p / 100.0 * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    #[test]
+    fn log_histogram_empty_and_single_sample_edges() {
+        let h = LogHistogram::latency_ms();
+        assert!(h.is_empty());
+        assert!(h.percentile(50.0).is_nan());
+        assert!(h.mean().is_nan());
+
+        // A single sample is exact at every percentile: the clamp to the
+        // observed [min, max] collapses the bin to the value itself.
+        let mut h = LogHistogram::latency_ms();
+        h.add(37.25);
+        for p in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(h.percentile(p), 37.25, "p{p}");
+        }
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 37.25);
+        assert_eq!(h.max(), 37.25);
+    }
+
+    #[test]
+    fn log_histogram_percentile_error_bound_vs_exact_sample() {
+        // Randomized latency-shaped distributions: uniform, log-uniform
+        // (4 decades), and a heavy Pareto tail. The histogram percentile
+        // must stay within its documented relative error (growth - 1) of
+        // the exact nearest-rank order statistic — the same order
+        // statistics an exact `Sample` sorts to answer from.
+        let mut rng = crate::util::rng::Rng::new(42);
+        let growth = 1.02;
+        for dist in 0..3 {
+            let mut h = LogHistogram::new(1e-3, 1e7, growth);
+            let mut s = Sample::new();
+            let mut xs: Vec<f64> = Vec::new();
+            for _ in 0..5000 {
+                let x = match dist {
+                    0 => rng.range_f64(0.5, 500.0),
+                    1 => 10f64.powf(rng.range_f64(-1.0, 3.0)),
+                    _ => rng.pareto(5.0, 1.2).min(9e6),
+                };
+                h.add(x);
+                s.add(x);
+                xs.push(x);
+            }
+            xs.sort_by(|a, b| a.total_cmp(b));
+            for p in [1.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+                let exact = nearest_rank(&xs, p);
+                let got = h.percentile(p);
+                let rel = (got - exact).abs() / exact;
+                assert!(
+                    rel <= growth - 1.0 + 1e-9,
+                    "dist {dist} p{p}: hist {got} vs exact {exact} (rel {rel:.4})"
+                );
+                // And the interpolating Sample percentile lies between
+                // adjacent order statistics, so the histogram brackets it
+                // within one bin + one rank step.
+                let sp = s.percentile(p);
+                assert!(
+                    got >= xs[0] && got <= xs[xs.len() - 1] && sp >= xs[0],
+                    "dist {dist} p{p}: out of observed range"
+                );
+            }
+            assert_eq!(h.count(), 5000);
+            assert!((h.mean() - s.mean()).abs() / s.mean() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn log_histogram_percentiles_are_monotone() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut h = LogHistogram::latency_ms();
+        for _ in 0..2000 {
+            h.add(rng.pareto(2.0, 1.1).min(1e6));
+        }
+        let ps = [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0];
+        for w in ps.windows(2) {
+            assert!(h.percentile(w[0]) <= h.percentile(w[1]) + 1e-12);
+        }
+        assert_eq!(h.percentile(100.0), h.max());
+    }
+
+    #[test]
+    fn log_histogram_under_and_overflow_are_clamped_and_conserved() {
+        let mut h = LogHistogram::new(1.0, 100.0, 1.1);
+        h.add(0.001); // underflow
+        h.add(0.002); // underflow
+        h.add(10.0);
+        h.add(5000.0); // overflow
+        assert_eq!(h.count(), 4);
+        // Underflow reports at most lo (clamped to the observed min).
+        assert!(h.percentile(1.0) <= 1.0);
+        assert!(h.percentile(1.0) >= 0.001);
+        // Overflow reports the exact observed max.
+        assert_eq!(h.percentile(100.0), 5000.0);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 5000.0);
+    }
+
+    #[test]
+    fn log_histogram_merge_matches_sequential() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.range_f64(0.1, 2000.0)).collect();
+        let mut all = LogHistogram::latency_ms();
+        let mut a = LogHistogram::latency_ms();
+        let mut b = LogHistogram::latency_ms();
+        for (i, &x) in xs.iter().enumerate() {
+            all.add(x);
+            if i % 3 == 0 {
+                a.add(x);
+            } else {
+                b.add(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        for p in [5.0, 50.0, 99.0, 99.9] {
+            assert_eq!(a.percentile(p), all.percentile(p), "p{p}");
+        }
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
     }
 }

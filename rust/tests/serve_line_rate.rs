@@ -1,0 +1,216 @@
+//! Line-rate serving suite: the batched, paced, sharded router must be a
+//! pure *scheduling* change, never a *behavior* change.
+//!
+//! Three contracts from DESIGN.md §13:
+//!
+//! 1. **Batched admission parity** — the paced router (absolute-deadline
+//!    sleeps + `step_until` horizon drains) executes the bit-identical
+//!    effect stream as per-arrival stepping: batching amortizes syscalls,
+//!    the model never sees it.
+//! 2. **Shed conservation** — with a bounded admission queue, every
+//!    arrival is accounted for exactly once:
+//!    `requests == dispatched + shed` (and shed is zero when the cap is
+//!    unarmed or never reached).
+//! 3. **Shard-count determinism** — partitioning the app set across any
+//!    number of router shards merges to the bit-identical report.
+
+use spork::config::SchedulerKind;
+use spork::policy::Effect;
+use spork::sched;
+use spork::serve::{
+    run_serve_policy, run_serve_sharded, AppFactory, AppServe, Compute, ServeConfig,
+};
+use spork::trace::{synthetic_app, AppTrace};
+use spork::util::rng::Rng;
+
+const POOL_CPUS: usize = 8;
+const POOL_FPGAS: usize = 4;
+
+fn line_trace() -> AppTrace {
+    let mut rng = Rng::new(77);
+    synthetic_app("line", &mut rng, 0.6, 120.0, 60.0, 0.010)
+}
+
+/// High compression: 120 sim-s replays in well under a wall second, so
+/// the paced path exercises its sleeps without slowing the suite.
+fn cfg_at(queue_cap: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::defaults("unused-artifacts", 1e5);
+    cfg.pool_cpus = POOL_CPUS;
+    cfg.pool_fpgas = POOL_FPGAS;
+    cfg.queue_cap = queue_cap;
+    cfg
+}
+
+fn run(
+    compute: Compute,
+    queue_cap: usize,
+    trace: &AppTrace,
+) -> (spork::serve::ServeReport, Vec<Effect>) {
+    let cfg = cfg_at(queue_cap);
+    let sim_cfg = cfg.sim_config(POOL_CPUS, POOL_FPGAS);
+    let mut policy = sched::build(&SchedulerKind::spork_e(), &sim_cfg, trace);
+    let mut rng = Rng::new(3);
+    let mut log = Vec::new();
+    let (report, _) = run_serve_policy(&cfg, policy.as_mut(), trace, &mut rng, compute, &mut |e| {
+        log.push(*e)
+    })
+    .expect("stubbed/paced serve cannot fail");
+    (report, log)
+}
+
+#[test]
+fn batched_paced_replay_is_bit_identical_to_per_arrival_stepping() {
+    let trace = line_trace();
+    let (stub_report, stub_log) = run(Compute::Stub, 0, &trace);
+    let (paced_report, paced_log) = run(Compute::Paced, 0, &trace);
+
+    assert!(!stub_log.is_empty(), "workload produced no effects");
+    assert_eq!(
+        stub_log.len(),
+        paced_log.len(),
+        "effect counts diverge (per-arrival {} vs batched {})",
+        stub_log.len(),
+        paced_log.len()
+    );
+    for (i, (a, b)) in stub_log.iter().zip(&paced_log).enumerate() {
+        assert_eq!(a, b, "batched admission diverges at effect #{i}");
+    }
+
+    // Model-side accounting identical; only wall-clock fields may differ.
+    assert_eq!(stub_report.requests, paced_report.requests);
+    assert_eq!(stub_report.on_cpu, paced_report.on_cpu);
+    assert_eq!(stub_report.on_fpga, paced_report.on_fpga);
+    assert_eq!(stub_report.misses, paced_report.misses);
+    assert_eq!(stub_report.shed, 0);
+    assert_eq!(paced_report.shed, 0);
+    assert_eq!(
+        stub_report.energy_j.to_bits(),
+        paced_report.energy_j.to_bits(),
+        "energy accounting must not depend on pacing"
+    );
+    assert_eq!(
+        stub_report.cost_usd.to_bits(),
+        paced_report.cost_usd.to_bits()
+    );
+    assert_eq!(
+        stub_report.latency_ms.count(),
+        paced_report.latency_ms.count()
+    );
+    assert_eq!(
+        stub_report.latency_ms.percentile(99.0).to_bits(),
+        paced_report.latency_ms.percentile(99.0).to_bits()
+    );
+}
+
+#[test]
+fn unreached_queue_cap_is_bit_identical_to_unbounded() {
+    // An armed-but-generous cap must not perturb a single decision.
+    let trace = line_trace();
+    let (unbounded_report, unbounded_log) = run(Compute::Stub, 0, &trace);
+    let (capped_report, capped_log) = run(Compute::Stub, 100_000, &trace);
+    assert_eq!(capped_report.shed, 0, "a 100k cap cannot bite here");
+    assert_eq!(unbounded_log, capped_log);
+    assert_eq!(unbounded_report.requests, capped_report.requests);
+    assert_eq!(
+        unbounded_report.energy_j.to_bits(),
+        capped_report.energy_j.to_bits()
+    );
+}
+
+#[test]
+fn tight_queue_cap_sheds_and_conserves_every_arrival() {
+    let trace = line_trace();
+    let (report, log) = run(Compute::Stub, 2, &trace);
+
+    let dispatched = log
+        .iter()
+        .filter(|e| matches!(e, Effect::Dispatched { .. }))
+        .count() as u64;
+    let shed = log
+        .iter()
+        .filter(|e| matches!(e, Effect::Shed { .. }))
+        .count() as u64;
+
+    assert!(report.shed > 0, "a cap of 2 in-flight must shed this load");
+    assert!(dispatched > 0, "some requests must still be admitted");
+    assert_eq!(report.shed, shed, "report must count exactly the Shed effects");
+    assert_eq!(
+        report.requests,
+        dispatched + shed,
+        "conservation: every arrival is dispatched or shed, never both, \
+         never neither"
+    );
+    assert_eq!(
+        report.requests as usize,
+        trace.len(),
+        "shed arrivals still count as offered requests"
+    );
+    assert_eq!(
+        report.latency_ms.count(),
+        dispatched,
+        "latency histogram covers exactly the dispatched requests"
+    );
+}
+
+fn app_factory(i: usize) -> AppFactory {
+    Box::new(move || {
+        // Pure function of the app index — the shard determinism contract.
+        let mut rng = Rng::for_stream(91, i as u64);
+        let trace = synthetic_app(
+            &format!("app{i}"),
+            &mut rng,
+            0.6,
+            90.0,
+            15.0 + 10.0 * i as f64,
+            0.010,
+        );
+        let cfg = ServeConfig::defaults("unused-artifacts", 1e5);
+        let sim_cfg = cfg.sim_config(POOL_CPUS, POOL_FPGAS);
+        let policy = sched::build(&SchedulerKind::spork_e(), &sim_cfg, &trace);
+        AppServe {
+            source: Box::new(trace.into_source()),
+            policy,
+            pool_cpus: POOL_CPUS,
+            pool_fpgas: POOL_FPGAS,
+        }
+    })
+}
+
+#[test]
+fn shard_count_never_changes_the_paced_merged_report() {
+    // The end-to-end (paced, wall-clock, multi-threaded) version of the
+    // stub-compute unit test in serve::shard: wall time affects nothing
+    // the model computes, so even racing shard threads merge identically.
+    let cfg = cfg_at(256);
+    let run = |shards: usize| {
+        let apps: Vec<AppFactory> = (0..6).map(app_factory).collect();
+        run_serve_sharded(&cfg, apps, shards, Compute::Paced).unwrap()
+    };
+    let one = run(1);
+    assert!(one.requests > 1000, "workload too small to mean anything");
+    assert_eq!(one.shed, 0, "per-app pools keep a 256 cap quiet");
+    for shards in [2, 4] {
+        let many = run(shards);
+        assert_eq!(one.requests, many.requests, "{shards} shards");
+        assert_eq!(one.on_cpu, many.on_cpu);
+        assert_eq!(one.on_fpga, many.on_fpga);
+        assert_eq!(one.misses, many.misses);
+        assert_eq!(one.shed, many.shed);
+        assert_eq!(
+            one.energy_j.to_bits(),
+            many.energy_j.to_bits(),
+            "energy must merge identically at {shards} shards"
+        );
+        assert_eq!(one.cost_usd.to_bits(), many.cost_usd.to_bits());
+        assert_eq!(one.sim_seconds.to_bits(), many.sim_seconds.to_bits());
+        assert_eq!(one.latency_ms.count(), many.latency_ms.count());
+        assert_eq!(
+            one.latency_ms.percentile(50.0).to_bits(),
+            many.latency_ms.percentile(50.0).to_bits()
+        );
+        assert_eq!(
+            one.latency_ms.percentile(99.9).to_bits(),
+            many.latency_ms.percentile(99.9).to_bits()
+        );
+    }
+}
