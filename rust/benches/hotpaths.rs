@@ -236,6 +236,44 @@ fn bench_fit_search() {
     }
 }
 
+fn bench_production_parallel() {
+    // The per-app fan-out inside one production cell (DESIGN.md §14):
+    // apps spread over the shared executor, metrics merge in app-index
+    // order. jobs=1 forces the inline serial loop; jobs=0 takes the full
+    // budget. (Bit-identical cells across jobs are pinned by
+    // rust/tests/production_parallel.rs; this measures the speedup.
+    // `spork bench-sim --par-apps` is the CI-tracked counterpart.)
+    use spork::config::SizeBucket;
+    use spork::trace::production::{self, Dataset, ProductionParams};
+    println!("-- per-app parallel production cell (--par-apps axis) --");
+    let params = ProductionParams {
+        dataset: Dataset::AzureFunctions,
+        bucket: SizeBucket::Short,
+        duration: 600.0,
+        scale: 0.05,
+        max_apps: Some(8),
+    };
+    let apps = production::generate(&params, &mut Rng::new(21));
+    let arrivals: usize = apps.iter().map(|a| a.len()).sum();
+    let cfg = SimConfig::paper_default();
+    let kind = SchedulerKind::spork_e();
+    let serial = common::time_it(
+        &format!("production cell {} apps / {arrivals} arrivals, jobs 1", apps.len()),
+        2,
+        || spork::exp::common::run_production_jobs(&kind, &cfg, &apps, 1),
+    );
+    let auto = common::time_it(
+        &format!("production cell {} apps / {arrivals} arrivals, jobs 0", apps.len()),
+        2,
+        || spork::exp::common::run_production_jobs(&kind, &cfg, &apps, 0),
+    );
+    println!(
+        "{:<48} {:>9.2}x",
+        "  per-app parallel speedup",
+        serial / auto.max(1e-12)
+    );
+}
+
 fn bench_predictor() {
     println!("-- Alg 2 predictor --");
     let mut p = Predictor::new(PlatformConfig::paper_default(), 10.0, Objective::energy());
@@ -316,5 +354,6 @@ fn main() {
     bench_sim_engine();
     bench_dispatch();
     bench_fit_search();
+    bench_production_parallel();
     bench_predictor();
 }

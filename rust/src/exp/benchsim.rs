@@ -30,14 +30,29 @@
 //! passes short), and `--assert-fit-passes P` fails when a lockstep
 //! search cost more than `P` full-trace-equivalent stream traversals
 //! (the lockstep batching regressed toward one traversal per probe).
+//!
+//! A fourth axis (`--par-apps`, [`run_par_apps_bench`]) times one
+//! multi-app production cell through `run_production` at `--jobs` 1, 2,
+//! and 0 (DESIGN.md §14: per-app fan-out over the process-wide bounded
+//! executor), asserts the three cells bit-identical before reporting
+//! any timing, and writes the wall-clock points to
+//! `BENCH_par_apps.json`. `--assert-par-overhead R` fails the run when
+//! the parallel cell (jobs = 0) is more than R× *slower* than the
+//! serial one — a no-regression gate rather than a speedup gate,
+//! because CI runners may expose as few as two cores.
 
+use super::common::run_production_jobs;
 use crate::cli::Args;
-use crate::config::{DispatchPolicy, PlatformConfig, SchedulerKind, SimConfig, WorkerKind};
+use crate::config::{
+    DispatchPolicy, PlatformConfig, SchedulerKind, SimConfig, SizeBucket, WorkerKind,
+};
 use crate::policy::{Action, Observation, Policy, PolicyView, Target};
 use crate::scenario::{FaultPlan, ScenarioConfig};
 use crate::sched::{self, dispatch::Dispatcher, FitEngine, FitStats};
 use crate::sim;
+use crate::trace::production::{self, Dataset, ProductionParams};
 use crate::trace::{synthetic_source, ArrivalSource};
+use crate::util::executor::Executor;
 use crate::util::rng::Rng;
 use std::time::Instant;
 
@@ -203,10 +218,15 @@ impl FitBenchReport {
     /// have cost at most `max_traversals` full-trace-equivalent stream
     /// traversals. The bench workload fits within the first ladder wave,
     /// so one ladder batch + one bracket batch = ≤ 2 is the expected
-    /// shape; a regression toward one traversal per probe (e.g. the tee
-    /// fan-out silently replaced by per-candidate fresh streams) trips
-    /// here. Serial-engine searches are the comparison baseline and are
-    /// exempt by design.
+    /// shape; a regression toward one traversal per probe (e.g. batching
+    /// dismantled back into sequential single-candidate passes) trips
+    /// here. The gated metric is per-batch *critical-path* cost
+    /// ([`FitBatch::stream_arrivals`] — the max over a batch's
+    /// candidates, not their sum), so it is invariant to how a batch
+    /// executes: the tee-lockstep plan and the executor's parallel
+    /// fresh-stream plan (DESIGN.md §14) score identically. Serial-
+    /// engine searches are the comparison baseline and are exempt by
+    /// design.
     pub fn assert_fit_passes(&self, max_traversals: f64) -> Result<(), String> {
         let mut checked = 0usize;
         for s in &self.searches {
@@ -684,6 +704,134 @@ pub fn run_pool_scaling(sizes: &[u32], arrivals_each: u64, seed: u64) -> Vec<Poo
     points
 }
 
+/// One timing point of the `--par-apps` axis: the same production cell
+/// run with a specific per-call worker cap (`0` = the executor's full
+/// budget).
+pub struct ParAppsPoint {
+    pub jobs: usize,
+    pub wall_seconds: f64,
+}
+
+/// The `--par-apps` axis report (`BENCH_par_apps.json`): one multi-app
+/// production cell timed at `--jobs` 1 / 2 / 0. The runner asserts the
+/// three cells bit-identical before any timing is reported, so the axis
+/// is a perf probe wrapped around a parity tripwire.
+pub struct ParAppsBenchReport {
+    pub scheduler: String,
+    pub apps: usize,
+    pub arrivals: u64,
+    pub points: Vec<ParAppsPoint>,
+}
+
+impl ParAppsBenchReport {
+    pub fn to_json(&self) -> String {
+        let points: Vec<String> = self
+            .points
+            .iter()
+            .map(|p| {
+                format!(
+                    "    {{\"jobs\": {}, \"wall_seconds\": {:.4}}}",
+                    p.jobs, p.wall_seconds
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"scheduler\": \"{}\",\n  \"apps\": {},\n  \"arrivals\": {},\n  \
+             \"points\": [\n{}\n  ]\n}}\n",
+            self.scheduler,
+            self.apps,
+            self.arrivals,
+            points.join(",\n")
+        )
+    }
+
+    /// CI tripwire: the parallel run (jobs = 0) must not be more than
+    /// `cap`× slower than the forced-serial run (jobs = 1). This gates
+    /// *overhead*, not speedup — CI runners may expose two cores, where
+    /// the win is small, but a parallel path that is materially slower
+    /// than serial means the executor regressed into contention or
+    /// oversubscription. The guard errors rather than passing vacuously
+    /// when the bench produced no apps or lacks either reference point.
+    pub fn assert_par_overhead(&self, cap: f64) -> Result<(), String> {
+        if self.apps == 0 || self.arrivals == 0 {
+            return Err(
+                "par-apps overhead tripwire is vacuous: the bench workload generated \
+                 no apps/arrivals — retune --par-apps-count or the workload scale"
+                    .into(),
+            );
+        }
+        let wall_of = |jobs: usize| {
+            self.points
+                .iter()
+                .find(|p| p.jobs == jobs)
+                .map(|p| p.wall_seconds)
+        };
+        let serial = wall_of(1).ok_or(
+            "par-apps overhead tripwire is vacuous: no jobs=1 (serial reference) point",
+        )?;
+        let auto = wall_of(0).ok_or(
+            "par-apps overhead tripwire is vacuous: no jobs=0 (full budget) point",
+        )?;
+        // Tiny absolute slack so near-zero walls can't trip on noise.
+        if auto > serial * cap + 1e-3 {
+            return Err(format!(
+                "per-app parallelism overhead regression: the jobs=0 production cell \
+                 took {auto:.3}s vs {serial:.3}s serial ({:.2}x, cap {cap}x) — the \
+                 executor fan-out now costs more than the serial loop it replaced",
+                auto / serial.max(1e-9)
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Generate one `app_count`-app production workload and run it through
+/// [`run_production_jobs`] at jobs 1 (forced serial), 2, and 0 (full
+/// executor budget), timing each. Errors — rather than reporting
+/// timings — if the three cells are not bit-identical, since a parallel
+/// cell that diverges from serial is wrong no matter how fast it is.
+pub fn run_par_apps_bench(app_count: usize, seed: u64) -> Result<ParAppsBenchReport, String> {
+    let params = ProductionParams {
+        dataset: Dataset::AzureFunctions,
+        bucket: SizeBucket::Short,
+        duration: 600.0,
+        scale: 0.05,
+        max_apps: Some(app_count),
+    };
+    let mut rng = Rng::new(seed);
+    let apps = production::generate(&params, &mut rng);
+    let arrivals: u64 = apps.iter().map(|a| a.arrivals.len() as u64).sum();
+    let cfg = SimConfig::paper_default();
+    let kind = SchedulerKind::spork_e();
+    let mut points = Vec::new();
+    let mut cells = Vec::new();
+    for jobs in [1usize, 2, 0] {
+        let t0 = Instant::now();
+        let cell = run_production_jobs(&kind, &cfg, &apps, jobs);
+        points.push(ParAppsPoint {
+            jobs,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        });
+        cells.push((jobs, cell));
+    }
+    let (_, reference) = &cells[0];
+    for (jobs, cell) in &cells[1..] {
+        if cell != reference {
+            return Err(format!(
+                "par-apps parity violation: the production cell at --jobs {jobs} \
+                 diverged from the serial reference — the per-app parallel merge \
+                 is no longer bit-identical (DESIGN.md §14)"
+            ));
+        }
+    }
+    Ok(ParAppsBenchReport {
+        scheduler: kind.name(),
+        apps: apps.len(),
+        arrivals,
+        points,
+    })
+}
+
 /// `spork bench-sim` CLI entrypoint.
 pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
     let arrivals = args.u64_or("arrivals", 1_000_000)?;
@@ -695,6 +843,10 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
         return Err("--rate must be a finite positive number".into());
     }
     let seed = args.u64_or("seed", 1)?;
+    // Seed the process-wide executor budget before any axis runs; the
+    // par-apps axis (and anything else fanning out) draws from it.
+    let jobs = args.usize_or("jobs", 0)?;
+    Executor::configure(jobs);
     let out = args.str_or("out", "BENCH_sim_throughput.json");
     let name = args.str_or("scheduler", "spork-e");
     let kind = SchedulerKind::from_name(&name)
@@ -730,6 +882,19 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
     };
     if assert_fit_passes.is_some() && !fit {
         return Err("--assert-fit-passes requires --fit".into());
+    }
+    let par_apps = args.has_flag("par-apps");
+    let par_apps_count = args.usize_or("par-apps-count", 8)?;
+    let par_apps_out = args.str_or("par-apps-out", "BENCH_par_apps.json");
+    let assert_par_overhead = match args.get("assert-par-overhead") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| format!("--assert-par-overhead: invalid ratio '{v}'"))?,
+        ),
+        None => None,
+    };
+    if assert_par_overhead.is_some() && !par_apps {
+        return Err("--assert-par-overhead requires --par-apps".into());
     }
     let scenario = match args.get("scenario") {
         Some(name) => Some(
@@ -823,6 +988,32 @@ pub fn cmd_bench_sim(args: &Args) -> Result<(), String> {
             println!(
                 "  fit passes tripwire: every lockstep search cost <= {cap} \
                  full-trace-equivalent stream traversals"
+            );
+        }
+    }
+    if par_apps {
+        eprintln!(
+            "par-apps axis: {par_apps_count}-app production cell at --jobs 1 / 2 / 0..."
+        );
+        let pr = run_par_apps_bench(par_apps_count, seed)?;
+        std::fs::write(&par_apps_out, pr.to_json())
+            .map_err(|e| format!("writing {par_apps_out}: {e}"))?;
+        for p in &pr.points {
+            let label = if p.jobs == 0 {
+                "auto".to_string()
+            } else {
+                p.jobs.to_string()
+            };
+            println!(
+                "  par-apps jobs {label:>4}: {} apps / {} arrivals in {:.2}s -> {}",
+                pr.apps, pr.arrivals, p.wall_seconds, par_apps_out
+            );
+        }
+        println!("  par-apps parity: cells bit-identical across jobs 1/2/0");
+        if let Some(cap) = assert_par_overhead {
+            pr.assert_par_overhead(cap)?;
+            println!(
+                "  par-apps tripwire: parallel (jobs=0) within {cap}x of the serial wall"
             );
         }
     }
@@ -930,6 +1121,60 @@ mod tests {
         assert!(j.contains("\"pool_scaling\""));
         assert!(j.contains("\"workers\": 32"));
         assert!(crate::util::json::Json::parse(&j).is_ok(), "bench JSON must parse");
+    }
+
+    #[test]
+    fn par_apps_bench_holds_parity_and_serializes() {
+        // Small population: the runner itself errors on any cross-jobs
+        // divergence, so an Ok here IS the parity assertion.
+        let r = run_par_apps_bench(3, 21).expect("parallel production cell must match serial");
+        assert_eq!(r.points.len(), 3);
+        assert_eq!(r.points[0].jobs, 1);
+        assert_eq!(r.points.last().unwrap().jobs, 0);
+        assert!(r.apps > 0 && r.arrivals > 0, "bench workload came up empty");
+        // A generous cap: the unit test only checks the plumbing; CI owns
+        // the real 1.2x gate where walls are long enough to be stable.
+        assert!(r.assert_par_overhead(1000.0).is_ok());
+        let j = r.to_json();
+        assert!(j.contains("\"points\""));
+        assert!(j.contains("\"jobs\": 0"));
+        assert!(crate::util::json::Json::parse(&j).is_ok(), "par-apps JSON must parse");
+    }
+
+    #[test]
+    fn par_apps_tripwire_flags_overhead_and_vacuity() {
+        let report = |serial: f64, auto: f64, apps: usize| ParAppsBenchReport {
+            scheduler: "spork-e".into(),
+            apps,
+            arrivals: if apps == 0 { 0 } else { 1_000 },
+            points: vec![
+                ParAppsPoint {
+                    jobs: 1,
+                    wall_seconds: serial,
+                },
+                ParAppsPoint {
+                    jobs: 2,
+                    wall_seconds: (serial + auto) / 2.0,
+                },
+                ParAppsPoint {
+                    jobs: 0,
+                    wall_seconds: auto,
+                },
+            ],
+        };
+        assert!(report(1.0, 1.1, 4).assert_par_overhead(1.2).is_ok());
+        let err = report(1.0, 1.5, 4).assert_par_overhead(1.2).unwrap_err();
+        assert!(err.contains("overhead regression"), "unexpected error: {err}");
+        // An empty app population must error, not pass vacuously.
+        let err = report(1.0, 1.0, 0).assert_par_overhead(1.2).unwrap_err();
+        assert!(err.contains("vacuous"), "unexpected error: {err}");
+        // So must a report missing either reference point.
+        let mut missing = report(1.0, 1.0, 4);
+        missing.points.retain(|p| p.jobs != 0);
+        assert!(missing.assert_par_overhead(1.2).is_err());
+        let mut missing = report(1.0, 1.0, 4);
+        missing.points.retain(|p| p.jobs != 1);
+        assert!(missing.assert_par_overhead(1.2).is_err());
     }
 
     #[test]

@@ -167,15 +167,32 @@ pub fn run_synthetic(
 
 /// Run `kind` over a multi-app production workload: each app gets its own
 /// pool + a fitted policy instance from the `sched::build` factory;
-/// energy/cost aggregate across apps before normalizing (§5.2). Serial by
-/// design — production experiments parallelize across the (scheduler ×
-/// dataset) grid instead, so worker threads never nest.
+/// energy/cost aggregate across apps before normalizing (§5.2). Apps
+/// share no state, so they fan out across the process-wide bounded
+/// executor (DESIGN.md §14) with metrics merged in fixed app-index
+/// order — bit-identical to the serial loop for any `--jobs`, and the
+/// fan-out degrades to that serial loop whenever an outer grid holds
+/// the permit pool.
 pub fn run_production(kind: &SchedulerKind, cfg: &SimConfig, apps: &[AppTrace]) -> Cell {
+    run_production_jobs(kind, cfg, apps, 0)
+}
+
+/// [`run_production`] with an explicit per-call worker cap (`0` = let
+/// the executor's budget decide; `1` = force the inline serial loop —
+/// the reference plan the parity tests compare against).
+pub fn run_production_jobs(
+    kind: &SchedulerKind,
+    cfg: &SimConfig,
+    apps: &[AppTrace],
+    jobs: usize,
+) -> Cell {
     let defaults = PlatformConfig::paper_default();
+    let per_app = crate::util::executor::Executor::global().map(apps, jobs, |_, app| {
+        sched::run_scheduler(kind, app, cfg, &defaults).metrics
+    });
     let mut total = Metrics::default();
-    for app in apps {
-        let r = sched::run_scheduler(kind, app, cfg, &defaults);
-        total.merge(&r.metrics);
+    for m in &per_app {
+        total.merge(m);
     }
     let ideal = IdealBaseline::for_work(total.total_work, &defaults);
     Cell::from_run(&total, &ideal).finish()
@@ -193,17 +210,30 @@ pub fn profile_apps(apps: Vec<AppTrace>, cfg: &SimConfig) -> Vec<WorkloadProfile
 
 /// [`run_production`] over pre-profiled apps — bit-identical results
 /// (pinned by `rust/tests/fit_parity.rs`), minus the per-kind synthesis
-/// and oracle re-streaming.
+/// and oracle re-streaming. Fans out per app like [`run_production`].
 pub fn run_production_profiles(
     kind: &SchedulerKind,
     cfg: &SimConfig,
     profiles: &[WorkloadProfile],
 ) -> Cell {
+    run_production_profiles_jobs(kind, cfg, profiles, 0)
+}
+
+/// [`run_production_profiles`] with an explicit per-call worker cap
+/// (see [`run_production_jobs`]).
+pub fn run_production_profiles_jobs(
+    kind: &SchedulerKind,
+    cfg: &SimConfig,
+    profiles: &[WorkloadProfile],
+    jobs: usize,
+) -> Cell {
     let defaults = PlatformConfig::paper_default();
+    let per_app = crate::util::executor::Executor::global().map(profiles, jobs, |_, profile| {
+        sched::run_scheduler_profile(kind, profile, cfg, &defaults).metrics
+    });
     let mut total = Metrics::default();
-    for profile in profiles {
-        let r = sched::run_scheduler_profile(kind, profile, cfg, &defaults);
-        total.merge(&r.metrics);
+    for m in &per_app {
+        total.merge(m);
     }
     let ideal = IdealBaseline::for_work(total.total_work, &defaults);
     Cell::from_run(&total, &ideal).finish()

@@ -16,8 +16,9 @@ pub use benchserve::{
     cmd_bench_serve, run_bench_serve, BenchServePoint, BenchServeReport, BenchServeSpec,
 };
 pub use benchsim::{
-    cmd_bench_sim, run_bench_sim, run_bench_sim_scenario, run_fit_bench, run_pool_scaling,
-    BenchSimReport, FitBenchReport, FitSearchReport, PoolScalePoint, ScenarioBenchReport,
+    cmd_bench_sim, run_bench_sim, run_bench_sim_scenario, run_fit_bench, run_par_apps_bench,
+    run_pool_scaling, BenchSimReport, FitBenchReport, FitSearchReport, ParAppsBenchReport,
+    ParAppsPoint, PoolScalePoint, ScenarioBenchReport,
 };
 pub use common::{Cell, ExpCtx};
 pub use sweep::{SweepCell, SweepGrid, WorkloadSpec};
@@ -91,12 +92,17 @@ pub fn cmd_experiment(args: &Args) -> Result<(), String> {
         .first()
         .map(|s| s.as_str())
         .unwrap_or("all");
+    let jobs = args.usize_or("jobs", 0)?;
+    // `--jobs` is one process-wide budget (DESIGN.md §14): seed the
+    // global executor before any grid or per-app fan-out runs, so every
+    // nesting level draws from the same permit pool.
+    crate::util::executor::Executor::configure(jobs);
     let ctx = ExpCtx {
         out_dir: PathBuf::from(args.str_or("out", "results")),
         seeds: args.u64_or("seeds", if id.starts_with("table") { 1 } else { 3 })?,
         scale: args.f64_or("scale", 1.0)?,
         full: args.has_flag("full"),
-        jobs: args.usize_or("jobs", 0)?,
+        jobs,
     };
     run(id, &ctx).map(|_| ())
 }

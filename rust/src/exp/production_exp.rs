@@ -2,8 +2,11 @@
 //! (dispatch policy ablation).
 //!
 //! Workloads are generated once per table, then the (scheduler × dataset)
-//! / (trace × policy) grids run through the parallel sweep engine —
-//! multi-app runs themselves stay serial so worker threads never nest.
+//! / (trace × policy) grids run through the parallel sweep engine, and
+//! the per-app loops inside each cell fan out too: both levels draw
+//! permits from the same process-wide bounded executor (DESIGN.md §14),
+//! so nesting degrades gracefully instead of oversubscribing, and every
+//! cell stays bit-identical to the serial loop for any `--jobs`.
 
 use super::common::{profile_apps, run_production_profiles, Cell, ExpCtx};
 use super::sweep::parallel_map;
@@ -123,18 +126,22 @@ pub fn table9(ctx: &ExpCtx) -> Vec<Table> {
 }
 
 /// SporkE allocation + a specific dispatch policy over a multi-app
-/// workload.
+/// workload. Apps fan out over the shared executor (each builds its own
+/// policy instance); metrics merge in app-index order, bit-identical to
+/// the serial loop.
 pub fn run_spork_with_dispatch(
     cfg: &SimConfig,
     apps: &[AppTrace],
     policy: DispatchPolicy,
 ) -> Cell {
     let defaults = PlatformConfig::paper_default();
-    let mut total = Metrics::default();
-    for app in apps {
+    let per_app = crate::util::executor::Executor::global().map(apps, 0, |_, app| {
         let mut s = sched::spork::Spork::new(cfg, Objective::energy()).with_dispatch(policy);
-        let r = sim::run(app, cfg.clone(), &defaults, &mut s);
-        total.merge(&r.metrics);
+        sim::run(app, cfg.clone(), &defaults, &mut s).metrics
+    });
+    let mut total = Metrics::default();
+    for m in &per_app {
+        total.merge(m);
     }
     let ideal = IdealBaseline::for_work(total.total_work, &defaults);
     Cell::from_run(&total, &ideal).finish()

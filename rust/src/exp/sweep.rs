@@ -19,17 +19,25 @@
 //!
 //! The lower-level [`parallel_map`] is shared by the experiments whose
 //! cells do not fit the synthetic-workload shape (production tables,
-//! offline fig2/fig3 solves, ablations).
+//! offline fig2/fig3 solves, ablations). Since the bounded-executor
+//! refactor it is a thin veneer over [`Executor::global`] (DESIGN.md
+//! §14): the grid draws its workers from the same process-wide permit
+//! pool as the per-app and lockstep-fitting fan-outs nested inside its
+//! cells, so `--jobs` bounds *total* live threads, not threads per
+//! nesting level.
 
 use super::common::{Cell, ExpCtx};
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig};
 use crate::scenario::ScenarioConfig;
 use crate::sched::{self, WorkloadProfile};
 use crate::trace::AppTrace;
+use crate::util::executor::{panic_message, Executor};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
+
+pub use crate::util::executor::effective_jobs;
 
 /// A synthetic (b-model) workload point of a sweep grid.
 #[derive(Clone, Debug)]
@@ -127,7 +135,6 @@ impl SweepGrid {
     /// share profiles across configs whenever the scheduling interval
     /// agrees.
     pub fn run(&self) -> Vec<Cell> {
-        let defaults = PlatformConfig::paper_default();
         let seeds = self.seeds;
         let units: Vec<(usize, u64)> = (0..self.cells.len())
             .flat_map(|c| (0..seeds).map(move |s| (c, s)))
@@ -168,77 +175,19 @@ impl SweepGrid {
 
         let runs = parallel_map(&units, self.jobs, |u, &(c, s)| {
             let cell = &self.cells[c];
-            let w = &cell.workload;
-            let synth = || {
-                crate::trace::synthetic_source(
-                    "exp",
-                    Rng::for_stream(cell.seed_base, s),
-                    w.burstiness,
-                    w.duration,
-                    w.rate,
-                    w.size,
-                    60.0,
-                )
-            };
-            let r = match (&cell.scenario, &shared[unit_key[u]]) {
-                // Scenario cell: fit/build fault-free, then replay the
-                // evaluation run under the cell's fault plan (derived
-                // per replicate from `(seed_base, s)`). The profile, when
-                // shared, still supplies the arrivals.
-                (Some(scen), Some(profile)) => sched::run_scheduler_scenario(
-                    &cell.scheduler,
-                    &cell.cfg,
-                    &defaults,
-                    &|| Box::new(profile.source()),
-                    scen,
+            // Attribute a panicking unit to its grid cell: the executor
+            // re-raises with the flat item index, this layer adds the
+            // cell key (scheduler, seed_base, seed) a human can act on.
+            match catch_unwind(AssertUnwindSafe(|| run_unit(cell, s, &shared[unit_key[u]]))) {
+                Ok(r) => r,
+                Err(payload) => panic!(
+                    "sweep cell {} (seed_base {}, seed {}): {}",
+                    cell.scheduler.name(),
                     cell.seed_base,
                     s,
+                    panic_message(payload.as_ref())
                 ),
-                (Some(scen), None) => sched::run_scheduler_scenario(
-                    &cell.scheduler,
-                    &cell.cfg,
-                    &defaults,
-                    &|| Box::new(synth()),
-                    scen,
-                    cell.seed_base,
-                    s,
-                ),
-                (None, Some(profile)) => sched::run_scheduler_profile(
-                    &cell.scheduler,
-                    profile,
-                    &cell.cfg,
-                    &defaults,
-                ),
-                // Unshared unit: the old per-unit cost model. Single-pass
-                // kinds stream the lazy synthesis (constant memory);
-                // multi-pass kinds build a transient profile dropped at
-                // the end of the unit.
-                (None, None) => match &cell.scheduler {
-                    SchedulerKind::CpuDynamic
-                    | SchedulerKind::GreedySpot
-                    | SchedulerKind::OndemandFallback
-                    | SchedulerKind::SporkFallback
-                    | SchedulerKind::Spork { ideal: false, .. } => {
-                        sched::run_scheduler_source(
-                            &cell.scheduler,
-                            &cell.cfg,
-                            &defaults,
-                            &|| Box::new(synth()),
-                        )
-                    }
-                    _ => {
-                        let trace = AppTrace::from_source(&mut synth());
-                        let profile = WorkloadProfile::from_trace(trace, cell.cfg.interval);
-                        sched::run_scheduler_profile(
-                            &cell.scheduler,
-                            &profile,
-                            &cell.cfg,
-                            &defaults,
-                        )
-                    }
-                },
-            };
-            Cell::from_run(&r.metrics, &r.ideal)
+            }
         });
         // Merge replicates in unit order (units are sorted by (cell,
         // seed)), so float accumulation order is fixed.
@@ -248,6 +197,74 @@ impl SweepGrid {
         }
         merged.into_iter().map(Cell::finish).collect()
     }
+}
+
+/// Evaluate one (cell, seed) replicate — the body of the grid's unit
+/// fan-out, hoisted out so the panic-attribution wrapper above stays
+/// readable.
+fn run_unit(cell: &SweepCell, s: u64, shared: &Option<WorkloadProfile>) -> Cell {
+    let defaults = PlatformConfig::paper_default();
+    let w = &cell.workload;
+    let synth = || {
+        crate::trace::synthetic_source(
+            "exp",
+            Rng::for_stream(cell.seed_base, s),
+            w.burstiness,
+            w.duration,
+            w.rate,
+            w.size,
+            60.0,
+        )
+    };
+    let r = match (&cell.scenario, shared) {
+        // Scenario cell: fit/build fault-free, then replay the
+        // evaluation run under the cell's fault plan (derived
+        // per replicate from `(seed_base, s)`). The profile, when
+        // shared, still supplies the arrivals.
+        (Some(scen), Some(profile)) => sched::run_scheduler_scenario(
+            &cell.scheduler,
+            &cell.cfg,
+            &defaults,
+            &|| Box::new(profile.source()),
+            scen,
+            cell.seed_base,
+            s,
+        ),
+        (Some(scen), None) => sched::run_scheduler_scenario(
+            &cell.scheduler,
+            &cell.cfg,
+            &defaults,
+            &|| Box::new(synth()),
+            scen,
+            cell.seed_base,
+            s,
+        ),
+        (None, Some(profile)) => {
+            sched::run_scheduler_profile(&cell.scheduler, profile, &cell.cfg, &defaults)
+        }
+        // Unshared unit: the old per-unit cost model. Single-pass
+        // kinds stream the lazy synthesis (constant memory);
+        // multi-pass kinds build a transient profile dropped at
+        // the end of the unit.
+        (None, None) => match &cell.scheduler {
+            SchedulerKind::CpuDynamic
+            | SchedulerKind::GreedySpot
+            | SchedulerKind::OndemandFallback
+            | SchedulerKind::SporkFallback
+            | SchedulerKind::Spork { ideal: false, .. } => sched::run_scheduler_source(
+                &cell.scheduler,
+                &cell.cfg,
+                &defaults,
+                &|| Box::new(synth()),
+            ),
+            _ => {
+                let trace = AppTrace::from_source(&mut synth());
+                let profile = WorkloadProfile::from_trace(trace, cell.cfg.interval);
+                sched::run_scheduler_profile(&cell.scheduler, &profile, &cell.cfg, &defaults)
+            }
+        },
+    };
+    Cell::from_run(&r.metrics, &r.ideal)
 }
 
 /// Whether a kind's run path consumes a [`WorkloadProfile`] — the
@@ -312,63 +329,22 @@ impl ProfileKey {
     }
 }
 
-/// Resolve a `--jobs` value: `0` means auto (one worker per core).
-pub fn effective_jobs(jobs: usize) -> usize {
-    if jobs == 0 {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-    } else {
-        jobs
-    }
-}
-
-/// Order-preserving parallel map: applies `f` to every item across up to
-/// `jobs` scoped worker threads (work-stealing over an atomic cursor) and
-/// returns results in item order. `f(i, item)` must depend only on its
-/// arguments for the output to be deterministic — *scheduling* order is
-/// not deterministic, result *placement* is.
+/// Order-preserving parallel map over the **global** executor: applies
+/// `f` to every item across the calling thread plus up to `jobs - 1`
+/// permit-backed workers and returns results in item order (`jobs == 0`
+/// means "whatever the budget allows"). `f(i, item)` must depend only
+/// on its arguments for the output to be deterministic — *scheduling*
+/// order is not deterministic, result *placement* is. A worker panic is
+/// re-raised with the failing item index. Kept as a named entry point
+/// for the experiment callers; the mechanics live in
+/// [`crate::util::executor`].
 pub fn parallel_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    let jobs = effective_jobs(jobs).min(items.len().max(1));
-    if jobs <= 1 || items.len() <= 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let mut parts: Vec<Vec<(usize, R)>> = Vec::with_capacity(jobs);
-    std::thread::scope(|scope| {
-        let workers: Vec<_> = (0..jobs)
-            .map(|_| {
-                scope.spawn(|| {
-                    let mut local = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= items.len() {
-                            break;
-                        }
-                        local.push((i, f(i, &items[i])));
-                    }
-                    local
-                })
-            })
-            .collect();
-        for w in workers {
-            parts.push(w.join().expect("sweep worker panicked"));
-        }
-    });
-    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
-    for (i, r) in parts.into_iter().flatten() {
-        debug_assert!(slots[i].is_none(), "duplicate sweep result for {i}");
-        slots[i] = Some(r);
-    }
-    slots
-        .into_iter()
-        .map(|r| r.expect("missing sweep result"))
-        .collect()
+    Executor::global().map(items, jobs, f)
 }
 
 #[cfg(test)]

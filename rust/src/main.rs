@@ -86,6 +86,11 @@ fn specs() -> Vec<Spec> {
                 ("fit-out", true, "fit axis output JSON (default BENCH_fit_passes.json)"),
                 ("assert-fit-abort", true, "max trace fraction an aborted fitting pass may stream (e.g. 0.5)"),
                 ("assert-fit-passes", true, "max full-trace-equivalent stream traversals per lockstep search (e.g. 2)"),
+                ("jobs", true, "process-wide executor budget (default 0 = all cores; 1 = serial)"),
+                ("par-apps", false, "also time a multi-app production cell at --jobs 1/2/0 (parity-checked)"),
+                ("par-apps-count", true, "apps in the par-apps workload (default 8)"),
+                ("par-apps-out", true, "par-apps axis output JSON (default BENCH_par_apps.json)"),
+                ("assert-par-overhead", true, "max jobs=0 / jobs=1 wall ratio for the par-apps cell (e.g. 1.2)"),
                 ("scenario", true, "also replay under a fault pack: fault-free|mild|severe"),
                 ("scenario-arrivals", true, "arrivals for the scenario axis (default min(arrivals, 200000))"),
                 ("scenario-out", true, "scenario axis output JSON (default BENCH_scenario.json)"),

@@ -30,7 +30,10 @@
 //!   [`LOCKSTEP_WAVES`]): a wave of rungs runs only after the previous
 //!   wave proved every rung infeasible, so the engine never simulates
 //!   fleets orders of magnitude beyond the fitted candidate just to fill
-//!   a batch.
+//!   a batch. When the process-wide executor has permits to spare, a
+//!   batch's drivers additionally run *concurrently* over per-candidate
+//!   fresh streams instead of a shared tee — bit-identical runs either
+//!   way (see [`run_candidate_batch`] and DESIGN.md §14).
 //!
 //! Both engines return a winning run that needs no re-simulation: a
 //! feasible pass never reaches its miss budget, so its bounded run IS
@@ -46,6 +49,7 @@ use crate::config::SimConfig;
 use crate::policy::Policy;
 use crate::sim::{self, BoundedRun, RunResult};
 use crate::trace::{tee, ArrivalSource, KnownLen};
+use crate::util::executor::Executor;
 use std::time::Instant;
 
 /// Generous upper bound on the candidate index (the old searches capped
@@ -233,11 +237,32 @@ pub(crate) fn run_candidate_pass(
     }
 }
 
-/// One lockstep traversal probing a whole candidate batch: a single
-/// fresh stream from `make` (exact count `total` attached, so every
-/// driver's miss budget arms identically to its serial pass) fanned out
-/// through [`tee`], one policy and one driver per candidate. With
-/// `bounded == false` (the ceiling-failure rerun, always a single
+/// One traversal probing a whole candidate batch. Two bit-identical
+/// execution plans, chosen by permit availability on the process-wide
+/// executor (DESIGN.md §14):
+///
+/// * **Parallel** — when the executor grants at least one extra permit,
+///   each candidate gets its own *fresh* stream from `make` (exact
+///   count `total` attached, so every driver's miss budget arms
+///   identically) and its own bounded driver, run concurrently via
+///   [`Executor::try_map`]. Each driver executes exactly the serial
+///   [`run_candidate_pass`] protocol — a `MakeSource` is a pure
+///   factory, so every candidate sees the identical stream and aborts
+///   at the identical arrival — and the batch's stream-traversal cost
+///   accounting is unchanged: [`FitBatch::stream_arrivals`] is the max
+///   over candidates under either plan (the traversal's critical path,
+///   now paid concurrently instead of once up front).
+/// * **Tee-lockstep** (the serial fallback) — a single fresh stream
+///   fanned out through [`tee`], one policy and one driver per
+///   candidate, stepped within one arrival of each other by
+///   `sim::run_sources_lockstep`, synthesis paid once. This is the plan
+///   whenever no extra permit is available (budget 1, or an outer
+///   fan-out holds the pool). A *shared* tee is not an option under
+///   concurrency: its bounded spread cap would deadlock any batch with
+///   more candidates than granted threads, so the parallel plan trades
+///   one traversal's worth of redundant synthesis for wall clock.
+///
+/// With `bounded == false` (the ceiling-failure rerun, always a single
 /// candidate) this falls back to serial unbounded passes.
 pub(crate) fn run_candidate_batch(
     make: &MakeSource<'_>,
@@ -246,7 +271,33 @@ pub(crate) fn run_candidate_batch(
     miss_tolerance: f64,
     bounded: bool,
     candidates: &[u32],
-    policy_of: &dyn Fn(u32) -> Box<dyn Policy>,
+    policy_of: &(dyn Fn(u32) -> Box<dyn Policy> + Sync),
+) -> Vec<BoundedRun> {
+    run_candidate_batch_with(
+        Executor::global(),
+        make,
+        total,
+        cfg,
+        miss_tolerance,
+        bounded,
+        candidates,
+        policy_of,
+    )
+}
+
+/// [`run_candidate_batch`] against an explicit executor — the seam the
+/// three-plan parity test pins deterministically (a local executor's
+/// permit pool is not subject to whatever else the process runs).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_candidate_batch_with(
+    exec: &Executor,
+    make: &MakeSource<'_>,
+    total: u64,
+    cfg: &SimConfig,
+    miss_tolerance: f64,
+    bounded: bool,
+    candidates: &[u32],
+    policy_of: &(dyn Fn(u32) -> Box<dyn Policy> + Sync),
 ) -> Vec<BoundedRun> {
     if !bounded {
         return candidates
@@ -257,6 +308,14 @@ pub(crate) fn run_candidate_batch(
             })
             .collect();
     }
+    // Parallel plan: independent bounded drivers over fresh streams.
+    if let Some(runs) = exec.try_map(candidates, |_, &c| {
+        let mut policy = policy_of(c);
+        run_candidate_pass(make, total, cfg, miss_tolerance, true, policy.as_mut())
+    }) {
+        return runs;
+    }
+    // Serial plan: one shared stream teed across the batch.
     let stream = Box::new(KnownLen::new(make(), total));
     let sources: Vec<Box<dyn ArrivalSource + '_>> = tee(stream, candidates.len())
         .into_iter()
@@ -696,6 +755,97 @@ mod tests {
         }
         assert_eq!(flat, serial);
         assert!(flat.windows(2).all(|w| w[0] < w[1]), "ladder must ascend");
+    }
+
+    /// The three batch plans — parallel fresh-stream drivers, the
+    /// tee-lockstep fallback, and plain serial passes — must be bit-
+    /// identical on a real workload. Local executors pin the plan
+    /// choice deterministically: `Executor::new(8)` guarantees permits
+    /// (parallel plan), `Executor::new(1)` guarantees none (tee plan),
+    /// independent of whatever the process-wide pool is doing.
+    #[test]
+    fn candidate_batch_plans_are_bit_identical() {
+        use crate::config::SimConfig;
+        use crate::sched::fpga_static::FpgaStatic;
+        use crate::trace::synthetic_source;
+        use crate::util::rng::Rng;
+
+        let cfg = SimConfig::paper_default();
+        let make = || -> Box<dyn ArrivalSource> {
+            Box::new(synthetic_source("fit", Rng::new(7), 0.7, 30.0, 400.0, 0.010, 60.0))
+        };
+        let mut total = 0u64;
+        {
+            let mut s = make();
+            while s.next_arrival().is_some() {
+                total += 1;
+            }
+        }
+        assert!(total > 100, "workload too small to exercise the batch");
+        // Exponential fleet ladder: 1 FPGA drowns in this workload's
+        // bursts (aborted pass), 32 is far over-provisioned (full pass).
+        let policy_of =
+            |c: u32| -> Box<dyn Policy> { Box::new(FpgaStatic::with_fleet(1 << c)) };
+        let candidates: Vec<u32> = (0..6).collect();
+        let tol = 0.005;
+        let parallel = run_candidate_batch_with(
+            &Executor::new(8),
+            &make,
+            total,
+            &cfg,
+            tol,
+            true,
+            &candidates,
+            &policy_of,
+        );
+        let teed = run_candidate_batch_with(
+            &Executor::new(1),
+            &make,
+            total,
+            &cfg,
+            tol,
+            true,
+            &candidates,
+            &policy_of,
+        );
+        let serial: Vec<BoundedRun> = candidates
+            .iter()
+            .map(|&c| {
+                let mut p = policy_of(c);
+                run_candidate_pass(&make, total, &cfg, tol, true, p.as_mut())
+            })
+            .collect();
+        assert_eq!(parallel.len(), candidates.len());
+        for (i, a) in parallel.iter().enumerate() {
+            for (plan, r) in [("tee", &teed[i]), ("serial", &serial[i])] {
+                assert_eq!(a.aborted, r.aborted, "candidate {i} vs {plan}");
+                let (ma, mr) = (&a.result.metrics, &r.result.metrics);
+                assert_eq!(ma.requests, mr.requests, "candidate {i} vs {plan}");
+                assert_eq!(
+                    ma.deadline_misses, mr.deadline_misses,
+                    "candidate {i} vs {plan}"
+                );
+                assert_eq!(
+                    ma.total_work.to_bits(),
+                    mr.total_work.to_bits(),
+                    "candidate {i} vs {plan}"
+                );
+                assert_eq!(
+                    ma.total_energy().to_bits(),
+                    mr.total_energy().to_bits(),
+                    "candidate {i} vs {plan}"
+                );
+                assert_eq!(
+                    ma.total_cost().to_bits(),
+                    mr.total_cost().to_bits(),
+                    "candidate {i} vs {plan}"
+                );
+            }
+        }
+        // A meaningful batch exercises both outcomes: small fleets abort
+        // at their miss budget, large ones run the full trace.
+        assert!(parallel.iter().any(|r| r.aborted), "no aborting candidate");
+        assert!(parallel.iter().any(|r| !r.aborted), "no feasible candidate");
     }
 
     #[test]

@@ -38,7 +38,13 @@ pub const FIT_MISS_TOLERANCE: f64 = 0.005;
 /// factory each pass streams in constant memory instead of requiring a
 /// materialized trace. Synthetic factories rebuild the source from its
 /// `(seed_base, seed)` stream; CSV factories re-open the file.
-pub type MakeSource<'a> = dyn Fn() -> Box<dyn ArrivalSource + 'a> + 'a;
+///
+/// `Sync` because the parallel lockstep-fitting batch (`fit.rs` under
+/// the bounded executor, DESIGN.md §14) calls the factory from several
+/// worker threads at once. The *returned* source is neither `Send` nor
+/// `Sync` — each worker creates its own source and consumes it on that
+/// same thread, so the stream itself never crosses threads.
+pub type MakeSource<'a> = dyn Fn() -> Box<dyn ArrivalSource + 'a> + Sync + 'a;
 
 /// Build the policy for `kind`, fitted to `trace` where the paper requires
 /// it. Oracle-assisted baselines (FPGA-static, MArk-ideal, Spork-*-ideal)

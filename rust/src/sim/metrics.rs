@@ -320,4 +320,65 @@ mod tests {
         assert_eq!(a.requests, 8);
         assert!((a.cpu_request_fraction() - 5.0 / 8.0).abs() < 1e-12);
     }
+
+    #[test]
+    fn merge_in_fixed_index_order_is_bit_deterministic() {
+        // The per-app parallel fan-outs (DESIGN.md §14) compute each
+        // app's Metrics on whatever thread wins the permit race, then
+        // merge them in *app-index order* on the caller. This pins the
+        // contract that makes that bit-identical to the serial loop:
+        // merge touches no order-sensitive state (no max/min tracking —
+        // pools are per-app, so even the peaks add), so the only float
+        // hazard is summation order, and index-order folding fixes that.
+        let apps: Vec<Metrics> = (0..7u64)
+            .map(|i| {
+                let mut m = Metrics::default();
+                // Awkward magnitudes so any reassociation of the sums
+                // would actually flip low-order bits.
+                m.cpu_energy.busy = 1e16 / (i as f64 + 1.0) + 0.1 * i as f64;
+                m.fpga_energy.idle = (i as f64).exp() * 1e-7;
+                m.fpga_cost = 1.0 / (3.0 + i as f64);
+                m.total_work = (i as f64 + 1.0).sqrt();
+                m.work_lost = 1e-3 / (i as f64 + 7.0);
+                m.requests = 10 + i;
+                m.peak_cpus = 2 + i as u32;
+                m.peak_fpgas = 1 + i as u32;
+                m
+            })
+            .collect();
+        let fold = |ms: &[Metrics]| {
+            let mut total = Metrics::default();
+            for m in ms {
+                total.merge(m);
+            }
+            total
+        };
+        let a = fold(&apps);
+        let b = fold(&apps);
+        assert_eq!(a.cpu_energy.busy.to_bits(), b.cpu_energy.busy.to_bits());
+        assert_eq!(a.fpga_energy.idle.to_bits(), b.fpga_energy.idle.to_bits());
+        assert_eq!(a.fpga_cost.to_bits(), b.fpga_cost.to_bits());
+        assert_eq!(a.total_work.to_bits(), b.total_work.to_bits());
+        assert_eq!(a.work_lost.to_bits(), b.work_lost.to_bits());
+        assert_eq!(a.requests, b.requests);
+        // Peaks are additive, not max-tracked: 2+3+..+8 and 1+2+..+7.
+        assert_eq!(a.peak_cpus, (2..=8).sum::<u32>());
+        assert_eq!(a.peak_fpgas, (1..=7).sum::<u32>());
+        // And the fixed-order contract is load-bearing, not vacuous:
+        // float merges do not reassociate. 1e16 + 1 + 1 stays 1e16 (each
+        // 1.0 is a half-ulp tie that rounds back to even), while
+        // 1 + 1 + 1e16 lands on the representable 1e16 + 2.
+        let mk = |busy: f64| {
+            let mut m = Metrics::default();
+            m.cpu_energy.busy = busy;
+            m
+        };
+        let forward = fold(&[mk(1e16), mk(1.0), mk(1.0)]);
+        let backward = fold(&[mk(1.0), mk(1.0), mk(1e16)]);
+        assert_ne!(
+            forward.cpu_energy.busy.to_bits(),
+            backward.cpu_energy.busy.to_bits(),
+            "expected reassociated sums to differ in low-order bits"
+        );
+    }
 }

@@ -1,0 +1,462 @@
+//! Process-wide bounded executor: one concurrency budget for every
+//! intra-run fan-out (DESIGN.md §14).
+//!
+//! The experiment harness parallelizes at three nesting levels — sweep
+//! cells across a grid, apps inside a production cell, and candidate
+//! drivers inside a lockstep fitting batch. Giving each level its own
+//! `--jobs` worth of threads would oversubscribe multiplicatively
+//! (jobs³ live threads in the worst nest). Instead a single
+//! [`Executor`] holds the budget as a pool of *extra-worker permits*:
+//!
+//! - A fan-out's calling thread always participates in its own work —
+//!   it holds an implicit permit by virtue of running. Only the
+//!   *additional* scoped workers it wants must be acquired from the
+//!   shared pool, so a budget of `B` funds `B - 1` extra permits and
+//!   the number of threads executing work is never more than `B`, no
+//!   matter how fan-outs nest.
+//! - Acquisition is best-effort and non-blocking: a fan-out takes
+//!   whatever is available up to its cap and runs with that. Zero
+//!   available means the fan-out degrades to a plain inline loop on the
+//!   calling thread — graceful degradation, never a deadlock, and the
+//!   innermost levels of a saturated nest simply run serial.
+//! - Results are placed by item index, so the output (and every
+//!   floating-point merge the caller folds over it in index order) is
+//!   bit-identical for any budget. *Scheduling* order is not
+//!   deterministic; result *placement* is.
+//!
+//! A worker panic is caught per item and re-raised on the calling
+//! thread with the failing item index attached (lowest index wins when
+//! several workers trip), so grid failures are attributable instead of
+//! surfacing as an opaque scope abort.
+
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Resolve a `--jobs` value: `0` means auto (one worker per core).
+pub fn effective_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        jobs
+    }
+}
+
+/// Best-effort human-readable text of a caught panic payload.
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+static GLOBAL: OnceLock<Executor> = OnceLock::new();
+
+/// A bounded pool of extra-worker permits shared by every fan-out in
+/// the process (see the module doc for the permit model).
+pub struct Executor {
+    /// Extra permits currently available (`budget - 1` when idle —
+    /// the caller thread of any fan-out is the implicit first worker).
+    extra: AtomicUsize,
+    budget: usize,
+}
+
+impl Executor {
+    /// Executor with a budget of `effective_jobs(jobs)` concurrent
+    /// threads (so `jobs == 0` means one per core, `jobs == 1` means
+    /// everything inline).
+    pub fn new(jobs: usize) -> Self {
+        let budget = effective_jobs(jobs);
+        Executor {
+            extra: AtomicUsize::new(budget.saturating_sub(1)),
+            budget,
+        }
+    }
+
+    /// The process-wide executor. First use wins: call
+    /// [`Executor::configure`] from the CLI entry point before any
+    /// fan-out runs; a plain `global()` without prior configuration
+    /// initializes at the auto budget (one thread per core).
+    pub fn global() -> &'static Executor {
+        GLOBAL.get_or_init(|| Executor::new(0))
+    }
+
+    /// Seed the global executor from `--jobs`. Idempotent for equal
+    /// budgets; a conflicting later configuration is ignored with a
+    /// warning (the budget is process-wide state — permits may already
+    /// be on loan, so it cannot be resized in flight).
+    pub fn configure(jobs: usize) {
+        let budget = effective_jobs(jobs);
+        let exec = GLOBAL.get_or_init(|| Executor::new(jobs));
+        if exec.budget != budget {
+            eprintln!(
+                "warning: executor already holds a budget of {} threads; ignoring --jobs {jobs}",
+                exec.budget
+            );
+        }
+    }
+
+    /// Total concurrency budget (threads, counting the caller).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Extra permits currently unclaimed (`budget() - 1` when no
+    /// fan-out is in flight). Test/diagnostic accessor.
+    pub fn available(&self) -> usize {
+        self.extra.load(Ordering::Relaxed)
+    }
+
+    /// Claim up to `want` extra permits, non-blocking: takes
+    /// `min(want, available)`, possibly zero. Released on drop.
+    pub fn acquire(&self, want: usize) -> Permits<'_> {
+        if want == 0 {
+            return Permits { exec: self, n: 0 };
+        }
+        let mut cur = self.extra.load(Ordering::Relaxed);
+        loop {
+            let take = cur.min(want);
+            if take == 0 {
+                return Permits { exec: self, n: 0 };
+            }
+            match self.extra.compare_exchange_weak(
+                cur,
+                cur - take,
+                Ordering::Acquire,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Permits { exec: self, n: take },
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    fn release(&self, n: usize) {
+        if n > 0 {
+            self.extra.fetch_add(n, Ordering::Release);
+        }
+    }
+
+    /// Order-preserving bounded parallel map: applies `f` to every item
+    /// across the calling thread plus up to `cap - 1` permit-backed
+    /// scoped workers (work-stealing over an atomic cursor) and returns
+    /// results in item order. `cap == 0` means "as many as the budget
+    /// allows". `f(i, item)` must depend only on its arguments for the
+    /// output to be deterministic. Degrades to an inline serial loop
+    /// when the items, the cap, or the permit pool don't support
+    /// parallelism — same results either way.
+    pub fn map<T, R, F>(&self, items: &[T], cap: usize, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if n > 1 {
+            let cap_extra = if cap == 0 {
+                n - 1
+            } else {
+                cap.saturating_sub(1).min(n - 1)
+            };
+            if cap_extra > 0 {
+                let permits = self.acquire(cap_extra);
+                if permits.count() > 0 {
+                    return run_scoped(items, permits, &f);
+                }
+            }
+        }
+        items.iter().enumerate().map(|(i, t)| f(i, t)).collect()
+    }
+
+    /// Like [`Executor::map`], but refuses to run *without* real
+    /// parallelism: returns `None` (touching no item) when fewer than
+    /// two items were given or no extra permit is available, so the
+    /// caller can choose a different serial plan instead of an inline
+    /// loop (the lockstep fitting batch falls back to its shared-tee
+    /// pass — see `sched::fit`).
+    pub fn try_map<T, R, F>(&self, items: &[T], f: F) -> Option<Vec<R>>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        if items.len() <= 1 {
+            return None;
+        }
+        let permits = self.acquire(items.len() - 1);
+        if permits.count() == 0 {
+            return None;
+        }
+        Some(run_scoped(items, permits, &f))
+    }
+}
+
+/// Extra-worker permits on loan from an [`Executor`]; returned to the
+/// pool on drop.
+pub struct Permits<'a> {
+    exec: &'a Executor,
+    n: usize,
+}
+
+impl Permits<'_> {
+    pub fn count(&self) -> usize {
+        self.n
+    }
+}
+
+impl Drop for Permits<'_> {
+    fn drop(&mut self) {
+        self.exec.release(self.n);
+    }
+}
+
+/// The scoped work-stealing loop behind [`Executor::map`] /
+/// [`Executor::try_map`]: `permits.count()` spawned workers plus the
+/// calling thread race over an atomic cursor; each item runs under
+/// `catch_unwind` so a panic stops the fan-out early (cooperative
+/// abort flag) and is re-raised on the calling thread with the item
+/// index attached. Permits are released when this returns *or*
+/// unwinds (drop-guard).
+fn run_scoped<T, R, F>(items: &[T], permits: Permits<'_>, f: &F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    type Caught = Box<dyn Any + Send>;
+    let n = items.len();
+    let next = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let work = || {
+        let mut ok: Vec<(usize, R)> = Vec::new();
+        let mut caught: Option<(usize, Caught)> = None;
+        loop {
+            if abort.load(Ordering::Relaxed) {
+                break;
+            }
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            match catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))) {
+                Ok(r) => ok.push((i, r)),
+                Err(payload) => {
+                    abort.store(true, Ordering::Relaxed);
+                    caught = Some((i, payload));
+                    break;
+                }
+            }
+        }
+        (ok, caught)
+    };
+    let mut parts: Vec<(Vec<(usize, R)>, Option<(usize, Caught)>)> =
+        Vec::with_capacity(permits.count() + 1);
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..permits.count())
+            .map(|_| scope.spawn(&work))
+            .collect();
+        parts.push(work());
+        for w in workers {
+            parts.push(w.join().expect("executor worker died outside catch_unwind"));
+        }
+    });
+    drop(permits);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut first_panic: Option<(usize, Caught)> = None;
+    for (ok, caught) in parts {
+        for (i, r) in ok {
+            debug_assert!(slots[i].is_none(), "duplicate parallel map result for {i}");
+            slots[i] = Some(r);
+        }
+        if let Some((i, payload)) = caught {
+            match &first_panic {
+                Some((j, _)) if *j <= i => {}
+                _ => first_panic = Some((i, payload)),
+            }
+        }
+    }
+    if let Some((i, payload)) = first_panic {
+        panic!(
+            "parallel map: worker panicked at item {i}: {}",
+            panic_message(payload.as_ref())
+        );
+    }
+    slots
+        .into_iter()
+        .map(|r| r.expect("missing parallel map result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn map_preserves_order_and_coverage() {
+        let exec = Executor::new(4);
+        let items: Vec<u64> = (0..257).collect();
+        for cap in [0, 1, 2, 7] {
+            let out = exec.map(&items, cap, |i, &x| {
+                assert_eq!(i as u64, x);
+                x * 3 + 1
+            });
+            assert_eq!(out.len(), items.len());
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as u64 * 3 + 1, "cap={cap}");
+            }
+            assert_eq!(exec.available(), 3, "permits leaked at cap={cap}");
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let exec = Executor::new(4);
+        let out: Vec<u32> = exec.map(&[], 0, |_, x: &u32| *x);
+        assert!(out.is_empty());
+        let out = exec.map(&[9u32], 0, |_, x| x + 1);
+        assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn effective_jobs_resolves_auto() {
+        assert!(effective_jobs(0) >= 1);
+        assert_eq!(effective_jobs(3), 3);
+    }
+
+    /// Live threads executing work never exceed the budget, including
+    /// when fan-outs nest on the same executor: the outer map's workers
+    /// consume permits, so inner maps find fewer (or none) and degrade.
+    #[test]
+    fn live_threads_never_exceed_budget() {
+        let exec = Executor::new(3);
+        let live = AtomicUsize::new(0);
+        let high = AtomicUsize::new(0);
+        let outer: Vec<u32> = (0..6).collect();
+        let inner: Vec<u32> = (0..8).collect();
+        let enter = || {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            high.fetch_max(now, Ordering::SeqCst);
+        };
+        let exit = || {
+            live.fetch_sub(1, Ordering::SeqCst);
+        };
+        let sums = exec.map(&outer, 0, |_, &o| {
+            enter();
+            let part = exec.map(&inner, 0, |_, &x| {
+                enter();
+                std::thread::sleep(Duration::from_millis(1));
+                exit();
+                o as u64 * 100 + x as u64
+            });
+            exit();
+            part.iter().sum::<u64>()
+        });
+        // Each worker counts itself once at the outer level and once per
+        // inner item, so the high-water mark counts *stacked* frames on
+        // one thread twice; bound by 2x budget for the nest, and the
+        // inner-only bound (threads actually running f) is the budget.
+        assert!(
+            high.load(Ordering::SeqCst) <= 2 * exec.budget(),
+            "high-water {} exceeds nest bound {}",
+            high.load(Ordering::SeqCst),
+            2 * exec.budget()
+        );
+        for (o, s) in sums.iter().enumerate() {
+            let expect: u64 = (0..8).map(|x| o as u64 * 100 + x).sum();
+            assert_eq!(*s, expect);
+        }
+        assert_eq!(exec.available(), 2, "permits leaked after nested maps");
+    }
+
+    /// The flat (non-nested) thread bound is exact: at most `budget`
+    /// threads ever run `f` concurrently.
+    #[test]
+    fn flat_fanout_respects_budget_exactly() {
+        let exec = Executor::new(3);
+        let live = AtomicUsize::new(0);
+        let high = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..32).collect();
+        exec.map(&items, 0, |_, &x| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            high.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(1));
+            live.fetch_sub(1, Ordering::SeqCst);
+            x
+        });
+        assert!(
+            high.load(Ordering::SeqCst) <= exec.budget(),
+            "high-water {} exceeds budget {}",
+            high.load(Ordering::SeqCst),
+            exec.budget()
+        );
+    }
+
+    #[test]
+    fn budget_one_runs_inline() {
+        let exec = Executor::new(1);
+        assert_eq!(exec.available(), 0);
+        let caller = std::thread::current().id();
+        let items: Vec<u32> = (0..16).collect();
+        let out = exec.map(&items, 0, |_, &x| {
+            assert_eq!(std::thread::current().id(), caller);
+            x + 1
+        });
+        assert_eq!(out.len(), 16);
+    }
+
+    #[test]
+    fn try_map_declines_without_parallelism() {
+        let serial = Executor::new(1);
+        let items: Vec<u32> = (0..4).collect();
+        assert!(serial.try_map(&items, |_, &x| x).is_none());
+        let par = Executor::new(4);
+        assert!(par.try_map(&items[..1], |_, &x| x).is_none());
+        let out = par.try_map(&items, |_, &x| x * 2).expect("permits exist");
+        assert_eq!(out, vec![0, 2, 4, 6]);
+        assert_eq!(par.available(), 3);
+    }
+
+    #[test]
+    fn worker_panic_reraises_with_item_index() {
+        let exec = Executor::new(4);
+        let items: Vec<u32> = (0..64).collect();
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.map(&items, 0, |i, &x| {
+                if i == 5 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        }))
+        .expect_err("must panic");
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("item 5"), "missing index: {msg}");
+        assert!(msg.contains("boom at 5"), "missing payload: {msg}");
+        assert_eq!(exec.available(), 3, "permits leaked after panic");
+    }
+
+    #[test]
+    fn permits_acquire_release_roundtrip() {
+        let exec = Executor::new(4);
+        let p = exec.acquire(2);
+        assert_eq!(p.count(), 2);
+        assert_eq!(exec.available(), 1);
+        let q = exec.acquire(5);
+        assert_eq!(q.count(), 1, "acquire is capped by availability");
+        assert_eq!(exec.available(), 0);
+        let r = exec.acquire(1);
+        assert_eq!(r.count(), 0, "empty pool yields zero, never blocks");
+        drop(q);
+        drop(p);
+        drop(r);
+        assert_eq!(exec.available(), 3);
+    }
+}

@@ -2,6 +2,7 @@
 //! `xla` + `anyhow`): PRNG, statistics, JSON, table rendering, and a
 //! property-testing harness.
 
+pub mod executor;
 pub mod json;
 pub mod ordf64;
 pub mod prop;

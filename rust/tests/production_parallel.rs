@@ -1,0 +1,189 @@
+//! Parity pins for the intra-run parallelism work (DESIGN.md §14): a
+//! production cell — and a sweep cell, and a fitting search — must be
+//! **bit-identical** for any `--jobs` value. Scheduling order may vary
+//! between runs; results may not.
+//!
+//! 1. **Per-app fan-out parity** — `run_production_jobs` and
+//!    `run_production_profiles_jobs` over the full Table-8 roster must
+//!    produce the same `Cell` at jobs 1 (forced-serial reference), 2,
+//!    and 0 (full executor budget).
+//! 2. **Scenario cells too** — a `SweepGrid` cell with a fault pack
+//!    attached replays deterministic per-(seed, kind) fault plans; the
+//!    grid must stay bit-identical across jobs values with the per-app
+//!    level drawing from the same permit pool.
+//! 3. **Fit plan parity** — the lockstep engine (which now runs its
+//!    candidate batches concurrently over per-candidate fresh streams
+//!    when the executor grants permits, and falls back to the shared
+//!    tee otherwise) must still equal the serial gallop+bisect engine
+//!    run-for-run. The plan-vs-plan equivalence itself is pinned by an
+//!    in-crate unit test against private executors
+//!    (`candidate_batch_plans_are_bit_identical`); this asserts the
+//!    user-visible contract end to end.
+
+use spork::config::{PlatformConfig, SchedulerKind, SimConfig, SizeBucket};
+use spork::exp::common::{
+    profile_apps, run_production_jobs, run_production_profiles_jobs,
+};
+use spork::exp::{SweepCell, SweepGrid, WorkloadSpec};
+use spork::scenario::ScenarioConfig;
+use spork::sched::{fpga_dynamic, fpga_static, FitEngine};
+use spork::trace::production::{self, Dataset, ProductionParams};
+use spork::trace::{synthetic_app, AppTrace};
+use spork::util::rng::Rng;
+
+fn production_apps(scale: f64, max_apps: usize, seed: u64) -> Vec<AppTrace> {
+    let params = ProductionParams {
+        dataset: Dataset::AzureFunctions,
+        bucket: SizeBucket::Short,
+        duration: 600.0,
+        scale,
+        max_apps: Some(max_apps),
+    };
+    production::generate(&params, &mut Rng::new(seed))
+}
+
+#[test]
+fn production_cells_bit_identical_for_any_jobs() {
+    let cfg = SimConfig::paper_default();
+    let apps = production_apps(0.2, 3, 11);
+    assert!(!apps.is_empty(), "parity over an empty roster proves nothing");
+    let profiles = profile_apps(apps.clone(), &cfg);
+    for kind in SchedulerKind::table8_roster() {
+        let direct_serial = run_production_jobs(&kind, &cfg, &apps, 1);
+        let profiled_serial = run_production_profiles_jobs(&kind, &cfg, &profiles, 1);
+        for jobs in [2usize, 0] {
+            assert_eq!(
+                run_production_jobs(&kind, &cfg, &apps, jobs),
+                direct_serial,
+                "{}: per-app path diverged at jobs={jobs}",
+                kind.name()
+            );
+            assert_eq!(
+                run_production_profiles_jobs(&kind, &cfg, &profiles, jobs),
+                profiled_serial,
+                "{}: profile path diverged at jobs={jobs}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn scenario_sweep_cell_bit_identical_for_any_jobs() {
+    // Fault plans are synthesized per (cell, seed) from pure RNG streams,
+    // so a scenario cell has the same any-jobs contract as a fault-free
+    // one — worth pinning separately because the scenario path routes
+    // through `run_scheduler_scenario`'s re-dispatch machinery.
+    let cfg = SimConfig::paper_default();
+    let cell = |kind: SchedulerKind, scenario: Option<ScenarioConfig>| SweepCell {
+        scheduler: kind,
+        cfg: cfg.clone(),
+        workload: WorkloadSpec {
+            burstiness: 0.65,
+            rate: 150.0,
+            size: 0.010,
+            duration: 180.0,
+        },
+        seed_base: 41,
+        scenario,
+    };
+    let cells = vec![
+        cell(SchedulerKind::spork_e(), Some(ScenarioConfig::mild())),
+        cell(SchedulerKind::spork_e(), Some(ScenarioConfig::severe())),
+        cell(SchedulerKind::FpgaDynamic, None),
+    ];
+    let run_at = |jobs: usize| {
+        let mut grid = SweepGrid::with(2, jobs);
+        for c in &cells {
+            grid.push(c.clone());
+        }
+        grid.run()
+    };
+    let reference = run_at(1);
+    assert!(
+        reference
+            .iter()
+            .take(2)
+            .any(|c| c.preemptions + c.worker_failures > 0.0),
+        "adverse packs injected nothing — the scenario leg of this parity \
+         test would be vacuous"
+    );
+    for jobs in [2usize, 0] {
+        assert_eq!(
+            run_at(jobs),
+            reference,
+            "scenario sweep diverged from serial at jobs={jobs}"
+        );
+    }
+}
+
+#[test]
+fn lockstep_parallel_fit_equals_serial_engine_end_to_end() {
+    // Run under the real global executor (whatever budget the test host
+    // grants — possibly contended by other tests, possibly serial): the
+    // lockstep engine must land on the same fitted value and the same
+    // bit-identical winning run as the serial engine either way. That
+    // "either way" is the point — which plan executed must be
+    // unobservable in the results.
+    let cfg = SimConfig::paper_default();
+    let defaults = PlatformConfig::paper_default();
+    let mut rng = Rng::new(27);
+    let trace = synthetic_app("pp", &mut rng, 0.68, 240.0, 220.0, 0.010);
+    for tol in [0.005, 0.02] {
+        let (sr, sk, _) = fpga_dynamic::fit_source_stats_with(
+            FitEngine::Serial,
+            &|| Box::new(trace.source()),
+            &cfg,
+            &defaults,
+            tol,
+        );
+        let (lr, lk, _) = fpga_dynamic::fit_source_stats_with(
+            FitEngine::Lockstep,
+            &|| Box::new(trace.source()),
+            &cfg,
+            &defaults,
+            tol,
+        );
+        assert_eq!(sk, lk, "tol {tol}: dynamic fitted k diverged");
+        assert_eq!(sr.metrics.requests, lr.metrics.requests);
+        assert_eq!(sr.metrics.deadline_misses, lr.metrics.deadline_misses);
+        assert_eq!(
+            sr.metrics.total_energy().to_bits(),
+            lr.metrics.total_energy().to_bits(),
+            "tol {tol}: dynamic energy diverged"
+        );
+        assert_eq!(
+            sr.metrics.total_cost().to_bits(),
+            lr.metrics.total_cost().to_bits(),
+            "tol {tol}: dynamic cost diverged"
+        );
+
+        let (sr, sfleet, _) = fpga_static::fit_source_stats_with(
+            FitEngine::Serial,
+            &|| Box::new(trace.source()),
+            &cfg,
+            &defaults,
+            tol,
+        );
+        let (lr, lfleet, _) = fpga_static::fit_source_stats_with(
+            FitEngine::Lockstep,
+            &|| Box::new(trace.source()),
+            &cfg,
+            &defaults,
+            tol,
+        );
+        assert_eq!(sfleet, lfleet, "tol {tol}: static fitted fleet diverged");
+        assert_eq!(sr.metrics.requests, lr.metrics.requests);
+        assert_eq!(sr.metrics.deadline_misses, lr.metrics.deadline_misses);
+        assert_eq!(
+            sr.metrics.total_energy().to_bits(),
+            lr.metrics.total_energy().to_bits(),
+            "tol {tol}: static energy diverged"
+        );
+        assert_eq!(
+            sr.metrics.total_cost().to_bits(),
+            lr.metrics.total_cost().to_bits(),
+            "tol {tol}: static cost diverged"
+        );
+    }
+}
