@@ -8,6 +8,20 @@ pub use workers::{PlatformConfig, WorkerKind, WorkerParams};
 
 use crate::util::json::Json;
 
+/// The one retry budget every layer shares: max re-dispatches per request
+/// after its worker is preempted or fails. The scenario packs embed it
+/// (`ScenarioConfig::retry_budget`), the sim driver enforces it in
+/// `apply_fault`, and serve recovery derives its deadline-aware retry
+/// window from the *same* attached pack — centralizing the constant here
+/// is what keeps sim re-dispatch and serve recovery from drifting.
+pub const DEFAULT_RETRY_BUDGET: u32 = 3;
+
+/// Sanity cap for `ScenarioConfig::retry_budget` (validated in
+/// `ScenarioConfig::validate`): budgets beyond this are configuration
+/// errors, not resilience — each retry re-enters the dispatch path, so an
+/// unbounded budget can amplify a single fault into a dispatch storm.
+pub const MAX_RETRY_BUDGET: u32 = 64;
+
 /// Which scheduler to run — §5.1 "Baselines" plus the Spork variants.
 #[derive(Clone, Debug, PartialEq)]
 pub enum SchedulerKind {

@@ -19,11 +19,23 @@
 //! — each run regenerates its sources from scratch, so points at
 //! different time scales serve bit-identical workloads and any request
 //! count disagreement across scales is a pacing bug, not noise.
+//!
+//! `--chaos <pack>` adds the resilience axis: one extra replay of the
+//! named fault pack (DESIGN.md §15) at the highest compression, reported
+//! to `BENCH_serve_chaos.json` with the plan digest and planned/applied
+//! fault counts. Its tripwires are the extended conservation law
+//! (`requests == completions + shed + abandoned`, always), non-vacuity
+//! (an adverse pack must actually kill workers and force retries),
+//! `--assert-recovered F` (fraction of retried requests rescued to an
+//! on-time completion), and `--assert-no-hang S` (the run, including
+//! shutdown drain past wedged workers, finishes within `S` wall seconds).
 
 use crate::cli::Args;
 use crate::config::{SchedulerKind, SizeBucket};
 use crate::exp::benchsim::peak_rss_kb;
-use crate::serve::{derive_pools, run_serve_sharded, AppFactory, AppServe, Compute, ServeConfig};
+use crate::serve::{
+    derive_pools, run_serve_sharded, AppFactory, AppServe, ChaosSpec, Compute, ServeConfig,
+};
 use crate::trace::production::{app_sources, Dataset, ProductionParams};
 use crate::trace::AppTrace;
 use crate::util::rng::Rng;
@@ -191,6 +203,223 @@ impl BenchServeReport {
     }
 }
 
+/// The chaos-axis report (`--chaos <pack>`), written to
+/// `BENCH_serve_chaos.json`: one fault pack replayed through the sharded
+/// paced router at the bench's highest compression, with the fault plan's
+/// digest and both *planned* and *applied* counts — everything
+/// `tools/scenario_oracle.py verify-serve` needs to rebuild the per-app
+/// plans from scratch and audit that the run replayed exactly them.
+#[derive(Clone, Debug)]
+pub struct ChaosBenchReport {
+    pub pack: String,
+    /// Whether the pack can fault at all (false only for `fault-free`);
+    /// gates the non-vacuity checks in [`Self::verify`].
+    pub adverse: bool,
+    pub seed_base: u64,
+    pub seed: u64,
+    pub apps: usize,
+    pub shards: usize,
+    pub time_scale: f64,
+    pub sim_seconds: f64,
+    /// Merged plan digest: per-app digests folded in app-index order.
+    pub digest: u64,
+    pub planned_price_ticks: u64,
+    pub planned_preemptions: u64,
+    pub planned_failures: u64,
+    /// Faults that actually struck a live worker (≤ planned).
+    pub preemptions: u64,
+    pub worker_failures: u64,
+    pub requests: u64,
+    pub completions: u64,
+    pub shed: u64,
+    pub abandoned: u64,
+    pub retries: u64,
+    pub hedges: u64,
+    pub hedge_wins: u64,
+    pub quarantines: u64,
+    pub recovered_deadline_hits: u64,
+    pub misses: u64,
+    pub wall_seconds: f64,
+}
+
+impl ChaosBenchReport {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"pack\": \"{}\",\n  \"adverse\": {},\n  \"seed_base\": {},\n  \
+             \"seed\": {},\n  \"apps\": {},\n  \"shards\": {},\n  \
+             \"time_scale\": {},\n  \"sim_seconds\": {},\n  \
+             \"plan_digest\": \"{:016x}\",\n  \"planned_price_ticks\": {},\n  \
+             \"planned_preemptions\": {},\n  \"planned_failures\": {},\n  \
+             \"preemptions\": {},\n  \"worker_failures\": {},\n  \
+             \"requests\": {},\n  \"completions\": {},\n  \"shed\": {},\n  \
+             \"abandoned\": {},\n  \"retries\": {},\n  \"hedges\": {},\n  \
+             \"hedge_wins\": {},\n  \"quarantines\": {},\n  \
+             \"recovered_deadline_hits\": {},\n  \"misses\": {},\n  \
+             \"wall_seconds\": {:.3}\n}}\n",
+            self.pack,
+            self.adverse,
+            self.seed_base,
+            self.seed,
+            self.apps,
+            self.shards,
+            self.time_scale,
+            self.sim_seconds,
+            self.digest,
+            self.planned_price_ticks,
+            self.planned_preemptions,
+            self.planned_failures,
+            self.preemptions,
+            self.worker_failures,
+            self.requests,
+            self.completions,
+            self.shed,
+            self.abandoned,
+            self.retries,
+            self.hedges,
+            self.hedge_wins,
+            self.quarantines,
+            self.recovered_deadline_hits,
+            self.misses,
+            self.wall_seconds,
+        )
+    }
+
+    /// The resilience tripwire proper. Always enforced: the extended
+    /// conservation law `requests == completions + shed + abandoned`
+    /// (retries re-dispatch an already-admitted request and must never
+    /// mint a new one) and `hedge_wins <= hedges`. For an adverse pack it
+    /// is additionally *non-vacuous*: the plan must contain faults, at
+    /// least one must have struck a live worker, and at least one retry
+    /// must have been exercised — a chaos run that never hurt anything
+    /// proves nothing about recovery.
+    pub fn verify(&self) -> Result<(), String> {
+        let accounted = self.completions + self.shed + self.abandoned;
+        if self.requests != accounted {
+            return Err(format!(
+                "conservation violated: {} requests != {} completions + {} shed \
+                 + {} abandoned ({} accounted)",
+                self.requests, self.completions, self.shed, self.abandoned, accounted
+            ));
+        }
+        if self.hedge_wins > self.hedges {
+            return Err(format!(
+                "hedge accounting violated: {} wins > {} hedges",
+                self.hedge_wins, self.hedges
+            ));
+        }
+        if self.adverse {
+            if self.planned_preemptions + self.planned_failures == 0 {
+                return Err(format!(
+                    "chaos tripwire is vacuous: pack '{}' planned zero \
+                     kills over {} sim-s — lengthen the window",
+                    self.pack, self.sim_seconds
+                ));
+            }
+            if self.preemptions + self.worker_failures == 0 {
+                return Err(format!(
+                    "chaos tripwire is vacuous: {} kills were planned but \
+                     none struck a live worker — the workload never keeps \
+                     workers busy; retune it",
+                    self.planned_preemptions + self.planned_failures
+                ));
+            }
+            if self.retries == 0 {
+                return Err(
+                    "chaos tripwire is vacuous: faults struck but no retry was \
+                     exercised — kills never caught a request in flight"
+                        .into(),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// `--assert-recovered F`: of the re-dispatches the fault plan forced,
+    /// at least fraction `F` must have still completed on time
+    /// (`recovered_deadline_hits` also counts hedge rescues, so the ratio
+    /// can exceed 1). Vacuity-guarded: zero retries demonstrates nothing.
+    pub fn assert_recovered(&self, min_fraction: f64) -> Result<(), String> {
+        if self.retries == 0 {
+            return Err(
+                "recovery tripwire is vacuous: the run exercised zero retries; \
+                 use an adverse pack / longer window"
+                    .into(),
+            );
+        }
+        let ratio = self.recovered_deadline_hits as f64 / self.retries as f64;
+        if ratio < min_fraction {
+            return Err(format!(
+                "recovery regression: only {} of {} retried requests were \
+                 rescued to an on-time completion ({:.2} < floor {:.2})",
+                self.recovered_deadline_hits, self.retries, ratio, min_fraction
+            ));
+        }
+        Ok(())
+    }
+
+    /// `--assert-no-hang S`: the whole chaos run — including shutdown
+    /// drain past killed/stalled workers — must finish within `S` wall
+    /// seconds. This is the liveness half of the resilience contract: a
+    /// wedged worker may cost dropped completions, never a hung router.
+    pub fn assert_no_hang(&self, max_wall: f64) -> Result<(), String> {
+        if self.requests == 0 {
+            return Err("no-hang tripwire is vacuous: the run served nothing".into());
+        }
+        if self.wall_seconds > max_wall {
+            return Err(format!(
+                "liveness regression: the chaos run took {:.3} wall-s \
+                 (cap {max_wall}s) — shutdown is no longer grace-bounded",
+                self.wall_seconds
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Run the chaos axis: one sharded paced replay of `pack` at the bench's
+/// highest time-scale compression (the most hostile pacing regime).
+pub fn run_bench_serve_chaos(
+    spec: &BenchServeSpec,
+    pack: &str,
+) -> anyhow::Result<ChaosBenchReport> {
+    let scale = spec.scales.iter().copied().fold(1.0f64, f64::max);
+    let mut cfg = ServeConfig::defaults("unused-artifacts", scale);
+    cfg.queue_cap = spec.queue_cap;
+    let chaos = ChaosSpec::from_name(pack, spec.seed, 0).ok_or_else(|| {
+        anyhow::anyhow!("unknown chaos pack '{pack}' (fault-free|mild|severe)")
+    })?;
+    let adverse = chaos.scenario.is_adverse();
+    cfg.chaos = Some(chaos);
+    let report = run_serve_sharded(&cfg, app_factories(spec), spec.shards, Compute::Paced)?;
+    Ok(ChaosBenchReport {
+        pack: report.chaos.pack.clone(),
+        adverse,
+        seed_base: report.chaos.seed_base,
+        seed: report.chaos.seed,
+        apps: spec.apps,
+        shards: spec.shards,
+        time_scale: scale,
+        sim_seconds: spec.duration,
+        digest: report.chaos.digest,
+        planned_price_ticks: report.chaos.price_ticks,
+        planned_preemptions: report.chaos.preemptions,
+        planned_failures: report.chaos.failures,
+        preemptions: report.preemptions,
+        worker_failures: report.worker_failures,
+        requests: report.requests,
+        completions: report.completions,
+        shed: report.shed,
+        abandoned: report.abandoned,
+        retries: report.retries,
+        hedges: report.hedges,
+        hedge_wins: report.hedge_wins,
+        quarantines: report.quarantines,
+        recovered_deadline_hits: report.recovered_deadline_hits,
+        misses: report.misses,
+        wall_seconds: report.wall_seconds,
+    })
+}
+
 /// Build the per-app factories for one run. Each factory regenerates the
 /// app population from `(params, seed)` and takes its own app — sources
 /// are not `Send` or `Clone`, and regeneration is cheap (rate grids
@@ -320,6 +549,28 @@ pub fn cmd_bench_serve(args: &Args) -> Result<(), String> {
         ),
         None => None,
     };
+    let chaos_pack = args.get("chaos").cloned();
+    let chaos_out = args.str_or("chaos-out", "BENCH_serve_chaos.json");
+    let assert_recovered = match args.get("assert-recovered") {
+        Some(v) => Some(v.parse::<f64>().map_err(|_| {
+            format!("--assert-recovered: invalid recovered fraction '{v}'")
+        })?),
+        None => None,
+    };
+    let assert_no_hang = match args.get("assert-no-hang") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| format!("--assert-no-hang: invalid wall cap '{v}'"))?,
+        ),
+        None => None,
+    };
+    if chaos_pack.is_none() && (assert_recovered.is_some() || assert_no_hang.is_some()) {
+        return Err(
+            "--assert-recovered/--assert-no-hang gate the chaos axis; pass \
+             --chaos <pack> to run it"
+                .into(),
+        );
+    }
 
     let spec = BenchServeSpec {
         dataset,
@@ -374,6 +625,49 @@ pub fn cmd_bench_serve(args: &Args) -> Result<(), String> {
              (queue cap {} armed)",
             report.queue_cap
         );
+    }
+    if let Some(pack) = chaos_pack {
+        eprintln!(
+            "chaos axis: replaying the '{pack}' pack at {}x...",
+            spec.scales.iter().copied().fold(1.0f64, f64::max)
+        );
+        let c = run_bench_serve_chaos(&spec, &pack).map_err(|e| e.to_string())?;
+        let cj = c.to_json();
+        std::fs::write(&chaos_out, &cj).map_err(|e| format!("writing {chaos_out}: {e}"))?;
+        println!(
+            "  chaos '{}' (plan {:016x}): {} requests = {} completed + {} shed \
+             + {} abandoned; {}/{} kills applied, {} retries, {} hedges \
+             ({} won), {} quarantines, {} recovered hits in {:.2} wall-s",
+            c.pack,
+            c.digest,
+            c.requests,
+            c.completions,
+            c.shed,
+            c.abandoned,
+            c.preemptions + c.worker_failures,
+            c.planned_preemptions + c.planned_failures,
+            c.retries,
+            c.hedges,
+            c.hedge_wins,
+            c.quarantines,
+            c.recovered_deadline_hits,
+            c.wall_seconds,
+        );
+        println!("-> {chaos_out}");
+        c.verify()?;
+        if c.adverse {
+            println!("  chaos tripwire: conservation holds and the pack bit");
+        } else {
+            println!("  chaos tripwire: conservation holds (parity pack, nothing planned)");
+        }
+        if let Some(f) = assert_recovered {
+            c.assert_recovered(f)?;
+            println!("  recovery tripwire: >= {f} of retried requests rescued on time");
+        }
+        if let Some(s) = assert_no_hang {
+            c.assert_no_hang(s)?;
+            println!("  liveness tripwire: chaos run finished within {s} wall-s");
+        }
     }
     Ok(())
 }
@@ -441,6 +735,46 @@ mod tests {
         };
         assert!(empty.assert_max_lag(1.0).is_err());
         assert!(empty.assert_shed_fraction(0.5).is_err());
+    }
+
+    #[test]
+    fn chaos_axis_conserves_and_serializes() {
+        // A long severe window with enough demand that kills catch
+        // requests in flight: the non-vacuity checks in `verify` must
+        // pass, not just conservation.
+        let mut spec = tiny_spec(vec![20000.0], 256);
+        spec.duration = 600.0;
+        spec.demand_scale = 0.1;
+        let c = run_bench_serve_chaos(&spec, "severe").unwrap();
+        assert!(c.adverse);
+        assert!(c.requests > 0);
+        c.verify().expect("severe chaos must be non-vacuous and conserve");
+        assert!(c.digest != 0, "an adverse plan cannot hash to the empty digest");
+        assert!(c.hedge_wins <= c.hedges);
+        let j = c.to_json();
+        assert!(j.contains("\"plan_digest\""));
+        assert!(crate::util::json::Json::parse(&j).is_ok(), "chaos JSON must parse");
+        // Determinism: the chaos point is a pure function of the spec.
+        let again = run_bench_serve_chaos(&spec, "severe").unwrap();
+        assert_eq!(c.digest, again.digest);
+        assert_eq!(c.requests, again.requests);
+        assert_eq!(c.retries, again.retries);
+        assert_eq!(c.abandoned, again.abandoned);
+    }
+
+    #[test]
+    fn fault_free_chaos_axis_is_quiet_and_vacuity_guarded() {
+        let c = run_bench_serve_chaos(&tiny_spec(vec![5000.0], 256), "fault-free").unwrap();
+        assert!(!c.adverse);
+        assert_eq!(c.digest, 0, "the parity pack plans nothing");
+        assert_eq!(c.preemptions + c.worker_failures, 0);
+        assert_eq!(c.retries, 0);
+        c.verify().expect("conservation must hold without faults too");
+        // Asserting recovery with zero retries would be a vacuous pass.
+        assert!(c.assert_recovered(0.1).unwrap_err().contains("vacuous"));
+        assert!(c.assert_no_hang(1e6).is_ok());
+        assert!(c.assert_no_hang(0.0).is_err(), "no run beats a zero wall cap");
+        assert!(run_bench_serve_chaos(&tiny_spec(vec![1000.0], 256), "bogus").is_err());
     }
 
     #[test]

@@ -13,7 +13,8 @@ pub mod sensitivity;
 pub mod sweep;
 
 pub use benchserve::{
-    cmd_bench_serve, run_bench_serve, BenchServePoint, BenchServeReport, BenchServeSpec,
+    cmd_bench_serve, run_bench_serve, run_bench_serve_chaos, BenchServePoint, BenchServeReport,
+    BenchServeSpec, ChaosBenchReport,
 };
 pub use benchsim::{
     cmd_bench_sim, run_bench_sim, run_bench_sim_scenario, run_fit_bench, run_par_apps_bench,

@@ -113,6 +113,10 @@ fn specs() -> Vec<Spec> {
                 ("out", true, "output JSON path (default BENCH_serve.json)"),
                 ("assert-max-lag", true, "max wall-seconds of replay lag at any point (CI tripwire)"),
                 ("assert-shed", true, "max shed fraction at any point; requires an armed --queue-cap (CI tripwire)"),
+                ("chaos", true, "also replay a fault pack at the highest scale: fault-free|mild|severe"),
+                ("chaos-out", true, "chaos axis output JSON (default BENCH_serve_chaos.json)"),
+                ("assert-recovered", true, "min fraction of retried requests rescued on time; requires --chaos (CI tripwire)"),
+                ("assert-no-hang", true, "max wall-seconds for the whole chaos run; requires --chaos (CI tripwire)"),
             ],
         },
         Spec {
@@ -128,6 +132,7 @@ fn specs() -> Vec<Spec> {
                 ("pool-cpus", true, "warm CPU pool size (default 0 = derive from trace demand)"),
                 ("pool-fpgas", true, "warm FPGA pool size (default 0 = derive from trace demand)"),
                 ("queue-cap", true, "shed arrivals past this many in-flight requests, 0 = unbounded (default 0)"),
+                ("chaos", true, "replay a fault pack against the serving run: fault-free|mild|severe"),
                 ("seed", true, "rng seed (default 1)"),
                 ("dry-run", false, "stub compute: no artifacts, no pacing; model accounting only"),
             ],

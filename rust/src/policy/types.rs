@@ -23,7 +23,7 @@ pub enum WorkerState {
 
 /// One request moving through the system. Sizes are known in advance
 /// (paper §4.5); `deadline` is absolute.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Request {
     pub arrival: f64,
     /// Service time on a CPU worker, seconds.
@@ -84,8 +84,11 @@ pub enum Observation {
     /// A request arrived and must be dispatched by the returned actions
     /// (possibly to a fresh worker — Alg 3 line 6).
     Arrival { req: Request },
-    /// A request finished on `worker`.
-    Completion { worker: WorkerId },
+    /// A request finished on `worker`. `req` is the completed request as
+    /// dispatched (hedge duplicates carry `attempt` one above the copy they
+    /// shadow), so recovery layers can keep exact liveness maps without
+    /// mirroring every per-worker FIFO.
+    Completion { worker: WorkerId, req: Request },
     /// A worker finished spinning up and became available.
     WorkerReady { worker: WorkerId },
     /// `worker` sat idle for a full timeout window. Return
@@ -115,6 +118,20 @@ pub enum Observation {
     /// (a multiplier on the kind's on-demand cost rate). Also readable any
     /// time via [`super::PolicyView::spot_price`].
     PriceTick { kind: WorkerKind, price: f64 },
+    /// A deferred retry matured ([`Action::Defer`]): the request is back in
+    /// the policy's hands and must now be dispatched or abandoned. Emitted
+    /// only for requests a policy explicitly deferred — the fault-free
+    /// path never sees it.
+    RetryDue { req: Request },
+    /// A policy-scheduled timer fired ([`Action::Timer`]). The driver
+    /// attaches no meaning to `token`; recovery layers use it to anchor
+    /// hedge checks and breaker probes. Never emitted unless requested.
+    Timer { token: u64 },
+    /// The driver dropped `req` for good (retry budget or deadline
+    /// exhausted after a kill, or an explicit [`Action::Abandon`]): it was
+    /// counted as an abandoned deadline miss and will produce no
+    /// completion. Lets decorators retire their bookkeeping for it.
+    Abandoned { req: Request },
 }
 
 /// Where a dispatch should land.
@@ -161,6 +178,31 @@ pub enum Action {
     /// `requests == completions + abandoned + shed`. Only meaningful in
     /// response to [`Observation::Arrival`] for that same request.
     Shed { req: Request },
+    /// Hold `req` until `until`, then hand it back as
+    /// [`Observation::RetryDue`]. The backbone of capped-exponential-
+    /// backoff retries: the request sits in the event heap (so the run
+    /// cannot drain it away) and is not dispatched in the meantime.
+    Defer { req: Request, until: f64 },
+    /// Fire [`Observation::Timer`] with `token` at time `at`. Pure
+    /// scheduling — no pool or metrics side effects.
+    Timer { at: f64, token: u64 },
+    /// Hedge a straggling dispatch: if `req` (matched bit-for-bit on
+    /// arrival/size/deadline/attempt) is still in flight on some worker,
+    /// dispatch a duplicate to `to`; first completion wins and books the
+    /// request, the loser's completion only frees its worker (its energy
+    /// stays billed — the duplicate really executed). No-op if the request
+    /// already completed or is already hedged.
+    Hedge { req: Request, to: Target },
+    /// Give up on `req` now: counted as an abandoned deadline miss
+    /// (`Metrics::abandoned`), keeping
+    /// `requests == completions + abandoned + shed` exact. For retries
+    /// whose remaining deadline can't cover `svc + backoff`.
+    Abandon { req: Request },
+    /// Record that a recovery layer quarantined `worker` (circuit breaker
+    /// opened): counts `Metrics::quarantines` and emits
+    /// [`Effect::Quarantined`]. Routing around the worker is the policy's
+    /// job — the driver only makes the decision auditable.
+    Quarantine { worker: WorkerId },
 }
 
 /// A resolved side effect a driver applied — the audit stream both drivers
@@ -204,5 +246,23 @@ pub enum Effect {
         size: f64,
         deadline: f64,
         attempt: u32,
+    },
+    /// A request completed on `worker` (model clock): the winning copy of a
+    /// hedged pair, or the sole copy of an unhedged dispatch. The losing
+    /// copy of a settled hedge emits nothing — exactly one `Completed` per
+    /// completed request, so completion-time accounting (latency under
+    /// stubbed compute) can never double-book.
+    Completed {
+        worker: WorkerId,
+        kind: WorkerKind,
+        arrival: f64,
+        finish: f64,
+    },
+    /// A recovery layer opened a circuit breaker on `worker`
+    /// ([`Action::Quarantine`]). The worker stays in the pool; dispatches
+    /// are routed around it until the breaker's cool-down probe succeeds.
+    Quarantined {
+        worker: WorkerId,
+        kind: WorkerKind,
     },
 }

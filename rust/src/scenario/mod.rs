@@ -26,10 +26,10 @@
 mod plan;
 mod price;
 
-pub use plan::{Fault, FaultPlan, PlannedFault};
+pub use plan::{Fault, FaultCounts, FaultPlan, PlannedFault};
 pub use price::OuParams;
 
-use crate::config::WorkerKind;
+use crate::config::{WorkerKind, DEFAULT_RETRY_BUDGET};
 
 /// Scenario knobs for one worker kind.
 #[derive(Clone, Debug, PartialEq)]
@@ -86,7 +86,7 @@ impl ScenarioConfig {
         ScenarioConfig {
             name: "fault-free".into(),
             kinds: [KindScenario::benign(), KindScenario::benign()],
-            retry_budget: 3,
+            retry_budget: DEFAULT_RETRY_BUDGET,
             price_dt: 1.0,
             seed_salt: 0,
         }
@@ -112,7 +112,7 @@ impl ScenarioConfig {
         ScenarioConfig {
             name: "mild".into(),
             kinds: [KindScenario::benign(), fpga],
-            retry_budget: 3,
+            retry_budget: DEFAULT_RETRY_BUDGET,
             price_dt: 1.0,
             seed_salt: 0,
         }
@@ -141,7 +141,7 @@ impl ScenarioConfig {
         ScenarioConfig {
             name: "severe".into(),
             kinds: [cpu, fpga],
-            retry_budget: 3,
+            retry_budget: DEFAULT_RETRY_BUDGET,
             price_dt: 1.0,
             seed_salt: 0,
         }
@@ -174,6 +174,78 @@ impl ScenarioConfig {
     pub fn kind(&self, kind: WorkerKind) -> &KindScenario {
         &self.kinds[kind.index()]
     }
+
+    /// Validate the pack before a plan is built or a retry budget is
+    /// shared with the serve recovery layer: every rate finite and ≥ 0,
+    /// the price step strictly positive, and the retry budget within
+    /// [`crate::config::MAX_RETRY_BUDGET`] — the single check both the
+    /// sim's re-dispatch path and serve recovery sit behind, so the two
+    /// can never drift on how many attempts a request gets.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.retry_budget > crate::config::MAX_RETRY_BUDGET {
+            return Err(format!(
+                "scenario '{}': retry_budget {} exceeds the sanity cap {}",
+                self.name,
+                self.retry_budget,
+                crate::config::MAX_RETRY_BUDGET
+            ));
+        }
+        if !(self.price_dt.is_finite() && self.price_dt > 0.0) {
+            return Err(format!(
+                "scenario '{}': price_dt must be finite and > 0 (got {})",
+                self.name, self.price_dt
+            ));
+        }
+        for (i, k) in self.kinds.iter().enumerate() {
+            let kind = if i == 0 { "cpu" } else { "fpga" };
+            if !(k.preempt_rate.is_finite() && k.preempt_rate >= 0.0) {
+                return Err(format!(
+                    "scenario '{}' ({kind}): preempt_rate must be finite and >= 0 (got {})",
+                    self.name, k.preempt_rate
+                ));
+            }
+            if !k.hazard_gamma.is_finite() {
+                return Err(format!(
+                    "scenario '{}' ({kind}): hazard_gamma must be finite (got {})",
+                    self.name, k.hazard_gamma
+                ));
+            }
+            // INFINITY disables the failure process; NaN and non-positive
+            // values are configuration errors.
+            if k.mttf.is_nan() || k.mttf <= 0.0 {
+                return Err(format!(
+                    "scenario '{}' ({kind}): mttf must be > 0 (INFINITY disables; got {})",
+                    self.name, k.mttf
+                ));
+            }
+            if k.spot {
+                let p = &k.price;
+                for (name, v) in [
+                    ("mu", p.mu),
+                    ("theta", p.theta),
+                    ("sigma", p.sigma),
+                    ("daily_amp", p.daily_amp),
+                    ("period", p.period),
+                    ("floor", p.floor),
+                    ("init", p.init),
+                ] {
+                    if !v.is_finite() {
+                        return Err(format!(
+                            "scenario '{}' ({kind}): price.{name} must be finite (got {v})",
+                            self.name
+                        ));
+                    }
+                }
+                if p.floor <= 0.0 {
+                    return Err(format!(
+                        "scenario '{}' ({kind}): price.floor must be > 0 (got {})",
+                        self.name, p.floor
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -198,5 +270,36 @@ mod tests {
         assert!(!ScenarioConfig::fault_free().is_adverse());
         assert!(ScenarioConfig::mild().is_adverse());
         assert!(ScenarioConfig::severe().is_adverse());
+    }
+
+    #[test]
+    fn builtin_packs_validate_and_share_one_retry_budget() {
+        for pack in ScenarioConfig::packs() {
+            pack.validate().expect("built-in pack must validate");
+            assert_eq!(pack.retry_budget, crate::config::DEFAULT_RETRY_BUDGET);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut s = ScenarioConfig::severe();
+        s.retry_budget = crate::config::MAX_RETRY_BUDGET + 1;
+        assert!(s.validate().is_err());
+
+        let mut s = ScenarioConfig::severe();
+        s.price_dt = 0.0;
+        assert!(s.validate().is_err());
+
+        let mut s = ScenarioConfig::severe();
+        s.kinds[0].mttf = f64::NAN;
+        assert!(s.validate().is_err());
+
+        let mut s = ScenarioConfig::severe();
+        s.kinds[1].preempt_rate = -1.0;
+        assert!(s.validate().is_err());
+
+        let mut s = ScenarioConfig::severe();
+        s.kinds[1].price.floor = 0.0;
+        assert!(s.validate().is_err());
     }
 }

@@ -18,6 +18,12 @@
 //! [`Observation::Preempted`] and re-offered arrivals with `attempt > 0`
 //! — so scenario comparisons measure routing decisions, not privileged
 //! information.
+//!
+//! None of these policies bound retries themselves: how many attempts a
+//! request gets is the attached pack's `ScenarioConfig::retry_budget`
+//! (default [`crate::config::DEFAULT_RETRY_BUDGET`], validated against
+//! [`crate::config::MAX_RETRY_BUDGET`]), enforced by the sim driver's
+//! kill path and mirrored by serve recovery — one budget, one source.
 
 use super::breakeven::Objective;
 use super::dispatch::Dispatcher;

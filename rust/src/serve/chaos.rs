@@ -1,0 +1,156 @@
+//! Wall-clock chaos injection for the serve path.
+//!
+//! A [`ChaosSpec`] attaches a deterministic scenario pack (PR 7's
+//! [`FaultPlan`] machinery, unchanged: same `(config, seed_base, seed,
+//! duration)` ⇒ same plan, same digest) to a serving run. The replay
+//! contract is the pacing loop itself: the plan's strikes and price ticks
+//! enter the shared driver's event heap exactly as in the simulator, and
+//! because the router paces *every* model occurrence against the wall
+//! clock, each fault fires at its scaled wall time — `t_wall = t_sim /
+//! time_scale` from the run epoch. Under [`super::Compute::Real`] the
+//! model's `Killed` effect parks the bound physical worker thread (the
+//! existing kill-mirroring path), so a planned preemption really does
+//! yank a running thread out from under its queue at a paced wall
+//! instant.
+//!
+//! On top of the model-side plan, a spec can arm *wall-side* exec
+//! injection for real compute: each applied hardware-failure strike also
+//! sends one surviving bound slot a [`super::worker::WorkerMsg::Inject`],
+//! stalling its next batch by `stall_wall` seconds (a slowdown the exec-
+//! overrun accounting observes) and optionally dropping the batch's
+//! completion records (the shutdown drain's `recv_timeout` and the
+//! `completions_dropped` counter make the loss visible instead of
+//! hanging). Model accounting is authoritative either way — wall
+//! injection perturbs measurements, never the decision loop, so the
+//! sim-vs-serve parity contract survives chaos.
+//!
+//! Determinism: the model-side replay is a pure function of the spec
+//! (plan determinism) and the policy (shared driver). A fault-free pack
+//! builds an empty plan, and an attached-but-empty plan is bit-identical
+//! to no attachment at all (pinned by `rust/tests/serve_chaos.rs`).
+
+use crate::scenario::{FaultPlan, ScenarioConfig};
+
+/// A chaos pack bound to seeds: everything needed to rebuild the exact
+/// fault plan of a serving run (and for `tools/scenario_oracle.py` to
+/// recompute its digest from scratch).
+#[derive(Clone, Debug)]
+pub struct ChaosSpec {
+    /// The scenario pack replayed against the serve driver. Its
+    /// `retry_budget` is the same field the sim's kill path enforces, and
+    /// serve recovery derives its retry window from it — one budget.
+    pub scenario: ScenarioConfig,
+    pub seed_base: u64,
+    pub seed: u64,
+    /// Wall-side stall injected into one surviving worker's next batch per
+    /// applied failure strike, wall seconds. 0 disables (model-side chaos
+    /// only). Only meaningful under real compute.
+    pub stall_wall: f64,
+    /// Whether wall-side injection also drops the stalled batch's
+    /// completion records (simulating a worker that wedges without
+    /// reporting). Only meaningful under real compute with
+    /// `stall_wall > 0`.
+    pub drop_completions: bool,
+}
+
+impl ChaosSpec {
+    /// A pack by name (`fault-free`/`none`, `mild`, `severe`) with
+    /// model-side injection only.
+    pub fn from_name(pack: &str, seed_base: u64, seed: u64) -> Option<Self> {
+        ScenarioConfig::from_name(pack).map(|scenario| ChaosSpec {
+            scenario,
+            seed_base,
+            seed,
+            stall_wall: 0.0,
+            drop_completions: false,
+        })
+    }
+
+    /// Validate the spec before a run: the scenario pack must validate
+    /// (which also bounds the shared retry budget) and the wall-side
+    /// knobs must be finite and non-negative.
+    pub fn validate(&self) -> Result<(), String> {
+        self.scenario.validate()?;
+        if !(self.stall_wall.is_finite() && self.stall_wall >= 0.0) {
+            return Err(format!(
+                "chaos: stall_wall must be finite and >= 0 (got {})",
+                self.stall_wall
+            ));
+        }
+        Ok(())
+    }
+
+    /// The exact plan a serve run over `duration` sim-seconds replays —
+    /// pure, so reports can carry its digest and counts for independent
+    /// re-derivation.
+    pub fn plan(&self, duration: f64) -> FaultPlan {
+        FaultPlan::build(&self.scenario, self.seed_base, self.seed, duration)
+    }
+}
+
+/// Summary of the plan a run replayed, carried on [`super::ServeReport`]
+/// so the Python oracle can recompute digest and counts from scratch.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosPlanInfo {
+    /// Pack name ("" when no chaos was attached).
+    pub pack: String,
+    pub seed_base: u64,
+    pub seed: u64,
+    /// Order-sensitive plan digest. For sharded runs: per-app digests
+    /// folded in app-index order with the same `rotl(7)`/golden-ratio mix
+    /// the plan digest itself uses (see [`combine_digest`]).
+    pub digest: u64,
+    pub price_ticks: u64,
+    pub preemptions: u64,
+    pub failures: u64,
+}
+
+/// Fold one app's plan digest into a combined sharded-run digest. Same
+/// mixing step as `FaultPlan::digest`, applied over per-app digests in
+/// app-index order — deterministic for any shard count, and trivially
+/// re-derivable by the oracle.
+pub fn combine_digest(h: u64, app_digest: u64) -> u64 {
+    (h.rotate_left(7) ^ app_digest).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_plans_are_deterministic_and_named() {
+        let a = ChaosSpec::from_name("severe", 7, 3).unwrap();
+        let b = ChaosSpec::from_name("severe", 7, 3).unwrap();
+        let pa = a.plan(50.0);
+        let pb = b.plan(50.0);
+        assert_eq!(pa, pb);
+        assert_eq!(pa.digest(), pb.digest());
+        assert!(!pa.is_empty());
+        assert!(ChaosSpec::from_name("bogus", 0, 0).is_none());
+    }
+
+    #[test]
+    fn fault_free_spec_builds_an_empty_plan() {
+        let s = ChaosSpec::from_name("fault-free", 1, 0).unwrap();
+        let p = s.plan(3600.0);
+        assert!(p.is_empty());
+        assert_eq!(p.digest(), 0);
+    }
+
+    #[test]
+    fn validate_gates_wall_knobs() {
+        let mut s = ChaosSpec::from_name("mild", 1, 0).unwrap();
+        assert!(s.validate().is_ok());
+        s.stall_wall = f64::NAN;
+        assert!(s.validate().is_err());
+        s.stall_wall = -1.0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn combined_digest_is_order_sensitive() {
+        let d1 = combine_digest(combine_digest(0, 11), 22);
+        let d2 = combine_digest(combine_digest(0, 22), 11);
+        assert_ne!(d1, d2);
+    }
+}

@@ -28,12 +28,16 @@
 //! activation pays the scaled Table 6 spin-up before serving.
 
 mod admission;
+mod chaos;
+mod recovery;
 mod shard;
 mod worker;
 
 pub use admission::Backpressure;
+pub use chaos::{combine_digest, ChaosPlanInfo, ChaosSpec};
+pub use recovery::{Recovery, RecoveryConfig};
 pub use shard::{run_serve_sharded, AppFactory, AppServe};
-pub use worker::{spawn_worker, Completion, Job, WorkerMsg};
+pub use worker::{drain_completions, spawn_worker, Completion, Job, WorkerMsg};
 
 use crate::cli::Args;
 use crate::config::{PlatformConfig, SchedulerKind, SimConfig, WorkerKind};
@@ -84,6 +88,16 @@ pub struct ServeConfig {
     /// `0` = unbounded (never shed) — the historical behavior, and
     /// bit-identical to it.
     pub queue_cap: usize,
+    /// Chaos injection: replay this fault pack against the serving run
+    /// at paced wall times and arm the [`Recovery`] layer (retry/backoff,
+    /// hedging, circuit breaker). `None` = no chaos, no recovery — and
+    /// bit-identical reports/effects to the pre-chaos serve path.
+    pub chaos: Option<ChaosSpec>,
+    /// Shutdown-drain grace, wall seconds: how long the router waits for
+    /// straggling physical completions after sending `Shutdown`. A stalled
+    /// or wedged worker thread can delay shutdown by at most this long —
+    /// its missing completions are counted, not waited for.
+    pub drain_grace_wall: f64,
 }
 
 impl ServeConfig {
@@ -97,6 +111,8 @@ impl ServeConfig {
             pool_cpus: 0,
             pool_fpgas: 0,
             queue_cap: 0,
+            chaos: None,
+            drain_grace_wall: 5.0,
         }
     }
 
@@ -153,8 +169,38 @@ pub struct ServeReport {
     pub on_fpga: u64,
     pub misses: u64,
     /// Arrivals refused admission under backpressure (`queue_cap`);
-    /// conserved with the rest: `requests == dispatched + shed`.
+    /// conserved with the rest (the extended conservation law):
+    /// `requests == completions + shed + abandoned`.
     pub shed: u64,
+    /// Requests that finished (winning hedge copies count once).
+    pub completions: u64,
+    /// Requests given up for good — retry budget or deadline exhausted
+    /// after a kill, or an explicit recovery abandon. Each is also a
+    /// deadline miss.
+    pub abandoned: u64,
+    /// Re-dispatches after preemptions/failures (extra attempts, not new
+    /// requests — they never inflate `requests`).
+    pub retries: u64,
+    /// Duplicate dispatches launched by the recovery layer's hedging.
+    pub hedges: u64,
+    /// Hedged pairs won by the duplicate (`hedge_wins <= hedges`).
+    pub hedge_wins: u64,
+    /// Circuit-breaker openings (re-opening after a failed probe counts
+    /// again).
+    pub quarantines: u64,
+    /// On-time completions that needed recovery help (a retried attempt
+    /// or a hedged request finishing within deadline).
+    pub recovered_deadline_hits: u64,
+    /// Chaos spot-preemption kills applied to live workers.
+    pub preemptions: u64,
+    /// Chaos hardware-failure kills applied to live workers.
+    pub worker_failures: u64,
+    /// Physical completion records never received at shutdown (wedged or
+    /// drop-injected workers, real compute only): `jobs sent − records
+    /// drained` when the drain grace expires, 0 on a clean drain.
+    pub completions_dropped: u64,
+    /// The fault plan this run replayed (empty pack name = no chaos).
+    pub chaos: ChaosPlanInfo,
     pub fpga_spinups: u64,
     pub cpu_spinups: u64,
     pub energy_j: f64,
@@ -226,6 +272,38 @@ impl ServeReport {
                 "shed             : {} ({:.2}% of arrivals, queue cap backpressure)\n",
                 self.shed,
                 100.0 * self.shed as f64 / self.requests.max(1) as f64
+            ));
+        }
+        // Chaos/recovery lines only appear when a pack was attached, so a
+        // chaos-free report renders byte-identically to the pre-chaos one.
+        if !self.chaos.pack.is_empty() {
+            s.push_str(&format!(
+                "chaos            : pack {} (seeds {}/{}), plan {:016x}: \
+                 {} price ticks, {} preemptions, {} failures planned\n",
+                self.chaos.pack,
+                self.chaos.seed_base,
+                self.chaos.seed,
+                self.chaos.digest,
+                self.chaos.price_ticks,
+                self.chaos.preemptions,
+                self.chaos.failures
+            ));
+            s.push_str(&format!(
+                "faults applied   : {} preemptions, {} worker failures, \
+                 {} retries, {} abandoned\n",
+                self.preemptions, self.worker_failures, self.retries, self.abandoned
+            ));
+            s.push_str(&format!(
+                "recovery         : {} hedges ({} won), {} quarantines, \
+                 {} recovered deadline hits\n",
+                self.hedges, self.hedge_wins, self.quarantines, self.recovered_deadline_hits
+            ));
+        }
+        if self.completions_dropped > 0 {
+            s.push_str(&format!(
+                "dropped records  : {} physical completions never reported \
+                 (wedged workers; drain grace expired)\n",
+                self.completions_dropped
             ));
         }
         if self.max_lag_wall > 0.0 {
@@ -324,6 +402,9 @@ pub fn run_serve_source<'a>(
     let paced = compute != Compute::Stub;
     let sim_cfg = cfg.sim_config(pool_cpus, pool_fpgas);
     let platform = sim_cfg.platform.clone();
+    if let Some(c) = &cfg.chaos {
+        c.validate().map_err(|e| anyhow::anyhow!(e))?;
+    }
 
     // Build the warm pool (compile once; threads park), or skip it
     // entirely under stubbed compute.
@@ -375,12 +456,35 @@ pub fn run_serve_source<'a>(
     let d_in = 128usize;
     let epoch = Instant::now();
 
-    // Bounded admission sits between the driver and the policy; with
-    // `queue_cap == 0` the wrapper is inert (bit-identical observations).
-    let mut policy = Backpressure::new(policy, cfg.queue_cap as u64);
+    // Decorator chain: driver → Backpressure (outer) → Recovery → policy.
+    // Shedding stays outermost (an at-cap arrival never reaches recovery);
+    // deferred retries re-enter as non-arrival observations the admission
+    // layer forwards verbatim. Without a chaos pack the recovery layer is
+    // disabled and both wrappers are inert (bit-identical observations).
+    let rcfg = cfg
+        .chaos
+        .as_ref()
+        .map(|c| RecoveryConfig::for_scenario(&c.scenario))
+        .unwrap_or_else(RecoveryConfig::disabled);
+    let mut recovery = Recovery::new(policy, rcfg);
+    let mut policy = Backpressure::new(&mut recovery, cfg.queue_cap as u64);
     let mut driver = Driver::from_source(source, sim_cfg, &mut policy);
+    // Replay contract: the plan's faults enter the shared event heap here,
+    // and the pacing loop below fires each at its scaled wall time.
+    let chaos_plan = cfg
+        .chaos
+        .as_ref()
+        .map(|c| driver.attach_scenario(&c.scenario, c.seed_base, c.seed));
     let mut latency = LogHistogram::latency_ms();
     let mut max_lag_wall = 0.0f64;
+    // Wall-side exec injection (real compute under chaos): per applied
+    // kill, stall one surviving worker's next batch and optionally drop
+    // its completion records.
+    let wall_inject = cfg
+        .chaos
+        .as_ref()
+        .filter(|c| c.stall_wall > 0.0)
+        .map(|c| (c.stall_wall, c.drop_completions));
     {
         let mut handle = |e: &Effect| {
             if real {
@@ -414,7 +518,16 @@ pub fn run_serve_source<'a>(
                             }));
                         }
                     }
-                    Effect::Retired { worker, kind } | Effect::Killed { worker, kind, .. } => {
+                    Effect::Retired { worker, kind } => {
+                        if let Some(slot) = bind.remove(&worker) {
+                            let _ = phys[slot].1.send(WorkerMsg::Park);
+                            match kind {
+                                WorkerKind::Fpga => parked_fpga.push(slot),
+                                WorkerKind::Cpu => parked_cpu.push(slot),
+                            }
+                        }
+                    }
+                    Effect::Killed { worker, kind, .. } => {
                         // A kill is a retirement from the physical pool's
                         // point of view: the slot parks and can be re-bound
                         // by a later allocation (the replacement worker).
@@ -425,16 +538,40 @@ pub fn run_serve_source<'a>(
                                 WorkerKind::Cpu => parked_cpu.push(slot),
                             }
                         }
+                        // Wall-side chaos: each applied kill also stalls
+                        // the lowest surviving bound slot's next batch
+                        // (deterministic pick) — a slowdown the exec-
+                        // overrun accounting observes, with optional
+                        // completion-record loss the drain grace surfaces
+                        // as `completions_dropped` instead of a hang.
+                        if let Some((stall_wall, drop_batch)) = wall_inject {
+                            if let Some(&slot) = bind.values().min() {
+                                let _ = phys[slot].1.send(WorkerMsg::Inject {
+                                    stall_wall,
+                                    drop_batch,
+                                });
+                            }
+                        }
                     }
                     Effect::KeptAlive { .. } => {}
                     // Nothing was dispatched — the client gets a fast
                     // load-shed rejection; no physical slot is involved.
                     Effect::Shed { .. } => {}
+                    // Model-clock completion: physical completions arrive
+                    // through the done channel; nothing to mirror.
+                    Effect::Completed { .. } => {}
+                    // Routing around the worker is the recovery layer's
+                    // job; the slot stays bound and warm.
+                    Effect::Quarantined { .. } => {}
                 }
-            } else if let Effect::Dispatched { arrival, finish, .. } = *e {
+            } else if let Effect::Completed { arrival, finish, .. } = *e {
                 // Stubbed execution: the model's completion time is the
-                // truth, so every dispatch contributes a latency (full
-                // coverage, unlike the sim metrics' subsample).
+                // truth, so every *completed* request contributes exactly
+                // one latency (full coverage, unlike the sim metrics'
+                // subsample — and hedged pairs book only the winning
+                // copy). On the fault-free path this records the same
+                // (arrival, finish) multiset the dispatch stream carries,
+                // so chaos-off reports stay bit-identical.
                 latency.add((finish - arrival) * 1000.0);
             }
             sink(e);
@@ -474,10 +611,12 @@ pub fn run_serve_source<'a>(
         let _ = tx.send(WorkerMsg::Shutdown);
     }
     drop(done_tx);
-    let mut completions = Vec::new();
-    while let Ok(c) = done_rx.recv() {
-        completions.push(c);
-    }
+    // Grace-bounded drain: a permanently wedged worker thread (stalled
+    // inside its executable, or holding its sender hostage) delays
+    // shutdown by at most `drain_grace_wall` — its missing records are
+    // counted below instead of blocking the router forever.
+    let (completions, _drain_timed_out) =
+        drain_completions(&done_rx, Duration::from_secs_f64(cfg.drain_grace_wall.max(0.0)));
 
     let m = &result.metrics;
     let mut report = ServeReport {
@@ -486,6 +625,15 @@ pub fn run_serve_source<'a>(
         on_cpu: m.on_cpu,
         on_fpga: m.on_fpga,
         shed: m.shed,
+        completions: m.completions,
+        abandoned: m.abandoned,
+        retries: m.redispatches,
+        hedges: m.hedges,
+        hedge_wins: m.hedge_wins,
+        quarantines: m.quarantines,
+        recovered_deadline_hits: m.recovered_deadline_hits,
+        preemptions: m.preemptions,
+        worker_failures: m.worker_failures,
         fpga_spinups: m.fpga_spinups,
         cpu_spinups: m.cpu_spinups,
         energy_j: m.total_energy(),
@@ -495,6 +643,21 @@ pub fn run_serve_source<'a>(
         max_lag_wall,
         ..Default::default()
     };
+    if let (Some(c), Some(plan)) = (&cfg.chaos, &chaos_plan) {
+        let counts = plan.counts();
+        report.chaos = ChaosPlanInfo {
+            pack: c.scenario.name.clone(),
+            seed_base: c.seed_base,
+            seed: c.seed,
+            digest: plan.digest(),
+            price_ticks: counts.price_ticks,
+            preemptions: counts.preemptions,
+            failures: counts.failures,
+        };
+    }
+    if real {
+        report.completions_dropped = job_id.saturating_sub(completions.len() as u64);
+    }
     match compute {
         Compute::Real => {
             // End-to-end truth: latency and deadline behavior from the
@@ -545,6 +708,12 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     cfg.pool_cpus = args.usize_or("pool-cpus", 0)?;
     cfg.pool_fpgas = args.usize_or("pool-fpgas", 0)?;
     cfg.queue_cap = args.usize_or("queue-cap", 0)?;
+    if let Some(pack) = args.get("chaos") {
+        cfg.chaos = Some(
+            ChaosSpec::from_name(pack, seed, 0)
+                .ok_or(format!("unknown chaos pack '{pack}' (fault-free|mild|severe)"))?,
+        );
+    }
 
     let mut rng = Rng::new(seed);
     let trace = synthetic_app_dt("serve", &mut rng, burstiness, duration, rate, 0.010, 60.0);

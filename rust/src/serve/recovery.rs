@@ -1,0 +1,914 @@
+//! Recovery decorator: deadline-aware retries, hedged dispatch, and a
+//! per-worker circuit breaker — resilience as a policy combinator.
+//!
+//! [`Recovery`] sits between [`super::admission::Backpressure`] (outer)
+//! and the scheduling policy (inner):
+//!
+//! ```text
+//! driver → Backpressure → Recovery → policy
+//! ```
+//!
+//! Shedding stays outermost so an at-cap fresh arrival never reaches the
+//! recovery layer (no bookkeeping to leak); deferred retries re-enter the
+//! driver through the event heap as [`Observation::RetryDue`], a
+//! non-arrival observation the admission layer forwards verbatim — a
+//! request admitted once is not shed on retry.
+//!
+//! Three mechanisms, all expressed through the ordinary action vocabulary
+//! so the sim driver and the serve driver execute them identically:
+//!
+//! * **Deadline-aware retry with capped exponential backoff.** A
+//!   re-offered arrival (`attempt > 0`) waits
+//!   `backoff = min(base · 2^(attempt-1), cap)` before redispatch
+//!   ([`Action::Defer`]). A retry is *never* attempted when the remaining
+//!   deadline cannot cover it: if `now + backoff + min_svc > deadline`
+//!   (with `min_svc` the fastest kind's service time for the request),
+//!   the request is abandoned immediately ([`Action::Abandon`]) — an
+//!   honest miss now instead of wasted work later. The retry *count*
+//!   budget is the scenario pack's `retry_budget`, enforced by the
+//!   driver's kill path; this layer mirrors the same field
+//!   ([`RecoveryConfig::for_scenario`]) so the two can never drift.
+//!
+//! * **Hedged dispatch.** Every fresh dispatch arms a timer at
+//!   `max(p_H completion latency, 2·min_svc)` past dispatch (H =
+//!   `hedge_percentile`, from this layer's own [`LogHistogram`] of
+//!   observed completion latencies; hedging stays dormant until
+//!   `hedge_min_samples` completions so cold starts don't hedge on
+//!   noise). If the request is still in flight when the timer fires and
+//!   an idle spare exists (efficient-first: FPGA then CPU — an idle
+//!   worker cannot be the one running the primary), the layer issues
+//!   [`Action::Hedge`]: the driver dispatches a duplicate, first
+//!   completion wins, the loser is cancelled and its energy stays billed.
+//!
+//! * **Circuit breaker.** `breaker_k` *consecutive* deadline-missed
+//!   completions on one worker open a breaker ([`Action::Quarantine`] —
+//!   counted and audited by the driver): dispatches targeting it are
+//!   rerouted to the best non-quarantined worker (fail-open when none
+//!   exists — a degraded worker beats a dropped request). After
+//!   `breaker_cooldown` the next dispatch is let through as a half-open
+//!   probe; an on-time completion closes the breaker, a missed one
+//!   re-opens it for a fresh cool-down (and counts as a new quarantine).
+//!
+//! With `enabled == false` the decorator forwards every observation
+//! verbatim and post-processes nothing — a disabled wrapped run is
+//! bit-identical to an unwrapped one, which is what keeps the chaos-off
+//! serve path's effect stream byte-stable (pinned by
+//! `rust/tests/serve_chaos.rs`).
+
+use std::collections::HashMap;
+
+use crate::config::WorkerKind;
+use crate::policy::{Action, Observation, Policy, PolicyView, Request, Target, WorkerId};
+use crate::scenario::ScenarioConfig;
+use crate::util::stats::LogHistogram;
+
+/// Knobs for [`Recovery`]. Times are model (trace) seconds — the serve
+/// driver's pacing maps them onto the wall clock exactly like every other
+/// model duration.
+#[derive(Clone, Debug)]
+pub struct RecoveryConfig {
+    /// Master switch: `false` makes the decorator a verbatim forwarder.
+    pub enabled: bool,
+    /// Mirror of the scenario pack's retry budget (same semantics as the
+    /// sim kill path: a request with `attempt > retry_budget` is never
+    /// redispatched).
+    pub retry_budget: u32,
+    /// First-retry backoff, seconds.
+    pub backoff_base: f64,
+    /// Backoff ceiling, seconds (`base · 2^(attempt-1)` is clamped here).
+    pub backoff_cap: f64,
+    /// Completion-latency percentile that sets the hedge threshold.
+    /// `<= 0` disables hedging.
+    pub hedge_percentile: f64,
+    /// Completions observed before hedging arms.
+    pub hedge_min_samples: u64,
+    /// Consecutive deadline-missed completions that open a worker's
+    /// breaker. `0` disables the breaker.
+    pub breaker_k: u32,
+    /// Quarantine duration before a half-open probe is allowed, seconds.
+    pub breaker_cooldown: f64,
+}
+
+impl RecoveryConfig {
+    /// The inert configuration: forwards everything, touches nothing.
+    pub fn disabled() -> Self {
+        RecoveryConfig {
+            enabled: false,
+            retry_budget: 0,
+            backoff_base: 0.0,
+            backoff_cap: 0.0,
+            hedge_percentile: 0.0,
+            hedge_min_samples: u64::MAX,
+            breaker_k: 0,
+            breaker_cooldown: 0.0,
+        }
+    }
+
+    /// Recovery armed for a scenario pack, sharing its retry budget (one
+    /// budget, one source — see `ScenarioConfig::validate`).
+    pub fn for_scenario(scen: &ScenarioConfig) -> Self {
+        RecoveryConfig {
+            enabled: true,
+            retry_budget: scen.retry_budget,
+            backoff_base: 0.010,
+            backoff_cap: 0.160,
+            hedge_percentile: 95.0,
+            hedge_min_samples: 50,
+            breaker_k: 3,
+            breaker_cooldown: 30.0,
+        }
+    }
+
+    /// Sanity-check the knobs (finite, non-negative, percentile in range).
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("backoff_base", self.backoff_base),
+            ("backoff_cap", self.backoff_cap),
+            ("breaker_cooldown", self.breaker_cooldown),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("recovery: {name} must be finite and >= 0 (got {v})"));
+            }
+        }
+        if !self.hedge_percentile.is_finite() || self.hedge_percentile > 100.0 {
+            return Err(format!(
+                "recovery: hedge_percentile must be finite and <= 100 (got {})",
+                self.hedge_percentile
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Identity of one dispatched copy: `(arrival, size, deadline, attempt)`
+/// bit patterns. Requests are `Copy` values, so this is the same matching
+/// rule the driver's hedge path uses (`Request: PartialEq`).
+type ReqKey = (u64, u64, u64, u32);
+
+fn key(req: &Request) -> ReqKey {
+    (
+        req.arrival.to_bits(),
+        req.size.to_bits(),
+        req.deadline.to_bits(),
+        req.attempt,
+    )
+}
+
+/// Circuit-breaker state for one quarantined worker.
+#[derive(Clone, Copy, Debug)]
+struct Breaker {
+    /// Quarantine end: before this, dispatches are rerouted away.
+    until: f64,
+    /// A probe dispatch has been let through; the next completion on the
+    /// worker settles the breaker (on-time ⇒ close, missed ⇒ re-open).
+    half_open: bool,
+}
+
+/// The recovery decorator. See the module docs for the contract.
+pub struct Recovery<'a> {
+    inner: &'a mut dyn Policy,
+    cfg: RecoveryConfig,
+    /// Observed completion latencies (ms) — the hedge-threshold source.
+    lat: LogHistogram,
+    /// In-flight copies by identity. Saturating bookkeeping: entries for
+    /// hedge duplicates and cross-layer losses simply decay to no-ops
+    /// (each timer fires once, so a stale entry can at most skip a hedge).
+    live: HashMap<ReqKey, u32>,
+    /// Armed hedge timers: token → the fresh dispatch it watches.
+    timers: HashMap<u64, Request>,
+    next_token: u64,
+    /// Consecutive deadline-missed completions per worker.
+    streak: HashMap<WorkerId, u32>,
+    quarantined: HashMap<WorkerId, Breaker>,
+}
+
+impl<'a> Recovery<'a> {
+    pub fn new(inner: &'a mut dyn Policy, cfg: RecoveryConfig) -> Self {
+        Recovery {
+            inner,
+            cfg,
+            lat: LogHistogram::latency_ms(),
+            live: HashMap::new(),
+            timers: HashMap::new(),
+            next_token: 0,
+            streak: HashMap::new(),
+            quarantined: HashMap::new(),
+        }
+    }
+
+    /// Fastest possible service time for a `size` request across kinds.
+    fn min_svc(view: &dyn PolicyView, size: f64) -> f64 {
+        WorkerKind::ALL
+            .iter()
+            .map(|&k| view.service_time(k, size))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    fn dec_live(&mut self, k: ReqKey) {
+        if let Some(v) = self.live.get_mut(&k) {
+            if *v <= 1 {
+                self.live.remove(&k);
+            } else {
+                *v -= 1;
+            }
+        }
+    }
+
+    fn hedging_armed(&self) -> bool {
+        self.cfg.hedge_percentile > 0.0 && self.lat.count() >= self.cfg.hedge_min_samples
+    }
+
+    /// Whether a dispatch to `id` must be rerouted. A cooled-down breaker
+    /// flips to half-open and admits the dispatch as its probe.
+    fn gate(&mut self, now: f64, id: WorkerId) -> bool {
+        match self.quarantined.get_mut(&id) {
+            None => false,
+            Some(b) if b.half_open => false,
+            Some(b) if now >= b.until => {
+                b.half_open = true;
+                false
+            }
+            Some(_) => true,
+        }
+    }
+
+    /// Breaker entry that still blocks dispatch (no probe side effects).
+    fn blocked(&self, now: f64, id: WorkerId) -> bool {
+        self.quarantined
+            .get(&id)
+            .map_or(false, |b| !b.half_open && now < b.until)
+    }
+
+    /// Best non-quarantined landing spot, efficient-first: most-recently-
+    /// idle then earliest-finishing, FPGA before CPU. `None` ⇒ fail open
+    /// (keep the original target — degraded beats dropped).
+    fn reroute(&self, view: &dyn PolicyView, now: f64) -> Option<Target> {
+        for &kind in &WorkerKind::EFFICIENT_FIRST {
+            if let Some((_, id)) = view.most_recently_idle(kind) {
+                if !self.blocked(now, id) {
+                    return Some(Target::Worker(id));
+                }
+            }
+        }
+        for &kind in &WorkerKind::EFFICIENT_FIRST {
+            if let Some((_, id)) = view.earliest_ready(kind) {
+                if !self.blocked(now, id) {
+                    return Some(Target::Worker(id));
+                }
+            }
+        }
+        None
+    }
+
+    /// Post-process the inner policy's freshly appended actions
+    /// (`out[start..]`): steer dispatches away from open breakers, track
+    /// copy liveness, and arm hedge timers on fresh dispatches.
+    fn admit_dispatches(&mut self, view: &dyn PolicyView, out: &mut Vec<Action>, start: usize) {
+        let now = view.now();
+        let mut armed: Vec<Action> = Vec::new();
+        for a in out[start..].iter_mut() {
+            let (req, to, redispatch) = match *a {
+                Action::Dispatch { req, to } => (req, to, false),
+                Action::Redispatch { req, to } => (req, to, true),
+                _ => continue,
+            };
+            let to = match to {
+                Target::Worker(id) if self.gate(now, id) => {
+                    self.reroute(view, now).unwrap_or(Target::Worker(id))
+                }
+                t => t,
+            };
+            *a = if redispatch {
+                Action::Redispatch { req, to }
+            } else {
+                Action::Dispatch { req, to }
+            };
+            *self.live.entry(key(&req)).or_insert(0) += 1;
+            if req.attempt == 0 && self.hedging_armed() {
+                let p_lat = self.lat.percentile(self.cfg.hedge_percentile) / 1000.0;
+                let threshold = p_lat.max(2.0 * Self::min_svc(view, req.size));
+                let token = self.next_token;
+                self.next_token += 1;
+                self.timers.insert(token, req);
+                armed.push(Action::Timer {
+                    at: now + threshold,
+                    token,
+                });
+            }
+        }
+        out.extend(armed);
+    }
+
+    /// Forward `obs` to the inner policy and post-process what it emits.
+    fn forward(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+        let start = out.len();
+        self.inner.observe(obs, view, out);
+        self.admit_dispatches(view, out, start);
+    }
+
+    fn on_retry_arrival(&mut self, req: Request, view: &dyn PolicyView, out: &mut Vec<Action>) {
+        // The copy this retry replaces (previous attempt) is dead.
+        let mut prev = req;
+        prev.attempt -= 1;
+        self.dec_live(key(&prev));
+
+        let now = view.now();
+        let exp = req.attempt.saturating_sub(1).min(32);
+        let backoff = (self.cfg.backoff_base * f64::powi(2.0, exp as i32)).min(self.cfg.backoff_cap);
+        let min_svc = Self::min_svc(view, req.size);
+        if req.attempt > self.cfg.retry_budget || now + backoff + min_svc > req.deadline {
+            // Retrying cannot meet the deadline (or the shared budget is
+            // spent): abandon honestly instead of burning a worker.
+            out.push(Action::Abandon { req });
+        } else if backoff > 0.0 {
+            out.push(Action::Defer {
+                req,
+                until: now + backoff,
+            });
+        } else {
+            self.forward(Observation::Arrival { req }, view, out);
+        }
+    }
+
+    fn on_completion(
+        &mut self,
+        worker: WorkerId,
+        req: Request,
+        view: &dyn PolicyView,
+        out: &mut Vec<Action>,
+    ) {
+        self.dec_live(key(&req));
+        let now = view.now();
+        self.lat.add((now - req.arrival) * 1000.0);
+        if now > req.deadline {
+            let s = self.streak.entry(worker).or_insert(0);
+            *s = s.saturating_add(1);
+            let s = *s;
+            match self.quarantined.get_mut(&worker) {
+                Some(b) if b.half_open => {
+                    // Failed probe: re-open for a fresh cool-down. The
+                    // driver counts this as a new quarantine.
+                    b.half_open = false;
+                    b.until = now + self.cfg.breaker_cooldown;
+                    out.push(Action::Quarantine { worker });
+                }
+                Some(_) => {}
+                None => {
+                    if self.cfg.breaker_k > 0 && s >= self.cfg.breaker_k {
+                        self.quarantined.insert(
+                            worker,
+                            Breaker {
+                                until: now + self.cfg.breaker_cooldown,
+                                half_open: false,
+                            },
+                        );
+                        out.push(Action::Quarantine { worker });
+                    }
+                }
+            }
+        } else {
+            self.streak.remove(&worker);
+            if self
+                .quarantined
+                .get(&worker)
+                .map_or(false, |b| b.half_open)
+            {
+                // Successful probe: close the breaker.
+                self.quarantined.remove(&worker);
+            }
+        }
+        self.forward(Observation::Completion { worker, req }, view, out);
+    }
+
+    fn on_timer(&mut self, token: u64, view: &dyn PolicyView, out: &mut Vec<Action>) {
+        let Some(req) = self.timers.remove(&token) else {
+            // Not one of ours — an inner policy's own timer.
+            self.forward(Observation::Timer { token }, view, out);
+            return;
+        };
+        if self.live.get(&key(&req)).copied().unwrap_or(0) == 0 {
+            return; // completed (or killed and re-offered) before the check
+        }
+        let now = view.now();
+        for &kind in &WorkerKind::EFFICIENT_FIRST {
+            if let Some((_, id)) = view.most_recently_idle(kind) {
+                // An idle worker cannot be the one running the primary,
+                // and we never hedge onto a quarantined worker.
+                if !self.blocked(now, id) && !self.quarantined.contains_key(&id) {
+                    out.push(Action::Hedge {
+                        req,
+                        to: Target::Worker(id),
+                    });
+                    return;
+                }
+            }
+        }
+        // No idle spare: skip the hedge rather than pile onto a busy
+        // worker — the straggler may still finish.
+    }
+}
+
+impl Policy for Recovery<'_> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn interval(&self) -> f64 {
+        self.inner.interval()
+    }
+
+    fn observe(&mut self, obs: Observation, view: &dyn PolicyView, out: &mut Vec<Action>) {
+        if !self.cfg.enabled {
+            // Verbatim forwarding: the disabled decorator must be
+            // bit-invisible (chaos-off parity).
+            self.inner.observe(obs, view, out);
+            return;
+        }
+        match obs {
+            Observation::Arrival { req } if req.attempt > 0 => {
+                self.on_retry_arrival(req, view, out)
+            }
+            Observation::RetryDue { req } => {
+                // Backoff matured: offer the retry to the inner policy as
+                // an ordinary arrival (it was admitted before its kill, so
+                // it does not re-compete for the admission cap).
+                self.forward(Observation::Arrival { req }, view, out)
+            }
+            Observation::Timer { token } => self.on_timer(token, view, out),
+            Observation::Completion { worker, req } => self.on_completion(worker, req, view, out),
+            Observation::Abandoned { req } => {
+                self.dec_live(key(&req));
+                self.forward(obs, view, out)
+            }
+            Observation::Preempted { worker, .. } => {
+                // The worker is gone; its breaker state dies with it.
+                self.streak.remove(&worker);
+                self.quarantined.remove(&worker);
+                self.forward(obs, view, out)
+            }
+            _ => self.forward(obs, view, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::{WorkerObs, WorkerState};
+
+    /// Inner policy that dispatches every arrival to a fixed worker and
+    /// counts what it sees.
+    struct PinInner {
+        to: WorkerId,
+        seen: usize,
+    }
+
+    impl Policy for PinInner {
+        fn name(&self) -> String {
+            "pin-inner".into()
+        }
+        fn interval(&self) -> f64 {
+            f64::INFINITY
+        }
+        fn observe(&mut self, obs: Observation, _view: &dyn PolicyView, out: &mut Vec<Action>) {
+            self.seen += 1;
+            if let Observation::Arrival { req } = obs {
+                out.push(Action::Dispatch {
+                    req,
+                    to: Target::Worker(self.to),
+                });
+            }
+        }
+    }
+
+    /// View with a configurable clock and worker roster.
+    struct TestView {
+        now: f64,
+        workers: Vec<WorkerObs>,
+    }
+
+    impl TestView {
+        fn at(now: f64) -> Self {
+            TestView {
+                now,
+                workers: Vec::new(),
+            }
+        }
+
+        fn with_idle(mut self, id: u32, kind: WorkerKind) -> Self {
+            self.workers.push(WorkerObs {
+                id: WorkerId(id),
+                kind,
+                state: WorkerState::Active,
+                ready_at: 0.0,
+                busy_until: 0.0,
+                queued: 0,
+                idle_since: self.now,
+            });
+            self
+        }
+    }
+
+    impl PolicyView for TestView {
+        fn now(&self) -> f64 {
+            self.now
+        }
+        fn trace_live(&self) -> bool {
+            true
+        }
+        fn service_time(&self, kind: WorkerKind, size: f64) -> f64 {
+            match kind {
+                WorkerKind::Cpu => size,
+                WorkerKind::Fpga => size * 0.5,
+            }
+        }
+        fn allocated(&self, kind: WorkerKind) -> u32 {
+            self.workers.iter().filter(|w| w.kind == kind).count() as u32
+        }
+        fn live_ids(&self, kind: WorkerKind) -> Vec<WorkerId> {
+            self.workers
+                .iter()
+                .filter(|w| w.kind == kind)
+                .map(|w| w.id)
+                .collect()
+        }
+        fn worker(&self, id: WorkerId) -> Option<WorkerObs> {
+            self.workers.iter().find(|w| w.id == id).copied()
+        }
+    }
+
+    fn req(arrival: f64, size: f64, deadline: f64, attempt: u32) -> Request {
+        Request {
+            arrival,
+            size,
+            deadline,
+            attempt,
+        }
+    }
+
+    fn completion(worker: u32, r: Request) -> Observation {
+        Observation::Completion {
+            worker: WorkerId(worker),
+            req: r,
+        }
+    }
+
+    #[test]
+    fn disabled_recovery_forwards_verbatim() {
+        let mut inner = PinInner {
+            to: WorkerId(0),
+            seen: 0,
+        };
+        let mut rec = Recovery::new(&mut inner, RecoveryConfig::disabled());
+        let view = TestView::at(1.0);
+        let mut out = Vec::new();
+        // A retry arrival reaches the inner policy untouched — no Defer,
+        // no Abandon, no Timer.
+        rec.observe(
+            Observation::Arrival {
+                req: req(0.0, 1.0, 0.5, 2),
+            },
+            &view,
+            &mut out,
+        );
+        assert!(
+            matches!(out.as_slice(), [Action::Dispatch { req, .. }] if req.attempt == 2),
+            "disabled layer must forward verbatim, got {out:?}"
+        );
+        assert_eq!(inner.seen, 1);
+        assert_eq!(rec.name(), "pin-inner");
+    }
+
+    #[test]
+    fn retry_backoff_defers_and_caps() {
+        let mut inner = PinInner {
+            to: WorkerId(0),
+            seen: 0,
+        };
+        let cfg = RecoveryConfig::for_scenario(&ScenarioConfig::severe());
+        let base = cfg.backoff_base;
+        let cap = cfg.backoff_cap;
+        let mut rec = Recovery::new(&mut inner, cfg);
+        let view = TestView::at(10.0);
+
+        let mut out = Vec::new();
+        rec.observe(
+            Observation::Arrival {
+                req: req(9.0, 1.0, 100.0, 1),
+            },
+            &view,
+            &mut out,
+        );
+        match out.as_slice() {
+            [Action::Defer { until, .. }] => assert!((until - (10.0 + base)).abs() < 1e-12),
+            other => panic!("attempt 1 must defer by base, got {other:?}"),
+        }
+
+        // A deep retry's backoff is clamped at the cap.
+        out.clear();
+        let deep = req(9.0, 1.0, 100.0, 3.min(rec.cfg.retry_budget));
+        rec.observe(Observation::Arrival { req: deep }, &view, &mut out);
+        match out.as_slice() {
+            [Action::Defer { until, .. }] => {
+                assert!(
+                    *until <= 10.0 + cap + 1e-12,
+                    "backoff must cap at {cap}, got {}",
+                    until - 10.0
+                );
+            }
+            other => panic!("deep retry must defer, got {other:?}"),
+        }
+        // The inner policy saw none of it.
+        assert_eq!(inner.seen, 0);
+    }
+
+    #[test]
+    fn infeasible_retry_is_abandoned_not_deferred() {
+        let mut inner = PinInner {
+            to: WorkerId(0),
+            seen: 0,
+        };
+        let mut rec =
+            Recovery::new(&mut inner, RecoveryConfig::for_scenario(&ScenarioConfig::severe()));
+        // Fastest kind needs 0.5s for size 1.0; deadline is 0.2s away —
+        // now + backoff + min_svc > deadline ⇒ abandon.
+        let view = TestView::at(10.0);
+        let mut out = Vec::new();
+        rec.observe(
+            Observation::Arrival {
+                req: req(9.0, 1.0, 10.2, 1),
+            },
+            &view,
+            &mut out,
+        );
+        assert!(
+            matches!(out.as_slice(), [Action::Abandon { .. }]),
+            "infeasible retry must abandon, got {out:?}"
+        );
+
+        // Over-budget retries abandon regardless of deadline slack.
+        out.clear();
+        let over = req(9.0, 1.0, 1.0e9, rec.cfg.retry_budget + 1);
+        rec.observe(Observation::Arrival { req: over }, &view, &mut out);
+        assert!(matches!(out.as_slice(), [Action::Abandon { .. }]));
+    }
+
+    #[test]
+    fn retry_due_reaches_inner_as_arrival() {
+        let mut inner = PinInner {
+            to: WorkerId(0),
+            seen: 0,
+        };
+        let mut rec =
+            Recovery::new(&mut inner, RecoveryConfig::for_scenario(&ScenarioConfig::severe()));
+        let view = TestView::at(10.0).with_idle(0, WorkerKind::Fpga);
+        let mut out = Vec::new();
+        rec.observe(
+            Observation::RetryDue {
+                req: req(9.0, 1.0, 100.0, 1),
+            },
+            &view,
+            &mut out,
+        );
+        assert!(
+            matches!(out.as_slice(), [Action::Dispatch { req, .. }] if req.attempt == 1),
+            "matured retry must be offered to the inner policy, got {out:?}"
+        );
+        assert_eq!(inner.seen, 1);
+    }
+
+    #[test]
+    fn breaker_opens_after_exactly_k_misses_and_probes_back() {
+        let mut inner = PinInner {
+            to: WorkerId(7),
+            seen: 0,
+        };
+        let cfg = RecoveryConfig::for_scenario(&ScenarioConfig::severe());
+        let k = cfg.breaker_k;
+        let cooldown = cfg.breaker_cooldown;
+        let mut rec = Recovery::new(&mut inner, cfg);
+
+        // K-1 consecutive misses: no quarantine yet.
+        for i in 0..k - 1 {
+            let mut out = Vec::new();
+            let view = TestView::at(100.0 + i as f64);
+            rec.observe(completion(7, req(0.0, 1.0, 50.0, 0)), &view, &mut out);
+            assert!(
+                !out.iter().any(|a| matches!(a, Action::Quarantine { .. })),
+                "breaker must not open before miss {k}, got {out:?}"
+            );
+        }
+        // The K-th consecutive miss opens the breaker — exactly once.
+        let mut out = Vec::new();
+        let t_open = 100.0 + (k - 1) as f64;
+        rec.observe(completion(7, req(0.0, 1.0, 50.0, 0)), &TestView::at(t_open), &mut out);
+        assert_eq!(
+            out.iter()
+                .filter(|a| matches!(a, Action::Quarantine { worker } if *worker == WorkerId(7)))
+                .count(),
+            1,
+            "miss #{k} must quarantine worker 7, got {out:?}"
+        );
+
+        // While quarantined, dispatches to 7 are rerouted to a healthy
+        // idle worker.
+        let view = TestView::at(t_open + 1.0).with_idle(3, WorkerKind::Fpga);
+        let mut out = Vec::new();
+        rec.observe(
+            Observation::Arrival {
+                req: req(t_open + 1.0, 1.0, t_open + 100.0, 0),
+            },
+            &view,
+            &mut out,
+        );
+        assert!(
+            matches!(out.first(), Some(Action::Dispatch { to: Target::Worker(w), .. }) if *w == WorkerId(3)),
+            "quarantined target must be rerouted, got {out:?}"
+        );
+
+        // After the cool-down the next dispatch probes through to 7.
+        let t_probe = t_open + cooldown + 1.0;
+        let view = TestView::at(t_probe).with_idle(3, WorkerKind::Fpga);
+        let mut out = Vec::new();
+        rec.observe(
+            Observation::Arrival {
+                req: req(t_probe, 1.0, t_probe + 100.0, 0),
+            },
+            &view,
+            &mut out,
+        );
+        assert!(
+            matches!(out.first(), Some(Action::Dispatch { to: Target::Worker(w), .. }) if *w == WorkerId(7)),
+            "cooled-down breaker must admit a probe, got {out:?}"
+        );
+
+        // An on-time probe completion closes the breaker: dispatches flow
+        // to 7 with no reroute and no new quarantine.
+        let mut out = Vec::new();
+        rec.observe(
+            completion(7, req(t_probe, 1.0, t_probe + 100.0, 0)),
+            &TestView::at(t_probe + 0.5),
+            &mut out,
+        );
+        assert!(out.iter().all(|a| !matches!(a, Action::Quarantine { .. })));
+        let view = TestView::at(t_probe + 1.0).with_idle(3, WorkerKind::Fpga);
+        let mut out = Vec::new();
+        rec.observe(
+            Observation::Arrival {
+                req: req(t_probe + 1.0, 1.0, t_probe + 100.0, 0),
+            },
+            &view,
+            &mut out,
+        );
+        assert!(
+            matches!(out.first(), Some(Action::Dispatch { to: Target::Worker(w), .. }) if *w == WorkerId(7)),
+            "closed breaker must stop rerouting, got {out:?}"
+        );
+    }
+
+    #[test]
+    fn failed_probe_reopens_the_breaker() {
+        let mut inner = PinInner {
+            to: WorkerId(7),
+            seen: 0,
+        };
+        let cfg = RecoveryConfig::for_scenario(&ScenarioConfig::severe());
+        let k = cfg.breaker_k;
+        let cooldown = cfg.breaker_cooldown;
+        let mut rec = Recovery::new(&mut inner, cfg);
+        for i in 0..k {
+            let mut out = Vec::new();
+            rec.observe(
+                completion(7, req(0.0, 1.0, 50.0, 0)),
+                &TestView::at(100.0 + i as f64),
+                &mut out,
+            );
+        }
+        // Probe through after cool-down, then miss: the breaker re-opens
+        // (a fresh Quarantine action) and dispatches reroute again.
+        let t_probe = 100.0 + k as f64 + cooldown;
+        let mut out = Vec::new();
+        rec.observe(
+            Observation::Arrival {
+                req: req(t_probe, 1.0, t_probe + 100.0, 0),
+            },
+            &TestView::at(t_probe).with_idle(3, WorkerKind::Fpga),
+            &mut out,
+        );
+        assert!(
+            matches!(out.first(), Some(Action::Dispatch { to: Target::Worker(w), .. }) if *w == WorkerId(7))
+        );
+        let mut out = Vec::new();
+        rec.observe(
+            completion(7, req(t_probe, 1.0, t_probe + 0.1, 0)),
+            &TestView::at(t_probe + 5.0),
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|a| matches!(a, Action::Quarantine { worker } if *worker == WorkerId(7))),
+            "failed probe must re-open the breaker, got {out:?}"
+        );
+        let mut out = Vec::new();
+        rec.observe(
+            Observation::Arrival {
+                req: req(t_probe + 6.0, 1.0, t_probe + 100.0, 0),
+            },
+            &TestView::at(t_probe + 6.0).with_idle(3, WorkerKind::Fpga),
+            &mut out,
+        );
+        assert!(
+            matches!(out.first(), Some(Action::Dispatch { to: Target::Worker(w), .. }) if *w == WorkerId(3)),
+            "re-opened breaker must reroute again, got {out:?}"
+        );
+    }
+
+    #[test]
+    fn hedge_arms_after_warmup_and_fires_only_while_live() {
+        let mut inner = PinInner {
+            to: WorkerId(0),
+            seen: 0,
+        };
+        let cfg = RecoveryConfig::for_scenario(&ScenarioConfig::severe());
+        let min_samples = cfg.hedge_min_samples;
+        let mut rec = Recovery::new(&mut inner, cfg);
+
+        // Cold layer: fresh dispatches arm no timers.
+        let view = TestView::at(0.0).with_idle(0, WorkerKind::Fpga);
+        let mut out = Vec::new();
+        rec.observe(
+            Observation::Arrival {
+                req: req(0.0, 1.0, 100.0, 0),
+            },
+            &view,
+            &mut out,
+        );
+        assert!(
+            !out.iter().any(|a| matches!(a, Action::Timer { .. })),
+            "no hedging before warm-up, got {out:?}"
+        );
+
+        // Warm the latency histogram with on-time completions.
+        for i in 0..min_samples {
+            let t = 1.0 + i as f64 * 0.001;
+            let mut out = Vec::new();
+            rec.observe(
+                completion(0, req(t - 0.0005, 1.0, t + 100.0, 0)),
+                &TestView::at(t),
+                &mut out,
+            );
+        }
+
+        // A fresh dispatch now arms a hedge timer.
+        let t0 = 50.0;
+        let fresh = req(t0, 1.0, t0 + 100.0, 0);
+        let view = TestView::at(t0).with_idle(0, WorkerKind::Fpga);
+        let mut out = Vec::new();
+        rec.observe(Observation::Arrival { req: fresh }, &view, &mut out);
+        let token = out
+            .iter()
+            .find_map(|a| match a {
+                Action::Timer { at, token } => {
+                    assert!(*at > t0, "hedge timer must be in the future");
+                    Some(*token)
+                }
+                _ => None,
+            })
+            .expect("warmed-up dispatch must arm a hedge timer");
+
+        // Timer fires while the request is still live and an idle spare
+        // exists ⇒ hedge to the spare.
+        let view = TestView::at(t0 + 10.0)
+            .with_idle(5, WorkerKind::Fpga)
+            .with_idle(6, WorkerKind::Cpu);
+        let mut out = Vec::new();
+        rec.observe(Observation::Timer { token }, &view, &mut out);
+        assert!(
+            matches!(out.as_slice(), [Action::Hedge { to: Target::Worker(w), .. }] if *w == WorkerId(5)),
+            "live straggler must hedge to the idle FPGA, got {out:?}"
+        );
+
+        // Re-dispatch the same request shape; complete it before its
+        // timer fires ⇒ the timer is a no-op.
+        let t1 = 60.0;
+        let fresh2 = req(t1, 1.0, t1 + 100.0, 0);
+        let view = TestView::at(t1).with_idle(0, WorkerKind::Fpga);
+        let mut out = Vec::new();
+        rec.observe(Observation::Arrival { req: fresh2 }, &view, &mut out);
+        let token2 = out
+            .iter()
+            .find_map(|a| match a {
+                Action::Timer { token, .. } => Some(*token),
+                _ => None,
+            })
+            .expect("second dispatch must arm a timer");
+        let mut out = Vec::new();
+        rec.observe(completion(0, fresh2), &TestView::at(t1 + 0.4), &mut out);
+        let view = TestView::at(t1 + 10.0).with_idle(5, WorkerKind::Fpga);
+        let mut out = Vec::new();
+        rec.observe(Observation::Timer { token: token2 }, &view, &mut out);
+        assert!(
+            out.is_empty(),
+            "completed request must not hedge, got {out:?}"
+        );
+    }
+}

@@ -18,8 +18,10 @@
 //! `Rng::for_stream(seed, app_index)` or the production generator's
 //! per-app forks), not from anything shard- or thread-dependent.
 
-use super::{Backpressure, Compute, ServeConfig, ServeReport};
+use super::chaos::{combine_digest, ChaosPlanInfo};
+use super::{Backpressure, Compute, Recovery, RecoveryConfig, ServeConfig, ServeReport};
 use crate::policy::{Effect, Policy};
+use crate::scenario::FaultCounts;
 use crate::sim::{Driver, Metrics};
 use crate::trace::{partition_round_robin, ArrivalSource};
 use crate::util::stats::LogHistogram;
@@ -48,6 +50,10 @@ struct AppOutcome {
     latency: LogHistogram,
     sim_end: f64,
     max_lag_wall: f64,
+    /// This app's chaos plan `(digest, counts)` — a pure function of the
+    /// app index (seed `chaos.seed + idx`), so the merged digest is shard-
+    /// count independent. `None` without chaos.
+    plan: Option<(u64, FaultCounts)>,
 }
 
 /// Run `apps` across `shards` router shards and merge their reports.
@@ -67,6 +73,9 @@ pub fn run_serve_sharded(
             "sharded serving supports stubbed/paced compute only \
              (the physical worker pool binds to a single router)"
         ));
+    }
+    if let Some(c) = &cfg.chaos {
+        c.validate().map_err(|e| anyhow::anyhow!(e))?;
     }
     let n_apps = apps.len();
     let parts = partition_round_robin(apps.into_iter().enumerate().collect(), shards);
@@ -105,17 +114,54 @@ pub fn run_serve_sharded(
     report.on_fpga = metrics.on_fpga;
     report.misses = metrics.deadline_misses;
     report.shed = metrics.shed;
+    report.completions = metrics.completions;
+    report.abandoned = metrics.abandoned;
+    report.retries = metrics.redispatches;
+    report.hedges = metrics.hedges;
+    report.hedge_wins = metrics.hedge_wins;
+    report.quarantines = metrics.quarantines;
+    report.recovered_deadline_hits = metrics.recovered_deadline_hits;
+    report.preemptions = metrics.preemptions;
+    report.worker_failures = metrics.worker_failures;
     report.fpga_spinups = metrics.fpga_spinups;
     report.cpu_spinups = metrics.cpu_spinups;
     report.energy_j = metrics.total_energy();
     report.cost_usd = metrics.total_cost();
     report.latency_ms = latency;
     report.wall_seconds = epoch.elapsed().as_secs_f64();
+    if let Some(c) = &cfg.chaos {
+        // Fold per-app digests in app-index order with the plan digest's
+        // own mixing step — deterministic for any shard count, and
+        // recomputable from scratch by `tools/scenario_oracle.py`.
+        let mut digest = 0u64;
+        let mut counts = FaultCounts::default();
+        for o in &outcomes {
+            if let Some((d, c)) = o.plan {
+                digest = combine_digest(digest, d);
+                counts.price_ticks += c.price_ticks;
+                counts.preemptions += c.preemptions;
+                counts.failures += c.failures;
+            }
+        }
+        report.chaos = ChaosPlanInfo {
+            pack: c.scenario.name.clone(),
+            seed_base: c.seed_base,
+            seed: c.seed,
+            digest,
+            price_ticks: counts.price_ticks,
+            preemptions: counts.preemptions,
+            failures: counts.failures,
+        };
+    }
     Ok(report)
 }
 
 fn record(lat: &mut LogHistogram, e: &Effect) {
-    if let Effect::Dispatched { arrival, finish, .. } = *e {
+    // Latency per *completed* request (exactly one `Completed` per
+    // request, hedged or not) — on the fault-free path the same
+    // (arrival, finish) multiset the dispatch stream carries, so
+    // chaos-off merged reports stay bit-identical.
+    if let Effect::Completed { arrival, finish, .. } = *e {
         lat.add((finish - arrival) * 1000.0);
     }
 }
@@ -148,9 +194,21 @@ fn run_shard(
         sources.push(app.source);
         pools.push((app.pool_cpus, app.pool_fpgas));
     }
-    let mut wrapped: Vec<Backpressure> = policies
+    // Same decorator chain as `run_serve_source`: shedding stays outermost
+    // so an at-cap arrival is never seen by the recovery layer; with chaos
+    // off the disabled `Recovery` is a verbatim forwarder (bit parity).
+    let rcfg = cfg
+        .chaos
+        .as_ref()
+        .map(|c| RecoveryConfig::for_scenario(&c.scenario))
+        .unwrap_or_else(RecoveryConfig::disabled);
+    let mut recoveries: Vec<Recovery> = policies
         .iter_mut()
-        .map(|p| Backpressure::new(p.as_mut(), cap))
+        .map(|p| Recovery::new(p.as_mut(), rcfg.clone()))
+        .collect();
+    let mut wrapped: Vec<Backpressure> = recoveries
+        .iter_mut()
+        .map(|r| Backpressure::new(r as &mut dyn Policy, cap))
         .collect();
     let mut drivers: Vec<Driver> = wrapped
         .iter_mut()
@@ -160,6 +218,21 @@ fn run_shard(
             Driver::from_source(src, cfg.sim_config(pc, pf), p as &mut dyn Policy)
         })
         .collect();
+    // Per-app fault plan, seeded by the *app index* (`chaos.seed + idx`)
+    // so the plan an app replays never depends on which shard runs it.
+    let plans: Vec<Option<(u64, FaultCounts)>> = if let Some(c) = &cfg.chaos {
+        drivers
+            .iter_mut()
+            .zip(&idxs)
+            .map(|(d, &idx)| {
+                let plan =
+                    d.attach_scenario(&c.scenario, c.seed_base, c.seed.wrapping_add(idx as u64));
+                Some((plan.digest(), plan.counts()))
+            })
+            .collect()
+    } else {
+        vec![None; drivers.len()]
+    };
     let mut lats: Vec<LogHistogram> = (0..drivers.len())
         .map(|_| LogHistogram::latency_ms())
         .collect();
@@ -210,7 +283,8 @@ fn run_shard(
         .into_iter()
         .zip(lats)
         .zip(idxs)
-        .map(|((d, latency), idx)| {
+        .zip(plans)
+        .map(|(((d, latency), idx), plan)| {
             let sim_end = d.now();
             let result = d.finish(&platform);
             AppOutcome {
@@ -220,6 +294,7 @@ fn run_shard(
                 latency,
                 sim_end,
                 max_lag_wall,
+                plan,
             }
         })
         .collect()

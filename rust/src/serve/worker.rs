@@ -38,6 +38,13 @@ pub enum WorkerMsg {
     Park,
     /// Exit the thread.
     Shutdown,
+    /// Chaos (wall-side): stall the next batch by `stall_wall` wall
+    /// seconds past its budget — the stall surfaces through the exec-
+    /// overrun accounting — and, when `drop_batch`, swallow that batch's
+    /// completion records entirely (a worker that wedges without
+    /// reporting; the router's grace-bounded drain counts the loss as
+    /// `completions_dropped` instead of hanging on it).
+    Inject { stall_wall: f64, drop_batch: bool },
 }
 
 #[derive(Debug)]
@@ -96,6 +103,8 @@ pub fn spawn_worker(
             let d_in = exe.arg_specs()[0].shape[1];
             let mut inputs = vec![0.0f32; batch * d_in];
             let mut meta: Vec<Job> = Vec::with_capacity(batch);
+            // Pending chaos injection, consumed by the next batch.
+            let mut inject: Option<(f64, bool)> = None;
             let _ = ready.send(());
 
             loop {
@@ -103,6 +112,10 @@ pub fn spawn_worker(
                 let (epoch, spin_up) = match rx.recv() {
                     Ok(WorkerMsg::Activate { epoch, spin_up }) => (epoch, spin_up),
                     Ok(WorkerMsg::Park) => continue,
+                    Ok(WorkerMsg::Inject { stall_wall, drop_batch }) => {
+                        inject = Some((stall_wall, drop_batch));
+                        continue;
+                    }
                     Ok(WorkerMsg::Job(_)) => {
                         debug_assert!(false, "job sent to parked worker");
                         continue;
@@ -121,6 +134,10 @@ pub fn spawn_worker(
                         Ok(WorkerMsg::Job(j)) => j,
                         Ok(WorkerMsg::Park) => break,
                         Ok(WorkerMsg::Activate { .. }) => continue,
+                        Ok(WorkerMsg::Inject { stall_wall, drop_batch }) => {
+                            inject = Some((stall_wall, drop_batch));
+                            continue;
+                        }
                         _ => return,
                     };
                     meta.clear();
@@ -135,6 +152,9 @@ pub fn spawn_worker(
                                 break;
                             }
                             Ok(WorkerMsg::Activate { .. }) => {}
+                            Ok(WorkerMsg::Inject { stall_wall, drop_batch }) => {
+                                inject = Some((stall_wall, drop_batch));
+                            }
                             Ok(WorkerMsg::Shutdown) => {
                                 exit_after = true;
                                 break;
@@ -144,7 +164,7 @@ pub fn spawn_worker(
                     }
                     run_batch(
                         kind, &exe, &mut inputs, &meta, batch, d_in, &params, time_scale,
-                        epoch, &done,
+                        epoch, &done, inject.take(),
                     );
                     if exit_after {
                         return;
@@ -170,6 +190,7 @@ fn run_batch(
     time_scale: f64,
     epoch: Instant,
     done: &mpsc::Sender<Completion>,
+    inject: Option<(f64, bool)>,
 ) {
     inputs.fill(0.0);
     for (slot, job) in meta.iter().enumerate().take(batch) {
@@ -184,6 +205,13 @@ fn run_batch(
             return;
         }
     };
+    // Injected stall: burns wall time inside the execution window, so it
+    // lands in `overrun_wall` like any real slowdown would.
+    if let Some((stall_wall, _)) = inject {
+        if stall_wall > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(stall_wall));
+        }
+    }
     // Emulate the Table 6 service time for the batch: the modeled
     // application takes size/speedup per item; the *real* PJRT execution
     // counts toward that budget (deducted from the sleep) so the worker's
@@ -200,6 +228,12 @@ fn run_batch(
         std::thread::sleep(budget - spent);
     }
     let finish = epoch.elapsed().as_secs_f64() * time_scale;
+    if let Some((_, true)) = inject {
+        // Drop injection: the batch really executed (and the stall was
+        // paid) but its records are swallowed — the router's drain counts
+        // the gap as `completions_dropped`.
+        return;
+    }
     for (slot, job) in meta.iter().enumerate() {
         let _ = done.send(Completion {
             id: job.id,
@@ -211,5 +245,94 @@ fn run_batch(
             overrun_wall,
             output0: out[slot * 128],
         });
+    }
+}
+
+/// Grace-bounded completion drain for router shutdown. Collects records
+/// until every sender hangs up (clean drain, `timed_out == false`) or
+/// `grace` wall time elapses (`timed_out == true`) — whichever comes
+/// first, with a final non-blocking sweep either way. This is what makes
+/// a permanently wedged worker thread (stalled inside its executable,
+/// never dropping its sender) unable to hang `run_serve_*` shutdown: the
+/// old unbounded `recv` loop would block on that live sender forever.
+pub fn drain_completions(
+    rx: &mpsc::Receiver<Completion>,
+    grace: Duration,
+) -> (Vec<Completion>, bool) {
+    let deadline = Instant::now() + grace;
+    let mut out = Vec::new();
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            while let Ok(c) = rx.try_recv() {
+                out.push(c);
+            }
+            return (out, true);
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(c) => out.push(c),
+            Err(mpsc::RecvTimeoutError::Disconnected) => return (out, false),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                while let Ok(c) = rx.try_recv() {
+                    out.push(c);
+                }
+                return (out, true);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn completion(id: u64) -> Completion {
+        Completion {
+            id,
+            kind: WorkerKind::Cpu,
+            arrival_sim: 0.0,
+            deadline_sim: 1.0,
+            finish_sim: 0.5,
+            service_sim: 0.5,
+            overrun_wall: 0.0,
+            output0: 0.0,
+        }
+    }
+
+    #[test]
+    fn clean_drain_returns_everything_without_timing_out() {
+        let (tx, rx) = mpsc::channel::<Completion>();
+        tx.send(completion(1)).unwrap();
+        tx.send(completion(2)).unwrap();
+        drop(tx);
+        let (got, timed_out) = drain_completions(&rx, Duration::from_secs(30));
+        assert_eq!(got.len(), 2);
+        assert!(!timed_out, "all senders hung up — no grace should be spent");
+    }
+
+    #[test]
+    fn stalled_sender_cannot_hang_the_drain() {
+        // A wedged worker thread keeps its completion sender alive forever
+        // (stalled mid-execution). The drain must return at the grace
+        // deadline with whatever arrived — not block on the live sender,
+        // which is exactly what the pre-grace unbounded recv loop did.
+        let (tx, rx) = mpsc::channel::<Completion>();
+        tx.send(completion(1)).unwrap();
+        let hostage = tx.clone();
+        std::thread::spawn(move || {
+            // Holds the sender hostage well past the test's grace window;
+            // the detached thread dies with the test process.
+            std::thread::sleep(Duration::from_secs(60));
+            drop(hostage);
+        });
+        drop(tx);
+        let start = Instant::now();
+        let (got, timed_out) = drain_completions(&rx, Duration::from_millis(200));
+        assert_eq!(got.len(), 1, "records sent before the wedge must drain");
+        assert!(timed_out, "a live hostage sender must trip the grace");
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "drain must return at the grace bound, not wait for the wedged worker"
+        );
     }
 }

@@ -16,6 +16,7 @@ use crate::config::{PlatformConfig, SimConfig, WorkerKind};
 use crate::policy::{Action, Effect, Observation, Policy, PolicyView, Request, Target, WorkerObs};
 use crate::scenario::{Fault, FaultPlan, ScenarioConfig};
 use crate::trace::{AppTrace, Arrival, ArrivalSource};
+use std::collections::{HashMap, HashSet};
 
 /// Latency subsampling factor (1/N of completions recorded).
 const LATENCY_SAMPLE: u64 = 61;
@@ -52,6 +53,16 @@ pub struct SimState {
     /// every fault-path branch dead and the run bit-identical to the
     /// pre-scenario engine.
     scenario: Option<ScenarioState>,
+    /// Never-reused dispatch sequence counter, stamped onto each in-flight
+    /// entry and its completion event (hedge-pair identity).
+    next_seq: u64,
+    /// Open hedge pairs: each member's seq maps to `(partner_seq, is_dup)`.
+    /// Empty unless a policy issued [`Action::Hedge`], so the fault-free
+    /// path pays one empty-map lookup per completion and nothing else.
+    hedge_partner: HashMap<u64, (u64, bool)>,
+    /// Losing halves of settled hedges: their completion (or kill-drain)
+    /// must free the worker without booking the request again.
+    hedge_cancelled: HashSet<u64>,
 }
 
 impl SimState {
@@ -67,6 +78,9 @@ impl SimState {
             completions_seen: 0,
             trace_end: f64::INFINITY,
             scenario: None,
+            next_seq: 0,
+            hedge_partner: HashMap::new(),
+            hedge_cancelled: HashSet::new(),
         }
     }
 
@@ -203,7 +217,8 @@ impl SimState {
     }
 
     /// Dispatch a request to a specific worker; returns the completion
-    /// time. Busy energy is attributed at dispatch; a scenario kill
+    /// time and the dispatch's never-reused sequence number (hedge-pair
+    /// identity). Busy energy is attributed at dispatch; a scenario kill
     /// refunds the unexecuted remainder, so the invariant "charged busy
     /// energy == executed service time × busy power" holds either way.
     ///
@@ -212,15 +227,17 @@ impl SimState {
     /// (real compute) but not the arrival-side counters (`requests`,
     /// `on_cpu`/`on_fpga`, `total_work`), so arrival conservation
     /// (`requests == completions + abandoned`) holds under faults.
-    pub fn dispatch(&mut self, req: Request, worker: WorkerId) -> f64 {
+    pub fn dispatch(&mut self, req: Request, worker: WorkerId) -> (f64, u64) {
         let now = self.now;
+        let seq = self.next_seq;
+        self.next_seq += 1;
         // One slab transaction on the per-request hot path: kind read,
         // service-time lookup, and assignment in a single with_mut.
         let (kind, svc, finish, uid) = self.pool.with_mut(worker, |w| {
             debug_assert!(w.accepting(), "dispatch to spinning-down worker");
             let svc = self.cfg.platform.params(w.kind).service_time(req.size);
             let finish = w.assign(now, svc);
-            w.inflight.push_back(req);
+            w.inflight.push_back((req, seq));
             (w.kind, svc, finish, w.uid)
         });
         self.events.push(
@@ -228,6 +245,7 @@ impl SimState {
             Event::Completion {
                 worker,
                 uid,
+                seq,
                 arrival: req.arrival,
                 deadline: req.deadline,
             },
@@ -246,7 +264,7 @@ impl SimState {
             WorkerKind::Cpu => self.interval_work_cpu += svc,
             WorkerKind::Fpga => self.interval_work_fpga += svc,
         }
-        finish
+        (finish, seq)
     }
 
     /// Scenario kill: remove a live accepting worker *now*, without a
@@ -259,7 +277,7 @@ impl SimState {
     /// integral for spot-billed kinds, plain lifetime × rate otherwise.
     /// No spin-down energy is charged — preemption reclaims the worker
     /// instantly.
-    pub fn kill(&mut self, worker: WorkerId) -> Vec<Request> {
+    pub fn kill(&mut self, worker: WorkerId) -> Vec<(Request, u64)> {
         let now = self.now;
         let mut w = self.pool.remove(worker);
         debug_assert!(w.accepting(), "scenario kill of spinning-down worker");
@@ -285,17 +303,23 @@ impl SimState {
 
     /// Book one completion on `worker`: pop its oldest in-flight request,
     /// credit the executed service time, and return whether the worker
-    /// went idle.
-    fn complete_request(&mut self, worker: WorkerId) -> bool {
+    /// went idle plus the popped request. When `count` is false (the
+    /// losing half of a settled hedge pair), the worker-side bookkeeping
+    /// still happens — the duplicate really executed — but
+    /// `metrics.completions` is untouched: exactly one completion per
+    /// request, which is what keeps the conservation law exact.
+    fn complete_request(&mut self, worker: WorkerId, count: bool) -> (bool, Request, u64) {
         let now = self.now;
-        let went_idle = self.pool.with_mut(worker, |w| {
-            let req = w.inflight.pop_front().expect("completion on empty inflight queue");
+        let (went_idle, req, seq) = self.pool.with_mut(worker, |w| {
+            let (req, seq) = w.inflight.pop_front().expect("completion on empty inflight queue");
             let svc = self.cfg.platform.params(w.kind).service_time(req.size);
             w.completed_seconds += svc;
-            w.complete_one(now)
+            (w.complete_one(now), req, seq)
         });
-        self.metrics.completions += 1;
-        went_idle
+        if count {
+            self.metrics.completions += 1;
+        }
+        (went_idle, req, seq)
     }
 
     /// Begin spin-down of an idle or never-used worker. Accounts idle
@@ -604,6 +628,12 @@ impl<'a> Driver<'a> {
     /// called before stepping. An empty plan with no spot kinds (the
     /// fault-free pack) leaves the run bit-identical to no attach at all.
     pub fn attach_plan(&mut self, cfg: &ScenarioConfig, plan: &FaultPlan) {
+        // Invalid packs are configuration errors, not adversity: fail loud
+        // before any fault event enters the heap. CLI paths validate with
+        // a friendly error earlier; this is the backstop for embedders.
+        if let Err(e) = cfg.validate() {
+            panic!("invalid scenario config: {e}");
+        }
         let mut price = [1.0f64; 2];
         for (k, ks) in cfg.kinds.iter().enumerate() {
             if ks.spot {
@@ -846,7 +876,7 @@ impl<'a> Driver<'a> {
                         .get(worker)
                         .expect("dispatch target vanished")
                         .kind;
-                    let finish = self.sim.dispatch(req, worker);
+                    let (finish, _seq) = self.sim.dispatch(req, worker);
                     sink(&Effect::Dispatched {
                         worker,
                         kind,
@@ -882,8 +912,110 @@ impl<'a> Driver<'a> {
                 // Only meaningful while answering IdleExpired (handled in
                 // `handle_event`); stray keep-alives are inert.
                 Action::KeepAlive { .. } => {}
+                // Recovery layer: hold the retry in the event heap until
+                // its backoff matures, then hand it back as RetryDue. A
+                // `until` in the past fires at the current instant.
+                Action::Defer { req, until } => {
+                    let at = until.max(self.sim.now);
+                    self.sim.events.push(at, Event::RetryDue { req });
+                }
+                Action::Timer { at, token } => {
+                    let at = at.max(self.sim.now);
+                    self.sim.events.push(at, Event::PolicyTimer { token });
+                }
+                Action::Abandon { req } => {
+                    // Mirrors the kill-path abandonment accounting: the
+                    // request leaves the system as an abandoned deadline
+                    // miss, keeping `requests == completions + abandoned
+                    // + shed` exact. (Retries were counted into `requests`
+                    // at first dispatch; a fresh request abandoned here
+                    // still counts in — both sides of the law move once.)
+                    if req.attempt == 0 {
+                        self.sim.metrics.requests += 1;
+                    }
+                    self.sim.metrics.abandoned += 1;
+                    self.sim.metrics.deadline_misses += 1;
+                }
+                Action::Hedge { req, to } => self.apply_hedge(req, to, sink),
+                Action::Quarantine { worker } => {
+                    // Pure audit: the breaker lives in the recovery layer;
+                    // the driver counts the opening and surfaces it on the
+                    // effect stream. A vanished worker still counts — the
+                    // breaker did open.
+                    self.sim.metrics.quarantines += 1;
+                    if let Some(w) = self.sim.pool.get(worker) {
+                        sink(&Effect::Quarantined {
+                            worker,
+                            kind: w.kind,
+                        });
+                    }
+                }
             }
         }
+    }
+
+    /// Apply [`Action::Hedge`]: if `req` is still in flight (matched
+    /// bit-for-bit on arrival/size/deadline/attempt) and not already part
+    /// of a hedge pair, dispatch a duplicate to `to` and link the two
+    /// dispatches — first completion wins, the loser only frees its
+    /// worker. No-op when the request is gone (already completed, drained,
+    /// or abandoned): hedge timers race completions by design and the
+    /// stale majority must cost nothing.
+    fn apply_hedge(&mut self, req: Request, to: Target, sink: &mut dyn FnMut(&Effect)) {
+        let primary_seq = self.sim.pool.iter_all().find_map(|w| {
+            w.inflight.iter().find_map(|&(r, s)| {
+                let matches = r == req
+                    && !self.sim.hedge_partner.contains_key(&s)
+                    && !self.sim.hedge_cancelled.contains(&s);
+                if matches {
+                    Some(s)
+                } else {
+                    None
+                }
+            })
+        });
+        let Some(primary_seq) = primary_seq else {
+            return;
+        };
+        let worker = match to {
+            Target::Worker(w) => w,
+            Target::Fresh(kind) => match self.sim.alloc(kind) {
+                Some(w) => {
+                    sink(&Effect::Allocated {
+                        worker: w,
+                        kind,
+                        prewarmed: false,
+                    });
+                    w
+                }
+                None => match self.sim.pool.earliest_ready_any() {
+                    Some(w) => w,
+                    None => return,
+                },
+            },
+        };
+        if self.sim.pool.get(worker).map_or(true, |w| !w.accepting()) {
+            return;
+        }
+        // The duplicate's `attempt` sits one above the copy it shadows:
+        // it skips the arrival-side counters in `dispatch` (the request
+        // was already counted) and keeps fallback policies routing it
+        // like the retry it morally is.
+        let mut dup = req;
+        dup.attempt = dup.attempt.saturating_add(1);
+        let kind = self.sim.pool.get(worker).expect("hedge target").kind;
+        let (finish, dup_seq) = self.sim.dispatch(dup, worker);
+        self.sim.hedge_partner.insert(primary_seq, (dup_seq, false));
+        self.sim.hedge_partner.insert(dup_seq, (primary_seq, true));
+        self.sim.metrics.hedges += 1;
+        sink(&Effect::Dispatched {
+            worker,
+            kind,
+            arrival: dup.arrival,
+            size: dup.size,
+            deadline: dup.deadline,
+            finish,
+        });
     }
 
     fn handle_event(&mut self, event: Event, sink: &mut dyn FnMut(&Effect)) {
@@ -915,6 +1047,7 @@ impl<'a> Driver<'a> {
             Event::Completion {
                 worker,
                 uid,
+                seq,
                 arrival,
                 deadline,
             } => {
@@ -925,19 +1058,54 @@ impl<'a> Driver<'a> {
                     Some(w) if w.uid == uid => {}
                     _ => return,
                 }
+                // Losing half of a settled hedge: the partner already
+                // booked the request. Free the worker (the duplicate's
+                // service really ran — its energy stays billed) and emit
+                // nothing: no metrics, no effect, no observation.
+                if self.sim.hedge_cancelled.remove(&seq) {
+                    let (went_idle, _req, popped) = self.sim.complete_request(worker, false);
+                    debug_assert_eq!(popped, seq, "hedge loser out of FIFO order");
+                    if went_idle {
+                        self.sim.schedule_idle_timeout(worker);
+                    }
+                    return;
+                }
+                // First completion of an open hedge pair wins: unlink both
+                // halves and cancel the partner's eventual completion.
+                let mut was_hedged = false;
+                if let Some((partner, is_dup)) = self.sim.hedge_partner.remove(&seq) {
+                    self.sim.hedge_partner.remove(&partner);
+                    self.sim.hedge_cancelled.insert(partner);
+                    if is_dup {
+                        self.sim.metrics.hedge_wins += 1;
+                    }
+                    was_hedged = true;
+                }
                 let now = self.sim.now;
-                if now > deadline + 1e-9 {
+                let missed = now > deadline + 1e-9;
+                if missed {
                     self.sim.metrics.deadline_misses += 1;
                 }
                 self.sim.completions_seen += 1;
                 if self.sim.completions_seen % LATENCY_SAMPLE == 0 {
                     self.sim.metrics.latency.add(now - arrival);
                 }
-                let went_idle = self.sim.complete_request(worker);
+                let (went_idle, req, popped) = self.sim.complete_request(worker, true);
+                debug_assert_eq!(popped, seq, "completion out of FIFO order");
+                if !missed && (was_hedged || req.attempt > 0) {
+                    self.sim.metrics.recovered_deadline_hits += 1;
+                }
                 if went_idle {
                     self.sim.schedule_idle_timeout(worker);
                 }
-                self.observe(Observation::Completion { worker }, sink);
+                let kind = self.sim.pool.get(worker).expect("completing worker").kind;
+                sink(&Effect::Completed {
+                    worker,
+                    kind,
+                    arrival,
+                    finish: now,
+                });
+                self.observe(Observation::Completion { worker, req }, sink);
             }
             Event::IdleTimeout {
                 worker,
@@ -1035,6 +1203,12 @@ impl<'a> Driver<'a> {
             Event::WorkerFailed { kind, victim_draw } => {
                 self.apply_fault(kind, victim_draw, true, sink);
             }
+            Event::RetryDue { req } => {
+                self.observe(Observation::RetryDue { req }, sink);
+            }
+            Event::PolicyTimer { token } => {
+                self.observe(Observation::Timer { token }, sink);
+            }
         }
     }
 
@@ -1088,7 +1262,22 @@ impl<'a> Driver<'a> {
             .scenario
             .as_ref()
             .map_or(0, |s| s.cfg.retry_budget);
-        for mut req in lost {
+        for (mut req, seq) in lost {
+            // Hedge interplay: a drained copy whose partner already won
+            // was completed through that partner — drop it silently. A
+            // drained copy whose partner is still running just unlinks
+            // the pair: the survivor reverts to an ordinary dispatch and
+            // will book the completion, so re-offering here would
+            // duplicate the request. (If both copies sit in this same
+            // drain, the first unlinks and the second falls through to
+            // the normal retry/abandon path — exactly one continuation.)
+            if self.sim.hedge_cancelled.remove(&seq) {
+                continue;
+            }
+            if let Some((partner, _)) = self.sim.hedge_partner.remove(&seq) {
+                self.sim.hedge_partner.remove(&partner);
+                continue;
+            }
             let now = self.sim.now;
             // Deadline-aware abandonment: if even an immediate dispatch
             // onto the fastest kind can't finish in time, don't waste the
@@ -1100,6 +1289,7 @@ impl<'a> Driver<'a> {
             if req.attempt >= budget || now + min_svc > req.deadline {
                 self.sim.metrics.abandoned += 1;
                 self.sim.metrics.deadline_misses += 1;
+                self.observe(Observation::Abandoned { req }, sink);
             } else {
                 req.attempt += 1;
                 self.sim.metrics.redispatches += 1;
@@ -1708,6 +1898,7 @@ mod tests {
         let mut dispatched = 0u32;
         let mut allocated = 0u32;
         let mut retired = 0u32;
+        let mut completed = 0u32;
         run_with_sink(
             &trace,
             SimConfig::paper_default(),
@@ -1718,10 +1909,14 @@ mod tests {
                 Effect::Allocated { .. } => allocated += 1,
                 Effect::Retired { .. } => retired += 1,
                 Effect::KeptAlive { .. } => {}
+                Effect::Completed { .. } => completed += 1,
                 Effect::Killed { .. } => panic!("no scenario attached"),
+                Effect::Shed { .. } => panic!("no admission cap armed"),
+                Effect::Quarantined { .. } => panic!("no recovery layer attached"),
             },
         );
         assert_eq!(dispatched, 10);
+        assert_eq!(completed, 10, "every dispatch must emit its completion");
         assert_eq!(allocated, 10);
         assert_eq!(retired, 10, "every worker must retire by drain");
     }

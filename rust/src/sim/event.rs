@@ -18,10 +18,15 @@ pub enum Event {
     /// with events still in flight, and the slot may be reused — a uid
     /// mismatch marks the event stale and it is dropped.
     SpinUpDone { worker: WorkerId, uid: u64 },
-    /// A dispatched request finishes on `worker`.
+    /// A dispatched request finishes on `worker`. `seq` is the dispatch's
+    /// never-reused sequence number (stamped by the engine, mirrored on the
+    /// worker's in-flight entry): hedged duplicates are linked through it,
+    /// so the first completion of a pair wins and the loser's completion
+    /// only frees its worker.
     Completion {
         worker: WorkerId,
         uid: u64,
+        seq: u64,
         arrival: f64,
         deadline: f64,
     },
@@ -44,6 +49,12 @@ pub enum Event {
     WorkerFailed { kind: WorkerKind, victim_draw: f64 },
     /// Scenario fault plan: the spot price of `kind` stepped to `price`.
     PriceTick { kind: WorkerKind, price: f64 },
+    /// A policy-deferred retry matures ([`crate::policy::Action::Defer`]):
+    /// the engine re-offers `req` as [`crate::policy::Observation::RetryDue`].
+    RetryDue { req: crate::policy::Request },
+    /// A policy-scheduled timer fires ([`crate::policy::Action::Timer`]):
+    /// the engine emits [`crate::policy::Observation::Timer`] with `token`.
+    PolicyTimer { token: u64 },
 }
 
 #[derive(Clone, Copy, Debug)]

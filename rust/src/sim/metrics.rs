@@ -62,6 +62,21 @@ pub struct Metrics {
     /// Executed-but-wasted worker-seconds destroyed by kills (service time
     /// already run on killed workers for requests that never completed).
     pub work_lost: f64,
+    /// Hedged dispatches launched ([`crate::policy::Action::Hedge`] applied
+    /// to a still-in-flight request). Each billed its duplicate's energy at
+    /// dispatch whether or not it won.
+    pub hedges: u64,
+    /// Hedges whose *duplicate* finished first. Always ≤ `hedges`.
+    pub hedge_wins: u64,
+    /// Circuit-breaker openings ([`crate::policy::Action::Quarantine`]):
+    /// a worker crossed K consecutive failures and was quarantined. A
+    /// worker re-opened after a failed probe counts again.
+    pub quarantines: u64,
+    /// Completions that met their deadline *because* recovery intervened:
+    /// the winning copy of a hedged pair, or a retried request
+    /// (`attempt > 0`), finishing on time. The tentpole's headline number —
+    /// deadline hits the fault would otherwise have destroyed.
+    pub recovered_deadline_hits: u64,
 }
 
 impl Metrics {
@@ -125,6 +140,10 @@ impl Metrics {
         self.redispatches += o.redispatches;
         self.abandoned += o.abandoned;
         self.work_lost += o.work_lost;
+        self.hedges += o.hedges;
+        self.hedge_wins += o.hedge_wins;
+        self.quarantines += o.quarantines;
+        self.recovered_deadline_hits += o.recovered_deadline_hits;
     }
 }
 

@@ -40,8 +40,10 @@ pub struct Worker {
     pub completed_seconds: f64,
     /// Requests dispatched here and not yet completed, in completion
     /// (FIFO) order — service is serial, so completions pop the front.
-    /// Drained and re-offered to the policy when the worker is killed.
-    pub inflight: VecDeque<Request>,
+    /// Each entry carries the dispatch's never-reused sequence number
+    /// (hedge-pair linking). Drained and re-offered to the policy when the
+    /// worker is killed.
+    pub inflight: VecDeque<(Request, u64)>,
     /// Spot-billing basis: the scenario price integral C(t) at allocation
     /// (0 when no scenario is attached or the kind is not spot-billed).
     pub cost_basis: f64,

@@ -1,0 +1,234 @@
+//! Serve-path resilience suite (DESIGN.md §15).
+//!
+//! Three contracts:
+//!
+//! 1. **Chaos-off bit parity** — attaching the `fault-free` pack (empty
+//!    plan, disabled recovery decorator) to a serving run changes
+//!    *nothing*: the effect stream and every model-side report field are
+//!    bit-identical to a plain run, for the whole Table 8 roster. The
+//!    resilience subsystem is pay-for-what-you-break.
+//! 2. **Severe-pack non-vacuity and conservation** — the `severe` pack
+//!    must actually kill workers and force retries, and the extended
+//!    conservation law `requests == completions + shed + abandoned` must
+//!    hold exactly (retries re-dispatch an admitted request, never mint a
+//!    new one), with `hedge_wins <= hedges`.
+//! 3. **Sharded chaos determinism** — per-app fault plans are seeded by
+//!    the app index, so a chaotic sharded run merges to the bit-identical
+//!    report (and plan digest) for any shard count.
+
+use spork::config::SchedulerKind;
+use spork::policy::Effect;
+use spork::sched;
+use spork::serve::{
+    run_serve_policy, run_serve_sharded, AppFactory, AppServe, ChaosSpec, Compute, ServeConfig,
+    ServeReport,
+};
+use spork::trace::{synthetic_app, AppTrace};
+use spork::util::rng::Rng;
+
+const POOL_CPUS: usize = 8;
+const POOL_FPGAS: usize = 4;
+
+fn chaos_trace(duration: f64) -> AppTrace {
+    let mut rng = Rng::new(913);
+    synthetic_app("chaos", &mut rng, 0.6, duration, 60.0, 0.010)
+}
+
+fn cfg_with(chaos: Option<ChaosSpec>) -> ServeConfig {
+    let mut cfg = ServeConfig::defaults("unused-artifacts", 1e5);
+    cfg.pool_cpus = POOL_CPUS;
+    cfg.pool_fpgas = POOL_FPGAS;
+    cfg.chaos = chaos;
+    cfg
+}
+
+fn run(kind: &SchedulerKind, chaos: Option<ChaosSpec>, trace: &AppTrace) -> (ServeReport, Vec<Effect>) {
+    let cfg = cfg_with(chaos);
+    let sim_cfg = cfg.sim_config(POOL_CPUS, POOL_FPGAS);
+    let mut policy = sched::build(kind, &sim_cfg, trace);
+    let mut rng = Rng::new(3);
+    let mut log = Vec::new();
+    let (report, _) =
+        run_serve_policy(&cfg, policy.as_mut(), trace, &mut rng, Compute::Stub, &mut |e| {
+            log.push(*e)
+        })
+        .expect("stubbed serve cannot fail");
+    (report, log)
+}
+
+#[test]
+fn fault_free_chaos_is_bit_identical_to_no_chaos_for_the_roster() {
+    let trace = chaos_trace(120.0);
+    for kind in SchedulerKind::table8_roster() {
+        let (plain, plain_log) = run(&kind, None, &trace);
+        let spec = ChaosSpec::from_name("fault-free", 1, 0).expect("parity pack exists");
+        let (wrapped, wrapped_log) = run(&kind, Some(spec), &trace);
+
+        assert!(!plain_log.is_empty(), "{}: workload produced no effects", kind.name());
+        assert_eq!(
+            plain_log.len(),
+            wrapped_log.len(),
+            "{}: effect counts diverge under the parity pack",
+            kind.name()
+        );
+        for (i, (a, b)) in plain_log.iter().zip(&wrapped_log).enumerate() {
+            assert_eq!(a, b, "{}: parity pack diverges at effect #{i}", kind.name());
+        }
+
+        assert_eq!(plain.requests, wrapped.requests, "{}", kind.name());
+        assert_eq!(plain.completions, wrapped.completions, "{}", kind.name());
+        assert_eq!(plain.on_cpu, wrapped.on_cpu, "{}", kind.name());
+        assert_eq!(plain.on_fpga, wrapped.on_fpga, "{}", kind.name());
+        assert_eq!(plain.misses, wrapped.misses, "{}", kind.name());
+        assert_eq!(plain.shed, wrapped.shed, "{}", kind.name());
+        assert_eq!(plain.abandoned, wrapped.abandoned, "{}", kind.name());
+        assert_eq!(plain.retries, wrapped.retries, "{}", kind.name());
+        assert_eq!((plain.hedges, plain.quarantines), (0, 0), "{}", kind.name());
+        assert_eq!((wrapped.hedges, wrapped.quarantines), (0, 0), "{}", kind.name());
+        assert_eq!(
+            plain.energy_j.to_bits(),
+            wrapped.energy_j.to_bits(),
+            "{}: energy must not feel the parity pack",
+            kind.name()
+        );
+        assert_eq!(plain.cost_usd.to_bits(), wrapped.cost_usd.to_bits(), "{}", kind.name());
+        assert_eq!(plain.latency_ms.count(), wrapped.latency_ms.count(), "{}", kind.name());
+        assert_eq!(
+            plain.latency_ms.percentile(99.0).to_bits(),
+            wrapped.latency_ms.percentile(99.0).to_bits(),
+            "{}",
+            kind.name()
+        );
+        // The parity pack plans nothing and the report says so.
+        assert_eq!(wrapped.chaos.digest, 0, "{}", kind.name());
+        assert_eq!(
+            wrapped.chaos.preemptions + wrapped.chaos.failures,
+            0,
+            "{}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn severe_pack_is_non_vacuous_and_conserves_every_request() {
+    let trace = chaos_trace(600.0);
+    let spec = ChaosSpec::from_name("severe", 7, 0).expect("severe pack exists");
+    let (r, log) = run(&SchedulerKind::spork_e(), Some(spec), &trace);
+
+    // Non-vacuity: the pack must have planned kills, landed at least one
+    // on a live worker, and forced at least one retry — otherwise the
+    // suite is testing nothing.
+    assert!(
+        r.chaos.preemptions + r.chaos.failures > 0,
+        "severe plan must contain kills"
+    );
+    assert!(
+        r.preemptions + r.worker_failures >= 1,
+        "at least one kill must strike a live worker (got {} preemptions, {} failures)",
+        r.preemptions,
+        r.worker_failures
+    );
+    assert!(r.retries >= 1, "kills must catch requests in flight");
+    assert!(
+        log.iter().any(|e| matches!(e, Effect::Killed { .. })),
+        "applied kills must surface in the effect stream"
+    );
+
+    // The extended conservation law, exact.
+    assert_eq!(
+        r.requests,
+        r.completions + r.shed + r.abandoned,
+        "conservation violated: {} != {} completed + {} shed + {} abandoned",
+        r.requests,
+        r.completions,
+        r.shed,
+        r.abandoned
+    );
+    assert!(r.hedge_wins <= r.hedges, "{} wins > {} hedges", r.hedge_wins, r.hedges);
+    // Applied kills can never exceed planned kills.
+    assert!(r.preemptions <= r.chaos.preemptions);
+    assert!(r.worker_failures <= r.chaos.failures);
+
+    // Determinism: the same spec replays the same adversity.
+    let spec = ChaosSpec::from_name("severe", 7, 0).unwrap();
+    let (again, again_log) = run(&SchedulerKind::spork_e(), Some(spec), &trace);
+    assert_eq!(r.chaos.digest, again.chaos.digest);
+    assert_eq!(r.requests, again.requests);
+    assert_eq!(r.retries, again.retries);
+    assert_eq!(r.abandoned, again.abandoned);
+    assert_eq!(r.energy_j.to_bits(), again.energy_j.to_bits());
+    assert_eq!(log.len(), again_log.len());
+}
+
+fn chaos_app_factory(i: usize) -> AppFactory {
+    Box::new(move || {
+        // Pure function of the app index: the determinism contract.
+        let mut rng = Rng::for_stream(42, i as u64);
+        let trace = synthetic_app(
+            &format!("app{i}"),
+            &mut rng,
+            0.6,
+            300.0,
+            30.0 + 5.0 * i as f64,
+            0.010,
+        );
+        let cfg = ServeConfig::defaults("unused", 1e9);
+        let sim_cfg = cfg.sim_config(8, 4);
+        let policy = sched::build(&SchedulerKind::spork_e(), &sim_cfg, &trace);
+        AppServe {
+            source: Box::new(trace.into_source()),
+            policy,
+            pool_cpus: 8,
+            pool_fpgas: 4,
+        }
+    })
+}
+
+#[test]
+fn sharded_chaos_reports_are_shard_count_independent() {
+    let mut cfg = ServeConfig::defaults("unused", 1e9);
+    cfg.chaos = Some(ChaosSpec::from_name("severe", 42, 0).expect("severe pack exists"));
+    let run = |shards: usize| {
+        let apps = (0..5).map(chaos_app_factory).collect();
+        run_serve_sharded(&cfg, apps, shards, Compute::Stub).unwrap()
+    };
+    let one = run(1);
+    assert!(one.requests > 1000, "workload too small to mean anything");
+    assert!(
+        one.preemptions + one.worker_failures >= 1,
+        "sharded severe run must apply at least one kill"
+    );
+    assert!(one.retries >= 1);
+    assert_ne!(one.chaos.digest, 0);
+    assert_eq!(one.requests, one.completions + one.shed + one.abandoned);
+    for shards in [2, 4, 7] {
+        let many = run(shards);
+        assert_eq!(one.requests, many.requests, "{shards} shards");
+        assert_eq!(one.completions, many.completions, "{shards} shards");
+        assert_eq!(one.abandoned, many.abandoned, "{shards} shards");
+        assert_eq!(one.retries, many.retries, "{shards} shards");
+        assert_eq!(one.hedges, many.hedges, "{shards} shards");
+        assert_eq!(one.hedge_wins, many.hedge_wins, "{shards} shards");
+        assert_eq!(one.quarantines, many.quarantines, "{shards} shards");
+        assert_eq!(one.preemptions, many.preemptions, "{shards} shards");
+        assert_eq!(one.worker_failures, many.worker_failures, "{shards} shards");
+        assert_eq!(one.misses, many.misses, "{shards} shards");
+        assert_eq!(
+            one.chaos, many.chaos,
+            "plan digest/counts must be shard-count independent ({shards} shards)"
+        );
+        assert_eq!(
+            one.energy_j.to_bits(),
+            many.energy_j.to_bits(),
+            "energy must merge identically at {shards} shards"
+        );
+        assert_eq!(one.cost_usd.to_bits(), many.cost_usd.to_bits(), "{shards} shards");
+        assert_eq!(one.latency_ms.count(), many.latency_ms.count(), "{shards} shards");
+        assert_eq!(
+            one.latency_ms.percentile(99.0).to_bits(),
+            many.latency_ms.percentile(99.0).to_bits(),
+            "{shards} shards"
+        );
+    }
+}

@@ -25,6 +25,16 @@ Usage:
         --scenario` report and compare planned counts AND the full plan
         digest against what the Rust generator produced. Any diverging
         bit fails the run.
+
+    tools/scenario_oracle.py verify-serve BENCH_serve_chaos.json
+        Same, for the serve-path chaos axis (`spork bench-serve --chaos`):
+        rebuild every per-app plan (app i is seeded `seed + i`), fold the
+        per-app digests in app-index order with the digest's own mixing
+        step, and compare the combined digest and summed planned counts
+        against the report. Also audits the run itself: the extended
+        conservation law `requests == completions + shed + abandoned`,
+        `hedge_wins <= hedges`, and (for an adverse pack) that faults and
+        retries were actually exercised.
 """
 
 import json
@@ -313,11 +323,80 @@ def cmd_verify(path):
     return 0
 
 
+def combine_digest(h, app_digest):
+    """Mirror of `spork::serve::chaos::combine_digest`."""
+    return ((_rotl(h, 7) ^ app_digest) * GOLDEN) & MASK
+
+
+def cmd_verify_serve(path):
+    with open(path) as f:
+        report = json.load(f)
+    pack = report["pack"]
+    if pack not in PACKS:
+        print(f"FAIL: unknown chaos pack {pack!r} in {path}")
+        return 1
+    seed_base = report["seed_base"]
+    seed = report["seed"]
+    apps = int(report["apps"])
+    duration = float(report["sim_seconds"])
+    combined = 0
+    ticks = preempts = fails = 0
+    for i in range(apps):
+        plan = build_plan(pack, seed_base, (seed + i) & MASK, duration)
+        t, p, fl = counts(plan)
+        ticks += t
+        preempts += p
+        fails += fl
+        combined = combine_digest(combined, digest(plan))
+    want = (report["planned_price_ticks"], report["planned_preemptions"],
+            report["planned_failures"], int(report["plan_digest"], 16))
+    got = (ticks, preempts, fails, combined)
+    print(f"pack={pack} seed_base={seed_base} seed={seed} apps={apps} "
+          f"duration={duration}s")
+    print(f"  rust:   ticks={want[0]} preemptions={want[1]} failures={want[2]} "
+          f"digest={want[3]:#018x}")
+    print(f"  python: ticks={got[0]} preemptions={got[1]} failures={got[2]} "
+          f"digest={got[3]:#018x}")
+    if got != want:
+        print("FAIL: the Python oracle and the Rust chaos replay disagree")
+        return 1
+
+    accounted = report["completions"] + report["shed"] + report["abandoned"]
+    if report["requests"] != accounted:
+        print(f"FAIL: conservation violated: {report['requests']} requests != "
+              f"{report['completions']} completions + {report['shed']} shed + "
+              f"{report['abandoned']} abandoned")
+        return 1
+    if report["hedge_wins"] > report["hedges"]:
+        print(f"FAIL: hedge accounting violated: {report['hedge_wins']} wins > "
+              f"{report['hedges']} hedges")
+        return 1
+    if pack != "fault-free":
+        if preempts + fails == 0:
+            print("FAIL: adverse pack planned zero kills (vacuous window)")
+            return 1
+        applied = report["preemptions"] + report["worker_failures"]
+        if applied == 0:
+            print("FAIL: adverse pack applied zero faults at runtime (vacuous)")
+            return 1
+        if report["retries"] == 0:
+            print("FAIL: faults struck but zero retries were exercised (vacuous)")
+            return 1
+        if report["preemptions"] > preempts or report["worker_failures"] > fails:
+            print("FAIL: more faults applied than the plan contains")
+            return 1
+    print("serve-chaos oracle: OK (combined digest, planned counts, and "
+          "conservation all check out)")
+    return 0
+
+
 def main(argv):
     if len(argv) >= 2 and argv[1] == "pinned":
         return cmd_pinned()
     if len(argv) >= 3 and argv[1] == "verify":
         return cmd_verify(argv[2])
+    if len(argv) >= 3 and argv[1] == "verify-serve":
+        return cmd_verify_serve(argv[2])
     print(__doc__)
     return 2
 
